@@ -1,0 +1,7 @@
+"""Root conftest: make `python/` importable so `pytest python/tests/` works
+from the repository root as well as from `python/` (the Makefile path)."""
+
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "python"))

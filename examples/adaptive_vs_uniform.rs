@@ -1,0 +1,74 @@
+//! Headline demonstration: adaptive allocation vs uniform best-of-k at equal
+//! compute, end to end — real predictor, real generation, real verification.
+//!
+//!   cargo run --release --offline --example adaptive_vs_uniform -- [n] [budget]
+//!
+//! Serves `n` code-domain queries (default 48) twice through the full
+//! scheduler — once with the online adaptive policy, once uniform — and
+//! reports solved counts and sample usage. The adaptive run should solve
+//! more with the same number of samples (paper §4.1).
+
+use std::sync::Arc;
+
+use thinkalloc::config::{AllocPolicy, Config};
+use thinkalloc::metrics::Registry;
+use thinkalloc::prng::Pcg64;
+use thinkalloc::runtime::Engine;
+use thinkalloc::serving::scheduler::Scheduler;
+use thinkalloc::serving::Request;
+use thinkalloc::workload;
+
+fn main() -> anyhow::Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let n: usize = args.first().map(|s| s.parse()).transpose()?.unwrap_or(48);
+    let budget: f64 = args.get(1).map(|s| s.parse()).transpose()?.unwrap_or(4.0);
+
+    let qs = workload::gen_dataset("code", n, 42);
+    let reqs: Vec<Request> = qs
+        .iter()
+        .enumerate()
+        .map(|(i, q)| Request {
+            id: i as u64,
+            text: q.text.clone(),
+            domain: "code".into(),
+            arrived_us: 0,
+        })
+        .collect();
+
+    let mut results = Vec::new();
+    for policy in [AllocPolicy::Uniform, AllocPolicy::Online] {
+        let mut cfg = Config::default();
+        cfg.allocator.policy = policy;
+        cfg.allocator.budget_per_query = budget;
+        cfg.allocator.b_max = 16;
+        let metrics = Arc::new(Registry::default());
+        let engine = Engine::load_all(&cfg.runtime)?;
+        let scheduler = Scheduler::new(engine, cfg, metrics.clone());
+        let mut rng = Pcg64::new(1234); // same sampling noise for both runs
+
+        let t0 = std::time::Instant::now();
+        let mut solved = 0usize;
+        for chunk in reqs.chunks(64) {
+            let responses = scheduler.serve_epoch(chunk, &mut rng)?;
+            solved += responses.iter().filter(|r| r.ok).count();
+        }
+        let wall = t0.elapsed().as_secs_f64();
+        let units = metrics.counter("serving.units_allocated").get();
+        println!(
+            "{policy:?}: solved {solved}/{n} queries using {units} samples \
+             ({wall:.1}s wall)"
+        );
+        results.push((policy, solved, units));
+    }
+
+    let (_, uni_solved, uni_units) = results[0];
+    let (_, ada_solved, ada_units) = results[1];
+    println!(
+        "\nadaptive vs uniform at B={budget}: {ada_solved} vs {uni_solved} solved \
+         ({ada_units} vs {uni_units} samples)"
+    );
+    if ada_solved >= uni_solved && ada_units <= uni_units {
+        println!("⇒ adaptive matches/beats uniform at no extra compute ✓");
+    }
+    Ok(())
+}

@@ -1,0 +1,72 @@
+//! Quickstart: load the AOT artifacts, predict difficulty for a handful of
+//! queries, allocate a compute budget adaptively, generate + verify.
+//!
+//!   cargo run --release --offline --example quickstart
+//!
+//! (run `make artifacts` first.)
+
+use thinkalloc::allocator::online::OnlineAllocator;
+use thinkalloc::config::RuntimeConfig;
+use thinkalloc::prng::Pcg64;
+use thinkalloc::runtime::predictor::Predictor;
+use thinkalloc::runtime::Engine;
+use thinkalloc::serving::generator::{self, GenConfig};
+use thinkalloc::serving::scheduler::compute_answer;
+
+fn main() -> anyhow::Result<()> {
+    // 1. load the engine (compiles the HLO artifacts once)
+    let cfg = RuntimeConfig::default();
+    let engine = Engine::load_all(&cfg)?;
+    println!("engine up on {} ({:?} kernels)\n", engine.platform(), engine.kernel_mode());
+
+    // 2. a small batch of code-domain queries of very different difficulty
+    let queries = [
+        "ADD 3 4",                         // trivial: one sample should do
+        "ADD 12 93",                       // easy
+        "ADD 12 93 7 55 21",               // mid: a few samples
+        "ADD 81 3 66 24 9 17 40 2",        // hard but possible (k = 8)
+        "ADD 9 8 7 6 5 4 3 2 1 11 22 33",  // k > 8 ⇒ impossible (λ = 0)
+    ];
+
+    // 3. predict difficulty (one fused encoder+probe call)
+    let predictor = Predictor::new(&engine);
+    let lam = predictor.predict_scalar(
+        thinkalloc::runtime::predictor::ProbeKind::CodeLambda,
+        &queries,
+    )?;
+    println!("predicted λ̂ (success probability per sample):");
+    for (q, l) in queries.iter().zip(&lam) {
+        println!("  {l:.3}  {q}");
+    }
+
+    // 4. allocate an average budget of 4 samples/query adaptively (eq. 5)
+    let alloc = OnlineAllocator::new(16, 0)
+        .allocate(&thinkalloc::allocator::online::Predictions::Lambdas(lam.clone()), 4.0);
+    println!("\nadaptive allocation (B = 4/query, total = {}):", alloc.total_units);
+    for (q, b) in queries.iter().zip(&alloc.budgets) {
+        println!("  {b:>2} samples  {q}");
+    }
+
+    // 5. generate and verify
+    let mut rng = Pcg64::new(7);
+    let jobs = generator::jobs_for_allocation(&queries, &alloc.budgets);
+    let samples = generator::generate(&engine, &jobs, &GenConfig::default(), &mut rng)?;
+    let mut solved = vec![false; queries.len()];
+    for s in &samples {
+        if s.text.trim() == compute_answer(queries[s.query]) {
+            solved[s.query] = true;
+        }
+    }
+    println!("\nresults:");
+    for (i, q) in queries.iter().enumerate() {
+        let verdict = if solved[i] {
+            "solved"
+        } else if alloc.budgets[i] == 0 {
+            "skipped (predicted impossible)"
+        } else {
+            "failed"
+        };
+        println!("  {verdict:<32} {q}");
+    }
+    Ok(())
+}

@@ -1,0 +1,58 @@
+//! Routing demo (paper §4.2): use the learned preference predictor to route
+//! chat queries between a weak and a strong decoder, sweeping the strong
+//! fraction, vs the random baseline.
+//!
+//!   cargo run --release --offline --example routing_demo -- [n] [--vas]
+
+use thinkalloc::baselines::random_routing;
+use thinkalloc::prng::Pcg64;
+use thinkalloc::router::{route_top_fraction, routing_cost, ThresholdRouter};
+use thinkalloc::runtime::predictor::{Predictor, ProbeKind};
+use thinkalloc::runtime::Engine;
+use thinkalloc::simulator::{eval_routing_mask, RewardMatrix};
+use thinkalloc::workload;
+
+fn main() -> anyhow::Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let n: usize = args.first().and_then(|s| s.parse().ok()).unwrap_or(512);
+    let vas = args.iter().any(|a| a == "--vas");
+    let setting = if vas { "value-augmented sampling" } else { "Gemma-2b vs 7b analogue" };
+
+    let engine = Engine::load_all(&Default::default())?;
+    let predictor = Predictor::new(&engine);
+    let qs = workload::gen_dataset("chat", n, 99);
+    let texts: Vec<&str> = qs.iter().map(|q| q.text.as_str()).collect();
+    let kind = if vas { ProbeKind::VasPreference } else { ProbeKind::RoutePreference };
+    let pref = predictor.predict_scalar(kind, &texts)?;
+
+    let k = 32;
+    let (w, s) = workload::sample_routing_rewards(&qs, k, 3, vas);
+    let weak = RewardMatrix::new(w, n, k);
+    let strong = RewardMatrix::new(s, n, k);
+    let weak_cost = if vas { 0.1 } else { 2.0 / 7.0 }; // VAS: 10× decoding cost
+
+    println!("routing setting: {setting}");
+    println!("{:<10} {:>10} {:>10} {:>12}", "strong %", "random", "adaptive", "rel. cost");
+    let mut rng = Pcg64::new(5);
+    for i in 0..=8 {
+        let f = i as f64 / 8.0;
+        let r = eval_routing_mask(&weak, &strong, &random_routing(n, f, &mut rng));
+        let mask = route_top_fraction(&pref, f);
+        let a = eval_routing_mask(&weak, &strong, &mask);
+        let cost = routing_cost(&mask, weak_cost) / n as f64;
+        println!("{:<10.0} {r:>10.4} {a:>10.4} {cost:>12.3}", f * 100.0);
+    }
+
+    // deployment-style threshold router calibrated at 50%
+    let router = ThresholdRouter::fit(&pref, 0.5);
+    let mask = router.route(&pref);
+    let frac = mask.iter().filter(|&&m| m).count() as f64 / n as f64;
+    println!(
+        "\nthreshold router @50%: threshold={:.3}, actual strong fraction {:.1}%, \
+         reward {:.4}",
+        router.threshold,
+        frac * 100.0,
+        eval_routing_mask(&weak, &strong, &mask)
+    );
+    Ok(())
+}

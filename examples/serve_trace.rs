@@ -1,0 +1,86 @@
+//! End-to-end serving validation (DESIGN.md §7): start the full TCP stack,
+//! replay a workload trace of batched requests through real sockets, and
+//! report latency percentiles, throughput and quality vs the allocation
+//! policy.
+//!
+//!   cargo run --release --offline --example serve_trace -- [n] [policy] [budget]
+//!
+//! Everything is live: the TinyLM trained at `make artifacts` predicts
+//! difficulty, the allocator splits the budget, the decode executable
+//! generates candidates, the synthetic verifier checks them.
+
+use std::time::Instant;
+
+use thinkalloc::config::Config;
+use thinkalloc::jsonio::Json;
+use thinkalloc::metrics::Registry;
+use thinkalloc::server::{Client, Server};
+use thinkalloc::workload;
+
+fn main() -> anyhow::Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let n: usize = args.first().map(|s| s.parse()).transpose()?.unwrap_or(96);
+    let policy = args.get(1).cloned().unwrap_or_else(|| "online".into());
+    let budget: f64 = args.get(2).map(|s| s.parse()).transpose()?.unwrap_or(4.0);
+
+    let mut cfg = Config::default();
+    cfg.server.addr = "127.0.0.1:0".into(); // ephemeral port
+    cfg.server.batch_queries = 48;
+    cfg.server.max_wait_ms = 40;
+    cfg.allocator.policy = policy.parse()?;
+    cfg.allocator.budget_per_query = budget;
+    cfg.allocator.b_max = 16;
+
+    let metrics = std::sync::Arc::new(Registry::default());
+    let server = Server::new(cfg, metrics);
+    let (addr_tx, addr_rx) = std::sync::mpsc::channel();
+    let srv = server.clone();
+    let handle = std::thread::spawn(move || {
+        srv.run(|addr| addr_tx.send(addr).unwrap()).unwrap();
+    });
+    let addr = addr_rx.recv()?;
+    println!("server ready on {addr} (policy {policy}, B={budget})");
+
+    // trace: mixed code workload, replayed over one connection
+    let qs = workload::gen_dataset("code", n, 777);
+    let mut client = Client::connect(&addr)?;
+    let t0 = Instant::now();
+    for (i, q) in qs.iter().enumerate() {
+        client.request(i as u64, &q.text, "code")?;
+    }
+    let mut solved = 0usize;
+    let mut latencies: Vec<f64> = Vec::with_capacity(n);
+    let mut budgets_used = 0usize;
+    for _ in 0..n {
+        let resp = client.read_response()?;
+        if resp.get("ok").and_then(Json::as_bool).unwrap_or(false) {
+            solved += 1;
+        }
+        budgets_used += resp
+            .get("budget")
+            .and_then(Json::as_f64)
+            .unwrap_or(0.0) as usize;
+        latencies.push(
+            resp.get("latency_us").and_then(Json::as_f64).unwrap_or(0.0) / 1000.0,
+        );
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    latencies.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let pct = |q: f64| latencies[((latencies.len() - 1) as f64 * q) as usize];
+
+    println!("\n== serve_trace report ==");
+    println!("queries:        {n}");
+    println!("solved:         {solved} ({:.1}%)", 100.0 * solved as f64 / n as f64);
+    println!("samples used:   {budgets_used} (avg {:.2}/query)", budgets_used as f64 / n as f64);
+    println!("throughput:     {:.1} queries/s", n as f64 / wall);
+    println!("latency ms:     p50={:.0} p90={:.0} p99={:.0}", pct(0.5), pct(0.9), pct(0.99));
+
+    let m = client.command("metrics")?;
+    if let Some(h) = m.get("hist.serving.epoch_us") {
+        println!("epoch time:     {}µs p50 (server-side)",
+            h.get("p50_us").and_then(Json::as_f64).unwrap_or(0.0) as u64);
+    }
+    client.command("shutdown")?;
+    let _ = handle.join();
+    Ok(())
+}

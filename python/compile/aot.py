@@ -1,0 +1,355 @@
+"""AOT driver: train once, lower everything to HLO text, export goldens.
+
+``python -m compile.aot --out-dir ../artifacts``  (idempotent: skips when the
+source hash in artifacts/MANIFEST.json matches — ``make artifacts`` is a no-op
+on an up-to-date tree).
+
+Interchange is HLO **text** via stablehlo → XlaComputation → as_hlo_text():
+xla_extension 0.5.1 (the version the rust `xla` crate binds) rejects jax≥0.5
+serialized protos (64-bit instruction ids); the text parser reassigns ids.
+Weights are baked into each artifact as constants (the jitted fn closes over
+trained params), so the rust runtime only ever feeds activations.
+
+Every artifact is exported twice: ``*_pallas`` (L1 kernels, interpret=True)
+and ``*_xla`` (pure-jnp reference ops, XLA-fused). Numerics match to ~1e-5;
+the rust benches compare the two (DESIGN.md §9).
+"""
+
+from __future__ import annotations
+
+import argparse
+import hashlib
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import data, model, tasks, tokenizer, train
+from .config import (ARTIFACT_BATCH, B_MAX_CHAT, DECODE_BATCH, DEFAULT_LM,
+                     DEFAULT_SIZES, DEFAULT_TRAIN, MAX_SEQ, VOCAB_PADDED)
+
+KERNEL_MODES = ("xla", "pallas")
+S = MAX_SEQ
+B = ARTIFACT_BATCH
+DB = DECODE_BATCH
+
+SRC_FILES = ["config.py", "tokenizer.py", "tasks.py", "data.py", "model.py",
+             "train.py", "aot.py", "kernels/attention.py", "kernels/probe.py",
+             "kernels/rerank.py", "kernels/rmsnorm.py", "kernels/ref.py"]
+
+
+def source_hash() -> str:
+    h = hashlib.sha256()
+    base = os.path.dirname(__file__)
+    for f in SRC_FILES:
+        with open(os.path.join(base, f), "rb") as fh:
+            h.update(fh.read())
+    return h.hexdigest()[:16]
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True)
+    # print_large_constants=True: the default printer elides big literals as
+    # `{...}`, which the rust-side HLO parser silently reads as ZEROS — the
+    # baked-in weights would vanish. (Found the hard way; goldens.json now
+    # guards this via `thinkalloc check`.)
+    text = comp.as_hlo_text(True)
+    assert "{...}" not in text, "elided constants survived the export"
+    return text
+
+
+def export(fn, args, path):
+    text = to_hlo_text(jax.jit(fn).lower(*args))
+    with open(path, "w") as f:
+        f.write(text)
+    return len(text)
+
+
+def spec_i32(*shape):
+    return jax.ShapeDtypeStruct(shape, jnp.int32)
+
+
+def spec_f32(*shape):
+    return jax.ShapeDtypeStruct(shape, jnp.float32)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--export-only", dest="export_only", action="store_true",
+                    help="reuse artifacts/trained_state.pkl; skip training")
+    ap.add_argument("--reuse-lm", dest="reuse_lm", action="store_true",
+                    help="reuse artifacts/lm_state.pkl; retrain probes only")
+    args = ap.parse_args()
+    out = args.out_dir
+    os.makedirs(out, exist_ok=True)
+    os.makedirs(os.path.join(out, "datasets"), exist_ok=True)
+
+    manifest_path = os.path.join(out, "MANIFEST.json")
+    shash = source_hash()
+    if not args.force and os.path.exists(manifest_path):
+        with open(manifest_path) as f:
+            if json.load(f).get("source_hash") == shash:
+                print(f"artifacts up to date (source {shash}); skipping")
+                return
+
+    t_start = time.time()
+    cfg, tc, sizes = DEFAULT_LM, DEFAULT_TRAIN, DEFAULT_SIZES
+    log_lines: list[str] = []
+
+    def log(msg):
+        print(msg, flush=True)
+        log_lines.append(str(msg))
+
+    cache_path = os.path.join(out, "trained_state.pkl")
+    if args.export_only and os.path.exists(cache_path):
+        import pickle
+        log(f"== reusing trained state from {cache_path} ==")
+        with open(cache_path, "rb") as f:
+            st = pickle.load(f)
+        (params, lm_losses, probe_code, m_code, lora_math, probe_math, m_math,
+         probe_chat, m_chat, probe_route, m_route, probe_vas, m_vas,
+         reward_head, m_reward) = st
+        export_all(out, shash, params, probe_code, m_code, lora_math,
+                   probe_math, m_math, probe_chat, m_chat, probe_route,
+                   m_route, probe_vas, m_vas, reward_head, m_reward,
+                   lm_losses, log, log_lines, t_start, sizes, cfg)
+        return
+
+    # ---------------- 1. train ------------------------------------------------
+    import pickle
+    lm_cache = os.path.join(out, "lm_state.pkl")
+    if os.path.exists(lm_cache) and (args.export_only or args.reuse_lm):
+        log(f"== reusing pretrained LM from {lm_cache} ==")
+        with open(lm_cache, "rb") as f:
+            params, lm_losses = pickle.load(f)
+    else:
+        log("== pretraining TinyLM ==")
+        params, lm_losses = train.pretrain_lm(tc, cfg, log=log)
+        with open(lm_cache, "wb") as f:
+            pickle.dump((params, lm_losses), f)
+
+    log("== probe: code (MLP on hidden states, BCE on empirical λ) ==")
+    qs_tr, ids_tr, li_tr, lam_tr = data.binary_probe_data("code", sizes.n_train, 32, 1000)
+    qs_va, ids_va, li_va, lam_va = data.binary_probe_data("code", sizes.n_val, 32, 2000)
+    h_tr = train.encode_all(params, ids_tr, li_tr, cfg)
+    h_va = train.encode_all(params, ids_va, li_va, cfg)
+    probe_code, m_code = train.train_probe(h_tr, lam_tr, h_va, lam_va,
+                                           loss="bce", tc=tc, log=log, seed_offset=1)
+
+    log("== probe: math (LoRA fine-tune variant, BCE on empirical λ) ==")
+    mqs_tr, mids_tr, mli_tr, mlam_tr = data.binary_probe_data("math", sizes.n_train, 32, 1100)
+    mqs_va, mids_va, mli_va, mlam_va = data.binary_probe_data("math", sizes.n_val, 32, 2100)
+    lora_math, probe_math, m_math = train.train_lora_probe(
+        params, mids_tr, mli_tr, mlam_tr, mids_va, mli_va, mlam_va, cfg, tc, log=log)
+
+    log("== probe: chat Δ-vector (MSE, bootstrap targets) ==")
+    cqs_tr, cids_tr, cli_tr, cd_tr = data.chat_delta_data(sizes.n_train, 64, B_MAX_CHAT, 1200)
+    cqs_va, cids_va, cli_va, cd_va = data.chat_delta_data(sizes.n_val, 64, B_MAX_CHAT, 2200)
+    ch_tr = train.encode_all(params, cids_tr, cli_tr, cfg, pool="mean")
+    ch_va = train.encode_all(params, cids_va, cli_va, cfg, pool="mean")
+    probe_chat, m_chat = train.train_probe(ch_tr, cd_tr, ch_va, cd_va,
+                                           n_out=B_MAX_CHAT, loss="mse",
+                                           tc=tc, log=log, seed_offset=2)
+
+    log("== probe: routing preference (model-size pair, BCE on MC p(S≻W)) ==")
+    rqs_tr, rids_tr, rli_tr, rp_tr = data.pref_probe_data(sizes.n_train, 64, 1300, vas=False)
+    rqs_va, rids_va, rli_va, rp_va = data.pref_probe_data(sizes.n_val, 64, 2300, vas=False)
+    rh_tr = train.encode_all(params, rids_tr, rli_tr, cfg, pool="mean")
+    rh_va = train.encode_all(params, rids_va, rli_va, cfg, pool="mean")
+    probe_route, m_route = train.train_probe(rh_tr, rp_tr, rh_va, rp_va,
+                                             loss="bce", tc=tc, log=log, seed_offset=3)
+
+    log("== probe: routing preference (VAS pair) ==")
+    vp_tr = tasks.preference_prob(rqs_tr, 64, 1307, vas=True)
+    vp_va = tasks.preference_prob(rqs_va, 64, 2307, vas=True)
+    probe_vas, m_vas = train.train_probe(rh_tr, vp_tr, rh_va, vp_va,
+                                         loss="bce", tc=tc, log=log, seed_offset=4)
+
+    log("== reward head ==")
+    reward_head, m_reward = train.train_reward_head(params, cfg, tc, log=log)
+
+    with open(cache_path, "wb") as f:
+        pickle.dump((params, lm_losses, probe_code, m_code, lora_math,
+                     probe_math, m_math, probe_chat, m_chat, probe_route,
+                     m_route, probe_vas, m_vas, reward_head, m_reward), f)
+
+    export_all(out, shash, params, probe_code, m_code, lora_math, probe_math,
+               m_math, probe_chat, m_chat, probe_route, m_route, probe_vas,
+               m_vas, reward_head, m_reward, lm_losses, log, log_lines,
+               t_start, sizes, cfg)
+
+
+def export_all(out, shash, params, probe_code, m_code, lora_math, probe_math,
+               m_math, probe_chat, m_chat, probe_route, m_route, probe_vas,
+               m_vas, reward_head, m_reward, lm_losses, log, log_lines,
+               t_start, sizes, cfg):
+    manifest_path = os.path.join(out, "MANIFEST.json")
+    # ---------------- 2. export HLO artifacts ---------------------------------
+    log("== exporting HLO artifacts ==")
+    written = {}
+
+    for mode in KERNEL_MODES:
+        def enc(ids, li, _m=mode):
+            return (model.encode(params, ids, li, cfg, kernel_mode=_m),)
+
+        def enc_probe_code(ids, li, _m=mode):
+            h = model.encode(params, ids, li, cfg, kernel_mode=_m)
+            return (model.apply_probe(probe_code, h, sigmoid=True, kernel_mode=_m)[:, 0],)
+
+        def enc_probe_math(ids, li, _m=mode):
+            h = model.encode(params, ids, li, cfg, kernel_mode=_m, lora=lora_math)
+            return (model.apply_probe(probe_math, h, sigmoid=True, kernel_mode=_m)[:, 0],)
+
+        # mean-pool heads ignore last_idx; export them single-input (XLA
+        # would DCE the parameter anyway and change the runtime arity).
+        def enc_probe_chat(ids, _m=mode):
+            h = model.encode_mean(params, ids, None, cfg, kernel_mode=_m)
+            return (model.apply_probe(probe_chat, h, sigmoid=False, kernel_mode=_m),)
+
+        def enc_probe_route(ids, _m=mode):
+            h = model.encode_mean(params, ids, None, cfg, kernel_mode=_m)
+            return (model.apply_probe(probe_route, h, sigmoid=True, kernel_mode=_m)[:, 0],)
+
+        def enc_probe_vas(ids, _m=mode):
+            h = model.encode_mean(params, ids, None, cfg, kernel_mode=_m)
+            return (model.apply_probe(probe_vas, h, sigmoid=True, kernel_mode=_m)[:, 0],)
+
+        def dec_step(ids, li, _m=mode):
+            return (model.decode_step(params, ids, li, cfg, kernel_mode=_m),)
+
+        def reward_fn(ids, _m=mode):
+            return (model.reward_score(params, reward_head, ids, None, cfg, kernel_mode=_m),)
+
+        io_b = (spec_i32(B, S), spec_i32(B))
+        io_b1 = (spec_i32(B, S),)
+        io_db = (spec_i32(DB, S), spec_i32(DB))
+        exports = [
+            (f"encoder_{mode}", enc, io_b),
+            (f"encode_probe_code_{mode}", enc_probe_code, io_b),
+            (f"encode_probe_math_{mode}", enc_probe_math, io_b),
+            (f"encode_probe_chat_{mode}", enc_probe_chat, io_b1),
+            (f"encode_probe_route_{mode}", enc_probe_route, io_b1),
+            (f"encode_probe_vas_{mode}", enc_probe_vas, io_b1),
+            (f"decode_step_{mode}", dec_step, io_db),
+            (f"reward_{mode}", reward_fn, io_b1),
+        ]
+        for name, fn, io in exports:
+            path = os.path.join(out, name + ".hlo.txt")
+            n = export(fn, io, path)
+            written[name] = n
+            log(f"  wrote {name}.hlo.txt ({n} chars)")
+
+    # rerank kernel standalone (scores [B, K] → idx/val), K = B_MAX_CHAT
+    from .kernels import rerank as pallas_rerank
+    from .kernels.ref import ref_rerank
+
+    for mode, fn in (("pallas", pallas_rerank), ("xla", ref_rerank)):
+        name = f"rerank_{mode}"
+        path = os.path.join(out, name + ".hlo.txt")
+        n = export(lambda s, m, _f=fn: tuple(_f(s, m)),
+                   (spec_f32(B, B_MAX_CHAT), spec_f32(B, B_MAX_CHAT)), path)
+        written[name] = n
+        log(f"  wrote {name}.hlo.txt ({n} chars)")
+
+    # ---------------- 3. goldens ----------------------------------------------
+    log("== goldens ==")
+    rng = np.random.default_rng(7)
+    g_texts = [tasks.gen_code(rng).text for _ in range(B // 2)] + \
+              [tasks.gen_math(rng).text for _ in range(B // 4)] + \
+              [tasks.gen_chat(rng).text for _ in range(B - B // 2 - B // 4)]
+    g_ids = tokenizer.encode_batch(g_texts)
+    g_li = tokenizer.last_index(g_ids)
+    jid, jli = jnp.asarray(g_ids), jnp.asarray(g_li)
+
+    h = np.asarray(model.encode(params, jid, jli, cfg))
+    h_mean = np.asarray(model.encode_mean(params, jid, jli, cfg))
+    lam_code = np.asarray(model.apply_probe(probe_code, jnp.asarray(h))[:, 0])
+    h_lora = np.asarray(model.encode(params, jid, jli, cfg, lora=lora_math))
+    lam_math = np.asarray(model.apply_probe(probe_math, jnp.asarray(h_lora))[:, 0])
+    delta_chat = np.asarray(model.apply_probe(probe_chat, jnp.asarray(h_mean), sigmoid=False))
+    pref_route = np.asarray(model.apply_probe(probe_route, jnp.asarray(h_mean))[:, 0])
+    pref_vas = np.asarray(model.apply_probe(probe_vas, jnp.asarray(h_mean))[:, 0])
+    dec_ids, dec_li = g_ids[:DB], g_li[:DB]
+    dec_logits = np.asarray(model.decode_step(params, jnp.asarray(dec_ids),
+                                              jnp.asarray(dec_li), cfg))
+    rew = np.asarray(model.reward_score(params, reward_head, jid, jli, cfg))
+
+    goldens = {
+        "texts": g_texts,
+        "ids": g_ids.tolist(),
+        "last_idx": g_li.tolist(),
+        "hidden_head8": h[:8, :8].tolist(),
+        "lam_code": lam_code.tolist(),
+        "lam_math": lam_math.tolist(),
+        "delta_chat_head8": delta_chat[:8].tolist(),
+        "pref_route": pref_route.tolist(),
+        "pref_vas": pref_vas.tolist(),
+        "decode_logits_row0_head16": dec_logits[0, :16].tolist(),
+        "decode_argmax": dec_logits.argmax(axis=-1).tolist(),
+        "reward": rew.tolist(),
+    }
+    with open(os.path.join(out, "goldens.json"), "w") as f:
+        json.dump(goldens, f)
+
+    # ---------------- 4. datasets for the rust experiment drivers -------------
+    log("== exporting test datasets ==")
+    def dump_queries(name, qs):
+        rows = [{"text": q.text, "answer": q.answer, "lam": q.lam, "mu": q.mu,
+                 "sigma": q.sigma, "gain": q.gain, "gain_vas": q.gain_vas}
+                for q in qs]
+        with open(os.path.join(out, "datasets", name), "w") as f:
+            json.dump(rows, f)
+
+    dump_queries("code_test.json", tasks.gen_dataset("code", sizes.n_test, 9000))
+    dump_queries("math_test.json", tasks.gen_dataset("math", sizes.n_test, 9100))
+    dump_queries("chat_test.json", tasks.gen_dataset("chat", sizes.n_test, 9200))
+
+    # ---------------- 5. metrics + manifest -----------------------------------
+    table1 = {"code": m_code, "math": m_math, "chat_delta": m_chat,
+              "route_size": m_route, "route_vas": m_vas, "reward_head": m_reward}
+    with open(os.path.join(out, "train_metrics.json"), "w") as f:
+        json.dump({"table1": table1, "lm_loss_first": lm_losses[0],
+                   "lm_loss_last": lm_losses[-1]}, f, indent=1)
+
+    def tree_stats(tree, prefix=""):
+        stats = {}
+        if isinstance(tree, dict):
+            for k, v in tree.items():
+                stats.update(tree_stats(v, f"{prefix}{k}."))
+        elif isinstance(tree, list):
+            for i, v in enumerate(tree):
+                stats.update(tree_stats(v, f"{prefix}{i}."))
+        else:
+            a = np.asarray(tree)
+            stats[prefix[:-1]] = {"shape": list(a.shape),
+                                  "norm": float(np.linalg.norm(a))}
+        return stats
+
+    manifest = {
+        "source_hash": shash,
+        "seq": S, "batch": B, "decode_batch": DB,
+        "vocab": VOCAB_PADDED, "b_max_chat": B_MAX_CHAT,
+        "artifacts": written,
+        "weights": tree_stats({"lm": params, "probe_code": probe_code,
+                               "probe_math": probe_math, "probe_chat": probe_chat,
+                               "probe_route": probe_route, "probe_vas": probe_vas,
+                               "reward_head": reward_head}),
+        "elapsed_s": round(time.time() - t_start, 1),
+    }
+    with open(manifest_path, "w") as f:
+        json.dump(manifest, f, indent=1)
+    with open(os.path.join(out, "train_log.txt"), "w") as f:
+        f.write("\n".join(log_lines))
+    log(f"== done in {time.time()-t_start:.1f}s ==")
+
+
+if __name__ == "__main__":
+    main()

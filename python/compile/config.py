@@ -1,0 +1,96 @@
+"""Build-time configuration for the TinyLM stack.
+
+Everything here is mirrored on the rust side in `rust/src/config/model.rs`
+(shapes baked into the exported HLO artifacts) — keep the two in sync. The
+`ARTIFACT_BATCH` sizes are the static PJRT batch shapes rust pads to.
+"""
+
+from dataclasses import dataclass, field
+
+
+# --- tokenizer (byte-level; mirrored in rust/src/tokenizer) ----------------
+PAD_ID = 256
+BOS_ID = 257
+EOS_ID = 258
+VOCAB = 259          # 256 bytes + PAD/BOS/EOS
+VOCAB_PADDED = 320   # embedding rows padded for lane alignment
+
+MAX_SEQ = 64         # static sequence length of every artifact
+MAX_NEW_TOKENS = 24  # generation budget per sample in the decode loop
+
+
+@dataclass(frozen=True)
+class TinyLMConfig:
+    """Decoder-only transformer used as encoder, generator and reward model."""
+
+    vocab: int = VOCAB_PADDED
+    d_model: int = 128
+    n_heads: int = 4
+    n_layers: int = 4
+    d_ff: int = 512
+    max_seq: int = MAX_SEQ
+    dropout: float = 0.0  # inference-only stack; kept for completeness
+
+    @property
+    def d_head(self) -> int:
+        assert self.d_model % self.n_heads == 0
+        return self.d_model // self.n_heads
+
+
+@dataclass(frozen=True)
+class ProbeConfig:
+    """Two-layer MLP difficulty probe on the encoder's last hidden state.
+
+    `n_out` is 1 for the binary-λ heads (code/math, eq. 7) and for the
+    preference heads (routing, eq. 8); it is `B_MAX_CHAT` for the chat
+    marginal-reward vector head (eq. 6).
+    """
+
+    d_in: int = 128
+    d_hidden: int = 128
+    n_out: int = 1
+
+
+@dataclass(frozen=True)
+class TrainConfig:
+    # LM pretraining
+    lm_steps: int = 2400
+    lm_batch: int = 64
+    lm_lr: float = 2e-3
+    lm_warmup: int = 100
+    # probe training (lr > 1e-3 diverges on the standardized features of the
+    # longer-trained encoder — NaN via GELU overflow)
+    probe_steps: int = 2500
+    probe_batch: int = 128
+    probe_lr: float = 1e-3
+    # reward head training
+    reward_steps: int = 300
+    reward_batch: int = 64
+    reward_lr: float = 2e-3
+    # LoRA fine-tune (math probe variant)
+    lora_rank: int = 8
+    lora_steps: int = 200
+    lora_lr: float = 1e-3
+    seed: int = 0
+
+
+# --- domain dataset sizes ---------------------------------------------------
+@dataclass(frozen=True)
+class DomainSizes:
+    n_train: int = 4096
+    n_val: int = 512
+    n_test: int = 2048
+
+
+# max best-of-k budgets per domain (paper: 100 code / 128 math / 8 chat)
+B_MAX_CODE = 100
+B_MAX_MATH = 128
+B_MAX_CHAT = 8
+
+# static batch sizes of exported executables (rust pads to these)
+ARTIFACT_BATCH = 64        # encoder / probes / reward
+DECODE_BATCH = 32          # generation decode step
+
+DEFAULT_TRAIN = TrainConfig()
+DEFAULT_LM = TinyLMConfig()
+DEFAULT_SIZES = DomainSizes()

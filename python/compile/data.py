@@ -1,0 +1,133 @@
+"""Dataset assembly for build-time training (L2).
+
+Turns the synthetic task universe (tasks.py) into:
+* next-token pretraining batches for TinyLM,
+* (hidden-state, target) supervision for every probe head — empirical λ̂ for
+  binary domains (paper §3.3), bootstrap Δ̂ vectors for chat (paper eq. 6),
+  Monte-Carlo preference probabilities for routing (paper eq. 11/12),
+* (tokens, reward) pairs for the reward head.
+
+The best-of-k expectation uses the classic unbiased order-statistic estimator
+E[max of j draws] = Σ_i C(i−1, j−1)/C(m, j) · r_(i) over m observed rewards —
+the same estimator implemented in ``rust/src/simulator/bootstrap.rs`` and
+cross-checked by goldens.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from . import tasks, tokenizer
+from .config import MAX_SEQ
+
+
+# --- unbiased best-of-k curve -------------------------------------------------
+def best_of_k_curve(rewards: np.ndarray, k_max: int) -> np.ndarray:
+    """E[max of j samples] for j=1..k_max from m observed rewards (unbiased).
+
+    rewards: [m] → [k_max]. Requires k_max <= m.
+    """
+    m = rewards.shape[0]
+    assert k_max <= m, (k_max, m)
+    r = np.sort(rewards)
+    out = np.empty(k_max, dtype=np.float64)
+    for j in range(1, k_max + 1):
+        # w_i = C(i-1, j-1) / C(m, j) for i = j..m, by stable recurrence
+        # C(i, j-1) = C(i-1, j-1) * i / (i - j + 1).
+        denom = 1.0
+        for t in range(j):  # C(m, j)
+            denom *= (m - t) / (t + 1)
+        w = np.zeros(m)
+        c = 1.0  # C(j-1, j-1)
+        for i in range(j, m + 1):
+            w[i - 1] = c / denom
+            c *= i / (i - j + 1)
+        out[j - 1] = float((w * r).sum())
+    return out.astype(np.float32)
+
+
+def marginal_rewards(rewards: np.ndarray, k_max: int) -> np.ndarray:
+    """Δ_j = E[max_j] − E[max_{j−1}], with E[max_0] = 0 (paper §3)."""
+    q = best_of_k_curve(rewards, k_max)
+    d = np.empty_like(q)
+    d[0] = q[0]
+    d[1:] = q[1:] - q[:-1]
+    return d
+
+
+# --- LM pretraining batches ---------------------------------------------------
+def corpus_batches(n_lines: int, batch: int, steps: int, seed: int):
+    """Yield (ids [B,S], valid-target mask [B,S]) pretraining batches."""
+    lines = tasks.gen_corpus(n_lines, seed)
+    ids = tokenizer.encode_batch(lines)
+    rng = np.random.default_rng(seed + 1)
+    for _ in range(steps):
+        sel = rng.integers(0, len(lines), batch)
+        yield ids[sel]
+
+
+# --- probe supervision ----------------------------------------------------------
+def binary_probe_data(domain: str, n: int, m_samples: int, seed: int):
+    """(queries, ids, last_idx, λ̂_emp [n]) for code/math λ heads."""
+    qs = tasks.gen_dataset(domain, n, seed)
+    outcomes = tasks.sample_binary_outcomes(qs, m_samples, seed + 7)
+    lam_emp = outcomes.mean(axis=1).astype(np.float32)
+    ids = tokenizer.encode_batch([q.text for q in qs])
+    return qs, ids, tokenizer.last_index(ids), lam_emp
+
+
+def chat_delta_data(n: int, m_samples: int, k_max: int, seed: int):
+    """(queries, ids, last_idx, Δ̂ [n, k_max]) for the chat MSE head."""
+    qs = tasks.gen_dataset("chat", n, seed)
+    rewards = tasks.sample_chat_rewards(qs, m_samples, seed + 7)
+    deltas = np.stack([marginal_rewards(rewards[i], k_max)
+                       for i in range(n)], axis=0)
+    ids = tokenizer.encode_batch([q.text for q in qs])
+    return qs, ids, tokenizer.last_index(ids), deltas.astype(np.float32)
+
+
+def pref_probe_data(n: int, n_mc: int, seed: int, vas: bool):
+    """(queries, ids, last_idx, p̂(S≻W) [n]) for routing heads."""
+    qs = tasks.gen_dataset("chat", n, seed)
+    pref = tasks.preference_prob(qs, n_mc, seed + 7, vas=vas)
+    ids = tokenizer.encode_batch([q.text for q in qs])
+    return qs, ids, tokenizer.last_index(ids), pref
+
+
+# --- reward-head supervision -----------------------------------------------------
+def response_quality(resp: str) -> float:
+    """Deterministic response quality feature, mirrored in rust/src/workload.
+
+    Mean chat-weight of the response's alphabet characters: responses made of
+    "good" words score higher. Linear in the byte bag, so the reward head
+    (an MLP on mean-pooled hidden states) can actually learn it — an earlier
+    modular-hash definition was unlearnable by construction.
+    """
+    idx = [tasks.CHAT_ALPHABET.index(c) for c in resp if c in tasks.CHAT_ALPHABET]
+    if not idx:
+        return -0.5
+    return float(sum(tasks.chat_weight(i) for i in idx) / len(idx))
+
+
+def true_reward(q: tasks.Query, resp: str) -> float:
+    """Ground-truth reward the reward head is trained to approximate."""
+    return q.mu + 0.8 * response_quality(resp)
+
+
+def reward_head_data(n: int, seed: int):
+    """(ids, last_idx, r) over chat query+response strings."""
+    rng = np.random.default_rng(seed)
+    qs = tasks.gen_dataset("chat", n, seed)
+    rows, targets = [], []
+    for q in qs:
+        m = int(rng.integers(1, 7))
+        words = [tasks.CHAT_WORDS[int(rng.integers(0, 64))] for _ in range(m)]
+        resp = " ".join(words)
+        full = q.text + " = " + resp
+        if len(full.encode()) > MAX_SEQ - 2:
+            full = full[: MAX_SEQ - 2]
+            resp = full.split(" = ", 1)[1] if " = " in full else resp
+        rows.append(full)
+        targets.append(true_reward(q, resp))
+    ids = tokenizer.encode_batch(rows)
+    return ids, tokenizer.last_index(ids), np.asarray(targets, dtype=np.float32)

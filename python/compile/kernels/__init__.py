@@ -1,0 +1,8 @@
+"""L1 Pallas kernels (interpret=True) + pure-jnp reference oracles."""
+
+from .attention import attention
+from .probe import probe_mlp
+from .rerank import rerank
+from .rmsnorm import rmsnorm
+
+__all__ = ["attention", "probe_mlp", "rerank", "rmsnorm"]

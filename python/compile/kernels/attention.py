@@ -1,0 +1,91 @@
+"""Fused multi-head attention Pallas kernel (flash-attention restated for TPU).
+
+The paper's serving stacks lean on GPU flash-attention; the TPU restatement
+(DESIGN.md §4) tiles the HBM→VMEM schedule with BlockSpec instead of
+threadblocks: the grid walks (batch×head, q-block), each program streams
+K/V in `block_k` tiles through VMEM while maintaining the online-softmax
+running (max, denom, accumulator) so the S×S score matrix never materialises.
+
+VMEM budget per program (f32, S=64, D=32, block_q=block_k=32):
+q tile 32×32 + k/v tiles 32×32×2 + acc 32×32 + stats ≈ 20 KiB — far inside
+the ~16 MiB/core budget; block sizes were chosen so the same BlockSpec scales
+to S=2048 (q 128×128 + 2×k/v 128×128 + acc ≈ 256 KiB) with full MXU lanes.
+
+interpret=True throughout: CPU PJRT cannot execute Mosaic custom-calls, so the
+kernel lowers to plain HLO (while-loops) that the rust runtime runs; the
+BlockSpec structure is what carries to real TPU.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e30
+
+
+def _attn_kernel(q_ref, k_ref, v_ref, mask_ref, o_ref, *,
+                 block_q: int, block_k: int, seq: int, causal: bool):
+    qi = pl.program_id(1)
+    d = q_ref.shape[-1]
+    scale = 1.0 / jnp.sqrt(jnp.asarray(d, dtype=jnp.float32))
+    q = q_ref[0, :, :].astype(jnp.float32) * scale            # [bq, d]
+    row_ids = qi * block_q + jax.lax.iota(jnp.int32, block_q)  # [bq]
+
+    m0 = jnp.full((block_q,), NEG_INF, dtype=jnp.float32)
+    l0 = jnp.zeros((block_q,), dtype=jnp.float32)
+    acc0 = jnp.zeros((block_q, d), dtype=jnp.float32)
+
+    def body(j, carry):
+        m, l, acc = carry
+        k = pl.load(k_ref, (0, pl.ds(j * block_k, block_k), slice(None)))
+        v = pl.load(v_ref, (0, pl.ds(j * block_k, block_k), slice(None)))
+        km = pl.load(mask_ref, (0, pl.ds(j * block_k, block_k)))
+        s = q @ k.astype(jnp.float32).T                        # [bq, bk]
+        col_ids = j * block_k + jax.lax.iota(jnp.int32, block_k)
+        valid = km[None, :] > 0
+        if causal:
+            valid = valid & (col_ids[None, :] <= row_ids[:, None])
+        s = jnp.where(valid, s, NEG_INF)
+        m_new = jnp.maximum(m, s.max(axis=-1))
+        # clamp so fully-masked rows (all -inf) don't produce NaN via inf-inf
+        m_safe = jnp.maximum(m_new, -0.5e30)
+        p = jnp.exp(s - m_safe[:, None])
+        alpha = jnp.exp(jnp.maximum(m, -0.5e30) - m_safe)
+        l_new = alpha * l + p.sum(axis=-1)
+        acc_new = alpha[:, None] * acc + p @ v.astype(jnp.float32)
+        return m_new, l_new, acc_new
+
+    n_kb = seq // block_k
+    m, l, acc = jax.lax.fori_loop(0, n_kb, body, (m0, l0, acc0))
+    out = acc / (l + 1e-30)[:, None]
+    o_ref[0, :, :] = out.astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "block_q", "block_k"))
+def attention(q, k, v, mask, *, causal: bool = True,
+              block_q: int = 32, block_k: int = 32):
+    """Fused attention. q,k,v: [BH, S, D]; mask: [BH, S] → [BH, S, D]."""
+    bh, seq, d = q.shape
+    block_q = min(block_q, seq)
+    block_k = min(block_k, seq)
+    assert seq % block_q == 0 and seq % block_k == 0, (seq, block_q, block_k)
+    grid = (bh, seq // block_q)
+    kernel = functools.partial(_attn_kernel, block_q=block_q,
+                               block_k=block_k, seq=seq, causal=causal)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, block_q, d), lambda b, i: (b, i, 0)),
+            pl.BlockSpec((1, seq, d), lambda b, i: (b, 0, 0)),
+            pl.BlockSpec((1, seq, d), lambda b, i: (b, 0, 0)),
+            pl.BlockSpec((1, seq), lambda b, i: (b, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, d), lambda b, i: (b, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((bh, seq, d), q.dtype),
+        interpret=True,
+    )(q, k, v, mask)

@@ -1,0 +1,56 @@
+"""Fused difficulty-probe MLP Pallas kernel (paper §3.1, MLP variant).
+
+One kernel computes σ(W2·GELU(W1·h + b1) + b2) for a block of queries: the
+four matmul/bias/activation HLO ops (plus three HBM round-trips) collapse to
+a single VMEM-resident pass. Weights are tiny (D=H=128, O≤8 ⇒ ~130 KiB f32)
+and are broadcast to every grid step; activations stream through in
+`block_b`-row tiles.
+
+The same kernel serves all probe heads: λ̂ (binary-reward domains, sigmoid),
+Δ̂ vector (chat MSE head, identity), and p̂(S≻W) (routing heads, sigmoid).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+_GELU_C = 0.7978845608028654  # sqrt(2/pi)
+
+
+def _probe_kernel(h_ref, w1_ref, b1_ref, w2_ref, b2_ref, o_ref, *, sigmoid: bool):
+    h = h_ref[...].astype(jnp.float32)                  # [bb, D]
+    z = h @ w1_ref[...].astype(jnp.float32) + b1_ref[...].astype(jnp.float32)
+    z = 0.5 * z * (1.0 + jnp.tanh(_GELU_C * (z + 0.044715 * z * z * z)))
+    out = z @ w2_ref[...].astype(jnp.float32) + b2_ref[...].astype(jnp.float32)
+    if sigmoid:
+        out = 1.0 / (1.0 + jnp.exp(-out))
+    o_ref[...] = out.astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("sigmoid", "block_b"))
+def probe_mlp(h, w1, b1, w2, b2, *, sigmoid: bool = True, block_b: int = 64):
+    """h: [B, D]; w1 [D,H]; b1 [H]; w2 [H,O]; b2 [O] → [B, O]."""
+    b, d = h.shape
+    hdim = w1.shape[1]
+    o = w2.shape[1]
+    block_b = min(block_b, b)
+    assert b % block_b == 0, (b, block_b)
+    kernel = functools.partial(_probe_kernel, sigmoid=sigmoid)
+    return pl.pallas_call(
+        kernel,
+        grid=(b // block_b,),
+        in_specs=[
+            pl.BlockSpec((block_b, d), lambda i: (i, 0)),
+            pl.BlockSpec((d, hdim), lambda i: (0, 0)),
+            pl.BlockSpec((hdim,), lambda i: (0,)),
+            pl.BlockSpec((hdim, o), lambda i: (0, 0)),
+            pl.BlockSpec((o,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((block_b, o), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, o), h.dtype),
+        interpret=True,
+    )(h, w1, b1, w2, b2)

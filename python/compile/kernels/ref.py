@@ -1,0 +1,65 @@
+"""Pure-jnp oracles for every Pallas kernel (the L1 correctness contract).
+
+Each function here is the mathematical definition; the Pallas kernels in this
+package must match them to float tolerance (enforced by
+python/tests/test_kernels.py with hypothesis sweeps over shapes/seeds).
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def ref_attention(q, k, v, mask, *, causal: bool = True):
+    """Multi-head attention.
+
+    q, k, v: [BH, S, D]   (batch×heads flattened)
+    mask:    [BH, S]      1.0 at valid (non-PAD) key positions
+    returns: [BH, S, D]
+    """
+    d = q.shape[-1]
+    scale = 1.0 / jnp.sqrt(jnp.asarray(d, dtype=q.dtype))
+    scores = jnp.einsum("bqd,bkd->bqk", q * scale, k)
+    neg = jnp.asarray(-1e30, dtype=q.dtype)
+    scores = jnp.where(mask[:, None, :] > 0, scores, neg)
+    if causal:
+        s = q.shape[1]
+        tri = jnp.tril(jnp.ones((s, s), dtype=bool))
+        scores = jnp.where(tri[None, :, :], scores, neg)
+    # guard fully-masked rows (PAD queries): softmax over -1e30 rows is fine
+    # numerically because we subtract the row max first.
+    scores = scores - scores.max(axis=-1, keepdims=True)
+    w = jnp.exp(scores)
+    w = w / (w.sum(axis=-1, keepdims=True) + 1e-30)
+    return jnp.einsum("bqk,bkd->bqd", w, v)
+
+
+def ref_probe_mlp(h, w1, b1, w2, b2, *, sigmoid: bool = True):
+    """Two-layer GELU MLP probe head.
+
+    h: [B, D]; w1: [D, H]; b1: [H]; w2: [H, O]; b2: [O] → [B, O]
+    """
+    z = h @ w1 + b1
+    z = 0.5 * z * (1.0 + jnp.tanh(0.7978845608028654 * (z + 0.044715 * z**3)))
+    out = z @ w2 + b2
+    return 1.0 / (1.0 + jnp.exp(-out)) if sigmoid else out
+
+
+def ref_rerank(scores, mask):
+    """Best-of-k arg-max reduce (paper eq. 1).
+
+    scores: [B, K] candidate rewards; mask: [B, K] 1.0 for real candidates.
+    returns (best_idx int32 [B], best_val [B]). Rows with no valid candidate
+    return idx 0 and value -1e30.
+    """
+    neg = jnp.asarray(-1e30, dtype=scores.dtype)
+    masked = jnp.where(mask > 0, scores, neg)
+    idx = jnp.argmax(masked, axis=-1).astype(jnp.int32)
+    val = jnp.max(masked, axis=-1)
+    return idx, val
+
+
+def ref_rmsnorm(x, g, eps: float = 1e-6):
+    """RMSNorm: x * g / rms(x).  x: [..., D], g: [D]."""
+    ms = jnp.mean(x * x, axis=-1, keepdims=True)
+    return x * (1.0 / jnp.sqrt(ms + eps)) * g

@@ -1,0 +1,51 @@
+"""Best-of-k rerank-reduce Pallas kernel (paper eq. 1's arg max).
+
+Given a [B, K] matrix of candidate rewards and a validity mask (adaptive
+allocation makes K ragged — row i only has b_i real candidates), one pass
+returns the winning index and its reward. On TPU this is a lane-wise max
+reduce that never leaves VMEM; fused here so the coordinator's rerank step
+is a single PJRT call after reward scoring.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e30
+
+
+def _rerank_kernel(s_ref, m_ref, idx_ref, val_ref):
+    s = s_ref[...].astype(jnp.float32)
+    m = m_ref[...].astype(jnp.float32)
+    masked = jnp.where(m > 0, s, NEG_INF)
+    idx_ref[...] = jnp.argmax(masked, axis=-1).astype(jnp.int32)
+    val_ref[...] = jnp.max(masked, axis=-1).astype(val_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block_b",))
+def rerank(scores, mask, *, block_b: int = 64):
+    """scores, mask: [B, K] → (best_idx int32 [B], best_val [B])."""
+    b, k = scores.shape
+    block_b = min(block_b, b)
+    assert b % block_b == 0, (b, block_b)
+    return pl.pallas_call(
+        _rerank_kernel,
+        grid=(b // block_b,),
+        in_specs=[
+            pl.BlockSpec((block_b, k), lambda i: (i, 0)),
+            pl.BlockSpec((block_b, k), lambda i: (i, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((block_b,), lambda i: (i,)),
+            pl.BlockSpec((block_b,), lambda i: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b,), jnp.int32),
+            jax.ShapeDtypeStruct((b,), scores.dtype),
+        ],
+        interpret=True,
+    )(scores, mask)

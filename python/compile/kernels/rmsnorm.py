@@ -1,0 +1,41 @@
+"""Fused RMSNorm Pallas kernel.
+
+Normalisation is memory-bound; fusing the mean-square, rsqrt and gain into
+one VMEM pass halves the HBM traffic of the naive three-op lowering. Rows
+stream through in `block_r` tiles; the gain vector rides along broadcast.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _rms_kernel(x_ref, g_ref, o_ref, *, eps: float):
+    x = x_ref[...].astype(jnp.float32)
+    g = g_ref[...].astype(jnp.float32)
+    ms = jnp.mean(x * x, axis=-1, keepdims=True)
+    o_ref[...] = (x * jax.lax.rsqrt(ms + eps) * g).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block_r", "eps"))
+def rmsnorm(x, g, *, eps: float = 1e-6, block_r: int = 64):
+    """x: [R, D]; g: [D] → [R, D] (2-D view; callers reshape)."""
+    r, d = x.shape
+    block_r = min(block_r, r)
+    assert r % block_r == 0, (r, block_r)
+    kernel = functools.partial(_rms_kernel, eps=eps)
+    return pl.pallas_call(
+        kernel,
+        grid=(r // block_r,),
+        in_specs=[
+            pl.BlockSpec((block_r, d), lambda i: (i, 0)),
+            pl.BlockSpec((d,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((block_r, d), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((r, d), x.dtype),
+        interpret=True,
+    )(x, g)

@@ -1,0 +1,190 @@
+"""L2: TinyLM — the JAX compute graph the rust coordinator serves.
+
+A decoder-only transformer used four ways (all exported as separate AOT
+artifacts, weights baked in as constants):
+
+* **encoder**      tokens → last-token hidden state (the probe's input)
+* **decode step**  tokens + position → next-token logits (generation)
+* **reward head**  tokens (query+response) → scalar reward
+* **probe heads**  hidden → λ̂ / Δ̂-vector / p̂(S≻W)   (paper §3.1)
+
+`kernel_mode` selects the attention/norm implementation: ``"pallas"`` lowers
+the L1 kernels (interpret=True) into the artifact, ``"xla"`` uses the pure-jnp
+reference ops and lets XLA fuse. Both are numerically equivalent (tested);
+training always uses ``"xla"`` for speed, and the AOT step exports both so the
+rust benches can compare them (DESIGN.md §9, L2 perf lever).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .config import TinyLMConfig, ProbeConfig, PAD_ID
+from .kernels import attention as pallas_attention
+from .kernels import probe_mlp as pallas_probe
+from .kernels import rmsnorm as pallas_rmsnorm
+from .kernels.ref import ref_attention, ref_probe_mlp, ref_rmsnorm
+
+
+# --- init -------------------------------------------------------------------
+def _dense(key, d_in, d_out, scale=None):
+    scale = scale if scale is not None else (1.0 / jnp.sqrt(d_in))
+    return jax.random.normal(key, (d_in, d_out), jnp.float32) * scale
+
+
+def init_lm(key, cfg: TinyLMConfig):
+    keys = jax.random.split(key, 4 + cfg.n_layers)
+    params = {
+        "tok_emb": jax.random.normal(keys[0], (cfg.vocab, cfg.d_model)) * 0.02,
+        "pos_emb": jax.random.normal(keys[1], (cfg.max_seq, cfg.d_model)) * 0.02,
+        "ln_f_g": jnp.ones(cfg.d_model),
+        "lm_head": _dense(keys[2], cfg.d_model, cfg.vocab, 0.02),
+        "blocks": [],
+    }
+    for i in range(cfg.n_layers):
+        ks = jax.random.split(keys[4 + i], 6)
+        params["blocks"].append({
+            "ln1_g": jnp.ones(cfg.d_model),
+            "wq": _dense(ks[0], cfg.d_model, cfg.d_model),
+            "wk": _dense(ks[1], cfg.d_model, cfg.d_model),
+            "wv": _dense(ks[2], cfg.d_model, cfg.d_model),
+            "wo": _dense(ks[3], cfg.d_model, cfg.d_model),
+            "ln2_g": jnp.ones(cfg.d_model),
+            "w_ff1": _dense(ks[4], cfg.d_model, cfg.d_ff),
+            "b_ff1": jnp.zeros(cfg.d_ff),
+            "w_ff2": _dense(ks[5], cfg.d_ff, cfg.d_model),
+            "b_ff2": jnp.zeros(cfg.d_model),
+        })
+    return params
+
+
+def init_probe(key, cfg: ProbeConfig):
+    k1, k2 = jax.random.split(key)
+    return {
+        "w1": _dense(k1, cfg.d_in, cfg.d_hidden),
+        "b1": jnp.zeros(cfg.d_hidden),
+        "w2": _dense(k2, cfg.d_hidden, cfg.n_out, 0.01),
+        "b2": jnp.zeros(cfg.n_out),
+    }
+
+
+def init_lora(key, cfg: TinyLMConfig, rank: int):
+    """LoRA adapters on wq/wv of every block (paper's LoRA probe variant)."""
+    out = []
+    for i in range(cfg.n_layers):
+        ks = jax.random.split(jax.random.fold_in(key, i), 4)
+        out.append({
+            "aq": jax.random.normal(ks[0], (cfg.d_model, rank)) * 0.02,
+            "bq": jnp.zeros((rank, cfg.d_model)),
+            "av": jax.random.normal(ks[1], (cfg.d_model, rank)) * 0.02,
+            "bv": jnp.zeros((rank, cfg.d_model)),
+        })
+    return out
+
+
+# --- forward ----------------------------------------------------------------
+def _norm(x, g, kernel_mode):
+    if kernel_mode == "pallas":
+        shape = x.shape
+        return pallas_rmsnorm(x.reshape(-1, shape[-1]), g).reshape(shape)
+    return ref_rmsnorm(x, g)
+
+
+def _attn(q, k, v, mask, kernel_mode):
+    if kernel_mode == "pallas":
+        return pallas_attention(q, k, v, mask, causal=True)
+    return ref_attention(q, k, v, mask, causal=True)
+
+
+def _block(x, p, mask, cfg: TinyLMConfig, kernel_mode, lora=None):
+    b, s, d = x.shape
+    h = cfg.n_heads
+    dh = cfg.d_head
+    y = _norm(x, p["ln1_g"], kernel_mode)
+    q = y @ p["wq"]
+    k = y @ p["wk"]
+    v = y @ p["wv"]
+    if lora is not None:
+        q = q + (y @ lora["aq"]) @ lora["bq"]
+        v = v + (y @ lora["av"]) @ lora["bv"]
+
+    def split(t):  # [B,S,D] → [B*H, S, Dh]
+        return t.reshape(b, s, h, dh).transpose(0, 2, 1, 3).reshape(b * h, s, dh)
+
+    mask_bh = jnp.repeat(mask, h, axis=0)
+    o = _attn(split(q), split(k), split(v), mask_bh, kernel_mode)
+    o = o.reshape(b, h, s, dh).transpose(0, 2, 1, 3).reshape(b, s, d)
+    x = x + o @ p["wo"]
+    y = _norm(x, p["ln2_g"], kernel_mode)
+    z = y @ p["w_ff1"] + p["b_ff1"]
+    z = jax.nn.gelu(z)
+    return x + z @ p["w_ff2"] + p["b_ff2"]
+
+
+def forward(params, ids, cfg: TinyLMConfig, *, kernel_mode="xla", lora=None):
+    """ids: [B, S] int32 → hidden states [B, S, D]."""
+    mask = (ids != PAD_ID).astype(jnp.float32)
+    x = params["tok_emb"][ids] + params["pos_emb"][None, : ids.shape[1], :]
+    x = x * mask[:, :, None]
+    for i, p in enumerate(params["blocks"]):
+        x = _block(x, p, mask, cfg, kernel_mode,
+                   lora=None if lora is None else lora[i])
+    return _norm(x, params["ln_f_g"], kernel_mode)
+
+
+def logits(params, ids, cfg: TinyLMConfig, *, kernel_mode="xla", lora=None):
+    """Next-token logits at every position: [B, S, V]."""
+    h = forward(params, ids, cfg, kernel_mode=kernel_mode, lora=lora)
+    return h @ params["lm_head"]
+
+
+def encode(params, ids, last_idx, cfg: TinyLMConfig, *, kernel_mode="xla", lora=None):
+    """Hidden state at the last non-PAD position: [B, D]."""
+    h = forward(params, ids, cfg, kernel_mode=kernel_mode, lora=lora)
+    return h[jnp.arange(ids.shape[0]), last_idx, :]
+
+
+def encode_mean(params, ids, last_idx, cfg: TinyLMConfig, *, kernel_mode="xla",
+                lora=None):
+    """Masked mean-pooled hidden states, layer 0 ‖ final layer: [B, 2D].
+
+    Used by the bag-affine heads (chat Δ, routing preferences, reward): their
+    targets are affine in the byte bag of the text, which is *linearly*
+    present in the mean of layer-0 hiddens (token+position embeddings) but
+    measurably destroyed by the upper layers of this 4-layer model
+    (layer-0 mean: reward linreg R² ≈ 0.8; final-layer mean: R² ≈ 0.1 —
+    see DESIGN.md §Findings). Concatenating both keeps the contextual
+    features the deeper probes may still want. `last_idx` is accepted for
+    interface parity; pooling uses the PAD mask.
+    """
+    del last_idx
+    mask = (ids != PAD_ID).astype(jnp.float32)
+    denom = mask.sum(axis=1, keepdims=True) + 1e-6
+    x0 = params["tok_emb"][ids] + params["pos_emb"][None, : ids.shape[1], :]
+    pooled0 = (x0 * mask[:, :, None]).sum(axis=1) / denom
+    h = forward(params, ids, cfg, kernel_mode=kernel_mode, lora=lora)
+    pooled_l = (h * mask[:, :, None]).sum(axis=1) / denom
+    return jnp.concatenate([pooled0, pooled_l], axis=-1)
+
+
+def decode_step(params, ids, last_idx, cfg: TinyLMConfig, *, kernel_mode="xla"):
+    """Logits for the token after position `last_idx`: [B, V]."""
+    return encode(params, ids, last_idx, cfg, kernel_mode=kernel_mode) @ params["lm_head"]
+
+
+def apply_probe(probe, h, *, sigmoid=True, kernel_mode="xla"):
+    if kernel_mode == "pallas":
+        return pallas_probe(h, probe["w1"], probe["b1"], probe["w2"], probe["b2"],
+                            sigmoid=sigmoid)
+    return ref_probe_mlp(h, probe["w1"], probe["b1"], probe["w2"], probe["b2"],
+                         sigmoid=sigmoid)
+
+
+def reward_score(params, head, ids, last_idx, cfg: TinyLMConfig, *, kernel_mode="xla"):
+    """Scalar reward r(x,y) for full (query+response) sequences: [B].
+
+    Mean-pooled features (the reward signal is bag-of-characters affine;
+    see data.response_quality)."""
+    h = encode_mean(params, ids, last_idx, cfg, kernel_mode=kernel_mode)
+    return apply_probe(head, h, sigmoid=False, kernel_mode=kernel_mode)[:, 0]

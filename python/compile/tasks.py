@@ -1,0 +1,197 @@
+"""Synthetic task universe (the datasets substitution — see DESIGN.md §5).
+
+Three domains mirror the paper's evaluation suites:
+
+* **code** (TACO-like):  ``ADD v1 v2 ... vk`` → answer ``(Σ v) % 100``.
+  Difficulty grows with operand count ``k``; instances with ``k > 8`` have
+  ground-truth success probability λ = 0, so that (with k ~ U{1..16}) ~50% of
+  the dataset is impossible — reproducing Fig. 3's Code left panel and the
+  online-allocation pathology discussed in §4.1.
+* **math** (Numina-like): ``REV s`` → answer ``reversed(s)``.  λ decays
+  smoothly with ``len(s)``; ~5% of instances are impossible, giving the
+  flatter difficulty histogram of Fig. 3's Math left panel.
+* **chat** (LMSYS-like):  ``CHAT w1 ... wm`` — open-ended; a per-query reward
+  distribution N(μ(x), σ(x)) replaces the NCSOFT reward model.  The routing
+  settings reuse chat queries with a strong-decoder gain g(x) that is
+  *sometimes negative* (the paper's "weak decoder sometimes wins").
+
+All ground-truth functions are integer/affine arithmetic on query features and
+are mirrored *exactly* in ``rust/src/workload/`` (property-tested against the
+JSON goldens exported by aot.py).  Every generator is a pure function of an
+explicit PRNG so datasets are reproducible across the two languages.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import numpy as np
+
+# 64-word chat vocabulary; single-character words so identity survives the
+# byte-level tokenizer (multi-byte words would smear identity across byte
+# bigrams, which mean-pooled probes cannot recover — verified empirically).
+# Weights are pure index formulas (rust-mirrorable).
+CHAT_ALPHABET = ("ABCDEFGHIJKLMNOPQRSTUVWXYZ"
+                 "abcdefghijklmnopqrstuvwxyz"
+                 "0123456789!?")
+CHAT_WORDS = list(CHAT_ALPHABET)
+assert len(CHAT_WORDS) == 64
+
+
+def chat_weight(i: int) -> float:
+    return ((7 * i) % 13 - 6) / 10.0
+
+
+def chat_volatile(i: int) -> bool:
+    return i % 5 == 0
+
+
+def route_gain_weight(i: int) -> float:
+    return ((11 * i) % 19 - 7) / 12.0
+
+
+def vas_gain_weight(i: int) -> float:
+    return ((5 * i) % 11 - 4) / 30.0
+
+
+@dataclass
+class Query:
+    text: str          # what the LM sees (before " =")
+    answer: str        # ground-truth completion for the exact-match verifier
+    lam: float         # ground-truth single-sample success probability λ(x)
+    mu: float          # chat: mean reward of one sample
+    sigma: float       # chat: std of sample reward
+    gain: float        # routing: strong-decoder mean advantage
+    gain_vas: float    # routing (VAS): strong-procedure mean advantage
+    domain: str
+
+
+# --- code domain ------------------------------------------------------------
+def code_lambda(k: int, big: int) -> float:
+    """λ for an ADD query with k operands, `big` of which are ≥ 50."""
+    if k > 8:
+        return 0.0
+    lam = 0.92 * (0.58 ** (k - 1)) * (0.92 ** big)
+    return float(min(max(lam, 0.0), 1.0))
+
+
+def gen_code(rng: np.random.Generator) -> Query:
+    k = int(rng.integers(1, 17))
+    vals = [int(rng.integers(0, 100)) for _ in range(k)]
+    big = sum(1 for v in vals if v >= 50)
+    text = "ADD " + " ".join(str(v) for v in vals)
+    ans = str(sum(vals) % 100)
+    return Query(text, ans, code_lambda(k, big), 0.0, 0.0, 0.0, 0.0, "code")
+
+
+# --- math domain ------------------------------------------------------------
+def math_lambda(length: int, vowels: int) -> float:
+    lam = 1.02 - 0.042 * length - 0.02 * vowels
+    return float(min(max(lam, 0.0), 1.0))
+
+
+def gen_math(rng: np.random.Generator) -> Query:
+    length = int(rng.integers(1, 25))
+    letters = "abcdefghijklmnopqrstuvwxyz"
+    s = "".join(letters[int(rng.integers(0, 26))] for _ in range(length))
+    vowels = sum(1 for c in s if c in "aeiou")
+    return Query("REV " + s, s[::-1], math_lambda(length, vowels),
+                 0.0, 0.0, 0.0, 0.0, "math")
+
+
+# --- chat / routing domains --------------------------------------------------
+def chat_params(word_idx: list[int]) -> tuple[float, float, float, float]:
+    """Per-query reward/preference parameters.
+
+    All four parameters are affine in the bag-of-words *mean* weight — the
+    statistic a probe on mean-pooled hidden states can recover exactly.
+    Amplification factors are tuned so the preference distribution spans the
+    paper's Fig. 5 left panels (model-size wide, VAS low-entropy) despite the
+    CLT shrink from averaging over m words.
+    """
+    m = len(word_idx)
+    mu = 1.0 + 1.8 * sum(chat_weight(i) for i in word_idx) / m
+    vol = sum(1 for i in word_idx if chat_volatile(i))
+    sigma = 0.25 + 0.55 * vol / m
+    gain = 2.2 * sum(route_gain_weight(i) for i in word_idx) / m
+    gain_vas = 0.22 + 1.2 * sum(vas_gain_weight(i) for i in word_idx) / m
+    return mu, sigma, gain, gain_vas
+
+
+def gen_chat(rng: np.random.Generator) -> Query:
+    m = int(rng.integers(2, 11))
+    idx = [int(rng.integers(0, 64)) for _ in range(m)]
+    mu, sigma, gain, gain_vas = chat_params(idx)
+    text = "CHAT " + " ".join(CHAT_WORDS[i] for i in idx)
+    return Query(text, "", 0.0, mu, sigma, gain, gain_vas, "chat")
+
+
+GENERATORS = {"code": gen_code, "math": gen_math, "chat": gen_chat}
+
+
+def gen_dataset(domain: str, n: int, seed: int) -> list[Query]:
+    rng = np.random.default_rng(seed)
+    return [GENERATORS[domain](rng) for _ in range(n)]
+
+
+# --- sampled outcomes (what the verifier / reward model would say) -----------
+def sample_binary_outcomes(qs: list[Query], k: int, seed: int) -> np.ndarray:
+    """n×k Bernoulli(λ) outcome matrix — the synthetic verifier."""
+    rng = np.random.default_rng(seed)
+    lam = np.asarray([q.lam for q in qs])[:, None]
+    return (rng.random((len(qs), k)) < lam).astype(np.float32)
+
+
+def sample_chat_rewards(qs: list[Query], k: int, seed: int) -> np.ndarray:
+    """n×k reward matrix r ~ N(μ(x), σ(x)), clipped to [-2, 4]."""
+    rng = np.random.default_rng(seed)
+    mu = np.asarray([q.mu for q in qs])[:, None]
+    sg = np.asarray([q.sigma for q in qs])[:, None]
+    return np.clip(rng.normal(mu, sg, (len(qs), k)), -2.0, 4.0).astype(np.float32)
+
+
+def sample_routing_rewards(
+    qs: list[Query], k: int, seed: int, vas: bool = False
+) -> tuple[np.ndarray, np.ndarray]:
+    """(weak n×k, strong n×k) reward matrices for a routing setting."""
+    rng = np.random.default_rng(seed)
+    mu = np.asarray([q.mu for q in qs])[:, None]
+    g = np.asarray([(q.gain_vas if vas else q.gain) for q in qs])[:, None]
+    sw = 0.35 if not vas else 0.3
+    ss = 0.30 if not vas else 0.25
+    weak = rng.normal(mu, sw, (len(qs), k))
+    strong = rng.normal(mu + g, ss, (len(qs), k))
+    return (np.clip(weak, -2, 4).astype(np.float32),
+            np.clip(strong, -2, 4).astype(np.float32))
+
+
+def preference_prob(qs: list[Query], n_mc: int, seed: int, vas: bool = False) -> np.ndarray:
+    """Monte-Carlo estimate of p(S ≻ W | x) = E σ(r_S − r_W)  (paper eq. 8/11)."""
+    weak, strong = sample_routing_rewards(qs, n_mc, seed, vas)
+    return (1.0 / (1.0 + np.exp(-(strong - weak)))).mean(axis=1).astype(np.float32)
+
+
+# --- LM pretraining corpus ----------------------------------------------------
+def corpus_line(rng: np.random.Generator) -> str:
+    """One supervised line ``<query> = <answer>`` for next-token pretraining.
+
+    Chat lines are a copy-first-word task: predicting the completion forces
+    the encoder to represent *which* words appear, which is exactly what the
+    chat/routing probes need to read off the hidden state (the paper's
+    premise that pretraining already encodes difficulty signal — here the
+    pretraining objective is what puts it there).
+    """
+    r = rng.random()
+    if r < 0.35:
+        q = gen_code(rng)
+    elif r < 0.7:
+        q = gen_math(rng)
+    else:
+        q = gen_chat(rng)
+        return q.text + " = " + q.text.split()[1]
+    return q.text + " = " + q.answer
+
+
+def gen_corpus(n: int, seed: int) -> list[str]:
+    rng = np.random.default_rng(seed)
+    return [corpus_line(rng) for _ in range(n)]

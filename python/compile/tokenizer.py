@@ -1,0 +1,47 @@
+"""Byte-level tokenizer, exactly mirrored by `rust/src/tokenizer/mod.rs`.
+
+ids 0..=255 are raw bytes; 256=PAD, 257=BOS, 258=EOS. Encoding of a query is
+[BOS] + bytes + [EOS], right-padded with PAD to `max_seq`. The attention mask
+marks non-PAD positions; `last_index` is the position of EOS (the hidden state
+the difficulty probe reads, mirroring "last hidden state of the query").
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from .config import BOS_ID, EOS_ID, MAX_SEQ, PAD_ID
+
+
+def encode(text: str, max_seq: int = MAX_SEQ) -> np.ndarray:
+    raw = text.encode("utf-8")
+    body = list(raw[: max_seq - 2])
+    ids = [BOS_ID] + body + [EOS_ID]
+    ids = ids + [PAD_ID] * (max_seq - len(ids))
+    return np.asarray(ids, dtype=np.int32)
+
+
+def encode_batch(texts: list[str], max_seq: int = MAX_SEQ) -> np.ndarray:
+    return np.stack([encode(t, max_seq) for t in texts], axis=0)
+
+
+def decode(ids) -> str:
+    out = bytearray()
+    for i in ids:
+        i = int(i)
+        if i == EOS_ID:
+            break
+        if i < 256 and i not in (PAD_ID, BOS_ID):
+            out.append(i)
+    return out.decode("utf-8", errors="replace")
+
+
+def mask(ids: np.ndarray) -> np.ndarray:
+    """1.0 at non-PAD positions."""
+    return (ids != PAD_ID).astype(np.float32)
+
+
+def last_index(ids: np.ndarray) -> np.ndarray:
+    """Index of the last non-PAD token (the EOS position) per row."""
+    m = ids != PAD_ID
+    return (m.sum(axis=-1) - 1).astype(np.int32)

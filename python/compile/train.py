@@ -1,0 +1,245 @@
+"""Build-time training of TinyLM, probe heads, LoRA variant and reward head.
+
+Runs exactly once inside ``make artifacts`` (aot.py drives it). All training
+uses the ``"xla"`` kernel mode for speed; exported artifacts may use
+``"pallas"`` (numerically equivalent, tested). Optimizer is a from-scratch
+Adam — no optax in the build image.
+"""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import data, model
+from .config import (DEFAULT_LM, DEFAULT_TRAIN, PAD_ID, ProbeConfig,
+                     B_MAX_CHAT, TrainConfig, TinyLMConfig)
+
+
+# --- Adam ---------------------------------------------------------------------
+def adam_init(params):
+    zeros = jax.tree_util.tree_map(jnp.zeros_like, params)
+    return {"m": zeros, "v": jax.tree_util.tree_map(jnp.zeros_like, params),
+            "t": jnp.zeros((), jnp.int32)}
+
+
+def adam_update(params, grads, state, lr, b1=0.9, b2=0.999, eps=1e-8):
+    t = state["t"] + 1
+    m = jax.tree_util.tree_map(lambda m, g: b1 * m + (1 - b1) * g, state["m"], grads)
+    v = jax.tree_util.tree_map(lambda v, g: b2 * v + (1 - b2) * g * g, state["v"], grads)
+    mh = jax.tree_util.tree_map(lambda m: m / (1 - b1 ** t), m)
+    vh = jax.tree_util.tree_map(lambda v: v / (1 - b2 ** t), v)
+    new = jax.tree_util.tree_map(lambda p, mh, vh: p - lr * mh / (jnp.sqrt(vh) + eps),
+                                 params, mh, vh)
+    return new, {"m": m, "v": v, "t": t}
+
+
+# --- LM pretraining --------------------------------------------------------------
+def lm_loss(params, ids, cfg: TinyLMConfig):
+    """Next-token cross entropy; PAD targets masked out."""
+    lg = model.logits(params, ids[:, :-1], cfg)
+    tgt = ids[:, 1:]
+    mask = (tgt != PAD_ID).astype(jnp.float32)
+    logp = jax.nn.log_softmax(lg, axis=-1)
+    nll = -jnp.take_along_axis(logp, tgt[..., None], axis=-1)[..., 0]
+    return (nll * mask).sum() / (mask.sum() + 1e-9)
+
+
+def pretrain_lm(tc: TrainConfig = DEFAULT_TRAIN, cfg: TinyLMConfig = DEFAULT_LM,
+                log=print):
+    key = jax.random.PRNGKey(tc.seed)
+    params = model.init_lm(key, cfg)
+    opt = adam_init(params)
+
+    @jax.jit
+    def step(params, opt, ids, lr):
+        loss, grads = jax.value_and_grad(lm_loss)(params, ids, cfg)
+        params, opt = adam_update(params, grads, opt, lr)
+        return params, opt, loss
+
+    losses = []
+    t0 = time.time()
+    batches = data.corpus_batches(60000, tc.lm_batch, tc.lm_steps, tc.seed + 100)
+    for i, ids in enumerate(batches):
+        # linear warmup → cosine decay to 10% (a flat lr plateaus ~1.9 and
+        # the model never gets past format-learning into task-learning)
+        warm = min(1.0, (i + 1) / max(tc.lm_warmup, 1))
+        progress = i / max(tc.lm_steps - 1, 1)
+        decay = 0.1 + 0.9 * 0.5 * (1.0 + np.cos(np.pi * progress))
+        params, opt, loss = step(params, opt, jnp.asarray(ids), tc.lm_lr * warm * decay)
+        losses.append(float(loss))
+        if i % 100 == 0:
+            log(f"  lm step {i:4d} loss {float(loss):.4f}")
+    log(f"  lm pretrain done in {time.time()-t0:.1f}s, "
+        f"loss {losses[0]:.3f} → {losses[-1]:.3f}")
+    return params, losses
+
+
+# --- hidden-state caching ----------------------------------------------------------
+def encode_all(params, ids, last_idx, cfg: TinyLMConfig, batch=256, lora=None,
+               pool="last"):
+    """Encode a full dataset to hidden states, batched.
+
+    pool="last" → EOS-position hidden (code/math λ heads, reward head);
+    pool="mean" → masked mean-pooled hidden (chat/routing heads).
+    """
+    enc_fn = model.encode if pool == "last" else model.encode_mean
+    enc = jax.jit(lambda i, li: enc_fn(params, i, li, cfg, lora=lora))
+    outs = []
+    n = ids.shape[0]
+    for s in range(0, n, batch):
+        outs.append(np.asarray(enc(jnp.asarray(ids[s:s + batch]),
+                                   jnp.asarray(last_idx[s:s + batch]))))
+    return np.concatenate(outs, axis=0)
+
+
+# --- probe head training ------------------------------------------------------------
+def bce(pred, target):
+    pred = jnp.clip(pred, 1e-6, 1 - 1e-6)
+    return -(target * jnp.log(pred) + (1 - target) * jnp.log(1 - pred)).mean()
+
+
+def train_probe(h_train, y_train, h_val, y_val, *, n_out=1, loss="bce",
+                tc: TrainConfig = DEFAULT_TRAIN, log=print, seed_offset=0):
+    """Train an MLP probe head on cached hidden states.
+
+    loss: "bce" for λ/preference heads (soft targets), "mse" for Δ vectors.
+    Returns (probe_params, metrics dict with train/val losses + Table-1 stats).
+    """
+    pc = ProbeConfig(d_in=h_train.shape[1], n_out=n_out)
+    probe = model.init_probe(jax.random.PRNGKey(tc.seed + 17 + seed_offset), pc)
+    opt = adam_init(probe)
+    sigmoid = loss == "bce"
+
+    # Standardize features; the constants are folded back into (w1, b1) after
+    # training so the exported probe remains a plain MLP on raw hidden states:
+    #   (h−μ)/σ·W1 + b1  ≡  h·(W1/σ) + (b1 − (μ/σ)·W1)
+    feat_mu = h_train.mean(axis=0)
+    feat_sd = h_train.std(axis=0)
+    # dead/near-constant dims would explode under 1/σ — leave them unscaled
+    feat_sd = np.where(feat_sd < 1e-4, 1.0, feat_sd)
+    h_train = (h_train - feat_mu) / feat_sd
+    h_val_n = (h_val - feat_mu) / feat_sd
+
+    def loss_fn(probe, h, y):
+        out = model.apply_probe(probe, h, sigmoid=sigmoid)
+        out = out[:, 0] if n_out == 1 else out
+        return bce(out, y) if loss == "bce" else ((out - y) ** 2).mean()
+
+    @jax.jit
+    def step(probe, opt, h, y):
+        lval, grads = jax.value_and_grad(loss_fn)(probe, h, y)
+        probe, opt = adam_update(probe, grads, opt, tc.probe_lr)
+        return probe, opt, lval
+
+    rng = np.random.default_rng(tc.seed + 23 + seed_offset)
+    n = h_train.shape[0]
+    for i in range(tc.probe_steps):
+        sel = rng.integers(0, n, tc.probe_batch)
+        probe, opt, lval = step(probe, opt, jnp.asarray(h_train[sel]),
+                                jnp.asarray(y_train[sel]))
+        if i % 200 == 0:
+            log(f"  probe step {i:4d} loss {float(lval):.4f}")
+
+    val_loss = float(loss_fn(probe, jnp.asarray(h_val_n), jnp.asarray(y_val)))
+    # fold the standardization into the first layer (see above)
+    w1 = np.asarray(probe["w1"]) / feat_sd[:, None]
+    b1 = np.asarray(probe["b1"]) - (feat_mu / feat_sd) @ np.asarray(probe["w1"])
+    probe = {**probe, "w1": jnp.asarray(w1), "b1": jnp.asarray(b1)}
+    fold_check = float(loss_fn(probe, jnp.asarray(h_val), jnp.asarray(y_val)))
+    assert abs(fold_check - val_loss) < 1e-3, (fold_check, val_loss)
+    metrics = {"val_loss": val_loss}
+    if loss == "bce" and n_out == 1:
+        # Table-1 companions: Avg. baseline, Opt.* oracle loss, median accuracy.
+        ybar = float(np.clip(y_val.mean(), 1e-6, 1 - 1e-6))
+        metrics["avg_loss"] = float(
+            -(y_val * np.log(ybar) + (1 - y_val) * np.log(1 - ybar)).mean())
+        yc = np.clip(y_val, 1e-6, 1 - 1e-6)
+        metrics["opt_loss"] = float(
+            -(y_val * np.log(yc) + (1 - y_val) * np.log(1 - yc)).mean())
+        pred = np.asarray(model.apply_probe(probe, jnp.asarray(h_val)))[:, 0]
+        # Paper's Acc: median-split labels. Threshold predictions at *their*
+        # median (rank-based) — thresholding sigmoid outputs at a label
+        # median of exactly 0 (code's λ=0 mass) is degenerate.
+        metrics["acc"] = float(
+            ((pred > np.median(pred)) == (y_val > np.median(y_val))).mean())
+    if loss == "mse":
+        yv = np.atleast_2d(np.asarray(y_val)) if np.ndim(y_val) == 1 else y_val
+        yv = yv.reshape(len(h_val), -1)
+        ybar = yv.mean(axis=0, keepdims=True)
+        metrics["avg_loss"] = float(((yv - ybar) ** 2).mean())
+        metrics["opt_loss"] = 0.0
+        pred = np.asarray(model.apply_probe(probe, jnp.asarray(h_val), sigmoid=False))
+        metrics["acc"] = float(((pred[:, 0] > np.median(pred[:, 0]))
+                                == (yv[:, 0] > np.median(yv[:, 0]))).mean())
+    log(f"  probe val_loss {val_loss:.4f} metrics {metrics}")
+    return probe, metrics
+
+
+# --- LoRA fine-tune (math variant) ---------------------------------------------------
+def train_lora_probe(params, ids_tr, li_tr, y_tr, ids_va, li_va, y_va,
+                     cfg: TinyLMConfig = DEFAULT_LM,
+                     tc: TrainConfig = DEFAULT_TRAIN, log=print):
+    """Jointly train LoRA adapters + λ head (paper's LoRA probe variant)."""
+    key = jax.random.PRNGKey(tc.seed + 31)
+    lora = model.init_lora(key, cfg, tc.lora_rank)
+    pc = ProbeConfig(d_in=cfg.d_model, n_out=1)
+    probe = model.init_probe(jax.random.fold_in(key, 1), pc)
+    trainable = {"lora": lora, "probe": probe}
+    opt = adam_init(trainable)
+
+    def loss_fn(tr, ids, li, y):
+        h = model.encode(params, ids, li, cfg, lora=tr["lora"])
+        lam = model.apply_probe(tr["probe"], h, sigmoid=True)[:, 0]
+        return bce(lam, y)
+
+    @jax.jit
+    def step(tr, opt, ids, li, y):
+        lval, grads = jax.value_and_grad(loss_fn)(tr, ids, li, y)
+        tr, opt = adam_update(tr, grads, opt, tc.lora_lr)
+        return tr, opt, lval
+
+    rng = np.random.default_rng(tc.seed + 37)
+    n = ids_tr.shape[0]
+    bs = 64
+    for i in range(tc.lora_steps):
+        sel = rng.integers(0, n, bs)
+        trainable, opt, lval = step(trainable, opt, jnp.asarray(ids_tr[sel]),
+                                    jnp.asarray(li_tr[sel]), jnp.asarray(y_tr[sel]))
+        if i % 50 == 0:
+            log(f"  lora step {i:4d} loss {float(lval):.4f}")
+
+    val_loss = float(loss_fn(trainable, jnp.asarray(ids_va),
+                             jnp.asarray(li_va), jnp.asarray(y_va)))
+    ybar = float(np.clip(y_va.mean(), 1e-6, 1 - 1e-6))
+    yc = np.clip(y_va, 1e-6, 1 - 1e-6)
+    h_va = encode_all(params, ids_va, li_va, cfg, lora=trainable["lora"])
+    pred = np.asarray(model.apply_probe(trainable["probe"], jnp.asarray(h_va)))[:, 0]
+    metrics = {
+        "val_loss": val_loss,
+        "avg_loss": float(-(y_va * np.log(ybar) + (1 - y_va) * np.log(1 - ybar)).mean()),
+        "opt_loss": float(-(y_va * np.log(yc) + (1 - y_va) * np.log(1 - yc)).mean()),
+        "acc": float(((pred > np.median(pred)) == (y_va > np.median(y_va))).mean()),
+    }
+    log(f"  lora val_loss {val_loss:.4f} metrics {metrics}")
+    return trainable["lora"], trainable["probe"], metrics
+
+
+# --- reward head ------------------------------------------------------------------------
+def train_reward_head(params, cfg: TinyLMConfig = DEFAULT_LM,
+                      tc: TrainConfig = DEFAULT_TRAIN, log=print):
+    """Reward head r̂(x,y): an MSE probe on mean-pooled hidden states of the
+    full `query = response` string (reuses train_probe's standardization)."""
+    ids, li, r = data.reward_head_data(4096, tc.seed + 41)
+    h = encode_all(params, ids, li, cfg, pool="mean")
+    n_val = 512
+    head, metrics = train_probe(h[n_val:], r[n_val:], h[:n_val], r[:n_val],
+                                n_out=1, loss="mse", tc=tc, log=log,
+                                seed_offset=9)
+    out = {"mse": metrics["val_loss"], "target_var": float(r.var()),
+           "avg_loss": metrics["avg_loss"]}
+    log(f"  reward head mse {out['mse']:.4f} (target var {out['target_var']:.4f})")
+    return head, out

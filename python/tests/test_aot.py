@@ -1,0 +1,71 @@
+"""AOT artifact checks (skipped until `make artifacts` has run)."""
+
+import json
+import os
+
+import numpy as np
+import pytest
+
+ART = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+
+pytestmark = pytest.mark.skipif(
+    not os.path.exists(os.path.join(ART, "MANIFEST.json")),
+    reason="artifacts not built (run `make artifacts`)")
+
+
+def manifest():
+    with open(os.path.join(ART, "MANIFEST.json")) as f:
+        return json.load(f)
+
+
+def test_all_artifacts_present():
+    m = manifest()
+    for name, n_chars in m["artifacts"].items():
+        p = os.path.join(ART, name + ".hlo.txt")
+        assert os.path.exists(p), name
+        assert os.path.getsize(p) == n_chars
+
+
+def test_hlo_text_headers():
+    m = manifest()
+    for name in m["artifacts"]:
+        with open(os.path.join(ART, name + ".hlo.txt")) as f:
+            head = f.read(200)
+        assert head.startswith("HloModule"), name
+        assert "entry_computation_layout" in head, name
+
+
+def test_pallas_and_xla_variants_both_exported():
+    m = manifest()
+    bases = {n.rsplit("_", 1)[0] for n in m["artifacts"]}
+    for base in bases:
+        assert f"{base}_xla" in m["artifacts"], base
+        assert f"{base}_pallas" in m["artifacts"], base
+
+
+def test_goldens_consistency():
+    with open(os.path.join(ART, "goldens.json")) as f:
+        g = json.load(f)
+    lam = np.asarray(g["lam_code"])
+    assert ((lam > 0) & (lam < 1)).all()
+    pref = np.asarray(g["pref_route"])
+    assert ((pref > 0) & (pref < 1)).all()
+    ids = np.asarray(g["ids"])
+    assert ids.shape[1] == manifest()["seq"]
+
+
+def test_datasets_exported():
+    for name in ("code_test.json", "math_test.json", "chat_test.json"):
+        with open(os.path.join(ART, "datasets", name)) as f:
+            rows = json.load(f)
+        assert len(rows) >= 1000
+        assert {"text", "lam", "mu", "sigma", "gain", "gain_vas"} <= set(rows[0])
+
+
+def test_probe_beats_avg_baseline():
+    """Table-1 property: learned probes beat the constant-prediction baseline."""
+    with open(os.path.join(ART, "train_metrics.json")) as f:
+        t1 = json.load(f)["table1"]
+    for setting in ("code", "math"):
+        assert t1[setting]["val_loss"] < t1[setting]["avg_loss"], setting
+        assert t1[setting]["acc"] > 0.6, setting

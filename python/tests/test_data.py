@@ -1,0 +1,82 @@
+"""Best-of-k order-statistic estimator + probe dataset assembly."""
+
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile import data, tasks
+
+
+@settings(deadline=None, max_examples=20)
+@given(st.floats(0.05, 0.95), st.integers(0, 1000))
+def test_curve_matches_analytic_binary(p, seed):
+    """For Bernoulli rewards, E[max_j] = 1 − (1−λ)^j (paper §3.3)."""
+    rng = np.random.default_rng(seed)
+    r = (rng.random(3000) < p).astype(np.float64)
+    q = data.best_of_k_curve(r, 10)
+    lam = r.mean()
+    anal = 1 - (1 - lam) ** np.arange(1, 11)
+    np.testing.assert_allclose(q, anal, atol=5e-3)
+
+
+@settings(deadline=None, max_examples=20)
+@given(st.integers(0, 1000))
+def test_curve_monotone_nondecreasing(seed):
+    rng = np.random.default_rng(seed)
+    r = rng.normal(size=64)
+    q = data.best_of_k_curve(r, 32)
+    assert (np.diff(q) >= -1e-9).all()
+    assert abs(q[0] - r.mean()) < 1e-6  # E[max_1] = mean
+
+
+@settings(deadline=None, max_examples=20)
+@given(st.integers(0, 1000))
+def test_marginals_nonincreasing(seed):
+    """Δ_j is non-increasing for j ≥ 2 (concavity of E[max_j]; diminishing
+    returns is what makes the paper's greedy allocation optimal). Δ_1 is
+    anchored at q(·,0)=0 so it can sit below Δ_2 when rewards are negative —
+    which is exactly why the paper forces b_i ≥ 1 in the chat setting."""
+    rng = np.random.default_rng(seed)
+    r = rng.normal(size=64)
+    d = data.marginal_rewards(r, 32)
+    assert (np.diff(d[1:]) <= 1e-9).all()
+    # with nonnegative rewards the full vector is monotone
+    d2 = data.marginal_rewards(np.abs(r), 32)
+    assert (np.diff(d2) <= 1e-6).all()
+
+
+def test_curve_kmax_equals_m():
+    r = np.asarray([1.0, 2.0, 3.0])
+    q = data.best_of_k_curve(r, 3)
+    assert abs(q[2] - 3.0) < 1e-9  # E[max of m draws w/o replacement] = max
+
+
+def test_binary_probe_data_shapes():
+    qs, ids, li, lam = data.binary_probe_data("code", 64, 16, 0)
+    assert ids.shape == (64, 64) and li.shape == (64,) and lam.shape == (64,)
+    assert ((lam >= 0) & (lam <= 1)).all()
+
+
+def test_chat_delta_targets():
+    qs, ids, li, d = data.chat_delta_data(32, 64, 8, 0)
+    assert d.shape == (32, 8)
+    assert (np.diff(d[:, 1:], axis=1) <= 1e-6).all()  # Δ_2.. non-increasing
+    mu = np.asarray([q.mu for q in qs])
+    np.testing.assert_allclose(d[:, 0], mu, atol=0.5)  # Δ_1 = E[r] ≈ μ
+
+
+def test_pref_probe_data():
+    qs, ids, li, p = data.pref_probe_data(64, 32, 0, vas=False)
+    assert ((p > 0) & (p < 1)).all()
+
+
+def test_response_quality_deterministic():
+    assert data.response_quality("abc") == data.response_quality("abc")
+    assert -0.6 <= data.response_quality("hello world") <= 0.6
+    assert data.response_quality("") == -0.5
+    # single alphabet char: exactly its chat weight
+    assert data.response_quality("A") == tasks.chat_weight(0)
+
+
+def test_reward_head_data():
+    ids, li, r = data.reward_head_data(64, 0)
+    assert ids.shape[0] == 64 and np.isfinite(r).all()

@@ -1,0 +1,146 @@
+"""L1 correctness: every Pallas kernel vs its pure-jnp oracle.
+
+Hypothesis sweeps shapes/seeds/block sizes; assert_allclose against ref.py.
+This is the core correctness signal for what gets lowered into the AOT
+artifacts the rust runtime serves.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import attention, probe_mlp, rerank, rmsnorm
+from compile.kernels.ref import (ref_attention, ref_probe_mlp, ref_rerank,
+                                 ref_rmsnorm)
+
+TOL = dict(rtol=2e-5, atol=2e-5)
+
+
+def rnd(rng, *shape):
+    return jnp.asarray(rng.normal(size=shape).astype(np.float32))
+
+
+# --- attention ----------------------------------------------------------------
+@settings(deadline=None, max_examples=12)
+@given(
+    bh=st.sampled_from([1, 2, 4]),
+    seq=st.sampled_from([16, 32, 64]),
+    d=st.sampled_from([8, 16, 32]),
+    block=st.sampled_from([8, 16, 32]),
+    seed=st.integers(0, 10_000),
+)
+def test_attention_matches_ref(bh, seq, d, block, seed):
+    if seq % block != 0:
+        return
+    rng = np.random.default_rng(seed)
+    q, k, v = (rnd(rng, bh, seq, d) for _ in range(3))
+    mask = jnp.asarray((rng.random((bh, seq)) < 0.85).astype(np.float32))
+    mask = mask.at[:, 0].set(1.0)  # ensure at least one valid key
+    out = attention(q, k, v, mask, block_q=block, block_k=block)
+    ref = ref_attention(q, k, v, mask)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), **TOL)
+
+
+def test_attention_causality():
+    """Changing a future token must not change past outputs."""
+    rng = np.random.default_rng(0)
+    q, k, v = (rnd(rng, 2, 32, 16) for _ in range(3))
+    mask = jnp.ones((2, 32))
+    base = np.asarray(attention(q, k, v, mask))
+    k2 = k.at[:, 20:, :].set(0.0)
+    v2 = v.at[:, 20:, :].set(0.0)
+    pert = np.asarray(attention(q, k2, v2, mask))
+    np.testing.assert_allclose(base[:, :20], pert[:, :20], **TOL)
+    assert np.abs(base[:, 20:] - pert[:, 20:]).max() > 1e-4
+
+
+def test_attention_fully_padded_rows_finite():
+    rng = np.random.default_rng(1)
+    q, k, v = (rnd(rng, 1, 16, 8) for _ in range(3))
+    mask = jnp.zeros((1, 16)).at[:, 0].set(1.0)
+    out = np.asarray(attention(q, k, v, mask))
+    assert np.isfinite(out).all()
+
+
+# --- probe MLP ----------------------------------------------------------------
+@settings(deadline=None, max_examples=15)
+@given(
+    b=st.sampled_from([8, 32, 64, 128]),
+    d=st.sampled_from([16, 64, 128]),
+    h=st.sampled_from([32, 128]),
+    o=st.sampled_from([1, 4, 8]),
+    sigmoid=st.booleans(),
+    seed=st.integers(0, 10_000),
+)
+def test_probe_matches_ref(b, d, h, o, sigmoid, seed):
+    rng = np.random.default_rng(seed)
+    hx = rnd(rng, b, d)
+    w1, b1 = rnd(rng, d, h) * 0.2, rnd(rng, h) * 0.1
+    w2, b2 = rnd(rng, h, o) * 0.2, rnd(rng, o) * 0.1
+    out = probe_mlp(hx, w1, b1, w2, b2, sigmoid=sigmoid, block_b=min(32, b))
+    ref = ref_probe_mlp(hx, w1, b1, w2, b2, sigmoid=sigmoid)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), **TOL)
+
+
+def test_probe_sigmoid_bounds():
+    rng = np.random.default_rng(3)
+    out = probe_mlp(rnd(rng, 16, 8) * 10, rnd(rng, 8, 8), rnd(rng, 8),
+                    rnd(rng, 8, 2), rnd(rng, 2), sigmoid=True)
+    a = np.asarray(out)
+    # f32 sigmoid may saturate to exactly 0/1 on extreme logits
+    assert (a >= 0).all() and (a <= 1).all() and np.isfinite(a).all()
+
+
+# --- rerank --------------------------------------------------------------------
+@settings(deadline=None, max_examples=15)
+@given(
+    b=st.sampled_from([8, 64, 128]),
+    k=st.sampled_from([1, 4, 8, 100]),
+    seed=st.integers(0, 10_000),
+)
+def test_rerank_matches_ref(b, k, seed):
+    rng = np.random.default_rng(seed)
+    s = rnd(rng, b, k)
+    m = jnp.asarray((rng.random((b, k)) < 0.6).astype(np.float32))
+    i1, v1 = rerank(s, m, block_b=min(32, b))
+    i2, v2 = ref_rerank(s, m)
+    np.testing.assert_array_equal(np.asarray(i1), np.asarray(i2))
+    np.testing.assert_allclose(np.asarray(v1), np.asarray(v2), **TOL)
+
+
+def test_rerank_respects_mask():
+    s = jnp.asarray([[5.0, 1.0, 3.0]])
+    m = jnp.asarray([[0.0, 1.0, 1.0]])  # best raw score is masked out
+    i, v = rerank(s, m)
+    assert int(i[0]) == 2 and abs(float(v[0]) - 3.0) < 1e-6
+
+
+def test_rerank_all_masked():
+    s = jnp.asarray([[5.0, 1.0]])
+    m = jnp.zeros((1, 2))
+    i, v = rerank(s, m)
+    assert float(v[0]) < -1e29
+
+
+# --- rmsnorm ---------------------------------------------------------------------
+@settings(deadline=None, max_examples=12)
+@given(
+    r=st.sampled_from([8, 64, 256]),
+    d=st.sampled_from([16, 128]),
+    seed=st.integers(0, 10_000),
+)
+def test_rmsnorm_matches_ref(r, d, seed):
+    rng = np.random.default_rng(seed)
+    x, g = rnd(rng, r, d), rnd(rng, d)
+    out = rmsnorm(x, g, block_r=min(64, r))
+    ref = ref_rmsnorm(x, g)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), **TOL)
+
+
+def test_rmsnorm_unit_rms():
+    rng = np.random.default_rng(5)
+    x = rnd(rng, 32, 64)
+    out = np.asarray(rmsnorm(x, jnp.ones(64)))
+    rms = np.sqrt((out ** 2).mean(axis=-1))
+    np.testing.assert_allclose(rms, np.ones(32), rtol=1e-3, atol=1e-3)

@@ -1,0 +1,106 @@
+"""Synthetic task universe: distributional properties the paper's figures need,
+plus determinism contracts for the rust mirror."""
+
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile import tasks
+
+
+def test_code_zero_mass_near_half():
+    """Fig. 3 Code left panel: ~50% of problems have 0 success probability."""
+    qs = tasks.gen_dataset("code", 4000, 0)
+    frac0 = np.mean([q.lam == 0.0 for q in qs])
+    assert 0.40 < frac0 < 0.60, frac0
+
+
+def test_math_zero_mass_small():
+    """Fig. 3 Math left panel: ~5% impossible, flat-ish otherwise."""
+    qs = tasks.gen_dataset("math", 4000, 0)
+    lam = np.asarray([q.lam for q in qs])
+    assert np.mean(lam == 0.0) < 0.12
+    # flat-ish: every coarse bin in (0,1] holds some nontrivial mass
+    hist, _ = np.histogram(lam[lam > 0], bins=5, range=(0, 1))
+    assert (hist > len(qs) * 0.02).all()
+
+
+def test_lambda_bounds_and_determinism():
+    qs = tasks.gen_dataset("code", 500, 3) + tasks.gen_dataset("math", 500, 3)
+    for q in qs:
+        assert 0.0 <= q.lam <= 1.0
+    a = tasks.gen_dataset("code", 50, 42)
+    b = tasks.gen_dataset("code", 50, 42)
+    assert [q.text for q in a] == [q.text for q in b]
+    assert [q.lam for q in a] == [q.lam for q in b]
+
+
+def test_code_lambda_monotone_in_k():
+    prev = 1.0
+    for k in range(1, 9):
+        lam = tasks.code_lambda(k, 0)
+        assert lam < prev
+        prev = lam
+    assert tasks.code_lambda(9, 0) == 0.0
+
+
+def test_math_lambda_monotone_in_length():
+    lams = [tasks.math_lambda(L, 0) for L in range(1, 25)]
+    assert all(a >= b for a, b in zip(lams, lams[1:]))
+
+
+def test_answers_verify():
+    qs = tasks.gen_dataset("code", 100, 1)
+    for q in qs:
+        vals = [int(t) for t in q.text.split()[1:]]
+        assert q.answer == str(sum(vals) % 100)
+    qs = tasks.gen_dataset("math", 100, 1)
+    for q in qs:
+        s = q.text.split(" ", 1)[1]
+        assert q.answer == s[::-1]
+
+
+@settings(deadline=None, max_examples=20)
+@given(st.integers(0, 10_000), st.integers(1, 64))
+def test_binary_outcomes_match_lambda(seed, k):
+    qs = tasks.gen_dataset("code", 200, seed)
+    out = tasks.sample_binary_outcomes(qs, k, seed + 1)
+    assert out.shape == (200, k)
+    lam = np.asarray([q.lam for q in qs])
+    zero = lam == 0.0
+    assert out[zero].sum() == 0  # impossible problems never succeed
+    if k >= 32:
+        err = np.abs(out.mean(axis=1) - lam)[~zero].mean()
+        assert err < 0.12
+
+
+def test_chat_params_ranges():
+    qs = tasks.gen_dataset("chat", 2000, 0)
+    mu = np.asarray([q.mu for q in qs])
+    sg = np.asarray([q.sigma for q in qs])
+    assert mu.min() > -1.0 and mu.max() < 3.0
+    assert sg.min() >= 0.25 and sg.max() <= 0.85
+    assert mu.std() > 0.05  # nontrivial predictable signal
+    assert sg.std() > 0.1   # bimodal volatility (tranches experiment needs this)
+
+
+def test_routing_weak_sometimes_wins():
+    """Paper §4.2: the weak decoder sometimes beats the strong one."""
+    qs = tasks.gen_dataset("chat", 2000, 0)
+    pref = tasks.preference_prob(qs, 32, 1)
+    assert (pref < 0.5).any() and (pref > 0.5).any()
+    assert pref.mean() > 0.5  # strong wins on average
+
+
+def test_vas_prefs_lower_entropy():
+    """Fig. 5: VAS preference distribution has lower spread than model-size."""
+    qs = tasks.gen_dataset("chat", 2000, 0)
+    p_size = tasks.preference_prob(qs, 32, 1, vas=False)
+    p_vas = tasks.preference_prob(qs, 32, 1, vas=True)
+    assert p_vas.std() < p_size.std()
+
+
+def test_corpus_format():
+    lines = tasks.gen_corpus(200, 0)
+    for ln in lines:
+        assert " = " in ln
+        assert ln.split()[0] in ("ADD", "REV", "CHAT")

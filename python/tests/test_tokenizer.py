@@ -1,0 +1,43 @@
+"""Tokenizer contract tests — must stay in lockstep with rust/src/tokenizer."""
+
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile import tokenizer
+from compile.config import BOS_ID, EOS_ID, MAX_SEQ, PAD_ID
+
+ascii_text = st.text(
+    alphabet=st.characters(min_codepoint=32, max_codepoint=126), max_size=80)
+
+
+@settings(deadline=None, max_examples=50)
+@given(ascii_text)
+def test_roundtrip(s):
+    ids = tokenizer.encode(s)
+    assert ids.shape == (MAX_SEQ,)
+    assert ids[0] == BOS_ID
+    assert tokenizer.decode(ids) == s[: MAX_SEQ - 2]
+
+
+@settings(deadline=None, max_examples=30)
+@given(ascii_text)
+def test_mask_and_last_index(s):
+    ids = tokenizer.encode(s)
+    m = tokenizer.mask(ids)
+    li = int(tokenizer.last_index(ids))
+    body = len(s.encode()[: MAX_SEQ - 2])
+    assert m.sum() == body + 2
+    assert ids[li] == EOS_ID
+    assert (ids[li + 1:] == PAD_ID).all()
+
+
+def test_truncation():
+    s = "x" * 200
+    ids = tokenizer.encode(s)
+    assert ids[0] == BOS_ID and ids[-1] == EOS_ID
+    assert (ids != PAD_ID).all()
+
+
+def test_batch_shapes():
+    b = tokenizer.encode_batch(["a", "bb", "ccc"])
+    assert b.shape == (3, MAX_SEQ) and b.dtype == np.int32

@@ -1,0 +1,80 @@
+//! Allocator microbenchmarks — the L3 hot path (§Perf).
+//!
+//! The online allocator runs once per serving epoch; the paper's pitch is
+//! that allocation overhead is negligible next to decoding. These benches
+//! quantify "negligible": eq. 5 solves for realistic epoch sizes, the
+//! analytic Δ construction, PAV, the offline fit and lookup.
+
+#[path = "harness/mod.rs"]
+mod harness;
+
+use harness::{bench, black_box, section};
+use thinkalloc::allocator::offline::OfflinePolicy;
+use thinkalloc::allocator::online::{OnlineAllocator, Predictions};
+use thinkalloc::allocator::{AllocConstraints, DeltaMatrix};
+use thinkalloc::prng::Pcg64;
+
+fn lambdas(n: usize, seed: u64) -> Vec<f64> {
+    let mut rng = Pcg64::new(seed);
+    (0..n)
+        .map(|_| if rng.bernoulli(0.3) { 0.0 } else { rng.f64() })
+        .collect()
+}
+
+fn main() {
+    section("analytic Δ construction (binary rewards, b_max=100)");
+    for n in [64usize, 1024, 8192] {
+        let l = lambdas(n, 1);
+        bench(&format!("delta_matrix n={n}"), 50, || {
+            black_box(DeltaMatrix::from_lambdas(&l, 100));
+        });
+    }
+
+    section("online eq.5 solve (λ̂ → budgets)");
+    for (n, b, b_max) in [(64usize, 8.0, 16usize), (64, 8.0, 100), (1024, 8.0, 100), (8192, 16.0, 128)] {
+        let l = lambdas(n, 2);
+        let preds = Predictions::Lambdas(l);
+        let alloc = OnlineAllocator::new(b_max, 0);
+        bench(&format!("online n={n} B={b} bmax={b_max}"), 30, || {
+            black_box(alloc.allocate(&preds, b));
+        });
+    }
+
+    section("online solve with Δ̂ rows (chat, b_max=8)");
+    {
+        let mut rng = Pcg64::new(3);
+        let rows: Vec<Vec<f64>> = (0..1024)
+            .map(|_| (0..8).map(|j| rng.f64() * 0.5 / (j + 1) as f64).collect())
+            .collect();
+        let preds = Predictions::Deltas(DeltaMatrix::new(rows));
+        let alloc = OnlineAllocator::new(8, 1);
+        bench("online-chat n=1024 B=3", 50, || {
+            black_box(alloc.allocate(&preds, 3.0));
+        });
+    }
+
+    section("offline policy: fit + lookup");
+    {
+        let l = lambdas(4096, 4);
+        let d = DeltaMatrix::from_lambdas(&l, 100);
+        bench("offline fit n=4096 bins=20", 10, || {
+            black_box(OfflinePolicy::fit(
+                &l,
+                &d,
+                20,
+                8.0,
+                AllocConstraints::new(0, 100, 0),
+            ));
+        });
+        let policy = OfflinePolicy::fit(&l, &d, 20, 8.0, AllocConstraints::new(0, 100, 0));
+        let queries = lambdas(1_000_000, 5);
+        let r = bench("offline lookup 1M", 20, || {
+            let mut acc = 0usize;
+            for &s in &queries {
+                acc += policy.budget_for(s);
+            }
+            black_box(acc);
+        });
+        r.print_with_throughput("lookups", 1e6);
+    }
+}

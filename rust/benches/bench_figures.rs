@@ -1,0 +1,51 @@
+//! Figure-regeneration bench: times each paper-figure driver end to end and
+//! leaves the CSVs in results/ (the `cargo bench` path to reproducing every
+//! table and figure — DESIGN.md §6 E1–E7).
+
+#[path = "harness/mod.rs"]
+mod harness;
+
+use std::path::Path;
+
+use harness::section;
+use thinkalloc::config::RuntimeConfig;
+use thinkalloc::experiments;
+use thinkalloc::runtime::Engine;
+
+fn main() {
+    let cfg = RuntimeConfig::default();
+    if !cfg.artifacts_dir.join("MANIFEST.json").exists() {
+        eprintln!("artifacts not built; skipping figure bench");
+        return;
+    }
+    let engine = Engine::load_all(&cfg).expect("engine");
+    let out = Path::new("results");
+
+    let mut timings: Vec<(String, f64)> = Vec::new();
+    macro_rules! run {
+        ($name:expr, $body:expr) => {{
+            section($name);
+            let t0 = std::time::Instant::now();
+            $body;
+            let dt = t0.elapsed().as_secs_f64();
+            println!("{}: {:.2}s", $name, dt);
+            timings.push(($name.to_string(), dt));
+        }};
+    }
+
+    run!("E1 fig3-code", experiments::fig3::run(&engine, "code", out).unwrap());
+    run!("E2 fig3-math", experiments::fig3::run(&engine, "math", out).unwrap());
+    run!("E3 fig4-chat", experiments::fig4::run(&engine, out).unwrap());
+    run!("E4 fig5-model-size", experiments::fig5::run(&engine, false, out).unwrap());
+    run!("E5 fig5-vas", experiments::fig5::run(&engine, true, out).unwrap());
+    run!("E7 fig6-code", experiments::fig6::run(&engine, "code", out).unwrap());
+    run!("E7 fig6-math", experiments::fig6::run(&engine, "math", out).unwrap());
+    run!("E6 table1", experiments::table1::run(&engine, out).unwrap());
+    run!("A1/A2 ablations", experiments::ablation::run(out).unwrap());
+
+    section("summary");
+    for (name, dt) in &timings {
+        println!("{name:<24} {dt:>8.2}s");
+    }
+    println!("CSVs in {}", out.display());
+}

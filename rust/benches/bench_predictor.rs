@@ -1,0 +1,54 @@
+//! Difficulty-predictor benchmarks: PJRT executable latency per batch for
+//! each probe, pallas vs xla artifact variants (the L1/L2 perf comparison of
+//! DESIGN.md §9), and tokenizer throughput. Skips if artifacts are missing.
+
+#[path = "harness/mod.rs"]
+mod harness;
+
+use harness::{bench, black_box, section};
+use thinkalloc::config::{KernelMode, RuntimeConfig};
+use thinkalloc::runtime::predictor::{Predictor, ProbeKind};
+use thinkalloc::runtime::{Artifact, Engine};
+use thinkalloc::{tokenizer, workload};
+
+fn main() {
+    let cfg = RuntimeConfig::default();
+    if !cfg.artifacts_dir.join("MANIFEST.json").exists() {
+        eprintln!("artifacts not built; skipping predictor bench");
+        return;
+    }
+
+    section("tokenizer");
+    let qs = workload::gen_dataset("code", 4096, 1);
+    let texts: Vec<&str> = qs.iter().map(|q| q.text.as_str()).collect();
+    let r = bench("encode_batch 4096", 50, || {
+        black_box(tokenizer::encode_batch(&texts, 64));
+    });
+    r.print_with_throughput("queries", 4096.0);
+
+    for mode in [KernelMode::Xla, KernelMode::Pallas] {
+        section(&format!("probe executables ({mode:?} artifacts)"));
+        let engine = Engine::load(
+            &RuntimeConfig { kernel_mode: mode, ..cfg.clone() },
+            &[
+                Artifact::ProbeCode,
+                Artifact::ProbeChat,
+                Artifact::ProbeRoute,
+                Artifact::Reward,
+            ],
+        )
+        .expect("engine");
+        let predictor = Predictor::new(&engine);
+        let batch: Vec<&str> = texts[..64].to_vec();
+        for (kind, name) in [
+            (ProbeKind::CodeLambda, "λ̂ code (encode+probe, batch 64)"),
+            (ProbeKind::ChatDeltas, "Δ̂ chat (encode+probe, batch 64)"),
+            (ProbeKind::RoutePreference, "p̂ route (encode+probe, batch 64)"),
+        ] {
+            let r = bench(&format!("{name} [{mode:?}]"), 20, || {
+                black_box(predictor.predict_texts(kind, &batch).unwrap());
+            });
+            r.print_with_throughput("queries", 64.0);
+        }
+    }
+}

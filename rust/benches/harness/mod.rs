@@ -1,0 +1,67 @@
+//! Bench harness substrate (no criterion in the build environment).
+//!
+//! `bench(name, iters, f)` runs a warmup, then timed iterations, and prints
+//! mean / p50 / p99 per-iteration wall time plus derived throughput. Used by
+//! every `[[bench]]` target (harness = false).
+
+use std::time::Instant;
+
+pub struct BenchResult {
+    pub name: String,
+    pub iters: usize,
+    pub mean_us: f64,
+    pub p50_us: f64,
+    pub p99_us: f64,
+    pub min_us: f64,
+}
+
+impl BenchResult {
+    pub fn print(&self) {
+        println!(
+            "{:<44} {:>7} iters  mean {:>10.1}µs  p50 {:>10.1}µs  p99 {:>10.1}µs  min {:>10.1}µs",
+            self.name, self.iters, self.mean_us, self.p50_us, self.p99_us, self.min_us
+        );
+    }
+
+    pub fn print_with_throughput(&self, unit: &str, per_iter: f64) {
+        self.print();
+        let per_sec = per_iter / (self.mean_us / 1e6);
+        println!("{:<44} {:>10.0} {unit}/s", "", per_sec);
+    }
+}
+
+pub fn bench<F: FnMut()>(name: &str, iters: usize, mut f: F) -> BenchResult {
+    // warmup: 10% of iters, at least 1
+    for _ in 0..(iters / 10).max(1) {
+        f();
+    }
+    let mut times_us: Vec<f64> = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        f();
+        times_us.push(t0.elapsed().as_secs_f64() * 1e6);
+    }
+    times_us.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let mean = times_us.iter().sum::<f64>() / iters as f64;
+    let pct = |q: f64| times_us[((iters - 1) as f64 * q) as usize];
+    let r = BenchResult {
+        name: name.to_string(),
+        iters,
+        mean_us: mean,
+        p50_us: pct(0.5),
+        p99_us: pct(0.99),
+        min_us: times_us[0],
+    };
+    r.print();
+    r
+}
+
+/// Prevent the optimizer from discarding a computed value.
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+pub fn section(title: &str) {
+    println!("\n=== {title} ===");
+}

@@ -1,0 +1,88 @@
+//! Binary-reward special case (§3.3): success probability λ determines the
+//! whole marginal-reward curve analytically.
+//!
+//!   q(x, b) = 1 − (1−λ)^b          Δ(x, j) = λ(1−λ)^(j−1)
+//!
+//! These rows are strictly decreasing, so the greedy solver is exact on them
+//! with no PAV work.
+
+/// Expected best-of-b success probability.
+#[inline]
+pub fn q_success(lambda: f64, b: usize) -> f64 {
+    debug_assert!((0.0..=1.0).contains(&lambda));
+    1.0 - (1.0 - lambda).powi(b as i32)
+}
+
+/// Marginal reward of the j-th unit (1-indexed).
+#[inline]
+pub fn binary_delta(lambda: f64, j: usize) -> f64 {
+    debug_assert!(j >= 1);
+    lambda * (1.0 - lambda).powi(j as i32 - 1)
+}
+
+/// Full Δ row for budgets 1..=b_max.
+pub fn binary_deltas(lambda: f64, b_max: usize) -> Vec<f64> {
+    let lambda = lambda.clamp(0.0, 1.0);
+    let mut out = Vec::with_capacity(b_max);
+    let mut tail = 1.0; // (1−λ)^(j−1)
+    for _ in 0..b_max {
+        out.push(lambda * tail);
+        tail *= 1.0 - lambda;
+    }
+    out
+}
+
+/// Empirical λ̂ from a row of 0/1 outcomes.
+pub fn empirical_lambda(outcomes: &[f32]) -> f64 {
+    if outcomes.is_empty() {
+        return 0.0;
+    }
+    outcomes.iter().map(|&o| o as f64).sum::<f64>() / outcomes.len() as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::proputil::{close, prop_check, PropConfig};
+
+    #[test]
+    fn q_success_extremes() {
+        assert_eq!(q_success(0.0, 10), 0.0);
+        assert_eq!(q_success(1.0, 1), 1.0);
+        assert!((q_success(0.5, 2) - 0.75).abs() < 1e-12);
+    }
+
+    #[test]
+    fn deltas_sum_to_q() {
+        for &(lam, b) in &[(0.3, 7), (0.9, 3), (0.01, 50)] {
+            let sum: f64 = binary_deltas(lam, b).iter().sum();
+            assert!((sum - q_success(lam, b)).abs() < 1e-12, "λ={lam} b={b}");
+        }
+    }
+
+    #[test]
+    fn deltas_strictly_decreasing_for_interior_lambda() {
+        let d = binary_deltas(0.4, 10);
+        for w in d.windows(2) {
+            assert!(w[1] < w[0]);
+        }
+    }
+
+    #[test]
+    fn prop_delta_recurrence() {
+        prop_check("Δ_{j+1} = (1−λ)Δ_j", PropConfig::default(), |rng, _| {
+            let lam = rng.f64();
+            let d = binary_deltas(lam, 16);
+            for j in 1..16 {
+                close(d[j], d[j - 1] * (1.0 - lam), 1e-12, "recurrence")?;
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn empirical_lambda_mean() {
+        assert_eq!(empirical_lambda(&[1.0, 0.0, 1.0, 0.0]), 0.5);
+        assert_eq!(empirical_lambda(&[]), 0.0);
+    }
+}

@@ -1,0 +1,82 @@
+//! Exact DP for eq. 5 — the greedy solver's test oracle.
+//!
+//! `value[t]` after processing i queries = best objective using exactly ≤ t
+//! units on them. O(n · T · b_max): fine for property-test instances, far
+//! too slow for serving (that is the point of the greedy).
+
+use super::{AllocConstraints, DeltaMatrix};
+
+/// Maximum achievable objective (Σ selected Δ) under the constraints.
+pub fn solve_dp(deltas: &DeltaMatrix, cons: AllocConstraints) -> f64 {
+    let t_cap = cons.total_units;
+    const NEG: f64 = f64::NEG_INFINITY;
+    let mut value = vec![NEG; t_cap + 1];
+    value[0] = 0.0;
+    for row in &deltas.rows {
+        // prefix sums of the row (allocating b units yields prefix[b])
+        let b_hi = row.len().min(cons.b_max);
+        let mut prefix = vec![0.0; b_hi + 1];
+        for b in 1..=b_hi {
+            prefix[b] = prefix[b - 1] + row[b - 1];
+        }
+        let b_lo = cons.min_budget.min(b_hi);
+        let mut next = vec![NEG; t_cap + 1];
+        for t in 0..=t_cap {
+            if value[t] == NEG {
+                continue;
+            }
+            for b in b_lo..=b_hi {
+                let nt = t + b;
+                if nt > t_cap {
+                    break;
+                }
+                let v = value[t] + prefix[b];
+                if v > next[nt] {
+                    next[nt] = v;
+                }
+            }
+        }
+        value = next;
+    }
+    value.into_iter().fold(NEG, f64::max).max(0.0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::allocator::{AllocConstraints, DeltaMatrix};
+
+    #[test]
+    fn dp_trivial_cases() {
+        let m = DeltaMatrix::from_lambdas(&[0.5], 4);
+        assert_eq!(solve_dp(&m, AllocConstraints::new(0, 4, 0)), 0.0);
+        let one = solve_dp(&m, AllocConstraints::new(1, 4, 0));
+        assert!((one - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn dp_picks_best_split() {
+        // two queries, one unit: must take the larger first marginal
+        let m = DeltaMatrix::new(vec![vec![0.4, 0.1], vec![0.6, 0.2]]);
+        let v = solve_dp(&m, AllocConstraints::new(1, 2, 0));
+        assert!((v - 0.6).abs() < 1e-12);
+        let v2 = solve_dp(&m, AllocConstraints::new(3, 2, 0));
+        assert!((v2 - (0.6 + 0.4 + 0.2)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn dp_respects_min_budget() {
+        // min_budget 1 forces a unit onto the useless query
+        let m = DeltaMatrix::new(vec![vec![0.0, 0.0], vec![0.9, 0.5]]);
+        let v = solve_dp(&m, AllocConstraints::new(2, 2, 1));
+        assert!((v - 0.9).abs() < 1e-12);
+    }
+
+    #[test]
+    fn dp_handles_negative_marginals() {
+        // taking the negative second unit is never forced when min_budget=0
+        let m = DeltaMatrix::new(vec![vec![0.5, -0.4]]);
+        let v = solve_dp(&m, AllocConstraints::new(2, 2, 0));
+        assert!((v - 0.5).abs() < 1e-12);
+    }
+}

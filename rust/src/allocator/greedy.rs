@@ -1,0 +1,388 @@
+//! Greedy matroid solver for eq. 5 (§3.2) — the allocation hot path.
+//!
+//! Algorithm:
+//! 1. Project every Δ row to its concave majorant with pool-adjacent-
+//!    violators (PAV): consecutive units whose gains *increase* are merged
+//!    into a block carrying their average gain. For already-monotone rows
+//!    (the analytic binary case) this is the identity and costs one scan.
+//! 2. Push each row's first block on a max-heap keyed by per-unit gain;
+//!    repeatedly pop the best block, allocate it (whole, or truncated at the
+//!    budget boundary), and push the row's next block.
+//!
+//! Blocks with non-positive gain are never allocated (beyond `min_budget`):
+//! allocating a unit with Δ̂ ≤ 0 can only waste budget — this is what lets
+//! binary domains return b=0 ("I don't know") for impossible queries.
+//!
+//! Complexity: O(N log n) for N = Σ allocated units; exactness on monotone
+//! rows and ≤ one-block suboptimality otherwise are property-tested against
+//! the DP in `exact.rs`.
+
+use std::cmp::Ordering;
+use std::collections::BinaryHeap;
+
+use super::{AllocConstraints, Allocation, DeltaMatrix};
+
+/// One PAV block: units [start, start+len) of a row share `gain` per unit.
+#[derive(Clone, Copy, Debug)]
+struct Block {
+    gain: f64,
+    row: u32,
+    len: u32,
+}
+
+impl PartialEq for Block {
+    fn eq(&self, other: &Self) -> bool {
+        self.gain == other.gain
+    }
+}
+impl Eq for Block {}
+impl PartialOrd for Block {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl Ord for Block {
+    fn cmp(&self, other: &Self) -> Ordering {
+        // max-heap by gain; NaNs sort last (treated as -inf)
+        self.gain
+            .partial_cmp(&other.gain)
+            .unwrap_or(Ordering::Equal)
+            .then_with(|| self.row.cmp(&other.row).reverse())
+    }
+}
+
+/// Concave-majorant blocks of one row (PAV, gains non-increasing).
+fn pav_blocks(row: &[f64], b_max: usize) -> Vec<(f64, u32)> {
+    let take = row.len().min(b_max);
+    let mut blocks: Vec<(f64, u32)> = Vec::with_capacity(take);
+    for &g in &row[..take] {
+        let g = if g.is_nan() { 0.0 } else { g };
+        blocks.push((g, 1));
+        // merge while the tail violates non-increasing per-unit gain
+        while blocks.len() >= 2 {
+            let (g2, n2) = blocks[blocks.len() - 1];
+            let (g1, n1) = blocks[blocks.len() - 2];
+            if g2 > g1 {
+                blocks.pop();
+                blocks.pop();
+                let n = n1 + n2;
+                blocks.push(((g1 * n1 as f64 + g2 * n2 as f64) / n as f64, n));
+            } else {
+                break;
+            }
+        }
+    }
+    blocks
+}
+
+/// Solve eq. 5. Returns per-query budgets with Σbᵢ ≤ total_units
+/// (min_budget floors are honoured even if they exceed the total — callers
+/// validate constraints feasibility; see `AllocConstraints`).
+pub fn solve(deltas: &DeltaMatrix, cons: AllocConstraints) -> Allocation {
+    let n = deltas.n();
+    let mut budgets = vec![cons.min_budget.min(cons.b_max); n];
+    let floor_units: usize = budgets.iter().sum();
+    let mut remaining = cons.total_units.saturating_sub(floor_units);
+
+    // Per-row block lists + cursor; account floor units' objective.
+    let mut row_blocks: Vec<Vec<(f64, u32)>> = Vec::with_capacity(n);
+    let mut cursors = vec![(0usize, 0u32); n]; // (block idx, units used in block)
+    for (i, row) in deltas.rows.iter().enumerate() {
+        let blocks = pav_blocks(row, cons.b_max);
+        // consume floor units
+        let mut need = budgets[i] as u32;
+        let (mut bi, mut used) = (0usize, 0u32);
+        while need > 0 && bi < blocks.len() {
+            let (_g, len) = blocks[bi];
+            let take = need.min(len - used);
+            used += take;
+            need -= take;
+            if used == len {
+                bi += 1;
+                used = 0;
+            }
+        }
+        cursors[i] = (bi, used);
+        row_blocks.push(blocks);
+    }
+
+    let mut heap: BinaryHeap<Block> = BinaryHeap::with_capacity(n);
+    for i in 0..n {
+        push_next(&row_blocks, &cursors, i, &mut heap);
+    }
+
+    while remaining > 0 {
+        let Some(top) = heap.pop() else { break };
+        if top.gain <= 0.0 {
+            break; // allocating non-positive marginal reward wastes budget
+        }
+        let i = top.row as usize;
+        let take = (top.len as usize).min(remaining) as u32;
+        budgets[i] += take as usize;
+        remaining -= take as usize;
+        let (bi, used) = cursors[i];
+        let new_used = used + take;
+        cursors[i] = if new_used == row_blocks[i][bi].1 {
+            (bi + 1, 0)
+        } else {
+            (bi, new_used)
+        };
+        if take == top.len {
+            push_next(&row_blocks, &cursors, i, &mut heap);
+        }
+        // if truncated (take < len) the budget is exhausted; loop exits
+    }
+
+    // Objective is reported against the *original* rows, not the PAV
+    // averages — a truncated block's average would otherwise overstate the
+    // realized prefix sum.
+    let mut objective = 0.0;
+    for (i, &b) in budgets.iter().enumerate() {
+        objective += deltas.rows[i].iter().take(b).sum::<f64>();
+    }
+    let total_units = budgets.iter().sum();
+    Allocation { budgets, total_units, objective }
+}
+
+fn push_next(
+    row_blocks: &[Vec<(f64, u32)>],
+    cursors: &[(usize, u32)],
+    i: usize,
+    heap: &mut BinaryHeap<Block>,
+) {
+    let (bi, used) = cursors[i];
+    if let Some(&(gain, len)) = row_blocks[i].get(bi) {
+        heap.push(Block { gain, row: i as u32, len: len - used });
+    }
+}
+
+/// Specialised solver for the binary-reward analytic case (§3.3): rows are
+/// geometric (Δ_{j+1} = (1−λ)Δ_j, strictly decreasing), so no Δ matrix, no
+/// PAV and no per-row allocation are needed — the heap carries (gain, λ-tail)
+/// and each pop derives the next gain by one multiply. ~8× faster and O(n)
+/// memory instead of O(n·b_max) (EXPERIMENTS.md §Perf iteration 1).
+pub fn solve_lambdas(lambdas: &[f64], cons: AllocConstraints) -> Allocation {
+    let n = lambdas.len();
+    let floor = cons.min_budget.min(cons.b_max);
+    let mut budgets = vec![floor; n];
+    let mut remaining = cons.total_units.saturating_sub(floor * n);
+
+    let mut heap: BinaryHeap<Block> = BinaryHeap::with_capacity(n);
+    // `len` is unused here (always 1-unit steps); reuse Block for its Ord.
+    let mut tails = vec![0.0f64; n]; // (1−λ)^b of the *next* unit
+    for (i, &l) in lambdas.iter().enumerate() {
+        let l = l.clamp(0.0, 1.0);
+        if l <= 0.0 || floor >= cons.b_max {
+            continue;
+        }
+        let tail = (1.0 - l).powi(floor as i32);
+        tails[i] = tail;
+        let gain = l * tail;
+        if gain > 0.0 {
+            heap.push(Block { gain, row: i as u32, len: 1 });
+        }
+    }
+    while remaining > 0 {
+        let Some(top) = heap.pop() else { break };
+        if top.gain <= 0.0 {
+            break;
+        }
+        let i = top.row as usize;
+        budgets[i] += 1;
+        remaining -= 1;
+        if budgets[i] < cons.b_max {
+            let l = lambdas[i].clamp(0.0, 1.0);
+            tails[i] *= 1.0 - l;
+            let gain = l * tails[i];
+            if gain > 0.0 {
+                heap.push(Block { gain, row: i as u32, len: 1 });
+            }
+        }
+    }
+    let mut objective = 0.0;
+    for (i, &b) in budgets.iter().enumerate() {
+        objective += super::binary::q_success(lambdas[i].clamp(0.0, 1.0), b);
+    }
+    let total_units = budgets.iter().sum();
+    Allocation { budgets, total_units, objective }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::proputil::{prop_check, PropConfig};
+
+    fn cons(total: usize, b_max: usize) -> AllocConstraints {
+        AllocConstraints::new(total, b_max, 0)
+    }
+
+    #[test]
+    fn pav_identity_on_monotone() {
+        let b = pav_blocks(&[0.5, 0.25, 0.125], 8);
+        assert_eq!(b, vec![(0.5, 1), (0.25, 1), (0.125, 1)]);
+    }
+
+    #[test]
+    fn pav_merges_violations() {
+        // Δ₂ > Δ₁: units 1..2 merge into one block of average gain
+        let b = pav_blocks(&[0.1, 0.5, 0.2], 8);
+        assert_eq!(b.len(), 2);
+        assert!((b[0].0 - 0.3).abs() < 1e-12 && b[0].1 == 2);
+        assert!((b[1].0 - 0.2).abs() < 1e-12);
+    }
+
+    #[test]
+    fn pav_respects_bmax() {
+        assert_eq!(pav_blocks(&[0.5, 0.4, 0.3], 2).len(), 2);
+    }
+
+    #[test]
+    fn simple_allocation_prefers_high_gain() {
+        // query 0: λ=0.9 (steep), query 1: λ=0.2 (shallow)
+        let m = DeltaMatrix::from_lambdas(&[0.9, 0.2], 8);
+        let a = solve(&m, cons(4, 8));
+        assert_eq!(a.total_units, 4);
+        // one unit of q0 captures 0.9; then 0.2, 0.16, ... from q1 vs
+        // 0.09 from q0's 2nd unit → q1 gets more units
+        assert!(a.budgets[1] > a.budgets[0]);
+    }
+
+    #[test]
+    fn zero_lambda_gets_zero_budget() {
+        let m = DeltaMatrix::from_lambdas(&[0.0, 0.5], 8);
+        let a = solve(&m, cons(6, 8));
+        assert_eq!(a.budgets[0], 0);
+        assert!(a.budgets[1] >= 1);
+    }
+
+    #[test]
+    fn min_budget_floor_enforced() {
+        let m = DeltaMatrix::from_lambdas(&[0.0, 0.5], 8);
+        let a = solve(&m, AllocConstraints::new(6, 8, 1));
+        assert_eq!(a.budgets[0], 1); // floored despite zero gain
+        assert!(a.total_units <= 6);
+    }
+
+    #[test]
+    fn budget_never_exceeded() {
+        let m = DeltaMatrix::from_lambdas(&[0.3, 0.6, 0.9, 0.1], 16);
+        for t in 0..40 {
+            let a = solve(&m, cons(t, 16));
+            assert!(a.total_units <= t, "t={t} got {}", a.total_units);
+        }
+    }
+
+    #[test]
+    fn saturates_when_budget_huge() {
+        let m = DeltaMatrix::from_lambdas(&[0.5, 0.5], 4);
+        let a = solve(&m, cons(1000, 4));
+        assert_eq!(a.budgets, vec![4, 4]); // capped at b_max
+    }
+
+    #[test]
+    fn objective_matches_recomputation() {
+        let m = DeltaMatrix::from_lambdas(&[0.3, 0.7, 0.05], 8);
+        let a = solve(&m, cons(10, 8));
+        let mut obj = 0.0;
+        for (i, &b) in a.budgets.iter().enumerate() {
+            obj += m.rows[i][..b].iter().sum::<f64>();
+        }
+        assert!((obj - a.objective).abs() < 1e-9, "{obj} vs {}", a.objective);
+    }
+
+    #[test]
+    fn prop_greedy_equals_dp_on_monotone_rows() {
+        prop_check(
+            "greedy==dp (monotone)",
+            PropConfig { cases: 48, max_size: 12 },
+            |rng, size| {
+                let n = size.max(1);
+                let b_max = 1 + rng.range_usize(1, 7);
+                let lambdas: Vec<f64> = (0..n).map(|_| {
+                    if rng.bernoulli(0.3) { 0.0 } else { rng.f64() }
+                }).collect();
+                let m = DeltaMatrix::from_lambdas(&lambdas, b_max);
+                let total = rng.range_usize(0, n * b_max + 2);
+                let g = solve(&m, cons(total, b_max));
+                let d = super::super::exact::solve_dp(&m, cons(total, b_max));
+                crate::proputil::close(g.objective, d, 1e-9, "objective")
+            },
+        );
+    }
+
+    #[test]
+    fn prop_nonmonotone_within_one_block_of_dp() {
+        prop_check(
+            "greedy near-optimal (general rows)",
+            PropConfig { cases: 48, max_size: 10 },
+            |rng, size| {
+                let n = size.max(1);
+                let b_max = 1 + rng.range_usize(1, 6);
+                let rows: Vec<Vec<f64>> = (0..n)
+                    .map(|_| (0..b_max).map(|_| rng.f64() - 0.2).collect())
+                    .collect();
+                let m = DeltaMatrix::new(rows);
+                let total = rng.range_usize(0, n * b_max + 2);
+                let g = solve(&m, cons(total, b_max));
+                let d = super::super::exact::solve_dp(&m, cons(total, b_max));
+                // one-block slack bound: max single Δ value
+                let slack: f64 = m.rows.iter().flatten().cloned()
+                    .fold(0.0f64, f64::max) * b_max as f64;
+                if g.objective <= d + 1e-9 && g.objective >= d - slack - 1e-9 {
+                    Ok(())
+                } else {
+                    Err(format!("greedy {} vs dp {d} slack {slack}", g.objective))
+                }
+            },
+        );
+    }
+
+    #[test]
+    fn prop_fast_lambda_path_matches_generic() {
+        prop_check(
+            "solve_lambdas == solve(from_lambdas)",
+            PropConfig { cases: 48, max_size: 48 },
+            |rng, size| {
+                let n = size.max(1);
+                let b_max = 1 + rng.range_usize(1, 16);
+                let min_b = if rng.bernoulli(0.3) { 1.min(b_max) } else { 0 };
+                let lambdas: Vec<f64> = (0..n)
+                    .map(|_| if rng.bernoulli(0.3) { 0.0 } else { rng.f64() })
+                    .collect();
+                let total = rng.range_usize(0, n * b_max + 2);
+                let c = AllocConstraints::new(total, b_max, min_b);
+                let fast = solve_lambdas(&lambdas, c);
+                let slow = solve(&DeltaMatrix::from_lambdas(&lambdas, b_max), c);
+                if fast.budgets != slow.budgets {
+                    return Err(format!(
+                        "budgets diverge: fast {:?} slow {:?}",
+                        fast.budgets, slow.budgets
+                    ));
+                }
+                crate::proputil::close(fast.objective, slow.objective, 1e-9, "objective")
+            },
+        );
+    }
+
+    #[test]
+    fn prop_budget_monotone_in_total() {
+        prop_check(
+            "objective monotone in budget",
+            PropConfig { cases: 32, max_size: 16 },
+            |rng, size| {
+                let n = size.max(1);
+                let lambdas: Vec<f64> = (0..n).map(|_| rng.f64()).collect();
+                let m = DeltaMatrix::from_lambdas(&lambdas, 8);
+                let mut prev = -1.0;
+                for t in (0..=n * 8).step_by((n / 2).max(1)) {
+                    let a = solve(&m, cons(t, 8));
+                    if a.objective < prev - 1e-9 {
+                        return Err(format!("objective fell at t={t}"));
+                    }
+                    prev = a.objective;
+                }
+                Ok(())
+            },
+        );
+    }
+}

@@ -1,0 +1,116 @@
+//! Adaptive computation allocation — the paper's core contribution (§3).
+//!
+//! Given per-query marginal-reward vectors Δ̂ᵢⱼ (the predicted gain of the
+//! j-th unit of decoding compute for query i), solve
+//!
+//!   max Σᵢⱼ cᵢⱼ Δᵢⱼ   s.t.  Σᵢⱼ cᵢⱼ ≤ B·n,  cᵢⱼ ≤ cᵢ,ⱼ₋₁        (eq. 5)
+//!
+//! The feasible sets form a matroid (Edmonds 1971), so when each row is
+//! non-increasing the greedy that repeatedly takes the single largest
+//! still-feasible Δᵢⱼ is exact. Learned Δ̂ rows (chat MSE head) can violate
+//! monotonicity; rows are first projected to their concave majorant via
+//! pool-adjacent-violators, which preserves prefix sums at block boundaries
+//! and restores greedy optimality up to one trailing block (property-tested
+//! against the exact DP in `exact.rs`).
+//!
+//! Submodules:
+//! * [`greedy`]  — the O(N log n) heap greedy over PAV blocks (hot path),
+//! * [`exact`]   — O(n·T·Bmax) DP used as the test oracle,
+//! * [`binary`]  — analytic Δ for binary rewards: Δᵢⱼ = λ(1−λ)^(j−1)  (§3.3),
+//! * [`online`]  — batch allocation from predictor outputs (§3.2 "online"),
+//! * [`offline`] — fit/store/lookup bin policy (§3.2 "offline").
+
+pub mod binary;
+pub mod exact;
+pub mod greedy;
+pub mod offline;
+pub mod online;
+
+/// Marginal-reward rows for a batch of queries. Row i holds Δᵢ₁..Δᵢ_Bmax;
+/// rows may be shorter than `b_max` (treated as zero gain beyond).
+#[derive(Clone, Debug, Default)]
+pub struct DeltaMatrix {
+    pub rows: Vec<Vec<f64>>,
+}
+
+impl DeltaMatrix {
+    pub fn new(rows: Vec<Vec<f64>>) -> Self {
+        Self { rows }
+    }
+
+    pub fn n(&self) -> usize {
+        self.rows.len()
+    }
+
+    /// Build from per-query success probabilities (binary-reward domains).
+    pub fn from_lambdas(lambdas: &[f64], b_max: usize) -> Self {
+        Self {
+            rows: lambdas
+                .iter()
+                .map(|&l| binary::binary_deltas(l, b_max))
+                .collect(),
+        }
+    }
+}
+
+/// Result of solving eq. 5 for one batch.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Allocation {
+    /// Budget bᵢ per query (units of decoding compute, e.g. samples).
+    pub budgets: Vec<usize>,
+    /// Σ bᵢ — never exceeds the requested total.
+    pub total_units: usize,
+    /// Σ of the Δ̂ values of all selected units (predicted objective).
+    pub objective: f64,
+}
+
+impl Allocation {
+    pub fn uniform(n: usize, b: usize) -> Self {
+        Allocation { budgets: vec![b; n], total_units: n * b, objective: 0.0 }
+    }
+}
+
+/// Shared constraints for a solve.
+#[derive(Clone, Copy, Debug)]
+pub struct AllocConstraints {
+    /// Total units across the batch (B·n in the paper's notation).
+    pub total_units: usize,
+    /// Per-query cap (the paper's B_max: 100 code / 128 math / 8 chat).
+    pub b_max: usize,
+    /// Per-query floor (chat requires ≥ 1; code/math allow 0 → "I don't know").
+    pub min_budget: usize,
+}
+
+impl AllocConstraints {
+    pub fn new(total_units: usize, b_max: usize, min_budget: usize) -> Self {
+        assert!(min_budget <= b_max);
+        Self { total_units, b_max, min_budget }
+    }
+
+    /// From an average per-query budget B (the paper's x-axis).
+    pub fn per_query(n: usize, avg_budget: f64, b_max: usize, min_budget: usize) -> Self {
+        Self::new((avg_budget * n as f64).round() as usize, b_max, min_budget)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn delta_matrix_from_lambdas() {
+        let m = DeltaMatrix::from_lambdas(&[0.5, 0.0, 1.0], 4);
+        assert_eq!(m.n(), 3);
+        assert!((m.rows[0][0] - 0.5).abs() < 1e-12);
+        assert!((m.rows[0][1] - 0.25).abs() < 1e-12);
+        assert!(m.rows[1].iter().all(|&d| d == 0.0));
+        assert!((m.rows[2][0] - 1.0).abs() < 1e-12);
+        assert_eq!(m.rows[2][1], 0.0);
+    }
+
+    #[test]
+    fn constraints_from_avg_budget() {
+        let c = AllocConstraints::per_query(10, 2.5, 8, 0);
+        assert_eq!(c.total_units, 25);
+    }
+}

@@ -1,0 +1,235 @@
+//! Offline allocation (§3.2): precompute a fixed prediction→budget policy on
+//! held-out data, then serve each query independently with a table lookup.
+//!
+//! Fit:
+//! 1. Bin held-out queries into `n_bins` quantile bins of the scalar
+//!    difficulty prediction (λ̂ or Δ̂₁).
+//! 2. Solve eq. 5 on the held-out set with the extra constraint that all
+//!    members of a bin share a budget: greedy over bins, where bin k's j-th
+//!    "unit" carries per-query gain Δ̄ₖⱼ (bin-mean marginal reward, PAV'd)
+//!    and consumes countₖ units of the total.
+//! 3. Store the per-bin budget plus the quantile edges.
+//!
+//! Deploy: map a prediction to its bin, return the stored budget. Queries are
+//! processed independently; the batch budget holds *in expectation* (the
+//! paper's noted trade-off — violated only under query-distribution shift,
+//! which `examples/tranches` exercises).
+//!
+//! The binning is also what regularises the code-domain pathology (§4.1):
+//! impossible queries whose λ̂ is slightly positive land in the lowest bin
+//! together with true zeros, so they cannot individually attract big budgets.
+
+use super::{AllocConstraints, DeltaMatrix};
+
+#[derive(Clone, Debug)]
+pub struct OfflinePolicy {
+    /// Ascending internal bin edges (length n_bins−1) over the prediction.
+    pub edges: Vec<f64>,
+    /// Budget per bin (length n_bins).
+    pub bin_budgets: Vec<usize>,
+}
+
+impl OfflinePolicy {
+    /// Fit on held-out predictions + their Δ̂ rows.
+    ///
+    /// `scores` are the scalar difficulty predictions used for binning
+    /// (λ̂, or Δ̂₁ for chat); `deltas` the corresponding marginal-reward rows;
+    /// `avg_budget` the target B.
+    pub fn fit(
+        scores: &[f64],
+        deltas: &DeltaMatrix,
+        n_bins: usize,
+        avg_budget: f64,
+        cons_template: AllocConstraints,
+    ) -> Self {
+        let n = scores.len();
+        assert_eq!(n, deltas.n());
+        assert!(n_bins >= 1 && n >= n_bins, "need ≥ n_bins held-out queries");
+
+        // quantile edges
+        let mut sorted: Vec<f64> = scores.to_vec();
+        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let edges: Vec<f64> = (1..n_bins)
+            .map(|k| sorted[k * n / n_bins])
+            .collect();
+
+        // bin membership + bin-mean Δ rows
+        let b_max = cons_template.b_max;
+        let mut counts = vec![0usize; n_bins];
+        let mut mean_rows = vec![vec![0.0f64; b_max]; n_bins];
+        for (i, &s) in scores.iter().enumerate() {
+            let k = bin_of(&edges, s);
+            counts[k] += 1;
+            for (j, &d) in deltas.rows[i].iter().take(b_max).enumerate() {
+                mean_rows[k][j] += d;
+            }
+        }
+        for k in 0..n_bins {
+            if counts[k] > 0 {
+                for d in &mut mean_rows[k] {
+                    *d /= counts[k] as f64;
+                }
+            }
+        }
+
+        // PAV each bin row so per-unit gains are non-increasing, then greedy
+        // over (bin, unit) where a unit costs `counts[k]` of the total.
+        let total_units = (avg_budget * n as f64).round() as usize;
+        let mut bin_budgets = vec![cons_template.min_budget; n_bins];
+        let mut spent: usize = bin_budgets
+            .iter()
+            .zip(&counts)
+            .map(|(&b, &c)| b * c)
+            .sum();
+        let blocks: Vec<Vec<f64>> = mean_rows
+            .iter()
+            .map(|r| pav_rowwise(r))
+            .collect();
+        loop {
+            // best next unit across bins by per-query gain, affordable ones only
+            let mut best: Option<(f64, usize)> = None;
+            for k in 0..n_bins {
+                if counts[k] == 0 || bin_budgets[k] >= b_max {
+                    continue;
+                }
+                if spent + counts[k] > total_units {
+                    continue;
+                }
+                let gain = blocks[k][bin_budgets[k]];
+                if gain > 0.0 && best.map_or(true, |(g, _)| gain > g) {
+                    best = Some((gain, k));
+                }
+            }
+            let Some((_, k)) = best else { break };
+            bin_budgets[k] += 1;
+            spent += counts[k];
+        }
+        OfflinePolicy { edges, bin_budgets }
+    }
+
+    /// Deployment lookup: prediction → budget.
+    pub fn budget_for(&self, score: f64) -> usize {
+        self.bin_budgets[bin_of(&self.edges, score)]
+    }
+
+    pub fn n_bins(&self) -> usize {
+        self.bin_budgets.len()
+    }
+
+    /// Expected per-query budget under a sample of deployment predictions.
+    pub fn expected_budget(&self, scores: &[f64]) -> f64 {
+        if scores.is_empty() {
+            return 0.0;
+        }
+        scores.iter().map(|&s| self.budget_for(s) as f64).sum::<f64>()
+            / scores.len() as f64
+    }
+}
+
+fn bin_of(edges: &[f64], score: f64) -> usize {
+    edges.partition_point(|&e| e <= score)
+}
+
+/// Per-unit gains of the concave majorant (same PAV as greedy.rs, flattened
+/// back to unit granularity since bins allocate one unit at a time).
+fn pav_rowwise(row: &[f64]) -> Vec<f64> {
+    let mut blocks: Vec<(f64, u32)> = Vec::with_capacity(row.len());
+    for &g in row {
+        blocks.push((g, 1));
+        while blocks.len() >= 2 {
+            let (g2, n2) = blocks[blocks.len() - 1];
+            let (g1, n1) = blocks[blocks.len() - 2];
+            if g2 > g1 {
+                blocks.pop();
+                blocks.pop();
+                blocks.push(((g1 * n1 as f64 + g2 * n2 as f64) / (n1 + n2) as f64, n1 + n2));
+            } else {
+                break;
+            }
+        }
+    }
+    let mut out = Vec::with_capacity(row.len());
+    for (g, n) in blocks {
+        out.extend(std::iter::repeat(g).take(n as usize));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::allocator::AllocConstraints;
+    use crate::prng::Pcg64;
+    use crate::proputil::{prop_check, PropConfig};
+
+    fn fit_simple(lambdas: &[f64], n_bins: usize, avg: f64, b_max: usize) -> OfflinePolicy {
+        let deltas = DeltaMatrix::from_lambdas(lambdas, b_max);
+        OfflinePolicy::fit(
+            lambdas,
+            &deltas,
+            n_bins,
+            avg,
+            AllocConstraints::new(0, b_max, 0),
+        )
+    }
+
+    #[test]
+    fn zero_bin_gets_zero_budget() {
+        // half the data impossible → lowest bin budget should be 0
+        let mut lambdas = vec![0.0; 50];
+        lambdas.extend(vec![0.6; 50]);
+        let p = fit_simple(&lambdas, 4, 4.0, 16);
+        assert_eq!(p.budget_for(0.0), 0);
+        assert!(p.budget_for(0.6) > 0);
+    }
+
+    #[test]
+    fn harder_bins_get_more_budget_at_high_b() {
+        let lambdas: Vec<f64> = (0..100).map(|i| 0.05 + 0.9 * i as f64 / 99.0).collect();
+        let p = fit_simple(&lambdas, 5, 16.0, 64);
+        // hard-but-possible bin should out-budget the easiest bin
+        assert!(p.budget_for(0.07) > p.budget_for(0.9),
+            "hard {} easy {}", p.budget_for(0.07), p.budget_for(0.9));
+    }
+
+    #[test]
+    fn lookup_edges() {
+        let p = OfflinePolicy { edges: vec![0.3, 0.7], bin_budgets: vec![10, 5, 1] };
+        assert_eq!(p.budget_for(0.1), 10);
+        assert_eq!(p.budget_for(0.3), 5); // left-closed bins
+        assert_eq!(p.budget_for(0.69), 5);
+        assert_eq!(p.budget_for(0.95), 1);
+    }
+
+    #[test]
+    fn prop_fit_budget_within_target_on_fit_set() {
+        prop_check("offline budget ≤ target", PropConfig { cases: 24, max_size: 40 },
+            |rng, size| {
+                let n = (size * 8).max(16);
+                let lambdas: Vec<f64> = (0..n)
+                    .map(|_| if rng.bernoulli(0.4) { 0.0 } else { rng.f64() })
+                    .collect();
+                let avg = 1.0 + rng.f64() * 8.0;
+                let p = fit_simple(&lambdas, 8, avg, 32);
+                // compare in rounded total units (B·n is rounded, paper eq. 4)
+                let used: usize = lambdas.iter().map(|&s| p.budget_for(s)).sum();
+                let cap = (avg * n as f64).round() as usize;
+                if used <= cap {
+                    Ok(())
+                } else {
+                    Err(format!("used {used} units > cap {cap}"))
+                }
+            });
+    }
+
+    #[test]
+    fn deployment_budget_stable_in_distribution() {
+        // fresh sample from the same distribution keeps the average budget
+        let mut rng = Pcg64::new(1);
+        let fit_set: Vec<f64> = (0..2000).map(|_| rng.f64()).collect();
+        let p = fit_simple(&fit_set, 10, 6.0, 32);
+        let deploy: Vec<f64> = (0..2000).map(|_| rng.f64()).collect();
+        let used = p.expected_budget(&deploy);
+        assert!((used - 6.0).abs() < 0.8, "deploy avg {used}");
+    }
+}

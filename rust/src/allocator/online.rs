@@ -1,0 +1,128 @@
+//! Online allocation (§3.2): a batch of queries is known a priori; plug the
+//! predictor's Δ̂ into eq. 5 and solve exactly for this batch.
+//!
+//! This is the path the serving scheduler uses at every allocation epoch:
+//! the batcher collects queries, the predictor produces either λ̂ (binary
+//! domains) or a Δ̂ vector (chat), and `OnlineAllocator` returns budgets that
+//! satisfy the batch budget *exactly* (up to rounding of B·n).
+
+use super::{greedy, AllocConstraints, Allocation, DeltaMatrix};
+
+/// Predictor output for one batch, in either parameterisation.
+#[derive(Clone, Debug)]
+pub enum Predictions {
+    /// Per-query success probabilities (code/math; §3.3).
+    Lambdas(Vec<f64>),
+    /// Per-query marginal-reward vectors (chat; eq. 6).
+    Deltas(DeltaMatrix),
+}
+
+impl Predictions {
+    pub fn n(&self) -> usize {
+        match self {
+            Predictions::Lambdas(l) => l.len(),
+            Predictions::Deltas(d) => d.n(),
+        }
+    }
+
+    pub fn to_deltas(&self, b_max: usize) -> DeltaMatrix {
+        match self {
+            Predictions::Lambdas(l) => DeltaMatrix::from_lambdas(l, b_max),
+            Predictions::Deltas(d) => d.clone(),
+        }
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct OnlineAllocator {
+    pub b_max: usize,
+    pub min_budget: usize,
+}
+
+impl OnlineAllocator {
+    pub fn new(b_max: usize, min_budget: usize) -> Self {
+        assert!(min_budget <= b_max);
+        Self { b_max, min_budget }
+    }
+
+    /// Allocate an average of `avg_budget` units/query across the batch.
+    pub fn allocate(&self, preds: &Predictions, avg_budget: f64) -> Allocation {
+        let n = preds.n();
+        let cons = AllocConstraints::per_query(n, avg_budget, self.b_max, self.min_budget);
+        self.solve(preds, cons)
+    }
+
+    /// Allocate an explicit number of total units.
+    pub fn allocate_units(&self, preds: &Predictions, total_units: usize) -> Allocation {
+        let cons = AllocConstraints::new(total_units, self.b_max, self.min_budget);
+        self.solve(preds, cons)
+    }
+
+    fn solve(&self, preds: &Predictions, cons: AllocConstraints) -> Allocation {
+        match preds {
+            // analytic fast path: no Δ matrix, no PAV (see greedy::solve_lambdas)
+            Predictions::Lambdas(l) => greedy::solve_lambdas(l, cons),
+            Predictions::Deltas(d) => greedy::solve(d, cons),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::proputil::{prop_check, PropConfig};
+
+    #[test]
+    fn lambda_and_delta_paths_agree() {
+        let lambdas = vec![0.1, 0.5, 0.9, 0.0];
+        let alloc = OnlineAllocator::new(8, 0);
+        let a = alloc.allocate(&Predictions::Lambdas(lambdas.clone()), 3.0);
+        let b = alloc.allocate(
+            &Predictions::Deltas(DeltaMatrix::from_lambdas(&lambdas, 8)),
+            3.0,
+        );
+        assert_eq!(a.budgets, b.budgets);
+    }
+
+    #[test]
+    fn exact_batch_budget() {
+        let alloc = OnlineAllocator::new(16, 0);
+        let preds = Predictions::Lambdas(vec![0.3; 10]);
+        let a = alloc.allocate(&preds, 4.0);
+        assert_eq!(a.total_units, 40); // all gains positive → budget saturated
+    }
+
+    #[test]
+    fn hard_queries_win_at_high_budget() {
+        // paper fig. 6: at high B most compute goes to hard (low-λ) queries
+        let alloc = OnlineAllocator::new(64, 0);
+        let preds = Predictions::Lambdas(vec![0.9, 0.15]);
+        let a = alloc.allocate(&preds, 16.0);
+        assert!(a.budgets[1] > 3 * a.budgets[0],
+            "easy {} vs hard {}", a.budgets[0], a.budgets[1]);
+    }
+
+    #[test]
+    fn easy_queries_win_at_low_budget() {
+        // ...and at low B the easy/medium queries dominate
+        let alloc = OnlineAllocator::new(64, 0);
+        let preds = Predictions::Lambdas(vec![0.9, 0.05]);
+        let a = alloc.allocate_units(&preds, 2);
+        assert!(a.budgets[0] >= 1);
+    }
+
+    #[test]
+    fn prop_min_budget_respected() {
+        prop_check("min budget", PropConfig { cases: 32, max_size: 32 }, |rng, size| {
+            let n = size.max(1);
+            let lambdas: Vec<f64> = (0..n).map(|_| rng.f64()).collect();
+            let alloc = OnlineAllocator::new(8, 1);
+            let a = alloc.allocate(&Predictions::Lambdas(lambdas), 2.0);
+            if a.budgets.iter().all(|&b| b >= 1) {
+                Ok(())
+            } else {
+                Err("some budget below floor".into())
+            }
+        });
+    }
+}

@@ -1,0 +1,99 @@
+//! Baselines and skylines from the paper's evaluation (§4.1–4.2):
+//! uniform best-of-k, the oracle allocator (ground-truth Δ), and random
+//! routing. These are first-class so every experiment driver and bench can
+//! sweep methods uniformly.
+
+use crate::allocator::online::{OnlineAllocator, Predictions};
+use crate::allocator::{Allocation, DeltaMatrix};
+use crate::prng::Pcg64;
+
+/// Uniform best-of-k: every query gets ⌊B⌋ or ⌈B⌉ samples such that the
+/// batch average is exactly B (fractional budgets are rotated round-robin,
+/// deterministically — no query systematically favoured).
+pub fn uniform_best_of_k(n: usize, avg_budget: f64, b_max: usize) -> Allocation {
+    let total = (avg_budget * n as f64).round() as usize;
+    let lo = total / n.max(1);
+    let rem = total - lo * n;
+    let budgets: Vec<usize> = (0..n)
+        .map(|i| (lo + usize::from(i < rem)).min(b_max))
+        .collect();
+    let total_units = budgets.iter().sum();
+    Allocation { budgets, total_units, objective: 0.0 }
+}
+
+/// Oracle (non-realizable skyline): the same greedy solver fed ground-truth
+/// marginal rewards instead of predictions.
+pub fn oracle_allocate(
+    truth: &DeltaMatrix,
+    avg_budget: f64,
+    b_max: usize,
+    min_budget: usize,
+) -> Allocation {
+    OnlineAllocator::new(b_max, min_budget)
+        .allocate(&Predictions::Deltas(truth.clone()), avg_budget)
+}
+
+/// Random routing baseline: route a `fraction` of queries to the strong
+/// decoder uniformly at random. Returns the strong-decoder mask.
+pub fn random_routing(n: usize, fraction: f64, rng: &mut Pcg64) -> Vec<bool> {
+    let k = ((fraction * n as f64).round() as usize).min(n);
+    let idx = rng.sample_indices(n, k);
+    let mut mask = vec![false; n];
+    for i in idx {
+        mask[i] = true;
+    }
+    mask
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::allocator::DeltaMatrix;
+
+    #[test]
+    fn uniform_integral_budget() {
+        let a = uniform_best_of_k(10, 4.0, 100);
+        assert!(a.budgets.iter().all(|&b| b == 4));
+        assert_eq!(a.total_units, 40);
+    }
+
+    #[test]
+    fn uniform_fractional_budget_averages_exactly() {
+        let a = uniform_best_of_k(8, 2.5, 100);
+        assert_eq!(a.total_units, 20);
+        let max = *a.budgets.iter().max().unwrap();
+        let min = *a.budgets.iter().min().unwrap();
+        assert!(max - min <= 1);
+    }
+
+    #[test]
+    fn uniform_caps_at_bmax() {
+        let a = uniform_best_of_k(4, 10.0, 3);
+        assert!(a.budgets.iter().all(|&b| b <= 3));
+    }
+
+    #[test]
+    fn oracle_beats_uniform_objective() {
+        // mixed difficulty: oracle should strictly exceed uniform's objective
+        let lambdas = [0.9, 0.5, 0.1, 0.0];
+        let truth = DeltaMatrix::from_lambdas(&lambdas, 16);
+        let oracle = oracle_allocate(&truth, 4.0, 16, 0);
+        let uni = uniform_best_of_k(4, 4.0, 16);
+        let uni_obj: f64 = uni
+            .budgets
+            .iter()
+            .enumerate()
+            .map(|(i, &b)| truth.rows[i][..b].iter().sum::<f64>())
+            .sum();
+        assert!(oracle.objective > uni_obj + 1e-6,
+            "oracle {} vs uniform {uni_obj}", oracle.objective);
+    }
+
+    #[test]
+    fn random_routing_fraction() {
+        let mut rng = Pcg64::new(0);
+        let mask = random_routing(1000, 0.3, &mut rng);
+        let k = mask.iter().filter(|&&m| m).count();
+        assert_eq!(k, 300);
+    }
+}

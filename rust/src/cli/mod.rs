@@ -1,0 +1,223 @@
+//! CLI argument-parsing substrate (no clap in the build environment).
+//!
+//! Model: `binary <subcommand> [--flag value] [--switch] [positional...]`.
+//! Each subcommand declares its flags; unknown flags are hard errors and
+//! `--help` renders generated usage. Kept deliberately small — the framework
+//! needs subcommands + typed flags, not a general parser.
+
+use std::collections::BTreeMap;
+
+#[derive(Clone, Debug)]
+pub struct FlagSpec {
+    pub name: &'static str,
+    pub help: &'static str,
+    /// None ⇒ boolean switch; Some(default) ⇒ value flag with default.
+    pub default: Option<&'static str>,
+}
+
+#[derive(Clone, Debug)]
+pub struct CommandSpec {
+    pub name: &'static str,
+    pub help: &'static str,
+    pub flags: Vec<FlagSpec>,
+}
+
+/// Parsed arguments for one subcommand invocation.
+#[derive(Clone, Debug, Default)]
+pub struct Args {
+    values: BTreeMap<String, String>,
+    switches: BTreeMap<String, bool>,
+    pub positionals: Vec<String>,
+}
+
+impl Args {
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.values.get(name).map(String::as_str)
+    }
+
+    pub fn str_flag(&self, name: &str) -> anyhow::Result<String> {
+        self.get(name)
+            .map(str::to_string)
+            .ok_or_else(|| anyhow::anyhow!("missing --{name}"))
+    }
+
+    pub fn usize_flag(&self, name: &str) -> anyhow::Result<usize> {
+        self.str_flag(name)?
+            .parse()
+            .map_err(|e| anyhow::anyhow!("--{name}: {e}"))
+    }
+
+    pub fn u64_flag(&self, name: &str) -> anyhow::Result<u64> {
+        self.str_flag(name)?
+            .parse()
+            .map_err(|e| anyhow::anyhow!("--{name}: {e}"))
+    }
+
+    pub fn f64_flag(&self, name: &str) -> anyhow::Result<f64> {
+        self.str_flag(name)?
+            .parse()
+            .map_err(|e| anyhow::anyhow!("--{name}: {e}"))
+    }
+
+    pub fn switch(&self, name: &str) -> bool {
+        self.switches.get(name).copied().unwrap_or(false)
+    }
+}
+
+pub struct Cli {
+    pub binary: &'static str,
+    pub about: &'static str,
+    pub commands: Vec<CommandSpec>,
+}
+
+impl Cli {
+    pub fn usage(&self) -> String {
+        let mut s = format!("{} — {}\n\nUSAGE:\n  {} <command> [flags]\n\nCOMMANDS:\n",
+            self.binary, self.about, self.binary);
+        for c in &self.commands {
+            s.push_str(&format!("  {:<14} {}\n", c.name, c.help));
+        }
+        s.push_str("\nRun `<command> --help` for flags.\n");
+        s
+    }
+
+    pub fn command_usage(&self, cmd: &CommandSpec) -> String {
+        let mut s = format!("{} {} — {}\n\nFLAGS:\n", self.binary, cmd.name, cmd.help);
+        for f in &cmd.flags {
+            match f.default {
+                Some(d) => s.push_str(&format!(
+                    "  --{:<22} {} (default: {})\n", f.name, f.help, d)),
+                None => s.push_str(&format!("  --{:<22} {} (switch)\n", f.name, f.help)),
+            }
+        }
+        s
+    }
+
+    /// Parse argv (without the binary name). Returns (command name, args),
+    /// or Err with a message that should be printed followed by exit(2);
+    /// `Ok(("help", _))` means usage was requested.
+    pub fn parse(&self, argv: &[String]) -> anyhow::Result<(String, Args)> {
+        let Some(cmd_name) = argv.first() else {
+            anyhow::bail!("{}", self.usage());
+        };
+        if cmd_name == "--help" || cmd_name == "-h" || cmd_name == "help" {
+            return Ok(("help".into(), Args::default()));
+        }
+        let cmd = self
+            .commands
+            .iter()
+            .find(|c| c.name == cmd_name)
+            .ok_or_else(|| anyhow::anyhow!("unknown command `{cmd_name}`\n\n{}", self.usage()))?;
+
+        let mut args = Args::default();
+        for f in &cmd.flags {
+            if let Some(d) = f.default {
+                args.values.insert(f.name.to_string(), d.to_string());
+            }
+        }
+        let mut it = argv[1..].iter().peekable();
+        while let Some(tok) = it.next() {
+            if tok == "--help" || tok == "-h" {
+                anyhow::bail!("{}", self.command_usage(cmd));
+            }
+            if let Some(name) = tok.strip_prefix("--") {
+                // allow --flag=value
+                let (name, inline) = match name.split_once('=') {
+                    Some((n, v)) => (n, Some(v.to_string())),
+                    None => (name, None),
+                };
+                let spec = cmd
+                    .flags
+                    .iter()
+                    .find(|f| f.name == name)
+                    .ok_or_else(|| anyhow::anyhow!(
+                        "unknown flag --{name} for `{}`\n\n{}", cmd.name,
+                        self.command_usage(cmd)))?;
+                match (spec.default, inline) {
+                    (None, None) => {
+                        args.switches.insert(name.to_string(), true);
+                    }
+                    (None, Some(v)) => {
+                        anyhow::bail!("--{name} is a switch, got value `{v}`");
+                    }
+                    (Some(_), Some(v)) => {
+                        args.values.insert(name.to_string(), v);
+                    }
+                    (Some(_), None) => {
+                        let v = it.next().ok_or_else(|| {
+                            anyhow::anyhow!("--{name} expects a value")
+                        })?;
+                        args.values.insert(name.to_string(), v.clone());
+                    }
+                }
+            } else {
+                args.positionals.push(tok.clone());
+            }
+        }
+        Ok((cmd.name.to_string(), args))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cli() -> Cli {
+        Cli {
+            binary: "thinkalloc",
+            about: "test",
+            commands: vec![CommandSpec {
+                name: "serve",
+                help: "serve things",
+                flags: vec![
+                    FlagSpec { name: "budget", help: "B", default: Some("8") },
+                    FlagSpec { name: "verbose", help: "talk", default: None },
+                    FlagSpec { name: "domain", help: "d", default: Some("code") },
+                ],
+            }],
+        }
+    }
+
+    #[test]
+    fn defaults_and_overrides() {
+        let (cmd, args) = cli()
+            .parse(&["serve".into(), "--budget".into(), "16".into()])
+            .unwrap();
+        assert_eq!(cmd, "serve");
+        assert_eq!(args.usize_flag("budget").unwrap(), 16);
+        assert_eq!(args.str_flag("domain").unwrap(), "code");
+        assert!(!args.switch("verbose"));
+    }
+
+    #[test]
+    fn switches_and_equals_syntax() {
+        let (_, args) = cli()
+            .parse(&["serve".into(), "--verbose".into(), "--domain=math".into()])
+            .unwrap();
+        assert!(args.switch("verbose"));
+        assert_eq!(args.str_flag("domain").unwrap(), "math");
+    }
+
+    #[test]
+    fn unknown_flag_rejected() {
+        let err = cli().parse(&["serve".into(), "--nope".into()]).unwrap_err();
+        assert!(err.to_string().contains("--nope"));
+    }
+
+    #[test]
+    fn unknown_command_rejected() {
+        assert!(cli().parse(&["zap".into()]).is_err());
+    }
+
+    #[test]
+    fn positionals_collected() {
+        let (_, args) = cli().parse(&["serve".into(), "x.toml".into()]).unwrap();
+        assert_eq!(args.positionals, vec!["x.toml"]);
+    }
+
+    #[test]
+    fn missing_value_errors() {
+        let err = cli().parse(&["serve".into(), "--budget".into()]).unwrap_err();
+        assert!(err.to_string().contains("expects a value"));
+    }
+}

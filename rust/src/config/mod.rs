@@ -1,0 +1,469 @@
+//! Configuration substrate: a TOML-subset parser plus the framework's typed
+//! configuration tree (serving, allocator, runtime, workload).
+//!
+//! Supported TOML subset: `[section]` / `[section.sub]` headers, `key = value`
+//! with string/bool/integer/float/arrays, `#` comments. This covers every
+//! config the framework ships (see `configs/*.toml`). Unknown keys are
+//! collected and reported as errors — silently ignored config is how serving
+//! incidents happen.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+// --- raw TOML value layer -----------------------------------------------------
+#[derive(Clone, Debug, PartialEq)]
+pub enum TomlValue {
+    Str(String),
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+    Arr(Vec<TomlValue>),
+}
+
+impl TomlValue {
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            TomlValue::Int(i) => Some(*i as f64),
+            TomlValue::Float(f) => Some(*f),
+            _ => None,
+        }
+    }
+
+    pub fn as_usize(&self) -> Option<usize> {
+        match self {
+            TomlValue::Int(i) if *i >= 0 => Some(*i as usize),
+            _ => None,
+        }
+    }
+}
+
+/// Flat map of `section.key` → value.
+pub type TomlTable = BTreeMap<String, TomlValue>;
+
+#[derive(Debug, thiserror::Error)]
+#[error("toml parse error on line {line}: {msg}")]
+pub struct TomlError {
+    pub line: usize,
+    pub msg: String,
+}
+
+pub fn parse_toml(text: &str) -> Result<TomlTable, TomlError> {
+    let mut out = TomlTable::new();
+    let mut section = String::new();
+    for (ln, raw) in text.lines().enumerate() {
+        let line = ln + 1;
+        let stripped = strip_comment(raw).trim().to_string();
+        if stripped.is_empty() {
+            continue;
+        }
+        if let Some(rest) = stripped.strip_prefix('[') {
+            let name = rest.strip_suffix(']').ok_or(TomlError {
+                line,
+                msg: "unterminated section header".into(),
+            })?;
+            section = name.trim().to_string();
+            if section.is_empty() {
+                return Err(TomlError { line, msg: "empty section name".into() });
+            }
+            continue;
+        }
+        let (key, val) = stripped.split_once('=').ok_or(TomlError {
+            line,
+            msg: "expected `key = value`".into(),
+        })?;
+        let key = key.trim();
+        if key.is_empty() {
+            return Err(TomlError { line, msg: "empty key".into() });
+        }
+        let full = if section.is_empty() {
+            key.to_string()
+        } else {
+            format!("{section}.{key}")
+        };
+        let value = parse_value(val.trim())
+            .map_err(|msg| TomlError { line, msg })?;
+        out.insert(full, value);
+    }
+    Ok(out)
+}
+
+fn strip_comment(line: &str) -> &str {
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_value(s: &str) -> Result<TomlValue, String> {
+    if let Some(rest) = s.strip_prefix('"') {
+        let inner = rest.strip_suffix('"').ok_or("unterminated string")?;
+        return Ok(TomlValue::Str(inner.replace("\\\"", "\"").replace("\\\\", "\\")));
+    }
+    if s == "true" {
+        return Ok(TomlValue::Bool(true));
+    }
+    if s == "false" {
+        return Ok(TomlValue::Bool(false));
+    }
+    if let Some(rest) = s.strip_prefix('[') {
+        let inner = rest.strip_suffix(']').ok_or("unterminated array")?;
+        let inner = inner.trim();
+        if inner.is_empty() {
+            return Ok(TomlValue::Arr(vec![]));
+        }
+        let items = split_top_level(inner)?;
+        return Ok(TomlValue::Arr(
+            items
+                .iter()
+                .map(|i| parse_value(i.trim()))
+                .collect::<Result<Vec<_>, _>>()?,
+        ));
+    }
+    if !s.contains(['.', 'e', 'E']) {
+        if let Ok(i) = s.parse::<i64>() {
+            return Ok(TomlValue::Int(i));
+        }
+    }
+    if let Ok(f) = s.parse::<f64>() {
+        return Ok(TomlValue::Float(f));
+    }
+    Err(format!("cannot parse value `{s}`"))
+}
+
+fn split_top_level(s: &str) -> Result<Vec<String>, String> {
+    let mut out = Vec::new();
+    let mut depth = 0usize;
+    let mut in_str = false;
+    let mut cur = String::new();
+    for c in s.chars() {
+        match c {
+            '"' => {
+                in_str = !in_str;
+                cur.push(c);
+            }
+            '[' if !in_str => {
+                depth += 1;
+                cur.push(c);
+            }
+            ']' if !in_str => {
+                depth = depth.checked_sub(1).ok_or("unbalanced brackets")?;
+                cur.push(c);
+            }
+            ',' if !in_str && depth == 0 => {
+                out.push(std::mem::take(&mut cur));
+            }
+            _ => cur.push(c),
+        }
+    }
+    if !cur.trim().is_empty() {
+        out.push(cur);
+    }
+    Ok(out)
+}
+
+// --- typed configuration tree ---------------------------------------------------
+/// Which kernel implementation the loaded artifacts use.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum KernelMode {
+    Pallas,
+    Xla,
+}
+
+impl KernelMode {
+    pub fn suffix(self) -> &'static str {
+        match self {
+            KernelMode::Pallas => "pallas",
+            KernelMode::Xla => "xla",
+        }
+    }
+}
+
+/// Allocation strategy the scheduler uses (paper §3.2 + baselines §4.1).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum AllocPolicy {
+    /// Online Ada-BoK: solve eq. 5 per batch with predicted Δ̂.
+    Online,
+    /// Offline Ada-BoK: precomputed bin → budget table.
+    Offline,
+    /// Uniform best-of-k baseline.
+    Uniform,
+    /// Non-realizable skyline using ground-truth Δ.
+    Oracle,
+}
+
+impl std::str::FromStr for AllocPolicy {
+    type Err = anyhow::Error;
+    fn from_str(s: &str) -> anyhow::Result<Self> {
+        Ok(match s {
+            "online" => AllocPolicy::Online,
+            "offline" => AllocPolicy::Offline,
+            "uniform" => AllocPolicy::Uniform,
+            "oracle" => AllocPolicy::Oracle,
+            other => anyhow::bail!("unknown alloc policy `{other}`"),
+        })
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct RuntimeConfig {
+    /// Directory holding `*.hlo.txt` AOT artifacts + MANIFEST.json.
+    pub artifacts_dir: PathBuf,
+    pub kernel_mode: KernelMode,
+    /// Static batch of encoder/probe/reward executables (must match export).
+    pub batch: usize,
+    /// Static batch of the decode-step executable.
+    pub decode_batch: usize,
+    pub max_seq: usize,
+    pub vocab: usize,
+}
+
+impl Default for RuntimeConfig {
+    fn default() -> Self {
+        Self {
+            artifacts_dir: PathBuf::from("artifacts"),
+            kernel_mode: KernelMode::Xla,
+            batch: 64,
+            decode_batch: 32,
+            max_seq: 64,
+            vocab: 320,
+        }
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct AllocatorConfig {
+    pub policy: AllocPolicy,
+    /// Average per-query budget B (paper's x-axis).
+    pub budget_per_query: f64,
+    /// Hard cap per query (paper: 100 code / 128 math / 8 chat).
+    pub b_max: usize,
+    /// Chat-style domains require at least one sample per query.
+    pub min_budget: usize,
+    /// Offline variant: number of predicted-difficulty bins.
+    pub offline_bins: usize,
+}
+
+impl Default for AllocatorConfig {
+    fn default() -> Self {
+        Self {
+            policy: AllocPolicy::Online,
+            budget_per_query: 8.0,
+            b_max: 100,
+            min_budget: 0,
+            offline_bins: 20,
+        }
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct ServerConfig {
+    pub addr: String,
+    pub workers: usize,
+    /// Allocation epoch: flush a batch when this many queries are waiting...
+    pub batch_queries: usize,
+    /// ...or when the oldest has waited this long.
+    pub max_wait_ms: u64,
+    pub max_new_tokens: usize,
+    pub temperature: f64,
+}
+
+impl Default for ServerConfig {
+    fn default() -> Self {
+        Self {
+            addr: "127.0.0.1:7071".into(),
+            workers: 4,
+            batch_queries: 64,
+            max_wait_ms: 50,
+            max_new_tokens: 24,
+            temperature: 0.7,
+        }
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct WorkloadConfig {
+    pub domain: String,
+    pub n_queries: usize,
+    pub seed: u64,
+    /// Samples drawn per query when estimating ground truth (B_max).
+    pub samples_per_query: usize,
+}
+
+impl Default for WorkloadConfig {
+    fn default() -> Self {
+        Self { domain: "code".into(), n_queries: 1024, seed: 0, samples_per_query: 100 }
+    }
+}
+
+#[derive(Clone, Debug, Default)]
+pub struct Config {
+    pub runtime: RuntimeConfig,
+    pub allocator: AllocatorConfig,
+    pub server: ServerConfig,
+    pub workload: WorkloadConfig,
+}
+
+impl Config {
+    pub fn from_file(path: &Path) -> anyhow::Result<Config> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| anyhow::anyhow!("reading {}: {e}", path.display()))?;
+        Self::from_toml_str(&text)
+    }
+
+    pub fn from_toml_str(text: &str) -> anyhow::Result<Config> {
+        let table = parse_toml(text)?;
+        let mut cfg = Config::default();
+        let mut unknown = Vec::new();
+        for (key, val) in &table {
+            if !cfg.apply(key, val)? {
+                unknown.push(key.clone());
+            }
+        }
+        if !unknown.is_empty() {
+            anyhow::bail!("unknown config keys: {}", unknown.join(", "));
+        }
+        cfg.validate()?;
+        Ok(cfg)
+    }
+
+    fn apply(&mut self, key: &str, val: &TomlValue) -> anyhow::Result<bool> {
+        let invalid = || anyhow::anyhow!("invalid value for `{key}`: {val:?}");
+        macro_rules! usize_of {
+            () => { val.as_usize().ok_or_else(invalid)? };
+        }
+        macro_rules! f64_of {
+            () => { val.as_f64().ok_or_else(invalid)? };
+        }
+        macro_rules! str_of {
+            () => {
+                match val {
+                    TomlValue::Str(s) => s.clone(),
+                    _ => return Err(invalid()),
+                }
+            };
+        }
+        match key {
+            "runtime.artifacts_dir" => self.runtime.artifacts_dir = PathBuf::from(str_of!()),
+            "runtime.kernel_mode" => {
+                self.runtime.kernel_mode = match str_of!().as_str() {
+                    "pallas" => KernelMode::Pallas,
+                    "xla" => KernelMode::Xla,
+                    other => anyhow::bail!("unknown kernel_mode `{other}`"),
+                }
+            }
+            "runtime.batch" => self.runtime.batch = usize_of!(),
+            "runtime.decode_batch" => self.runtime.decode_batch = usize_of!(),
+            "runtime.max_seq" => self.runtime.max_seq = usize_of!(),
+            "runtime.vocab" => self.runtime.vocab = usize_of!(),
+            "allocator.policy" => self.allocator.policy = str_of!().parse()?,
+            "allocator.budget_per_query" => self.allocator.budget_per_query = f64_of!(),
+            "allocator.b_max" => self.allocator.b_max = usize_of!(),
+            "allocator.min_budget" => self.allocator.min_budget = usize_of!(),
+            "allocator.offline_bins" => self.allocator.offline_bins = usize_of!(),
+            "server.addr" => self.server.addr = str_of!(),
+            "server.workers" => self.server.workers = usize_of!(),
+            "server.batch_queries" => self.server.batch_queries = usize_of!(),
+            "server.max_wait_ms" => self.server.max_wait_ms = f64_of!() as u64,
+            "server.max_new_tokens" => self.server.max_new_tokens = usize_of!(),
+            "server.temperature" => self.server.temperature = f64_of!(),
+            "workload.domain" => self.workload.domain = str_of!(),
+            "workload.n_queries" => self.workload.n_queries = usize_of!(),
+            "workload.seed" => self.workload.seed = f64_of!() as u64,
+            "workload.samples_per_query" => self.workload.samples_per_query = usize_of!(),
+            _ => return Ok(false),
+        }
+        Ok(true)
+    }
+
+    pub fn validate(&self) -> anyhow::Result<()> {
+        anyhow::ensure!(self.allocator.b_max >= 1, "b_max must be ≥ 1");
+        anyhow::ensure!(
+            self.allocator.budget_per_query > 0.0,
+            "budget_per_query must be positive"
+        );
+        anyhow::ensure!(
+            self.allocator.min_budget <= self.allocator.b_max,
+            "min_budget exceeds b_max"
+        );
+        anyhow::ensure!(self.server.workers >= 1, "need at least one worker");
+        anyhow::ensure!(self.runtime.batch >= 1 && self.runtime.decode_batch >= 1,
+            "batch sizes must be ≥ 1");
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_sections_and_types() {
+        let t = parse_toml(
+            "top = 1\n[a]\nx = \"s\" # comment\ny = 2.5\n[a.b]\nz = [1, 2, 3]\nflag = true\n",
+        )
+        .unwrap();
+        assert_eq!(t["top"], TomlValue::Int(1));
+        assert_eq!(t["a.x"], TomlValue::Str("s".into()));
+        assert_eq!(t["a.y"], TomlValue::Float(2.5));
+        assert_eq!(t["a.b.flag"], TomlValue::Bool(true));
+        assert_eq!(
+            t["a.b.z"],
+            TomlValue::Arr(vec![TomlValue::Int(1), TomlValue::Int(2), TomlValue::Int(3)])
+        );
+    }
+
+    #[test]
+    fn comment_inside_string_kept() {
+        let t = parse_toml("k = \"a # b\"\n").unwrap();
+        assert_eq!(t["k"], TomlValue::Str("a # b".into()));
+    }
+
+    #[test]
+    fn errors_carry_line_numbers() {
+        let err = parse_toml("ok = 1\nbad line\n").unwrap_err();
+        assert_eq!(err.line, 2);
+    }
+
+    #[test]
+    fn full_config_roundtrip() {
+        let cfg = Config::from_toml_str(
+            "[runtime]\nkernel_mode = \"pallas\"\nbatch = 32\n\
+             [allocator]\npolicy = \"offline\"\nbudget_per_query = 4.0\nb_max = 16\n\
+             [server]\nworkers = 2\n[workload]\ndomain = \"math\"\nseed = 7\n",
+        )
+        .unwrap();
+        assert_eq!(cfg.runtime.kernel_mode, KernelMode::Pallas);
+        assert_eq!(cfg.allocator.policy, AllocPolicy::Offline);
+        assert_eq!(cfg.workload.domain, "math");
+        assert_eq!(cfg.workload.seed, 7);
+    }
+
+    #[test]
+    fn unknown_keys_rejected() {
+        let err = Config::from_toml_str("[allocator]\ntypo_key = 1\n").unwrap_err();
+        assert!(err.to_string().contains("typo_key"));
+    }
+
+    #[test]
+    fn validation_rejects_bad_budget() {
+        let err = Config::from_toml_str(
+            "[allocator]\nbudget_per_query = -1.0\n",
+        )
+        .unwrap_err();
+        assert!(err.to_string().contains("positive"));
+    }
+
+    #[test]
+    fn min_budget_capped_by_bmax() {
+        let err = Config::from_toml_str(
+            "[allocator]\nmin_budget = 10\nb_max = 8\n",
+        )
+        .unwrap_err();
+        assert!(err.to_string().contains("min_budget"));
+    }
+}

@@ -1,0 +1,162 @@
+//! Fig. 4 — Chat: expected reward vs budget on the *full* test set and the
+//! *tranches* subset (bottom + top reward-variance deciles, the paper's
+//! distribution-shift stress test). Methods: Best-of-k, Online Ada-BoK,
+//! Oracle; all with bᵢ ≥ 1 (a chat query always gets at least one sample).
+
+use std::path::Path;
+
+use anyhow::Result;
+
+use super::Csv;
+use crate::allocator::online::{OnlineAllocator, Predictions};
+use crate::allocator::DeltaMatrix;
+use crate::baselines::{oracle_allocate, uniform_best_of_k};
+use crate::runtime::predictor::Predictor;
+use crate::runtime::Engine;
+use crate::simulator::{eval_reward_allocation, marginal_rewards, RewardMatrix};
+use crate::workload::{self, Query};
+
+pub const B_MAX: usize = 8;
+/// Samples drawn per query to build ground-truth curves (paper: 8 responses,
+/// bootstrapped; we draw more for tighter oracle curves).
+const K_SAMPLES: usize = 64;
+
+pub struct Fig4Result {
+    /// (budget, uniform, online, oracle) — full variant.
+    pub full: Vec<(f64, f64, f64, f64)>,
+    /// Same series on the tranches subset.
+    pub tranches: Vec<(f64, f64, f64, f64)>,
+}
+
+fn eval_variant(
+    qs: &[Query],
+    deltas_hat: &DeltaMatrix,
+    out: &mut Csv,
+    seed: u64,
+) -> Result<Vec<(f64, f64, f64, f64)>> {
+    let rewards = RewardMatrix::new(
+        workload::sample_chat_rewards(qs, K_SAMPLES, seed),
+        qs.len(),
+        K_SAMPLES,
+    );
+    let curves = rewards.curves(B_MAX);
+    let truth = DeltaMatrix::new(
+        (0..qs.len())
+            .map(|i| marginal_rewards(rewards.row(i), B_MAX))
+            .collect(),
+    );
+    let allocator = OnlineAllocator::new(B_MAX, 1);
+    let preds = Predictions::Deltas(deltas_hat.clone());
+
+    let mut series = Vec::new();
+    for b in [1.0, 1.5, 2.0, 2.5, 3.0, 4.0, 5.0, 6.0] {
+        let uni = uniform_best_of_k(qs.len(), b, B_MAX);
+        // uniform floors at 1 sample as well
+        let uni_budgets: Vec<usize> = uni.budgets.iter().map(|&x| x.max(1)).collect();
+        let online = allocator.allocate(&preds, b);
+        let oracle = oracle_allocate(&truth, b, B_MAX, 1);
+        let row = (
+            b,
+            eval_reward_allocation(&curves, &uni_budgets),
+            eval_reward_allocation(&curves, &online.budgets),
+            eval_reward_allocation(&curves, &oracle.budgets),
+        );
+        out.rowf(&[row.0, row.1, row.2, row.3])?;
+        series.push(row);
+    }
+    Ok(series)
+}
+
+/// Select the tranches subset: indices in the bottom and top `decile` of
+/// per-query reward variance (paper: lowest/highest 10%).
+pub fn tranche_indices(qs: &[Query], k: usize, seed: u64, decile: f64) -> Vec<usize> {
+    let rewards = workload::sample_chat_rewards(qs, k, seed);
+    let mut var: Vec<(usize, f64)> = (0..qs.len())
+        .map(|i| {
+            let row = &rewards[i * k..(i + 1) * k];
+            let m = row.iter().map(|&x| x as f64).sum::<f64>() / k as f64;
+            let v = row.iter().map(|&x| (x as f64 - m).powi(2)).sum::<f64>() / k as f64;
+            (i, v)
+        })
+        .collect();
+    var.sort_by(|a, b| a.1.partial_cmp(&b.1).unwrap());
+    let cut = ((qs.len() as f64) * decile) as usize;
+    let mut idx: Vec<usize> = var[..cut].iter().map(|&(i, _)| i).collect();
+    idx.extend(var[qs.len() - cut..].iter().map(|&(i, _)| i));
+    idx.sort_unstable();
+    idx
+}
+
+pub fn run(engine: &Engine, out_dir: &Path) -> Result<Fig4Result> {
+    let test = workload::load_dataset(
+        &engine.artifacts_dir().join("datasets").join("chat_test.json"),
+    )?;
+    let predictor = Predictor::new(engine);
+    let texts: Vec<&str> = test.iter().map(|q| q.text.as_str()).collect();
+    let delta_rows = predictor.predict_ids_to_deltas(&texts)?;
+    let deltas_hat = DeltaMatrix::new(delta_rows);
+
+    let mut csv = Csv::create(out_dir, "fig4_chat_full.csv",
+        "budget,uniform,online,oracle")?;
+    let full = eval_variant(&test, &deltas_hat, &mut csv, 0xCAFE)?;
+
+    // tranches: bottom + top variance deciles
+    let idx = tranche_indices(&test, K_SAMPLES, 0xBEEF, 0.10);
+    let sub: Vec<Query> = idx.iter().map(|&i| test[i].clone()).collect();
+    let sub_deltas = DeltaMatrix::new(
+        idx.iter().map(|&i| deltas_hat.rows[i].clone()).collect(),
+    );
+    let mut csv = Csv::create(out_dir, "fig4_chat_tranches.csv",
+        "budget,uniform,online,oracle")?;
+    let tranches = eval_variant(&sub, &sub_deltas, &mut csv, 0xD00D)?;
+
+    Ok(Fig4Result { full, tranches })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tranche_selection_takes_extremes() {
+        let qs = workload::gen_dataset("chat", 500, 3);
+        let idx = tranche_indices(&qs, 32, 4, 0.10);
+        assert_eq!(idx.len(), 100);
+        // selected set's sigma spread should exceed the full set's
+        let sel_sig: Vec<f64> = idx.iter().map(|&i| qs[i].sigma).collect();
+        let all_sig: Vec<f64> = qs.iter().map(|q| q.sigma).collect();
+        let spread = |v: &[f64]| {
+            let m = v.iter().sum::<f64>() / v.len() as f64;
+            (v.iter().map(|x| (x - m) * (x - m)).sum::<f64>() / v.len() as f64).sqrt()
+        };
+        assert!(spread(&sel_sig) > spread(&all_sig));
+    }
+
+    /// Oracle with ground-truth Δ must beat uniform on the tranches subset by
+    /// a wider margin than on the full set (the paper's headline for fig. 4).
+    #[test]
+    fn oracle_gains_bigger_on_tranches() {
+        let qs = workload::gen_dataset("chat", 600, 5);
+        let rewards = RewardMatrix::new(
+            workload::sample_chat_rewards(&qs, 64, 6), qs.len(), 64);
+        let curves = rewards.curves(B_MAX);
+        let truth = DeltaMatrix::new(
+            (0..qs.len()).map(|i| marginal_rewards(rewards.row(i), B_MAX)).collect());
+        let b = 2.0;
+        let uni: Vec<usize> = vec![2; qs.len()];
+        let oracle = oracle_allocate(&truth, b, B_MAX, 1);
+        let full_gain = eval_reward_allocation(&curves, &oracle.budgets)
+            - eval_reward_allocation(&curves, &uni);
+
+        let idx = tranche_indices(&qs, 64, 7, 0.10);
+        let sub_curves: Vec<Vec<f64>> = idx.iter().map(|&i| curves[i].clone()).collect();
+        let sub_truth = DeltaMatrix::new(
+            idx.iter().map(|&i| truth.rows[i].clone()).collect());
+        let sub_oracle = oracle_allocate(&sub_truth, b, B_MAX, 1);
+        let sub_uni: Vec<usize> = vec![2; idx.len()];
+        let tr_gain = eval_reward_allocation(&sub_curves, &sub_oracle.budgets)
+            - eval_reward_allocation(&sub_curves, &sub_uni);
+        assert!(tr_gain > full_gain, "tranches {tr_gain} ≤ full {full_gain}");
+        assert!(full_gain >= 0.0);
+    }
+}

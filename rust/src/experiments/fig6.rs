@@ -1,0 +1,118 @@
+//! Fig. 6 — how allocated compute distributes over difficulty bins as the
+//! budget grows. Queries are split into three *evenly-sized* bins (easy /
+//! medium / hard) by predicted success probability; the online allocation's
+//! unit share per bin is reported for each budget.
+//!
+//! Paper's expected shape: low budgets favour easy+medium (cheap wins);
+//! high budgets shift mass to the hard bin (easy queries saturate, hard
+//! queries' Δ decays slowly).
+
+use std::path::Path;
+
+use anyhow::Result;
+
+use super::Csv;
+use crate::allocator::online::{OnlineAllocator, Predictions};
+use crate::runtime::predictor::{Predictor, ProbeKind};
+use crate::runtime::Engine;
+use crate::workload;
+
+pub struct Fig6Result {
+    /// (budget, easy_share, medium_share, hard_share) per swept budget.
+    pub shares: Vec<(f64, f64, f64, f64)>,
+}
+
+/// Tercile bins by predicted λ̂: returns bin index (0=hard, 1=medium, 2=easy
+/// — note Fig. 6 labels by difficulty, so *low* λ̂ is hard).
+pub fn tercile_bins(lam_hat: &[f64]) -> Vec<usize> {
+    let n = lam_hat.len();
+    let mut order: Vec<usize> = (0..n).collect();
+    order.sort_by(|&a, &b| lam_hat[a].partial_cmp(&lam_hat[b]).unwrap());
+    let mut bins = vec![0usize; n];
+    for (rank, &i) in order.iter().enumerate() {
+        bins[i] = rank * 3 / n;
+    }
+    bins
+}
+
+pub fn compute_shares(
+    lam_hat: &[f64],
+    b_max: usize,
+    budgets: &[f64],
+) -> Vec<(f64, f64, f64, f64)> {
+    let bins = tercile_bins(lam_hat);
+    let allocator = OnlineAllocator::new(b_max, 0);
+    let preds = Predictions::Lambdas(lam_hat.to_vec());
+    budgets
+        .iter()
+        .map(|&b| {
+            let alloc = allocator.allocate(&preds, b);
+            let mut units = [0usize; 3];
+            for (i, &bu) in alloc.budgets.iter().enumerate() {
+                units[bins[i]] += bu;
+            }
+            let total = (units[0] + units[1] + units[2]).max(1) as f64;
+            // bin 0 = lowest λ̂ = hard; report (easy, medium, hard)
+            (
+                b,
+                units[2] as f64 / total,
+                units[1] as f64 / total,
+                units[0] as f64 / total,
+            )
+        })
+        .collect()
+}
+
+pub fn run(engine: &Engine, domain: &str, out_dir: &Path) -> Result<Fig6Result> {
+    let b_max = if domain == "code" { 100 } else { 128 };
+    let test = workload::load_dataset(
+        &engine
+            .artifacts_dir()
+            .join("datasets")
+            .join(format!("{domain}_test.json")),
+    )?;
+    let predictor = Predictor::new(engine);
+    let texts: Vec<&str> = test.iter().map(|q| q.text.as_str()).collect();
+    let lam_hat = predictor.predict_scalar(ProbeKind::for_domain(domain)?, &texts)?;
+
+    let budgets = [1.0, 2.0, 4.0, 8.0, 16.0, 32.0];
+    let shares = compute_shares(&lam_hat, b_max, &budgets);
+    let mut csv = Csv::create(out_dir, &format!("fig6_{domain}_alloc.csv"),
+        "budget,easy_share,medium_share,hard_share")?;
+    for &(b, e, m, h) in &shares {
+        csv.rowf(&[b, e, m, h])?;
+    }
+    Ok(Fig6Result { shares })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn terciles_are_even() {
+        let lam: Vec<f64> = (0..99).map(|i| i as f64 / 99.0).collect();
+        let bins = tercile_bins(&lam);
+        for b in 0..3 {
+            assert_eq!(bins.iter().filter(|&&x| x == b).count(), 33);
+        }
+        // lowest λ̂ ranks land in bin 0
+        assert_eq!(bins[0], 0);
+        assert_eq!(bins[98], 2);
+    }
+
+    /// The paper's qualitative shape, independent of the engine: with a
+    /// math-like flat λ distribution, the hard-bin share grows with budget.
+    #[test]
+    fn hard_share_grows_with_budget() {
+        let qs = workload::gen_dataset("math", 900, 21);
+        let lam: Vec<f64> = qs.iter().map(|q| q.lam.max(1e-3)).collect();
+        let shares = compute_shares(&lam, 128, &[1.0, 4.0, 16.0, 48.0]);
+        let hard_low = shares[0].3;
+        let hard_high = shares[3].3;
+        assert!(hard_high > hard_low,
+            "hard share did not grow: {hard_low} -> {hard_high}");
+        // and the easy share shrinks correspondingly
+        assert!(shares[3].1 < shares[0].1 + 1e-9);
+    }
+}

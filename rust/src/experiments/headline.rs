@@ -1,0 +1,77 @@
+//! Headline claims (§1, §4): compute-reduction at matched quality and
+//! quality-gain at matched compute, derived from the fig-3/4/5 curves.
+//!
+//! * Math/Code: "same success rate as best-of-k with 25–50% less compute
+//!   in the moderate-to-high budget regime".
+//! * Chat tranches: "same reward with a 25–40% smaller budget".
+//! * Routing: "match the strong decoder while calling it 50–75% of the time".
+
+use super::budget_to_reach;
+
+#[derive(Clone, Debug)]
+pub struct Reduction {
+    pub budget: f64,
+    pub baseline_value: f64,
+    pub adaptive_budget_needed: f64,
+    /// 1 − adaptive/baseline (positive = adaptive cheaper).
+    pub savings: f64,
+}
+
+/// For each baseline point (B, v), find the budget at which `adaptive`
+/// reaches v and report the relative savings.
+pub fn compute_reductions(
+    baseline: &[(f64, f64)],
+    adaptive: &[(f64, f64)],
+) -> Vec<Reduction> {
+    baseline
+        .iter()
+        .filter_map(|&(b, v)| {
+            budget_to_reach(adaptive, v).map(|ab| Reduction {
+                budget: b,
+                baseline_value: v,
+                adaptive_budget_needed: ab,
+                savings: 1.0 - ab / b,
+            })
+        })
+        .collect()
+}
+
+/// Routing headline: smallest strong-decoder fraction whose adaptive reward
+/// matches (≥ tol below) the all-strong reward.
+pub fn strong_parity_fraction(
+    adaptive: &[(f64, f64)],
+    all_strong_value: f64,
+    tol: f64,
+) -> Option<f64> {
+    adaptive
+        .iter()
+        .find(|&&(_, v)| v >= all_strong_value - tol)
+        .map(|&(f, _)| f)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn reductions_on_shifted_curves() {
+        // adaptive reaches every value at half the budget
+        let base: Vec<(f64, f64)> = (1..=8).map(|b| (b as f64, (b as f64).ln())).collect();
+        let ada: Vec<(f64, f64)> = (1..=8)
+            .map(|b| (b as f64 / 2.0, (b as f64).ln()))
+            .collect();
+        let red = compute_reductions(&base, &ada);
+        assert!(!red.is_empty());
+        for r in &red {
+            assert!((r.savings - 0.5).abs() < 0.05, "{r:?}");
+        }
+    }
+
+    #[test]
+    fn parity_fraction_found() {
+        let curve = [(0.0, 1.0), (0.25, 1.4), (0.5, 1.52), (0.75, 1.55), (1.0, 1.5)];
+        let f = strong_parity_fraction(&curve, 1.5, 0.01).unwrap();
+        assert!((f - 0.5).abs() < 1e-12);
+        assert!(strong_parity_fraction(&curve, 2.0, 0.01).is_none());
+    }
+}

@@ -1,0 +1,156 @@
+//! Experiment drivers — one per table/figure of the paper's evaluation
+//! (DESIGN.md §6 maps each to its bench target). Every driver writes CSVs
+//! under `results/` with the same series the paper plots, plus a summary
+//! JSON consumed by EXPERIMENTS.md.
+//!
+//! | driver      | paper artifact |
+//! |-------------|----------------|
+//! | [`fig3`]    | Fig. 3 — Code/Math: λ histogram, calibration, success-vs-budget |
+//! | [`fig4`]    | Fig. 4 — Chat full + tranches reward-vs-budget |
+//! | [`fig5`]    | Fig. 5 — Routing (model size, VAS): prefs, calibration, reward |
+//! | [`fig6`]    | Fig. 6 — compute share by difficulty bin vs budget |
+//! | [`table1`]  | Table 1 — predictor loss vs Avg/Opt* + Acc |
+//! | [`headline`]| §1/§4 headline compute-reduction claims |
+
+pub mod ablation;
+pub mod fig3;
+pub mod fig4;
+pub mod fig5;
+pub mod fig6;
+pub mod headline;
+pub mod table1;
+
+use std::io::Write;
+use std::path::{Path, PathBuf};
+
+use anyhow::{Context, Result};
+
+/// Simple CSV writer for the figure series.
+pub struct Csv {
+    file: std::fs::File,
+    pub path: PathBuf,
+}
+
+impl Csv {
+    pub fn create(dir: &Path, name: &str, header: &str) -> Result<Csv> {
+        std::fs::create_dir_all(dir)?;
+        let path = dir.join(name);
+        let mut file = std::fs::File::create(&path)
+            .with_context(|| format!("creating {}", path.display()))?;
+        writeln!(file, "{header}")?;
+        Ok(Csv { file, path })
+    }
+
+    pub fn row(&mut self, cells: &[String]) -> Result<()> {
+        writeln!(self.file, "{}", cells.join(","))?;
+        Ok(())
+    }
+
+    pub fn rowf(&mut self, cells: &[f64]) -> Result<()> {
+        self.row(&cells.iter().map(|c| format!("{c:.6}")).collect::<Vec<_>>())
+    }
+}
+
+/// Histogram helper: counts over `bins` equal-width bins of [lo, hi].
+pub fn histogram(values: &[f64], lo: f64, hi: f64, bins: usize) -> Vec<usize> {
+    let mut counts = vec![0usize; bins];
+    let w = (hi - lo) / bins as f64;
+    for &v in values {
+        let b = (((v - lo) / w) as usize).min(bins - 1);
+        counts[b] += 1;
+    }
+    counts
+}
+
+/// Calibration curve: bin by predicted value, average (pred, truth) per bin.
+/// Returns (bin_pred_mean, bin_truth_mean, count) triples for non-empty bins.
+pub fn calibration(pred: &[f64], truth: &[f64], bins: usize) -> Vec<(f64, f64, usize)> {
+    assert_eq!(pred.len(), truth.len());
+    let lo = pred.iter().cloned().fold(f64::INFINITY, f64::min);
+    let hi = pred.iter().cloned().fold(f64::NEG_INFINITY, f64::max) + 1e-12;
+    let w = (hi - lo) / bins as f64;
+    let mut acc = vec![(0.0, 0.0, 0usize); bins];
+    for (&p, &t) in pred.iter().zip(truth) {
+        let b = (((p - lo) / w) as usize).min(bins - 1);
+        acc[b].0 += p;
+        acc[b].1 += t;
+        acc[b].2 += 1;
+    }
+    acc.into_iter()
+        .filter(|&(_, _, n)| n > 0)
+        .map(|(p, t, n)| (p / n as f64, t / n as f64, n))
+        .collect()
+}
+
+/// Pearson correlation (used as the scalar calibration summary).
+pub fn pearson(a: &[f64], b: &[f64]) -> f64 {
+    let n = a.len() as f64;
+    let ma = a.iter().sum::<f64>() / n;
+    let mb = b.iter().sum::<f64>() / n;
+    let mut cov = 0.0;
+    let mut va = 0.0;
+    let mut vb = 0.0;
+    for (&x, &y) in a.iter().zip(b) {
+        cov += (x - ma) * (y - mb);
+        va += (x - ma) * (x - ma);
+        vb += (y - mb) * (y - mb);
+    }
+    cov / (va.sqrt() * vb.sqrt() + 1e-30)
+}
+
+/// Where a method's curve first reaches `target` value, by linear
+/// interpolation over (budget, value) points; None if never.
+pub fn budget_to_reach(curve: &[(f64, f64)], target: f64) -> Option<f64> {
+    for w in curve.windows(2) {
+        let (b0, v0) = w[0];
+        let (b1, v1) = w[1];
+        if v0 <= target && target <= v1 && v1 > v0 {
+            return Some(b0 + (b1 - b0) * (target - v0) / (v1 - v0));
+        }
+    }
+    curve
+        .first()
+        .filter(|&&(_, v)| v >= target)
+        .map(|&(b, _)| b)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn histogram_counts() {
+        let h = histogram(&[0.05, 0.15, 0.95, 1.0], 0.0, 1.0, 10);
+        assert_eq!(h[0], 1);
+        assert_eq!(h[1], 1);
+        assert_eq!(h[9], 2);
+        assert_eq!(h.iter().sum::<usize>(), 4);
+    }
+
+    #[test]
+    fn calibration_perfect_predictor() {
+        let v: Vec<f64> = (0..100).map(|i| i as f64 / 100.0).collect();
+        let c = calibration(&v, &v, 10);
+        for (p, t, _) in c {
+            assert!((p - t).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn pearson_extremes() {
+        let a = [1.0, 2.0, 3.0];
+        let b = [2.0, 4.0, 6.0];
+        assert!((pearson(&a, &b) - 1.0).abs() < 1e-9);
+        let c = [3.0, 2.0, 1.0];
+        assert!((pearson(&a, &c) + 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn budget_interpolation() {
+        let curve = [(1.0, 0.2), (2.0, 0.5), (4.0, 0.7)];
+        let b = budget_to_reach(&curve, 0.6).unwrap();
+        assert!((b - 3.0).abs() < 1e-9);
+        assert!(budget_to_reach(&curve, 0.9).is_none());
+        assert_eq!(budget_to_reach(&curve, 0.1).unwrap(), 1.0);
+    }
+}

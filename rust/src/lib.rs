@@ -1,0 +1,33 @@
+//! # thinkalloc
+//!
+//! Production-shaped reproduction of *“Learning How Hard to Think:
+//! Input-Adaptive Allocation of LM Computation”* (Damani et al., ICLR 2025)
+//! as a three-layer rust + JAX + Pallas serving framework.
+//!
+//! * **L3 (this crate)** — request router, dynamic batcher, budget-aware
+//!   scheduler, the paper's allocation engine, and a PJRT runtime that
+//!   executes AOT-compiled HLO artifacts. Python never runs at request time.
+//! * **L2** (`python/compile/model.py`) — TinyLM encoder/generator/reward
+//!   heads + difficulty probes, lowered once to HLO text.
+//! * **L1** (`python/compile/kernels/`) — Pallas kernels (fused attention,
+//!   probe MLP, rerank reduce, rmsnorm) with pure-jnp oracles.
+//!
+//! See DESIGN.md for the system inventory and experiment index.
+
+pub mod allocator;
+pub mod baselines;
+pub mod cli;
+pub mod config;
+pub mod experiments;
+pub mod jsonio;
+pub mod metrics;
+pub mod pool;
+pub mod prng;
+pub mod proputil;
+pub mod router;
+pub mod runtime;
+pub mod server;
+pub mod serving;
+pub mod simulator;
+pub mod tokenizer;
+pub mod workload;

@@ -1,0 +1,259 @@
+//! thinkalloc CLI — serve, run experiments, check artifacts.
+
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
+
+use anyhow::Result;
+use thinkalloc::cli::{Args, Cli, CommandSpec, FlagSpec};
+use thinkalloc::config::{Config, KernelMode};
+use thinkalloc::experiments;
+use thinkalloc::metrics::Registry;
+use thinkalloc::runtime::Engine;
+use thinkalloc::server::Server;
+
+fn cli() -> Cli {
+    let runtime_flags = vec![
+        FlagSpec { name: "artifacts", help: "artifacts directory", default: Some("artifacts") },
+        FlagSpec { name: "kernel-mode", help: "pallas|xla", default: Some("xla") },
+    ];
+    let mut exp_flags = runtime_flags.clone();
+    exp_flags.push(FlagSpec { name: "out", help: "results directory", default: Some("results") });
+    let mut serve_flags = runtime_flags.clone();
+    serve_flags.extend([
+        FlagSpec { name: "config", help: "TOML config file", default: Some("") },
+        FlagSpec { name: "addr", help: "listen address", default: Some("127.0.0.1:7071") },
+        FlagSpec { name: "policy", help: "online|offline|uniform", default: Some("online") },
+        FlagSpec { name: "budget", help: "average samples per query", default: Some("8") },
+        FlagSpec { name: "b-max", help: "per-query sample cap", default: Some("16") },
+    ]);
+    Cli {
+        binary: "thinkalloc",
+        about: "input-adaptive allocation of LM computation (ICLR'25) — serving framework",
+        commands: vec![
+            CommandSpec { name: "serve", help: "run the TCP serving front-end", flags: serve_flags },
+            CommandSpec {
+                name: "experiment",
+                help: "regenerate a paper table/figure (fig3-code fig3-math fig4 \
+                       fig5-size fig5-vas fig6 table1 ablation all)",
+                flags: exp_flags,
+            },
+            CommandSpec {
+                name: "check",
+                help: "verify loaded artifacts against python goldens",
+                flags: runtime_flags.clone(),
+            },
+            CommandSpec {
+                name: "info",
+                help: "print manifest + platform info",
+                flags: runtime_flags,
+            },
+            CommandSpec {
+                name: "gen-trace",
+                help: "generate a Poisson workload trace JSON",
+                flags: vec![
+                    FlagSpec { name: "n", help: "number of requests", default: Some("1000") },
+                    FlagSpec { name: "rate", help: "arrivals per second", default: Some("50") },
+                    FlagSpec { name: "mix", help: "code,math,chat weights", default: Some("0.5,0.3,0.2") },
+                    FlagSpec { name: "seed", help: "prng seed", default: Some("0") },
+                    FlagSpec { name: "out", help: "output path", default: Some("trace.json") },
+                ],
+            },
+        ],
+    }
+}
+
+fn engine_from(args: &Args) -> Result<Engine> {
+    let mut cfg = thinkalloc::config::RuntimeConfig {
+        artifacts_dir: PathBuf::from(args.str_flag("artifacts")?),
+        ..Default::default()
+    };
+    cfg.kernel_mode = match args.str_flag("kernel-mode")?.as_str() {
+        "pallas" => KernelMode::Pallas,
+        "xla" => KernelMode::Xla,
+        other => anyhow::bail!("bad --kernel-mode {other}"),
+    };
+    Engine::load_all(&cfg)
+}
+
+fn main() -> Result<()> {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let cli = cli();
+    let (cmd, args) = match cli.parse(&argv) {
+        Ok(x) => x,
+        Err(e) => {
+            eprintln!("{e}");
+            std::process::exit(2);
+        }
+    };
+    match cmd.as_str() {
+        "help" => {
+            println!("{}", cli.usage());
+            Ok(())
+        }
+        "serve" => cmd_serve(&args),
+        "experiment" => cmd_experiment(&args),
+        "check" => cmd_check(&args),
+        "info" => cmd_info(&args),
+        "gen-trace" => cmd_gen_trace(&args),
+        other => anyhow::bail!("unhandled command {other}"),
+    }
+}
+
+fn cmd_serve(args: &Args) -> Result<()> {
+    let mut cfg = {
+        let path = args.str_flag("config")?;
+        if path.is_empty() {
+            Config::default()
+        } else {
+            Config::from_file(Path::new(&path))?
+        }
+    };
+    cfg.runtime.artifacts_dir = PathBuf::from(args.str_flag("artifacts")?);
+    cfg.server.addr = args.str_flag("addr")?;
+    cfg.allocator.policy = args.str_flag("policy")?.parse()?;
+    cfg.allocator.budget_per_query = args.f64_flag("budget")?;
+    cfg.allocator.b_max = args.usize_flag("b-max")?;
+    cfg.validate()?;
+
+    let metrics = Arc::new(Registry::default());
+    println!(
+        "thinkalloc serving on {} (policy {:?}, B={})",
+        cfg.server.addr, cfg.allocator.policy, cfg.allocator.budget_per_query,
+    );
+    let server = Server::new(cfg, metrics);
+    server.run(|addr| println!("listening on {addr}"))
+}
+
+fn cmd_experiment(args: &Args) -> Result<()> {
+    let which = args
+        .positionals
+        .first()
+        .map(String::as_str)
+        .unwrap_or("all");
+    let out = PathBuf::from(args.str_flag("out")?);
+    let engine = engine_from(args)?;
+    run_experiments(&engine, which, &out)
+}
+
+pub fn run_experiments(engine: &Engine, which: &str, out: &Path) -> Result<()> {
+    let t0 = std::time::Instant::now();
+    let all = which == "all";
+    if all || which == "fig3-code" {
+        let r = experiments::fig3::run(engine, "code", out)?;
+        println!("fig3-code: corr={:.3}", r.pred_truth_corr);
+        print_curves("  B  uniform online offline oracle", &r.curves);
+    }
+    if all || which == "fig3-math" {
+        let r = experiments::fig3::run(engine, "math", out)?;
+        println!("fig3-math: corr={:.3}", r.pred_truth_corr);
+        print_curves("  B  uniform online offline oracle", &r.curves);
+    }
+    if all || which == "fig4" {
+        let r = experiments::fig4::run(engine, out)?;
+        println!("fig4 full:");
+        print_curves4("  B  uniform online oracle", &r.full);
+        println!("fig4 tranches:");
+        print_curves4("  B  uniform online oracle", &r.tranches);
+    }
+    if all || which == "fig5-size" {
+        let r = experiments::fig5::run(engine, false, out)?;
+        println!("fig5 model-size: corr={:.3}", r.pred_truth_corr);
+        print_curves4("  frac random adaptive oracle", &r.curves);
+    }
+    if all || which == "fig5-vas" {
+        let r = experiments::fig5::run(engine, true, out)?;
+        println!("fig5 VAS: corr={:.3}", r.pred_truth_corr);
+        print_curves4("  frac random adaptive oracle", &r.curves);
+    }
+    if all || which == "fig6" {
+        for domain in ["code", "math"] {
+            let r = experiments::fig6::run(engine, domain, out)?;
+            println!("fig6 {domain} (B, easy, medium, hard):");
+            print_curves4("  B  easy medium hard", &r.shares);
+        }
+    }
+    if all || which == "ablation" {
+        let r = experiments::ablation::run(out)?;
+        println!("ablation A1 (bins, success@B=16):");
+        for (n, v) in &r.bins {
+            println!("  {n:>4} bins  {v:.4}");
+        }
+        println!("ablation A2 (noise, uniform, online, offline):");
+        print_curves4("  noise uniform online offline", &r.noise);
+    }
+    if all || which == "table1" {
+        let rows = experiments::table1::run(engine, out)?;
+        println!("table1: setting ours avg opt acc");
+        for r in rows {
+            println!(
+                "  {:<12} {:.3} {:.3} {:.3} {:.0}%",
+                r.setting, r.ours, r.avg, r.opt, r.acc * 100.0
+            );
+        }
+    }
+    println!("experiments `{which}` done in {:.1}s → {}", t0.elapsed().as_secs_f64(), out.display());
+    Ok(())
+}
+
+fn print_curves(header: &str, rows: &[(f64, f64, f64, f64, f64)]) {
+    println!("{header}");
+    for &(b, u, on, off, or) in rows {
+        println!("  {b:>5.2} {u:.4} {on:.4} {off:.4} {or:.4}");
+    }
+}
+
+fn print_curves4(header: &str, rows: &[(f64, f64, f64, f64)]) {
+    println!("{header}");
+    for &(b, x, y, z) in rows {
+        println!("  {b:>5.2} {x:.4} {y:.4} {z:.4}");
+    }
+}
+
+fn cmd_gen_trace(args: &Args) -> Result<()> {
+    let n = args.usize_flag("n")?;
+    let rate = args.f64_flag("rate")?;
+    let seed = args.u64_flag("seed")?;
+    let mix = args.str_flag("mix")?;
+    let parts: Vec<f64> = mix
+        .split(',')
+        .map(|p| p.trim().parse::<f64>())
+        .collect::<Result<_, _>>()
+        .map_err(|e| anyhow::anyhow!("--mix: {e}"))?;
+    anyhow::ensure!(parts.len() == 3, "--mix needs three weights");
+    let trace = thinkalloc::workload::trace::Trace::poisson(
+        n, rate, (parts[0], parts[1], parts[2]), seed);
+    let out = PathBuf::from(args.str_flag("out")?);
+    trace.save(&out)?;
+    println!(
+        "wrote {} requests (offered {:.1} q/s) to {}",
+        n, trace.offered_rate(), out.display()
+    );
+    Ok(())
+}
+
+fn cmd_check(args: &Args) -> Result<()> {
+    let engine = engine_from(args)?;
+    let report = thinkalloc::runtime::goldens::check(&engine)?;
+    println!("{report}");
+    Ok(())
+}
+
+fn cmd_info(args: &Args) -> Result<()> {
+    let engine = engine_from(args)?;
+    println!("platform: {}", engine.platform());
+    println!("kernel mode: {:?}", engine.kernel_mode());
+    println!(
+        "batch: {} decode_batch: {} seq: {} vocab: {}",
+        engine.batch(),
+        engine.decode_batch(),
+        engine.max_seq(),
+        engine.vocab()
+    );
+    if let Some(arts) = engine.manifest.get("artifacts").and_then(|a| a.as_obj()) {
+        println!("artifacts ({}):", arts.len());
+        for (k, v) in arts {
+            println!("  {k} ({} chars)", v.as_f64().unwrap_or(0.0));
+        }
+    }
+    Ok(())
+}

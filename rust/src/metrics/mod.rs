@@ -1,0 +1,298 @@
+//! Metrics substrate: counters, gauges and log-bucketed latency histograms
+//! with percentile queries, collected in a registry the server exposes and
+//! the bench harness reads. Lock-free on the hot path (atomics only).
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+use std::time::Instant;
+
+/// Monotonic counter.
+#[derive(Default)]
+pub struct Counter {
+    v: AtomicU64,
+}
+
+impl Counter {
+    pub fn inc(&self) {
+        self.v.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn add(&self, n: u64) {
+        self.v.fetch_add(n, Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> u64 {
+        self.v.load(Ordering::Relaxed)
+    }
+}
+
+/// Last-write-wins gauge (bits of an f64).
+#[derive(Default)]
+pub struct Gauge {
+    v: AtomicU64,
+}
+
+impl Gauge {
+    pub fn set(&self, x: f64) {
+        self.v.store(x.to_bits(), Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> f64 {
+        f64::from_bits(self.v.load(Ordering::Relaxed))
+    }
+}
+
+/// Log-bucketed histogram for latencies in nanoseconds.
+///
+/// Buckets: 0 is [0,1) µs; bucket i covers [2^(i-1), 2^i) µs up to ~1.1 h.
+/// Percentile queries interpolate inside the winning bucket — accurate to
+/// ~±25% of the value, plenty for p50/p99 serving dashboards, with a fixed
+/// 64-slot footprint and atomic-increment recording cost.
+pub struct Histogram {
+    buckets: [AtomicU64; 64],
+    count: AtomicU64,
+    sum_ns: AtomicU64,
+    max_ns: AtomicU64,
+}
+
+impl Default for Histogram {
+    fn default() -> Self {
+        Self {
+            buckets: std::array::from_fn(|_| AtomicU64::new(0)),
+            count: AtomicU64::new(0),
+            sum_ns: AtomicU64::new(0),
+            max_ns: AtomicU64::new(0),
+        }
+    }
+}
+
+impl Histogram {
+    #[inline]
+    fn bucket_of(ns: u64) -> usize {
+        let us = ns / 1_000;
+        if us == 0 {
+            0
+        } else {
+            (64 - us.leading_zeros() as usize).min(63)
+        }
+    }
+
+    pub fn record_ns(&self, ns: u64) {
+        self.buckets[Self::bucket_of(ns)].fetch_add(1, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+        self.sum_ns.fetch_add(ns, Ordering::Relaxed);
+        self.max_ns.fetch_max(ns, Ordering::Relaxed);
+    }
+
+    pub fn record_since(&self, t0: Instant) {
+        self.record_ns(t0.elapsed().as_nanos() as u64);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count.load(Ordering::Relaxed)
+    }
+
+    pub fn mean_us(&self) -> f64 {
+        let c = self.count();
+        if c == 0 {
+            return 0.0;
+        }
+        self.sum_ns.load(Ordering::Relaxed) as f64 / c as f64 / 1_000.0
+    }
+
+    pub fn max_us(&self) -> f64 {
+        self.max_ns.load(Ordering::Relaxed) as f64 / 1_000.0
+    }
+
+    /// Approximate percentile in microseconds (q in [0,1]).
+    pub fn percentile_us(&self, q: f64) -> f64 {
+        let total = self.count();
+        if total == 0 {
+            return 0.0;
+        }
+        let target = ((total as f64) * q.clamp(0.0, 1.0)).ceil().max(1.0) as u64;
+        let mut seen = 0u64;
+        for (i, b) in self.buckets.iter().enumerate() {
+            let n = b.load(Ordering::Relaxed);
+            if n == 0 {
+                continue;
+            }
+            if seen + n >= target {
+                let lo = if i == 0 { 0.0 } else { (1u64 << (i - 1)) as f64 };
+                let hi = (1u64 << i) as f64;
+                let frac = (target - seen) as f64 / n as f64;
+                // clamp: bucket upper bound may exceed the true max
+                return (lo + (hi - lo) * frac).min(self.max_us());
+            }
+            seen += n;
+        }
+        self.max_us()
+    }
+
+    pub fn snapshot(&self) -> HistSnapshot {
+        HistSnapshot {
+            count: self.count(),
+            mean_us: self.mean_us(),
+            p50_us: self.percentile_us(0.50),
+            p90_us: self.percentile_us(0.90),
+            p99_us: self.percentile_us(0.99),
+            max_us: self.max_us(),
+        }
+    }
+}
+
+#[derive(Clone, Copy, Debug, Default)]
+pub struct HistSnapshot {
+    pub count: u64,
+    pub mean_us: f64,
+    pub p50_us: f64,
+    pub p90_us: f64,
+    pub p99_us: f64,
+    pub max_us: f64,
+}
+
+impl std::fmt::Display for HistSnapshot {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "n={} mean={:.1}µs p50={:.1}µs p90={:.1}µs p99={:.1}µs max={:.1}µs",
+            self.count, self.mean_us, self.p50_us, self.p90_us, self.p99_us, self.max_us
+        )
+    }
+}
+
+/// Named-metric registry; cheap to share behind an `Arc`.
+#[derive(Default)]
+pub struct Registry {
+    counters: Mutex<BTreeMap<String, std::sync::Arc<Counter>>>,
+    gauges: Mutex<BTreeMap<String, std::sync::Arc<Gauge>>>,
+    histograms: Mutex<BTreeMap<String, std::sync::Arc<Histogram>>>,
+}
+
+impl Registry {
+    pub fn counter(&self, name: &str) -> std::sync::Arc<Counter> {
+        self.counters
+            .lock()
+            .unwrap()
+            .entry(name.to_string())
+            .or_default()
+            .clone()
+    }
+
+    pub fn gauge(&self, name: &str) -> std::sync::Arc<Gauge> {
+        self.gauges
+            .lock()
+            .unwrap()
+            .entry(name.to_string())
+            .or_default()
+            .clone()
+    }
+
+    pub fn histogram(&self, name: &str) -> std::sync::Arc<Histogram> {
+        self.histograms
+            .lock()
+            .unwrap()
+            .entry(name.to_string())
+            .or_default()
+            .clone()
+    }
+
+    /// Render all metrics as a JSON object (for `/metrics`-style dumps).
+    pub fn to_json(&self) -> crate::jsonio::Json {
+        use crate::jsonio::Json;
+        let mut obj = std::collections::BTreeMap::new();
+        for (k, c) in self.counters.lock().unwrap().iter() {
+            obj.insert(format!("counter.{k}"), Json::Num(c.get() as f64));
+        }
+        for (k, g) in self.gauges.lock().unwrap().iter() {
+            obj.insert(format!("gauge.{k}"), Json::Num(g.get()));
+        }
+        for (k, h) in self.histograms.lock().unwrap().iter() {
+            let s = h.snapshot();
+            obj.insert(
+                format!("hist.{k}"),
+                Json::obj(vec![
+                    ("count", Json::Num(s.count as f64)),
+                    ("mean_us", Json::Num(s.mean_us)),
+                    ("p50_us", Json::Num(s.p50_us)),
+                    ("p90_us", Json::Num(s.p90_us)),
+                    ("p99_us", Json::Num(s.p99_us)),
+                    ("max_us", Json::Num(s.max_us)),
+                ]),
+            );
+        }
+        Json::Obj(obj)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counter_and_gauge() {
+        let r = Registry::default();
+        let c = r.counter("reqs");
+        c.inc();
+        c.add(4);
+        assert_eq!(r.counter("reqs").get(), 5);
+        r.gauge("load").set(0.75);
+        assert_eq!(r.gauge("load").get(), 0.75);
+    }
+
+    #[test]
+    fn histogram_percentiles_ordered() {
+        let h = Histogram::default();
+        for i in 1..=1000u64 {
+            h.record_ns(i * 10_000); // 10µs .. 10ms
+        }
+        let s = h.snapshot();
+        assert_eq!(s.count, 1000);
+        assert!(s.p50_us <= s.p90_us && s.p90_us <= s.p99_us);
+        assert!(s.p99_us <= s.max_us + 1.0);
+        // p50 of uniform 10µs..10ms should land within its 2× bucket
+        assert!(s.p50_us > 2_000.0 && s.p50_us < 9_000.0, "{s}");
+    }
+
+    #[test]
+    fn histogram_empty() {
+        let h = Histogram::default();
+        assert_eq!(h.percentile_us(0.5), 0.0);
+        assert_eq!(h.mean_us(), 0.0);
+    }
+
+    #[test]
+    fn bucket_bounds() {
+        assert_eq!(Histogram::bucket_of(500), 0); // <1µs
+        assert_eq!(Histogram::bucket_of(1_000), 1); // 1µs
+        assert_eq!(Histogram::bucket_of(3_000), 2); // [2,4)µs
+    }
+
+    #[test]
+    fn registry_json_dump() {
+        let r = Registry::default();
+        r.counter("a").inc();
+        r.histogram("lat").record_ns(5_000);
+        let j = r.to_json().to_string();
+        assert!(j.contains("counter.a") && j.contains("hist.lat"));
+    }
+
+    #[test]
+    fn concurrent_recording() {
+        let h = std::sync::Arc::new(Histogram::default());
+        let mut handles = vec![];
+        for t in 0..8 {
+            let h = h.clone();
+            handles.push(std::thread::spawn(move || {
+                for i in 0..10_000u64 {
+                    h.record_ns((t * 1000 + i) % 1_000_000);
+                }
+            }));
+        }
+        for j in handles {
+            j.join().unwrap();
+        }
+        assert_eq!(h.count(), 80_000);
+    }
+}

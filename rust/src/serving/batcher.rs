@@ -1,0 +1,154 @@
+//! Dynamic batcher: admission queue → allocation epochs.
+//!
+//! Requests accumulate in a FIFO; an epoch is cut when either
+//! `batch_queries` are waiting or the oldest has waited `max_wait_ms`
+//! (the classic size-or-deadline dynamic batching rule). The scheduler
+//! drains epochs; queue depth is exposed as a gauge for backpressure.
+
+use std::collections::VecDeque;
+use std::sync::{Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+use super::Request;
+
+pub struct Batcher {
+    queue: Mutex<BatchState>,
+    arrived: Condvar,
+    pub batch_queries: usize,
+    pub max_wait: Duration,
+}
+
+struct BatchState {
+    items: VecDeque<(Request, Instant)>,
+    closed: bool,
+}
+
+impl Batcher {
+    pub fn new(batch_queries: usize, max_wait: Duration) -> Self {
+        assert!(batch_queries >= 1);
+        Self {
+            queue: Mutex::new(BatchState { items: VecDeque::new(), closed: false }),
+            arrived: Condvar::new(),
+            batch_queries,
+            max_wait,
+        }
+    }
+
+    /// Admit a request (non-blocking).
+    pub fn submit(&self, req: Request) {
+        let mut q = self.queue.lock().unwrap();
+        q.items.push_back((req, Instant::now()));
+        drop(q);
+        self.arrived.notify_all();
+    }
+
+    /// No more requests will arrive; wakes any waiting epoch cut.
+    pub fn close(&self) {
+        self.queue.lock().unwrap().closed = true;
+        self.arrived.notify_all();
+    }
+
+    pub fn depth(&self) -> usize {
+        self.queue.lock().unwrap().items.len()
+    }
+
+    /// Block until an epoch is ready; None once closed and drained.
+    pub fn next_epoch(&self) -> Option<Vec<Request>> {
+        let mut q = self.queue.lock().unwrap();
+        loop {
+            let now = Instant::now();
+            let oldest_wait = q.items.front().map(|(_, t)| now.duration_since(*t));
+            let full = q.items.len() >= self.batch_queries;
+            let expired = oldest_wait.is_some_and(|w| w >= self.max_wait);
+            if full || (expired && !q.items.is_empty()) || (q.closed && !q.items.is_empty()) {
+                let take = q.items.len().min(self.batch_queries);
+                return Some(q.items.drain(..take).map(|(r, _)| r).collect());
+            }
+            if q.closed {
+                return None;
+            }
+            // sleep until the oldest deadline (or an arrival)
+            let timeout = oldest_wait
+                .map(|w| self.max_wait.saturating_sub(w))
+                .unwrap_or(self.max_wait);
+            let (guard, _) = self
+                .arrived
+                .wait_timeout(q, timeout.max(Duration::from_millis(1)))
+                .unwrap();
+            q = guard;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+
+    fn req(id: u64) -> Request {
+        Request { id, text: format!("q{id}"), domain: "code".into(), arrived_us: 0 }
+    }
+
+    #[test]
+    fn cuts_on_size() {
+        let b = Batcher::new(3, Duration::from_secs(10));
+        for i in 0..3 {
+            b.submit(req(i));
+        }
+        let epoch = b.next_epoch().unwrap();
+        assert_eq!(epoch.len(), 3);
+        assert_eq!(epoch[0].id, 0);
+    }
+
+    #[test]
+    fn cuts_on_deadline() {
+        let b = Batcher::new(100, Duration::from_millis(30));
+        b.submit(req(1));
+        let t0 = Instant::now();
+        let epoch = b.next_epoch().unwrap();
+        assert_eq!(epoch.len(), 1);
+        assert!(t0.elapsed() >= Duration::from_millis(25));
+    }
+
+    #[test]
+    fn close_drains_then_none() {
+        let b = Batcher::new(10, Duration::from_secs(10));
+        b.submit(req(1));
+        b.submit(req(2));
+        b.close();
+        assert_eq!(b.next_epoch().unwrap().len(), 2);
+        assert!(b.next_epoch().is_none());
+    }
+
+    #[test]
+    fn concurrent_producers() {
+        let b = Arc::new(Batcher::new(64, Duration::from_millis(100)));
+        let mut handles = vec![];
+        for t in 0..4 {
+            let b = b.clone();
+            handles.push(std::thread::spawn(move || {
+                for i in 0..16 {
+                    b.submit(req(t * 100 + i));
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        let epoch = b.next_epoch().unwrap();
+        assert_eq!(epoch.len(), 64);
+    }
+
+    #[test]
+    fn oversized_backlog_splits() {
+        let b = Batcher::new(4, Duration::from_secs(10));
+        for i in 0..10 {
+            b.submit(req(i));
+        }
+        b.close();
+        assert_eq!(b.next_epoch().unwrap().len(), 4);
+        assert_eq!(b.next_epoch().unwrap().len(), 4);
+        assert_eq!(b.next_epoch().unwrap().len(), 2);
+        assert!(b.next_epoch().is_none());
+    }
+}

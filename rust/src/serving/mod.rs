@@ -1,0 +1,35 @@
+//! Serving layer: request types, the batched generator, the dynamic batcher
+//! and the budget-aware scheduler that composes predictor → allocator →
+//! generator → verifier/reranker. This is the paper's method embedded in a
+//! vLLM-shaped pipeline; `server/` exposes it over TCP.
+
+pub mod batcher;
+pub mod generator;
+pub mod scheduler;
+
+/// A query admitted to the system.
+#[derive(Clone, Debug)]
+pub struct Request {
+    pub id: u64,
+    pub text: String,
+    /// "code" | "math" | "chat" — selects probe head + verification mode.
+    pub domain: String,
+    pub arrived_us: u64,
+}
+
+/// The served answer.
+#[derive(Clone, Debug)]
+pub struct Response {
+    pub id: u64,
+    /// The selected best response ("" with ok=false ⇒ "I don't know").
+    pub response: String,
+    /// Binary domains: did the selected response verify?
+    pub ok: bool,
+    /// Samples actually spent on this query.
+    pub budget: usize,
+    /// Predicted difficulty (λ̂ or Δ̂₁) that drove the allocation.
+    pub predicted: f64,
+    /// Chat: reward-model score of the selected response.
+    pub reward: f32,
+    pub latency_us: u64,
+}

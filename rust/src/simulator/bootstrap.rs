@@ -1,0 +1,106 @@
+//! Unbiased best-of-k estimator from m observed rewards (mirror of
+//! `python/compile/data.py::best_of_k_curve`).
+//!
+//! E[max of j draws without replacement] = Σᵢ C(i−1, j−1)/C(m, j) · r₍ᵢ₎
+//! over the ascending order statistics r₍ᵢ₎. For 0/1 rewards this reduces to
+//! the classic pass@k estimator; Δⱼ = E[max_j] − E[max_{j−1}] feeds the
+//! oracle allocator and the ground-truth curves in every figure driver.
+
+/// E[max of j samples] for j = 1..=k_max, from `rewards` (m ≥ k_max).
+pub fn best_of_k_curve(rewards: &[f32], k_max: usize) -> Vec<f64> {
+    let m = rewards.len();
+    assert!(k_max <= m, "k_max {k_max} > m {m}");
+    let mut r: Vec<f64> = rewards.iter().map(|&x| x as f64).collect();
+    r.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let mut out = Vec::with_capacity(k_max);
+    for j in 1..=k_max {
+        // C(m, j)
+        let mut denom = 1.0f64;
+        for t in 0..j {
+            denom *= (m - t) as f64 / (t + 1) as f64;
+        }
+        // w_i = C(i−1, j−1)/C(m, j), recurrence C(i, j−1) = C(i−1, j−1)·i/(i−j+1)
+        let mut c = 1.0f64;
+        let mut acc = 0.0f64;
+        for i in j..=m {
+            acc += (c / denom) * r[i - 1];
+            c *= i as f64 / (i - j + 1) as f64;
+        }
+        out.push(acc);
+    }
+    out
+}
+
+/// Δⱼ = E[max_j] − E[max_{j−1}] with E[max₀] = 0 (paper §3).
+pub fn marginal_rewards(rewards: &[f32], k_max: usize) -> Vec<f64> {
+    let q = best_of_k_curve(rewards, k_max);
+    let mut d = Vec::with_capacity(k_max);
+    let mut prev = 0.0;
+    for v in q {
+        d.push(v - prev);
+        prev = v;
+    }
+    d
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prng::Pcg64;
+    use crate::proputil::{close, prop_check, PropConfig};
+
+    #[test]
+    fn binary_matches_analytic() {
+        let mut rng = Pcg64::new(0);
+        let p = 0.3;
+        let rewards: Vec<f32> = (0..3000)
+            .map(|_| if rng.bernoulli(p) { 1.0 } else { 0.0 })
+            .collect();
+        let lam = rewards.iter().sum::<f32>() as f64 / rewards.len() as f64;
+        let q = best_of_k_curve(&rewards, 8);
+        for (j, &v) in q.iter().enumerate() {
+            let anal = 1.0 - (1.0 - lam).powi(j as i32 + 1);
+            assert!((v - anal).abs() < 5e-3, "j={} {v} vs {anal}", j + 1);
+        }
+    }
+
+    #[test]
+    fn k_equals_m_returns_max() {
+        let q = best_of_k_curve(&[1.0, 3.0, 2.0], 3);
+        assert!((q[2] - 3.0).abs() < 1e-12);
+        assert!((q[0] - 2.0).abs() < 1e-12); // mean
+    }
+
+    #[test]
+    fn prop_curve_monotone_and_bounded() {
+        prop_check("curve monotone", PropConfig { cases: 32, max_size: 48 },
+            |rng, size| {
+                let m = (size + 2).max(4);
+                let rewards: Vec<f32> = (0..m).map(|_| rng.f32() * 4.0 - 2.0).collect();
+                let q = best_of_k_curve(&rewards, m);
+                let max = rewards.iter().cloned().fold(f32::MIN, f32::max) as f64;
+                for w in q.windows(2) {
+                    if w[1] < w[0] - 1e-9 {
+                        return Err(format!("decreasing: {} -> {}", w[0], w[1]));
+                    }
+                }
+                close(q[m - 1], max, 1e-9, "E[max_m] = max")
+            });
+    }
+
+    #[test]
+    fn prop_matches_python_estimator_structure() {
+        // Δ₁ equals the mean; Σ Δ = E[max_k]
+        prop_check("delta identities", PropConfig { cases: 24, max_size: 32 },
+            |rng, size| {
+                let m = (size + 4).max(6);
+                let rewards: Vec<f32> = (0..m).map(|_| rng.f32()).collect();
+                // f32 inputs: the two summation orders differ at ~1e-7
+                let mean = rewards.iter().map(|&x| x as f64).sum::<f64>() / m as f64;
+                let d = marginal_rewards(&rewards, m);
+                close(d[0], mean, 1e-6, "Δ₁ = mean")?;
+                let q = best_of_k_curve(&rewards, m);
+                close(d.iter().sum::<f64>(), q[m - 1], 1e-9, "ΣΔ = E[max]")
+            });
+    }
+}

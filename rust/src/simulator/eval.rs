@@ -1,0 +1,139 @@
+//! Allocation/routing evaluators (paper eq. 9–10).
+
+use super::bootstrap::best_of_k_curve;
+use crate::workload::Query;
+
+/// Row-major n×k reward (or 0/1 outcome) matrix.
+#[derive(Clone, Debug)]
+pub struct RewardMatrix {
+    pub data: Vec<f32>,
+    pub n: usize,
+    pub k: usize,
+}
+
+impl RewardMatrix {
+    pub fn new(data: Vec<f32>, n: usize, k: usize) -> Self {
+        assert_eq!(data.len(), n * k);
+        Self { data, n, k }
+    }
+
+    pub fn row(&self, i: usize) -> &[f32] {
+        &self.data[i * self.k..(i + 1) * self.k]
+    }
+
+    /// Per-query E[max of j] curves up to k_max (bootstrapped, eq. 9/10).
+    pub fn curves(&self, k_max: usize) -> Vec<Vec<f64>> {
+        (0..self.n)
+            .map(|i| best_of_k_curve(self.row(i), k_max.min(self.k)))
+            .collect()
+    }
+}
+
+/// Expected success rate of a binary-domain allocation, computed
+/// analytically from ground-truth λ: mean over queries of 1 − (1−λ)^bᵢ.
+/// Queries with bᵢ = 0 contribute 0 (the "I don't know" default).
+pub fn eval_binary_allocation(qs: &[Query], budgets: &[usize]) -> f64 {
+    assert_eq!(qs.len(), budgets.len());
+    if qs.is_empty() {
+        return 0.0;
+    }
+    qs.iter()
+        .zip(budgets)
+        .map(|(q, &b)| crate::allocator::binary::q_success(q.lam, b))
+        .sum::<f64>()
+        / qs.len() as f64
+}
+
+/// Expected reward of an allocation under bootstrapped per-query curves
+/// (chat domain, eq. 10). `curves[i][b−1]` = E[max of b]; b = 0 scores the
+/// floor value `zero_reward` (chat never allocates 0 — asserted).
+pub fn eval_reward_allocation(curves: &[Vec<f64>], budgets: &[usize]) -> f64 {
+    assert_eq!(curves.len(), budgets.len());
+    if curves.is_empty() {
+        return 0.0;
+    }
+    budgets
+        .iter()
+        .zip(curves)
+        .map(|(&b, c)| {
+            assert!(b >= 1, "chat allocation must be ≥ 1 (paper §4.1)");
+            c[(b - 1).min(c.len() - 1)]
+        })
+        .sum::<f64>()
+        / curves.len() as f64
+}
+
+/// Expected reward of a routing mask: strong-decoder mean where routed,
+/// weak elsewhere (eq. 10 under the eq. 2 decoder).
+pub fn eval_routing_mask(
+    weak: &RewardMatrix,
+    strong: &RewardMatrix,
+    mask: &[bool],
+) -> f64 {
+    assert_eq!(weak.n, strong.n);
+    assert_eq!(mask.len(), weak.n);
+    if mask.is_empty() {
+        return 0.0;
+    }
+    let mean = |row: &[f32]| row.iter().map(|&x| x as f64).sum::<f64>() / row.len() as f64;
+    mask.iter()
+        .enumerate()
+        .map(|(i, &s)| mean(if s { strong.row(i) } else { weak.row(i) }))
+        .sum::<f64>()
+        / mask.len() as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::gen_dataset;
+
+    fn q_with_lam(lam: f64) -> Query {
+        Query {
+            text: String::new(),
+            answer: String::new(),
+            lam,
+            mu: 0.0,
+            sigma: 0.0,
+            gain: 0.0,
+            gain_vas: 0.0,
+            domain: "test",
+        }
+    }
+
+    #[test]
+    fn binary_eval_analytic() {
+        let qs = vec![q_with_lam(0.5), q_with_lam(0.0)];
+        let v = eval_binary_allocation(&qs, &[2, 5]);
+        assert!((v - 0.75 / 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn binary_eval_more_budget_never_hurts() {
+        let qs = gen_dataset("code", 100, 0);
+        let low = eval_binary_allocation(&qs, &vec![1; 100]);
+        let high = eval_binary_allocation(&qs, &vec![8; 100]);
+        assert!(high >= low);
+    }
+
+    #[test]
+    fn reward_eval_uses_curves() {
+        let curves = vec![vec![1.0, 1.5, 1.8], vec![0.5, 0.6, 0.65]];
+        let v = eval_reward_allocation(&curves, &[3, 1]);
+        assert!((v - (1.8 + 0.5) / 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    #[should_panic(expected = "must be ≥ 1")]
+    fn reward_eval_rejects_zero_budget() {
+        eval_reward_allocation(&[vec![1.0]], &[0]);
+    }
+
+    #[test]
+    fn routing_eval_blends_means() {
+        let weak = RewardMatrix::new(vec![0.0, 0.0, 1.0, 1.0], 2, 2);
+        let strong = RewardMatrix::new(vec![2.0, 2.0, 3.0, 3.0], 2, 2);
+        let v = eval_routing_mask(&weak, &strong, &[true, false]);
+        assert!((v - (2.0 + 1.0) / 2.0).abs() < 1e-12);
+    }
+}

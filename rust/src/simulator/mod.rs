@@ -1,0 +1,17 @@
+//! Evaluation simulator — the paper's §4 methodology in rust.
+//!
+//! The paper estimates expected success/reward under an allocation by
+//! sampling `B_max` generations per query once, then bootstrapping the
+//! best-of-b value for any b from that outcome matrix. `bootstrap` holds the
+//! unbiased order-statistic estimator (exact expectation over subsets, the
+//! same estimator as `python/compile/data.py`); `eval` applies it to
+//! allocations, masks (routing) and the analytic binary shortcut.
+
+pub mod bootstrap;
+pub mod eval;
+
+pub use bootstrap::{best_of_k_curve, marginal_rewards};
+pub use eval::{
+    eval_binary_allocation, eval_reward_allocation, eval_routing_mask,
+    RewardMatrix,
+};

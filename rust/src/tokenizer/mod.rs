@@ -1,0 +1,106 @@
+//! Byte-level tokenizer — exact mirror of `python/compile/tokenizer.py`.
+//!
+//! ids 0..=255 are raw bytes; 256=PAD, 257=BOS, 258=EOS. A query encodes as
+//! [BOS] + bytes + [EOS], right-padded with PAD to `max_seq`. The probe reads
+//! the hidden state at the EOS position (`last_index`). Integration tests
+//! validate this mirror against the python-exported goldens.json.
+
+pub const PAD_ID: i32 = 256;
+pub const BOS_ID: i32 = 257;
+pub const EOS_ID: i32 = 258;
+pub const VOCAB: usize = 259;
+pub const VOCAB_PADDED: usize = 320;
+pub const MAX_SEQ: usize = 64;
+
+/// Encode a query into a fixed-length id row.
+pub fn encode(text: &str, max_seq: usize) -> Vec<i32> {
+    let bytes = text.as_bytes();
+    let body = &bytes[..bytes.len().min(max_seq - 2)];
+    let mut ids = Vec::with_capacity(max_seq);
+    ids.push(BOS_ID);
+    ids.extend(body.iter().map(|&b| b as i32));
+    ids.push(EOS_ID);
+    ids.resize(max_seq, PAD_ID);
+    ids
+}
+
+/// Encode a batch into a flat row-major [n, max_seq] buffer.
+pub fn encode_batch(texts: &[&str], max_seq: usize) -> Vec<i32> {
+    let mut out = Vec::with_capacity(texts.len() * max_seq);
+    for t in texts {
+        out.extend(encode(t, max_seq));
+    }
+    out
+}
+
+/// Decode ids back to text (stops at EOS, skips specials).
+pub fn decode(ids: &[i32]) -> String {
+    let mut bytes = Vec::new();
+    for &i in ids {
+        if i == EOS_ID {
+            break;
+        }
+        if (0..256).contains(&i) {
+            bytes.push(i as u8);
+        }
+    }
+    String::from_utf8_lossy(&bytes).into_owned()
+}
+
+/// Index of the last non-PAD token (the EOS position).
+pub fn last_index(ids: &[i32]) -> i32 {
+    ids.iter().filter(|&&i| i != PAD_ID).count() as i32 - 1
+}
+
+/// Truncate-aware check: does `text` fit without body loss?
+pub fn fits(text: &str, max_seq: usize) -> bool {
+    text.len() <= max_seq - 2
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip() {
+        for s in ["", "ADD 1 2 3", "REV hello", "CHAT w00 w01", "x = y"] {
+            let ids = encode(s, MAX_SEQ);
+            assert_eq!(ids.len(), MAX_SEQ);
+            assert_eq!(ids[0], BOS_ID);
+            assert_eq!(decode(&ids), s);
+        }
+    }
+
+    #[test]
+    fn layout_matches_python_contract() {
+        let ids = encode("AB", MAX_SEQ);
+        assert_eq!(&ids[..4], &[BOS_ID, 65, 66, EOS_ID]);
+        assert!(ids[4..].iter().all(|&i| i == PAD_ID));
+        assert_eq!(last_index(&ids), 3);
+    }
+
+    #[test]
+    fn truncation() {
+        let long = "x".repeat(200);
+        let ids = encode(&long, MAX_SEQ);
+        assert_eq!(ids.len(), MAX_SEQ);
+        assert_eq!(ids[MAX_SEQ - 1], EOS_ID);
+        assert_eq!(decode(&ids).len(), MAX_SEQ - 2);
+        assert!(!fits(&long, MAX_SEQ));
+    }
+
+    #[test]
+    fn batch_is_row_major() {
+        let b = encode_batch(&["a", "bc"], 8);
+        assert_eq!(b.len(), 16);
+        assert_eq!(b[0], BOS_ID);
+        assert_eq!(b[8], BOS_ID);
+        assert_eq!(b[9], 98);
+    }
+
+    #[test]
+    fn last_index_of_empty() {
+        let ids = encode("", MAX_SEQ);
+        assert_eq!(last_index(&ids), 1); // BOS at 0, EOS at 1
+    }
+}

@@ -1,0 +1,389 @@
+//! Synthetic workload generator — the rust mirror of `python/compile/tasks.py`
+//! (see DESIGN.md §5 for why this substitution preserves the paper's
+//! evaluation behaviour). Formats, ground-truth functions and constants are
+//! kept in exact lockstep with the python side; `tests/integration.rs`
+//! cross-checks them against the exported goldens/datasets.
+//!
+//! Also home to the synthetic verifier (exact-match answers / Bernoulli(λ)
+//! outcomes) and the deterministic response-quality feature the reward head
+//! was trained on.
+
+pub mod trace;
+
+use crate::prng::Pcg64;
+
+/// One query with its ground-truth difficulty parameters.
+#[derive(Clone, Debug)]
+pub struct Query {
+    pub text: String,
+    pub answer: String,
+    /// Single-sample success probability λ(x) (binary domains).
+    pub lam: f64,
+    /// Chat reward distribution N(μ, σ).
+    pub mu: f64,
+    pub sigma: f64,
+    /// Strong-decoder mean advantage (model-size routing).
+    pub gain: f64,
+    /// Strong-procedure mean advantage (VAS routing).
+    pub gain_vas: f64,
+    pub domain: &'static str,
+}
+
+// --- ground-truth functions (mirror tasks.py exactly) -------------------------
+pub fn code_lambda(k: usize, big: usize) -> f64 {
+    if k > 8 {
+        return 0.0;
+    }
+    let lam = 0.92 * 0.58f64.powi(k as i32 - 1) * 0.92f64.powi(big as i32);
+    lam.clamp(0.0, 1.0)
+}
+
+pub fn math_lambda(length: usize, vowels: usize) -> f64 {
+    (1.02 - 0.042 * length as f64 - 0.02 * vowels as f64).clamp(0.0, 1.0)
+}
+
+pub fn chat_weight(i: usize) -> f64 {
+    (((7 * i) % 13) as f64 - 6.0) / 10.0
+}
+
+pub fn chat_volatile(i: usize) -> bool {
+    i % 5 == 0
+}
+
+pub fn route_gain_weight(i: usize) -> f64 {
+    (((11 * i) % 19) as f64 - 7.0) / 12.0
+}
+
+pub fn vas_gain_weight(i: usize) -> f64 {
+    (((5 * i) % 11) as f64 - 4.0) / 30.0
+}
+
+/// 64-char chat vocabulary (single-character words — tasks.CHAT_ALPHABET).
+pub const CHAT_ALPHABET: &str =
+    "ABCDEFGHIJKLMNOPQRSTUVWXYZabcdefghijklmnopqrstuvwxyz0123456789!?";
+
+/// (μ, σ, gain, gain_vas) for a chat word-index list — tasks.chat_params.
+/// All affine in the bag-of-words mean weight (see the python docstring).
+pub fn chat_params(word_idx: &[usize]) -> (f64, f64, f64, f64) {
+    let m = word_idx.len() as f64;
+    let mu = 1.0 + 1.8 * word_idx.iter().map(|&i| chat_weight(i)).sum::<f64>() / m;
+    let vol = word_idx.iter().filter(|&&i| chat_volatile(i)).count() as f64;
+    let sigma = 0.25 + 0.55 * vol / m;
+    let gain = 2.2 * word_idx.iter().map(|&i| route_gain_weight(i)).sum::<f64>() / m;
+    let gain_vas =
+        0.22 + 1.2 * word_idx.iter().map(|&i| vas_gain_weight(i)).sum::<f64>() / m;
+    (mu, sigma, gain, gain_vas)
+}
+
+/// Routing reward noise (σ_weak, σ_strong) per setting — tasks.py values.
+pub fn routing_sigmas(vas: bool) -> (f64, f64) {
+    if vas {
+        (0.3, 0.25)
+    } else {
+        (0.35, 0.30)
+    }
+}
+
+// --- generators -----------------------------------------------------------------
+pub fn gen_code(rng: &mut Pcg64) -> Query {
+    let k = rng.range_usize(1, 17);
+    let vals: Vec<u64> = (0..k).map(|_| rng.range_u64(0, 100)).collect();
+    let big = vals.iter().filter(|&&v| v >= 50).count();
+    let text = format!(
+        "ADD {}",
+        vals.iter().map(u64::to_string).collect::<Vec<_>>().join(" ")
+    );
+    let answer = (vals.iter().sum::<u64>() % 100).to_string();
+    Query {
+        text,
+        answer,
+        lam: code_lambda(k, big),
+        mu: 0.0,
+        sigma: 0.0,
+        gain: 0.0,
+        gain_vas: 0.0,
+        domain: "code",
+    }
+}
+
+pub fn gen_math(rng: &mut Pcg64) -> Query {
+    let length = rng.range_usize(1, 25);
+    let s: String = (0..length)
+        .map(|_| (b'a' + rng.range_u64(0, 26) as u8) as char)
+        .collect();
+    let vowels = s.chars().filter(|c| "aeiou".contains(*c)).count();
+    Query {
+        text: format!("REV {s}"),
+        answer: s.chars().rev().collect(),
+        lam: math_lambda(length, vowels),
+        mu: 0.0,
+        sigma: 0.0,
+        gain: 0.0,
+        gain_vas: 0.0,
+        domain: "math",
+    }
+}
+
+pub fn gen_chat(rng: &mut Pcg64) -> Query {
+    let m = rng.range_usize(2, 11);
+    let idx: Vec<usize> = (0..m).map(|_| rng.range_usize(0, 64)).collect();
+    let (mu, sigma, gain, gain_vas) = chat_params(&idx);
+    let alphabet: Vec<char> = CHAT_ALPHABET.chars().collect();
+    let text = format!(
+        "CHAT {}",
+        idx.iter()
+            .map(|&i| alphabet[i].to_string())
+            .collect::<Vec<_>>()
+            .join(" ")
+    );
+    Query {
+        text,
+        answer: String::new(),
+        lam: 0.0,
+        mu,
+        sigma,
+        gain,
+        gain_vas,
+        domain: "chat",
+    }
+}
+
+pub fn gen_dataset(domain: &str, n: usize, seed: u64) -> Vec<Query> {
+    let mut rng = Pcg64::new(seed);
+    (0..n)
+        .map(|_| match domain {
+            "code" => gen_code(&mut rng),
+            "math" => gen_math(&mut rng),
+            "chat" | "route" | "vas" => gen_chat(&mut rng),
+            other => panic!("unknown domain `{other}`"),
+        })
+        .collect()
+}
+
+/// Load a python-exported dataset JSON (`artifacts/datasets/*.json`), so the
+/// figure drivers evaluate on the *same* instances the probes saw at export.
+pub fn load_dataset(path: &std::path::Path) -> anyhow::Result<Vec<Query>> {
+    let json = crate::jsonio::read_file(path)?;
+    let rows = json
+        .as_arr()
+        .ok_or_else(|| anyhow::anyhow!("dataset root must be an array"))?;
+    rows.iter()
+        .map(|r| {
+            Ok(Query {
+                text: r.str_field("text")?.to_string(),
+                answer: r.str_field("answer").unwrap_or("").to_string(),
+                lam: r.f64_field("lam")?,
+                mu: r.f64_field("mu")?,
+                sigma: r.f64_field("sigma")?,
+                gain: r.f64_field("gain")?,
+                gain_vas: r.f64_field("gain_vas")?,
+                domain: "loaded",
+            })
+        })
+        .collect()
+}
+
+// --- outcome sampling (the synthetic verifier / reward model) --------------------
+/// n×k Bernoulli(λ) outcome matrix, row-major.
+pub fn sample_binary_outcomes(qs: &[Query], k: usize, seed: u64) -> Vec<f32> {
+    let mut rng = Pcg64::new(seed);
+    let mut out = Vec::with_capacity(qs.len() * k);
+    for q in qs {
+        for _ in 0..k {
+            out.push(if rng.bernoulli(q.lam) { 1.0 } else { 0.0 });
+        }
+    }
+    out
+}
+
+/// n×k chat reward matrix r ~ N(μ, σ) clipped to [-2, 4].
+pub fn sample_chat_rewards(qs: &[Query], k: usize, seed: u64) -> Vec<f32> {
+    let mut rng = Pcg64::new(seed);
+    let mut out = Vec::with_capacity(qs.len() * k);
+    for q in qs {
+        for _ in 0..k {
+            out.push(rng.normal_scaled(q.mu, q.sigma).clamp(-2.0, 4.0) as f32);
+        }
+    }
+    out
+}
+
+/// (weak n×k, strong n×k) reward matrices for a routing setting.
+pub fn sample_routing_rewards(
+    qs: &[Query],
+    k: usize,
+    seed: u64,
+    vas: bool,
+) -> (Vec<f32>, Vec<f32>) {
+    let mut rng = Pcg64::new(seed);
+    let (sw, ss) = routing_sigmas(vas);
+    let mut weak = Vec::with_capacity(qs.len() * k);
+    let mut strong = Vec::with_capacity(qs.len() * k);
+    for q in qs {
+        let g = if vas { q.gain_vas } else { q.gain };
+        for _ in 0..k {
+            weak.push(rng.normal_scaled(q.mu, sw).clamp(-2.0, 4.0) as f32);
+            strong.push(rng.normal_scaled(q.mu + g, ss).clamp(-2.0, 4.0) as f32);
+        }
+    }
+    (weak, strong)
+}
+
+/// Monte-Carlo p(S ≻ W | x) = E σ(r_S − r_W) per query (eq. 8/11).
+pub fn preference_prob(qs: &[Query], n_mc: usize, seed: u64, vas: bool) -> Vec<f64> {
+    let (weak, strong) = sample_routing_rewards(qs, n_mc, seed, vas);
+    qs.iter()
+        .enumerate()
+        .map(|(i, _)| {
+            let mut acc = 0.0;
+            for j in 0..n_mc {
+                let d = (strong[i * n_mc + j] - weak[i * n_mc + j]) as f64;
+                acc += 1.0 / (1.0 + (-d).exp());
+            }
+            acc / n_mc as f64
+        })
+        .collect()
+}
+
+// --- verifier + reward feature -----------------------------------------------------
+/// Exact-match verifier for code/math generations (trailing whitespace and
+/// anything after the first EOS-trimmed token sequence ignored).
+pub fn verify(q: &Query, response: &str) -> bool {
+    q.answer == response.trim()
+}
+
+/// Deterministic response quality — mirror of data.response_quality:
+/// mean chat-weight of the response's alphabet characters (bag-linear, so
+/// the learned reward head can approximate it).
+pub fn response_quality(resp: &str) -> f64 {
+    let idx: Vec<usize> = resp
+        .chars()
+        .filter_map(|c| CHAT_ALPHABET.find(c))
+        .collect();
+    if idx.is_empty() {
+        return -0.5;
+    }
+    idx.iter().map(|&i| chat_weight(i)).sum::<f64>() / idx.len() as f64
+}
+
+/// Ground-truth reward the reward head approximates — data.true_reward.
+pub fn true_reward(q: &Query, resp: &str) -> f64 {
+    q.mu + 0.8 * response_quality(resp)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::proputil::{prop_check, PropConfig};
+
+    #[test]
+    fn code_zero_mass_near_half() {
+        let qs = gen_dataset("code", 4000, 0);
+        let z = qs.iter().filter(|q| q.lam == 0.0).count() as f64 / 4000.0;
+        assert!((0.40..0.60).contains(&z), "{z}");
+    }
+
+    #[test]
+    fn math_flat_distribution() {
+        let qs = gen_dataset("math", 4000, 0);
+        let z = qs.iter().filter(|q| q.lam == 0.0).count() as f64 / 4000.0;
+        assert!(z < 0.12, "{z}");
+    }
+
+    #[test]
+    fn answers_verify() {
+        let mut rng = Pcg64::new(3);
+        for _ in 0..100 {
+            let q = gen_code(&mut rng);
+            let vals: Vec<u64> = q.text[4..]
+                .split(' ')
+                .map(|t| t.parse().unwrap())
+                .collect();
+            assert_eq!(q.answer, (vals.iter().sum::<u64>() % 100).to_string());
+            assert!(verify(&q, &q.answer));
+            assert!(!verify(&q, "nope"));
+            let m = gen_math(&mut rng);
+            assert_eq!(m.answer, m.text[4..].chars().rev().collect::<String>());
+        }
+    }
+
+    #[test]
+    fn lambda_formulas_match_python_constants() {
+        // spot values computed with python/compile/tasks.py
+        assert!((code_lambda(1, 0) - 0.92).abs() < 1e-12);
+        assert!((code_lambda(3, 2) - 0.92 * 0.58f64.powi(2) * 0.92f64.powi(2)).abs() < 1e-12);
+        assert_eq!(code_lambda(9, 0), 0.0);
+        assert!((math_lambda(10, 3) - (1.02 - 0.42 - 0.06)).abs() < 1e-12);
+        assert_eq!(math_lambda(24, 5), 0.0);
+    }
+
+    #[test]
+    fn chat_params_deterministic_and_bounded() {
+        let (mu, sg, g, gv) = chat_params(&[5, 10, 15]);
+        let (mu2, ..) = chat_params(&[5, 10, 15]);
+        assert_eq!(mu, mu2);
+        assert!((0.25..=0.80).contains(&sg));
+        assert!(mu.is_finite() && g.is_finite() && gv.is_finite());
+        // 5, 10, 15 are all volatile (i % 5 == 0) → σ saturates
+        assert!((sg - 0.80).abs() < 1e-12);
+        // mixed bag: one volatile of two
+        let (_, sg2, _, _) = chat_params(&[5, 7]);
+        assert!((sg2 - (0.25 + 0.55 * 0.5)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn outcome_rates_match_lambda() {
+        let qs = gen_dataset("code", 300, 1);
+        let k = 64;
+        let out = sample_binary_outcomes(&qs, k, 2);
+        for (i, q) in qs.iter().enumerate() {
+            let rate = out[i * k..(i + 1) * k].iter().sum::<f32>() as f64 / k as f64;
+            if q.lam == 0.0 {
+                assert_eq!(rate, 0.0);
+            } else {
+                assert!((rate - q.lam).abs() < 0.30, "λ={} rate={rate}", q.lam);
+            }
+        }
+    }
+
+    #[test]
+    fn preferences_spread_like_fig5() {
+        let qs = gen_dataset("chat", 2000, 0);
+        let p = preference_prob(&qs, 32, 1, false);
+        let lo = p.iter().cloned().fold(f64::INFINITY, f64::min);
+        let hi = p.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+        assert!(lo < 0.35 && hi > 0.75, "model-size prefs [{lo},{hi}]");
+        let pv = preference_prob(&qs, 32, 1, true);
+        let std = |v: &[f64]| {
+            let m = v.iter().sum::<f64>() / v.len() as f64;
+            (v.iter().map(|x| (x - m) * (x - m)).sum::<f64>() / v.len() as f64).sqrt()
+        };
+        assert!(std(&pv) < std(&p), "VAS should be lower-entropy");
+    }
+
+    #[test]
+    fn prop_generated_text_fits_tokenizer() {
+        prop_check("queries fit max_seq", PropConfig { cases: 24, max_size: 50 },
+            |rng, _| {
+                for _ in 0..20 {
+                    for q in [gen_code(rng), gen_math(rng), gen_chat(rng)] {
+                        if q.text.len() > crate::tokenizer::MAX_SEQ - 2 {
+                            return Err(format!("too long: {}", q.text));
+                        }
+                    }
+                }
+                Ok(())
+            });
+    }
+
+    #[test]
+    fn quality_matches_python_definition() {
+        assert_eq!(response_quality(""), -0.5);
+        assert_eq!(response_quality("   "), -0.5); // no alphabet chars
+        // "A" is alphabet index 0 → weight ((7·0)%13 − 6)/10 = −0.6
+        assert!((response_quality("A") - chat_weight(0)).abs() < 1e-12);
+        // mean over two characters
+        let want = (chat_weight(0) + chat_weight(26)) / 2.0; // 'A' and 'a'
+        assert!((response_quality("A a") - want).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,156 @@
+//! Workload traces: timed request sequences for load-testing the server.
+//!
+//! A trace is a list of (arrival offset µs, domain, query) rows with JSON
+//! round-trip, generated with Poisson arrivals (the standard open-loop
+//! serving-benchmark model) over the synthetic task universe. The
+//! `serve_trace` example and `bench_serving` replay traces; `thinkalloc
+//! gen-trace` writes one to disk.
+
+use std::path::Path;
+
+use anyhow::Result;
+
+use super::{gen_chat, gen_code, gen_math, Query};
+use crate::jsonio::Json;
+use crate::prng::Pcg64;
+
+#[derive(Clone, Debug)]
+pub struct TraceEntry {
+    /// Arrival time offset from trace start, microseconds.
+    pub at_us: u64,
+    pub domain: String,
+    pub text: String,
+    /// Ground-truth answer (empty for chat) — lets offline analysis score
+    /// responses without regenerating the workload.
+    pub answer: String,
+}
+
+#[derive(Clone, Debug, Default)]
+pub struct Trace {
+    pub entries: Vec<TraceEntry>,
+}
+
+impl Trace {
+    /// Poisson arrivals at `rate_per_s`, mixing domains by `weights`
+    /// (code, math, chat).
+    pub fn poisson(
+        n: usize,
+        rate_per_s: f64,
+        weights: (f64, f64, f64),
+        seed: u64,
+    ) -> Trace {
+        assert!(rate_per_s > 0.0);
+        let mut rng = Pcg64::new(seed);
+        let mut t_us = 0.0f64;
+        let w = [weights.0, weights.1, weights.2];
+        let entries = (0..n)
+            .map(|_| {
+                t_us += rng.exponential(rate_per_s) * 1e6;
+                let q: Query = match rng.categorical(&w) {
+                    0 => gen_code(&mut rng),
+                    1 => gen_math(&mut rng),
+                    _ => gen_chat(&mut rng),
+                };
+                TraceEntry {
+                    at_us: t_us as u64,
+                    domain: q.domain.to_string(),
+                    text: q.text,
+                    answer: q.answer,
+                }
+            })
+            .collect();
+        Trace { entries }
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::Arr(
+            self.entries
+                .iter()
+                .map(|e| {
+                    Json::obj(vec![
+                        ("at_us", Json::Num(e.at_us as f64)),
+                        ("domain", Json::Str(e.domain.clone())),
+                        ("text", Json::Str(e.text.clone())),
+                        ("answer", Json::Str(e.answer.clone())),
+                    ])
+                })
+                .collect(),
+        )
+    }
+
+    pub fn save(&self, path: &Path) -> Result<()> {
+        std::fs::write(path, self.to_json().to_string())?;
+        Ok(())
+    }
+
+    pub fn load(path: &Path) -> Result<Trace> {
+        let json = crate::jsonio::read_file(path)?;
+        let rows = json
+            .as_arr()
+            .ok_or_else(|| anyhow::anyhow!("trace root must be an array"))?;
+        let entries = rows
+            .iter()
+            .map(|r| {
+                Ok(TraceEntry {
+                    at_us: r.f64_field("at_us")? as u64,
+                    domain: r.str_field("domain")?.to_string(),
+                    text: r.str_field("text")?.to_string(),
+                    answer: r.str_field("answer").unwrap_or("").to_string(),
+                })
+            })
+            .collect::<Result<Vec<_>>>()?;
+        Ok(Trace { entries })
+    }
+
+    /// Mean offered load in queries/s.
+    pub fn offered_rate(&self) -> f64 {
+        match self.entries.last() {
+            Some(last) if last.at_us > 0 => {
+                self.entries.len() as f64 / (last.at_us as f64 / 1e6)
+            }
+            _ => 0.0,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn poisson_rate_roughly_matches() {
+        let t = Trace::poisson(2000, 100.0, (1.0, 0.0, 0.0), 1);
+        let rate = t.offered_rate();
+        assert!((rate - 100.0).abs() < 10.0, "offered {rate}");
+        // arrivals strictly ordered
+        for w in t.entries.windows(2) {
+            assert!(w[0].at_us <= w[1].at_us);
+        }
+    }
+
+    #[test]
+    fn domain_mix_follows_weights() {
+        let t = Trace::poisson(3000, 50.0, (0.5, 0.25, 0.25), 2);
+        let code = t.entries.iter().filter(|e| e.domain == "code").count() as f64;
+        assert!((code / 3000.0 - 0.5).abs() < 0.05);
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let t = Trace::poisson(50, 10.0, (0.4, 0.3, 0.3), 3);
+        let dir = std::env::temp_dir().join("thinkalloc_trace_test.json");
+        t.save(&dir).unwrap();
+        let t2 = Trace::load(&dir).unwrap();
+        assert_eq!(t.entries.len(), t2.entries.len());
+        assert_eq!(t.entries[7].text, t2.entries[7].text);
+        assert_eq!(t.entries[7].at_us, t2.entries[7].at_us);
+    }
+
+    #[test]
+    fn answers_preserved_for_binary_domains() {
+        let t = Trace::poisson(200, 10.0, (1.0, 0.0, 0.0), 4);
+        for e in &t.entries {
+            assert_eq!(e.answer, crate::serving::scheduler::compute_answer(&e.text));
+        }
+    }
+}

@@ -1,0 +1,152 @@
+//! Full-pipeline integration: scheduler epochs and the TCP server, end to
+//! end over real artifacts (skipped when artifacts are missing).
+
+use std::path::PathBuf;
+use std::sync::Arc;
+
+use thinkalloc::config::{AllocPolicy, Config};
+use thinkalloc::jsonio::Json;
+use thinkalloc::metrics::Registry;
+use thinkalloc::prng::Pcg64;
+use thinkalloc::runtime::Engine;
+use thinkalloc::server::{Client, Server};
+use thinkalloc::serving::scheduler::Scheduler;
+use thinkalloc::serving::Request;
+use thinkalloc::workload;
+
+fn artifacts_dir() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+fn have_artifacts() -> bool {
+    artifacts_dir().join("MANIFEST.json").exists()
+}
+
+fn config(policy: AllocPolicy, budget: f64) -> Config {
+    let mut cfg = Config::default();
+    cfg.runtime.artifacts_dir = artifacts_dir();
+    cfg.allocator.policy = policy;
+    cfg.allocator.budget_per_query = budget;
+    cfg.allocator.b_max = 8;
+    cfg
+}
+
+macro_rules! skip_without_artifacts {
+    () => {
+        if !have_artifacts() {
+            eprintln!("skipping: artifacts not built (run `make artifacts`)");
+            return;
+        }
+    };
+}
+
+fn reqs(domain: &str, n: usize, seed: u64) -> Vec<Request> {
+    workload::gen_dataset(domain, n, seed)
+        .into_iter()
+        .enumerate()
+        .map(|(i, q)| Request {
+            id: i as u64,
+            text: q.text,
+            domain: domain.to_string(),
+            arrived_us: 0,
+        })
+        .collect()
+}
+
+#[test]
+fn scheduler_epoch_code_online() {
+    skip_without_artifacts!();
+    let cfg = config(AllocPolicy::Online, 3.0);
+    let metrics = Arc::new(Registry::default());
+    let engine = Engine::load_all(&cfg.runtime).unwrap();
+    let scheduler = Scheduler::new(engine, cfg, metrics.clone());
+    let mut rng = Pcg64::new(1);
+    let batch = reqs("code", 32, 7);
+    let out = scheduler.serve_epoch(&batch, &mut rng).unwrap();
+    assert_eq!(out.len(), 32);
+    // budget conservation: Σb ≤ B·n
+    let used: usize = out.iter().map(|r| r.budget).sum();
+    assert!(used <= 96, "allocated {used} > 96");
+    // responses preserve ids
+    for (r, o) in batch.iter().zip(&out) {
+        assert_eq!(r.id, o.id);
+    }
+    // solved responses (if any — the build-time TinyLM's absolute solve
+    // rate is low) must carry the verified answer; unsolved ones are empty
+    for r in &out {
+        if r.ok {
+            assert!(!r.response.is_empty());
+        } else {
+            assert!(r.response.is_empty());
+        }
+    }
+    // allocation skipped at least the predicted-impossible queries and
+    // spent budget on the possible ones
+    assert!(out.iter().any(|r| r.budget == 0), "no query was skipped");
+    assert!(out.iter().any(|r| r.budget >= 4), "no query got extra budget");
+    assert!(metrics.counter("serving.queries").get() == 32);
+}
+
+#[test]
+fn scheduler_epoch_chat_reranks() {
+    skip_without_artifacts!();
+    let cfg = config(AllocPolicy::Online, 2.0);
+    let metrics = Arc::new(Registry::default());
+    let engine = Engine::load_all(&cfg.runtime).unwrap();
+    let scheduler = Scheduler::new(engine, cfg, metrics);
+    let mut rng = Pcg64::new(2);
+    let batch = reqs("chat", 16, 8);
+    let out = scheduler.serve_epoch(&batch, &mut rng).unwrap();
+    assert_eq!(out.len(), 16);
+    for r in &out {
+        assert!(r.budget >= 1, "chat must sample at least once");
+    }
+}
+
+#[test]
+fn scheduler_offline_policy_respects_budget_in_expectation() {
+    skip_without_artifacts!();
+    let cfg = config(AllocPolicy::Offline, 3.0);
+    let metrics = Arc::new(Registry::default());
+    let engine = Engine::load_all(&cfg.runtime).unwrap();
+    let scheduler = Scheduler::new(engine, cfg, metrics);
+    let mut rng = Pcg64::new(3);
+    let batch = reqs("code", 64, 9);
+    let out = scheduler.serve_epoch(&batch, &mut rng).unwrap();
+    let used: usize = out.iter().map(|r| r.budget).sum();
+    // offline guarantees the budget only in expectation; allow 40% slack
+    assert!(used as f64 <= 64.0 * 3.0 * 1.4, "offline used {used}");
+}
+
+#[test]
+fn server_roundtrip_over_tcp() {
+    skip_without_artifacts!();
+    let mut cfg = config(AllocPolicy::Online, 3.0);
+    cfg.server.addr = "127.0.0.1:0".into();
+    cfg.server.batch_queries = 8;
+    cfg.server.max_wait_ms = 20;
+    let server = Server::new(cfg, Arc::new(Registry::default()));
+    let (tx, rx) = std::sync::mpsc::channel();
+    let srv = server.clone();
+    let handle = std::thread::spawn(move || srv.run(|a| tx.send(a).unwrap()));
+    let addr = rx.recv().unwrap();
+
+    let mut client = Client::connect(&addr).unwrap();
+    let queries = ["ADD 1 2", "ADD 4 5", "REV ab", "ADD 10 20 30"];
+    for (i, q) in queries.iter().enumerate() {
+        client.request(i as u64, q, "code").unwrap();
+    }
+    let mut seen = std::collections::BTreeSet::new();
+    for _ in 0..queries.len() {
+        let resp = client.read_response().unwrap();
+        let id = resp.get("id").and_then(Json::as_f64).unwrap() as u64;
+        assert!(resp.get("budget").and_then(Json::as_f64).is_some());
+        seen.insert(id);
+    }
+    assert_eq!(seen.len(), queries.len());
+
+    let metrics = client.command("metrics").unwrap();
+    assert!(metrics.get("counter.serving.queries").is_some());
+    client.command("shutdown").unwrap();
+    let _ = handle.join();
+}
