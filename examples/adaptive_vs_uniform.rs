@@ -27,12 +27,7 @@ fn main() -> anyhow::Result<()> {
     let reqs: Vec<Request> = qs
         .iter()
         .enumerate()
-        .map(|(i, q)| Request {
-            id: i as u64,
-            text: q.text.clone(),
-            domain: "code".into(),
-            arrived_us: 0,
-        })
+        .map(|(i, q)| Request::new(i as u64, q.text.clone(), "code"))
         .collect();
 
     let mut results = Vec::new();

@@ -1,0 +1,94 @@
+//! Weak/strong routing in the live serving path (paper §3.3, DESIGN.md §6):
+//! a mixed-domain request stream is served twice — once with every query
+//! taking the full adaptive best-of-k decode, once with `WeakStrongRoute`
+//! sending only the predicted-preference top fraction through it and the
+//! rest through a single cheap sample — and the quality/compute trade is
+//! reported from the `serving.route.*` metrics.
+//!
+//!   cargo run --release --offline --example routed_serving -- [n] [strong_frac]
+
+use std::sync::Arc;
+
+use thinkalloc::config::{Config, ProcedureKind};
+use thinkalloc::metrics::Registry;
+use thinkalloc::prng::Pcg64;
+use thinkalloc::runtime::Engine;
+use thinkalloc::serving::scheduler::Scheduler;
+use thinkalloc::serving::Request;
+use thinkalloc::workload;
+
+fn main() -> anyhow::Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let n: usize = args.first().map(|s| s.parse()).transpose()?.unwrap_or(192);
+    let frac: f64 = args.get(1).map(|s| s.parse()).transpose()?.unwrap_or(0.4);
+
+    let reqs: Vec<Request> = workload::gen_mixed_dataset(&["code", "math", "chat"], n, 1717)
+        .into_iter()
+        .enumerate()
+        .map(|(i, q)| Request::new(i as u64, q.text, q.domain))
+        .collect();
+
+    let mut report = Vec::new();
+    for procedure in [ProcedureKind::AdaptiveBestOfK, ProcedureKind::WeakStrongRoute] {
+        let mut cfg = Config::default();
+        cfg.allocator.budget_per_query = 4.0;
+        cfg.allocator.b_max = 8;
+        cfg.route.procedure = procedure;
+        cfg.route.strong_fraction = frac;
+        cfg.validate()?;
+
+        let metrics = Arc::new(Registry::default());
+        let engine = Engine::load_all(&cfg.runtime)?;
+        let scheduler = Scheduler::new(engine, cfg, metrics.clone());
+        let mut rng = Pcg64::new(99); // same sampling noise for both runs
+
+        let t0 = std::time::Instant::now();
+        let mut solved = 0usize;
+        let mut reward_sum = 0.0f64;
+        let mut chat_n = 0usize;
+        for chunk in reqs.chunks(64) {
+            for r in scheduler.serve_epoch(chunk, &mut rng)? {
+                if reqs[r.id as usize].domain == "chat" {
+                    reward_sum += r.reward as f64;
+                    chat_n += 1;
+                } else if r.ok {
+                    solved += 1;
+                }
+            }
+        }
+        let wall = t0.elapsed().as_secs_f64();
+        let units = metrics.counter("serving.units_allocated").get();
+        println!("== {} ==", procedure.name());
+        println!("  solved (code/math): {solved}");
+        println!("  mean chat reward:   {:.4}", reward_sum / chat_n.max(1) as f64);
+        println!("  samples spent:      {units} ({:.2}/query)", units as f64 / n as f64);
+        println!("  wall time:          {wall:.1}s");
+        if procedure == ProcedureKind::WeakStrongRoute {
+            let strong = metrics.counter("serving.route.strong").get();
+            let weak = metrics.counter("serving.route.weak").get();
+            println!(
+                "  routed strong:      {strong}/{} (target {:.0}%, realized {:.1}%)",
+                strong + weak,
+                frac * 100.0,
+                metrics.gauge("serving.route.strong_fraction").get() * 100.0
+            );
+            println!(
+                "  arm latency p50:    strong {:.0}µs | weak {:.0}µs",
+                metrics.histogram("serving.route.strong_us").percentile_us(0.5),
+                metrics.histogram("serving.route.weak_us").percentile_us(0.5),
+            );
+        }
+        report.push((procedure, solved, units));
+    }
+
+    let (_, full_solved, full_units) = report[0];
+    let (_, routed_solved, routed_units) = report[1];
+    println!(
+        "\nrouting at {:.0}% strong: {routed_solved} solved with {routed_units} samples \
+         vs {full_solved} with {full_units} all-strong \
+         ({:.0}% of the compute)",
+        frac * 100.0,
+        100.0 * routed_units as f64 / full_units.max(1) as f64
+    );
+    Ok(())
+}

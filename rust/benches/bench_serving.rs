@@ -27,12 +27,7 @@ fn main() {
     let reqs: Vec<Request> = workload::gen_dataset("code", 32, 3)
         .into_iter()
         .enumerate()
-        .map(|(i, q)| Request {
-            id: i as u64,
-            text: q.text,
-            domain: "code".into(),
-            arrived_us: 0,
-        })
+        .map(|(i, q)| Request::new(i as u64, q.text, "code"))
         .collect();
 
     for policy in [AllocPolicy::Uniform, AllocPolicy::Online, AllocPolicy::Offline] {

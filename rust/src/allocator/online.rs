@@ -125,4 +125,87 @@ mod tests {
             }
         });
     }
+
+    #[test]
+    fn prop_total_never_exceeds_batch_budget() {
+        // Σbᵢ ≤ round(budget_per_query · n) for any predictions, any
+        // feasible (min_budget · n ≤ total) configuration.
+        prop_check("batch budget cap", PropConfig { cases: 48, max_size: 48 },
+            |rng, size| {
+                let n = size.max(1);
+                let b_max = 1 + rng.range_usize(1, 16);
+                let min_b = rng.range_usize(0, (b_max + 1).min(3));
+                let lambdas: Vec<f64> = (0..n)
+                    .map(|_| if rng.bernoulli(0.3) { 0.0 } else { rng.f64() })
+                    .collect();
+                // keep the floor feasible: avg budget ≥ min_budget
+                let avg = min_b as f64 + rng.f64() * 4.0;
+                let a = OnlineAllocator::new(b_max, min_b)
+                    .allocate(&Predictions::Lambdas(lambdas), avg);
+                let cap = (avg * n as f64).round() as usize;
+                if a.total_units != a.budgets.iter().sum::<usize>() {
+                    return Err("total_units disagrees with Σbudgets".into());
+                }
+                if a.total_units > cap {
+                    return Err(format!("allocated {} > cap {cap}", a.total_units));
+                }
+                Ok(())
+            });
+    }
+
+    #[test]
+    fn prop_budgets_within_bounds() {
+        // every per-query budget lands in [min_budget, b_max]
+        prop_check("budget bounds", PropConfig { cases: 48, max_size: 48 },
+            |rng, size| {
+                let n = size.max(1);
+                let b_max = 1 + rng.range_usize(1, 16);
+                let min_b = rng.range_usize(0, b_max + 1);
+                let lambdas: Vec<f64> = (0..n).map(|_| rng.f64()).collect();
+                let avg = min_b as f64 + rng.f64() * 4.0;
+                let a = OnlineAllocator::new(b_max, min_b)
+                    .allocate(&Predictions::Lambdas(lambdas), avg);
+                for (i, &b) in a.budgets.iter().enumerate() {
+                    if b < min_b || b > b_max {
+                        return Err(format!(
+                            "budget {b} for query {i} outside [{min_b}, {b_max}]"
+                        ));
+                    }
+                }
+                Ok(())
+            });
+    }
+
+    #[test]
+    fn prop_allocation_monotone_in_total_budget() {
+        // growing the batch budget never shrinks any query's allocation:
+        // the greedy pop sequence for total u is a prefix of that for u' > u
+        prop_check("allocation monotone", PropConfig { cases: 48, max_size: 32 },
+            |rng, size| {
+                let n = size.max(1);
+                let b_max = 1 + rng.range_usize(1, 12);
+                let min_b = rng.range_usize(0, (b_max + 1).min(2));
+                let lambdas: Vec<f64> = (0..n)
+                    .map(|_| if rng.bernoulli(0.2) { 0.0 } else { rng.f64() })
+                    .collect();
+                let alloc = OnlineAllocator::new(b_max, min_b);
+                let preds = Predictions::Lambdas(lambdas);
+                let u1 = rng.range_usize(0, n * b_max + 1);
+                let u2 = u1 + rng.range_usize(0, n * b_max + 1);
+                let a1 = alloc.allocate_units(&preds, u1);
+                let a2 = alloc.allocate_units(&preds, u2);
+                for i in 0..n {
+                    if a2.budgets[i] < a1.budgets[i] {
+                        return Err(format!(
+                            "query {i} shrank from {} to {} as total {u1} → {u2}",
+                            a1.budgets[i], a2.budgets[i]
+                        ));
+                    }
+                }
+                if a2.total_units < a1.total_units {
+                    return Err("total allocation shrank".into());
+                }
+                Ok(())
+            });
+    }
 }

@@ -209,6 +209,38 @@ impl std::str::FromStr for AllocPolicy {
     }
 }
 
+/// Which decode procedure serves an epoch (paper §3.2 vs §3.3).
+///
+/// `AdaptiveBestOfK` is the budget-allocation procedure (eq. 5);
+/// `WeakStrongRoute` is weak/strong routing (eq. 8): strong queries get the
+/// full best-of-k + rerank decode, weak queries a single cheap sample.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub enum ProcedureKind {
+    AdaptiveBestOfK,
+    WeakStrongRoute,
+}
+
+impl ProcedureKind {
+    /// Stable wire/metrics name.
+    pub fn name(self) -> &'static str {
+        match self {
+            ProcedureKind::AdaptiveBestOfK => "adaptive",
+            ProcedureKind::WeakStrongRoute => "route",
+        }
+    }
+}
+
+impl std::str::FromStr for ProcedureKind {
+    type Err = anyhow::Error;
+    fn from_str(s: &str) -> anyhow::Result<Self> {
+        Ok(match s {
+            "adaptive" | "best-of-k" => ProcedureKind::AdaptiveBestOfK,
+            "route" | "weak-strong" => ProcedureKind::WeakStrongRoute,
+            other => anyhow::bail!("unknown decode procedure `{other}`"),
+        })
+    }
+}
+
 #[derive(Clone, Debug)]
 pub struct RuntimeConfig {
     /// Directory holding `*.hlo.txt` AOT artifacts + MANIFEST.json.
@@ -260,6 +292,41 @@ impl Default for AllocatorConfig {
     }
 }
 
+/// Weak/strong routing policy (paper §3.3 / §4.2) for the serving path.
+///
+/// The router is calibrated lazily per domain: a held-out workload of
+/// `heldout_n` queries is generated with `heldout_seed`, the strong-preference
+/// probe scores it, and a [`crate::router::ThresholdRouter`] threshold is set
+/// at the (1−`strong_fraction`) quantile so the realized strong fraction
+/// matches the target in distribution.
+#[derive(Clone, Debug)]
+pub struct RouteConfig {
+    /// Default procedure for requests that don't specify one.
+    pub procedure: ProcedureKind,
+    /// Target fraction of queries routed to the strong (best-of-k) decode.
+    pub strong_fraction: f64,
+    /// Samples spent on a weak-routed query (the cheap arm).
+    pub weak_budget: usize,
+    /// Held-out calibration workload size per domain.
+    pub heldout_n: usize,
+    pub heldout_seed: u64,
+    /// Chat domain: use the VAS preference probe instead of the model-size one.
+    pub use_vas_probe: bool,
+}
+
+impl Default for RouteConfig {
+    fn default() -> Self {
+        Self {
+            procedure: ProcedureKind::AdaptiveBestOfK,
+            strong_fraction: 0.5,
+            weak_budget: 1,
+            heldout_n: 256,
+            heldout_seed: 0xCA11B,
+            use_vas_probe: false,
+        }
+    }
+}
+
 #[derive(Clone, Debug)]
 pub struct ServerConfig {
     pub addr: String,
@@ -306,6 +373,7 @@ pub struct Config {
     pub allocator: AllocatorConfig,
     pub server: ServerConfig,
     pub workload: WorkloadConfig,
+    pub route: RouteConfig,
 }
 
 impl Config {
@@ -375,6 +443,17 @@ impl Config {
             "workload.n_queries" => self.workload.n_queries = usize_of!(),
             "workload.seed" => self.workload.seed = f64_of!() as u64,
             "workload.samples_per_query" => self.workload.samples_per_query = usize_of!(),
+            "route.procedure" => self.route.procedure = str_of!().parse()?,
+            "route.strong_fraction" => self.route.strong_fraction = f64_of!(),
+            "route.weak_budget" => self.route.weak_budget = usize_of!(),
+            "route.heldout_n" => self.route.heldout_n = usize_of!(),
+            "route.heldout_seed" => self.route.heldout_seed = f64_of!() as u64,
+            "route.use_vas_probe" => {
+                self.route.use_vas_probe = match val {
+                    TomlValue::Bool(b) => *b,
+                    _ => return Err(invalid()),
+                }
+            }
             _ => return Ok(false),
         }
         Ok(true)
@@ -393,6 +472,13 @@ impl Config {
         anyhow::ensure!(self.server.workers >= 1, "need at least one worker");
         anyhow::ensure!(self.runtime.batch >= 1 && self.runtime.decode_batch >= 1,
             "batch sizes must be ≥ 1");
+        anyhow::ensure!(
+            (0.0..=1.0).contains(&self.route.strong_fraction),
+            "route.strong_fraction must be in [0, 1]"
+        );
+        anyhow::ensure!(self.route.weak_budget >= 1, "route.weak_budget must be ≥ 1");
+        anyhow::ensure!(self.route.heldout_n >= 2,
+            "route.heldout_n must be ≥ 2 for quantile calibration");
         Ok(())
     }
 }
@@ -456,6 +542,42 @@ mod tests {
         )
         .unwrap_err();
         assert!(err.to_string().contains("positive"));
+    }
+
+    #[test]
+    fn route_section_roundtrip() {
+        let cfg = Config::from_toml_str(
+            "[route]\nprocedure = \"route\"\nstrong_fraction = 0.3\n\
+             weak_budget = 2\nheldout_n = 128\nheldout_seed = 9\n\
+             use_vas_probe = true\n",
+        )
+        .unwrap();
+        assert_eq!(cfg.route.procedure, ProcedureKind::WeakStrongRoute);
+        assert!((cfg.route.strong_fraction - 0.3).abs() < 1e-12);
+        assert_eq!(cfg.route.weak_budget, 2);
+        assert_eq!(cfg.route.heldout_n, 128);
+        assert_eq!(cfg.route.heldout_seed, 9);
+        assert!(cfg.route.use_vas_probe);
+    }
+
+    #[test]
+    fn procedure_kind_parses_and_names() {
+        assert_eq!("adaptive".parse::<ProcedureKind>().unwrap(),
+            ProcedureKind::AdaptiveBestOfK);
+        assert_eq!("weak-strong".parse::<ProcedureKind>().unwrap(),
+            ProcedureKind::WeakStrongRoute);
+        assert!("nope".parse::<ProcedureKind>().is_err());
+        assert_eq!(ProcedureKind::WeakStrongRoute.name(), "route");
+    }
+
+    #[test]
+    fn validation_rejects_bad_route_config() {
+        let err = Config::from_toml_str("[route]\nstrong_fraction = 1.5\n").unwrap_err();
+        assert!(err.to_string().contains("strong_fraction"));
+        let err = Config::from_toml_str("[route]\nweak_budget = 0\n").unwrap_err();
+        assert!(err.to_string().contains("weak_budget"));
+        let err = Config::from_toml_str("[route]\nheldout_n = 1\n").unwrap_err();
+        assert!(err.to_string().contains("heldout_n"));
     }
 
     #[test]

@@ -5,8 +5,11 @@
 //! as a three-layer rust + JAX + Pallas serving framework.
 //!
 //! * **L3 (this crate)** — request router, dynamic batcher, budget-aware
-//!   scheduler, the paper's allocation engine, and a PJRT runtime that
-//!   executes AOT-compiled HLO artifacts. Python never runs at request time.
+//!   scheduler dispatching per-request decode procedures (adaptive
+//!   best-of-k §3.2 and weak/strong routing §3.3 — see
+//!   [`serving::procedure`]), the paper's allocation engine, and a PJRT
+//!   runtime that executes AOT-compiled HLO artifacts. Python never runs at
+//!   request time.
 //! * **L2** (`python/compile/model.py`) — TinyLM encoder/generator/reward
 //!   heads + difficulty probes, lowered once to HLO text.
 //! * **L1** (`python/compile/kernels/`) — Pallas kernels (fused attention,

@@ -25,6 +25,16 @@ fn cli() -> Cli {
         FlagSpec { name: "policy", help: "online|offline|uniform", default: Some("online") },
         FlagSpec { name: "budget", help: "average samples per query", default: Some("8") },
         FlagSpec { name: "b-max", help: "per-query sample cap", default: Some("16") },
+        FlagSpec {
+            name: "procedure",
+            help: "default decode procedure: adaptive|route",
+            default: Some("adaptive"),
+        },
+        FlagSpec {
+            name: "strong-fraction",
+            help: "routing: target fraction of strong decodes",
+            default: Some("0.5"),
+        },
     ]);
     Cli {
         binary: "thinkalloc",
@@ -113,12 +123,17 @@ fn cmd_serve(args: &Args) -> Result<()> {
     cfg.allocator.policy = args.str_flag("policy")?.parse()?;
     cfg.allocator.budget_per_query = args.f64_flag("budget")?;
     cfg.allocator.b_max = args.usize_flag("b-max")?;
+    cfg.route.procedure = args.str_flag("procedure")?.parse()?;
+    cfg.route.strong_fraction = args.f64_flag("strong-fraction")?;
     cfg.validate()?;
 
     let metrics = Arc::new(Registry::default());
     println!(
-        "thinkalloc serving on {} (policy {:?}, B={})",
-        cfg.server.addr, cfg.allocator.policy, cfg.allocator.budget_per_query,
+        "thinkalloc serving on {} (policy {:?}, B={}, procedure {})",
+        cfg.server.addr,
+        cfg.allocator.policy,
+        cfg.allocator.budget_per_query,
+        cfg.route.procedure.name(),
     );
     let server = Server::new(cfg, metrics);
     server.run(|addr| println!("listening on {addr}"))

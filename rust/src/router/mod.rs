@@ -39,13 +39,28 @@ pub fn routing_cost(mask: &[bool], weak_cost: f64) -> f64 {
 
 /// Deployment router: threshold fitted on held-out predictions so that the
 /// expected strong fraction matches a target.
+///
+/// Boundary behaviour (pinned by tests):
+/// * routing is *strict* — `use_strong` requires `pref > threshold`, so a
+///   query tied exactly at the threshold goes weak (never pay for the strong
+///   decoder on a tie);
+/// * `fit(_, 0.0)` sets the threshold at the held-out maximum ⇒ nothing at
+///   or below the observed range routes strong;
+/// * `fit(_, 1.0)` sets it at the held-out minimum ⇒ everything strictly
+///   above the observed minimum routes strong (the minimum itself stays
+///   weak, by strictness);
+/// * a single-element held-out set makes that element the threshold;
+/// * all-equal held-out predictions collapse every quantile to that value,
+///   so every tied query routes weak regardless of the target fraction —
+///   a degenerate predictor fails toward the cheap arm.
 #[derive(Clone, Debug)]
 pub struct ThresholdRouter {
     pub threshold: f64,
 }
 
 impl ThresholdRouter {
-    /// Calibrate: pick the (1−fraction)-quantile of held-out predictions.
+    /// Calibrate: pick the (1−fraction)-quantile of held-out predictions
+    /// (linear interpolation between order statistics).
     pub fn fit(heldout_prefs: &[f64], fraction: f64) -> Self {
         assert!(!heldout_prefs.is_empty());
         let mut sorted = heldout_prefs.to_vec();
@@ -105,6 +120,49 @@ mod tests {
         let deploy: Vec<f64> = (0..5000).map(|_| rng.f64()).collect();
         let frac = router.route(&deploy).iter().filter(|&&s| s).count() as f64 / 5000.0;
         assert!((frac - 0.25).abs() < 0.03, "{frac}");
+    }
+
+    #[test]
+    fn threshold_fit_single_element_heldout() {
+        let router = ThresholdRouter::fit(&[0.42], 0.5);
+        assert_eq!(router.threshold, 0.42);
+        // strictness: the calibration point itself routes weak…
+        assert!(!router.use_strong(0.42));
+        // …and anything above it routes strong
+        assert!(router.use_strong(0.43));
+        // the fraction is irrelevant with one point: every quantile is it
+        assert_eq!(ThresholdRouter::fit(&[0.42], 0.0).threshold, 0.42);
+        assert_eq!(ThresholdRouter::fit(&[0.42], 1.0).threshold, 0.42);
+    }
+
+    #[test]
+    fn threshold_all_equal_predictions_route_weak() {
+        let heldout = [0.7; 64];
+        for frac in [0.0, 0.25, 0.5, 1.0] {
+            let router = ThresholdRouter::fit(&heldout, frac);
+            assert_eq!(router.threshold, 0.7, "frac {frac}");
+            // ties at the threshold go weak: a degenerate (constant)
+            // predictor fails toward the cheap arm at every target fraction
+            assert_eq!(router.route(&heldout), vec![false; 64], "frac {frac}");
+        }
+    }
+
+    #[test]
+    fn threshold_fit_fraction_extremes() {
+        let heldout: Vec<f64> = (0..100).map(|i| i as f64 / 100.0).collect();
+        // fraction 0.0 ⇒ threshold at the held-out max ⇒ nothing in range
+        // routes strong
+        let none = ThresholdRouter::fit(&heldout, 0.0);
+        assert_eq!(none.threshold, 0.99);
+        assert!(none.route(&heldout).iter().all(|&s| !s));
+        assert!(none.use_strong(1.5)); // out-of-range still can exceed it
+        // fraction 1.0 ⇒ threshold at the held-out min ⇒ everything strictly
+        // above the min routes strong; the min itself stays weak (strict >)
+        let all = ThresholdRouter::fit(&heldout, 1.0);
+        assert_eq!(all.threshold, 0.0);
+        let mask = all.route(&heldout);
+        assert!(!mask[0]);
+        assert!(mask[1..].iter().all(|&s| s));
     }
 
     #[test]

@@ -3,14 +3,17 @@
 //! language).
 //!
 //! Protocol: one JSON object per line.
-//!   → {"id": 1, "text": "ADD 1 2", "domain": "code"}
+//!   → {"id": 1, "text": "ADD 1 2", "domain": "code",
+//!      "procedure": "adaptive"|"route" (optional)}
 //!   ← {"id": 1, "response": "3", "ok": true, "budget": 4,
-//!      "predicted": 0.91, "reward": 1.0, "latency_us": 1234}
+//!      "predicted": 0.91, "reward": 1.0, "latency_us": 1234,
+//!      "procedure": "adaptive"}
 //! Special requests: {"cmd": "metrics"} → metrics dump; {"cmd": "shutdown"}.
 //!
 //! One acceptor thread per listener; each connection gets a reader thread
 //! that feeds the shared [`Batcher`]; a single scheduler thread drains
-//! epochs (per-domain) and routes responses back over the originating
+//! mixed-domain epochs (the scheduler partitions them into per-domain,
+//! per-procedure sub-epochs) and routes responses back over the originating
 //! connection's write half.
 
 use std::collections::BTreeMap;
@@ -22,7 +25,7 @@ use std::time::Duration;
 
 use anyhow::Result;
 
-use crate::config::Config;
+use crate::config::{Config, ProcedureKind};
 use crate::jsonio::{self, Json};
 use crate::metrics::Registry;
 use crate::prng::Pcg64;
@@ -95,37 +98,36 @@ impl Server {
                         return;
                     }
                 };
+                let default_procedure = cfg.route.procedure;
                 let scheduler = Scheduler::new(engine, cfg, metrics);
                 let mut rng = Pcg64::new(0x5E7E);
                 while let Some(epoch) = this.batcher.next_epoch() {
-                    // split per domain (epochs must be domain-homogeneous)
-                    let mut by_domain: BTreeMap<String, Vec<Request>> = BTreeMap::new();
-                    for r in epoch {
-                        by_domain.entry(r.domain.clone()).or_default().push(r);
-                    }
-                    for (_, reqs) in by_domain {
-                        match scheduler.serve_epoch(&reqs, &mut rng) {
-                            Ok(responses) => {
-                                for resp in responses {
-                                    this.send_response(&routing, resp);
-                                }
+                    // mixed-domain epoch: the scheduler partitions it into
+                    // per-(domain, procedure) sub-epochs itself
+                    match scheduler.serve_epoch(&epoch, &mut rng) {
+                        Ok(responses) => {
+                            for resp in responses {
+                                this.send_response(&routing, resp);
                             }
-                            Err(e) => {
-                                eprintln!("epoch failed: {e:#}");
-                                for r in &reqs {
-                                    this.send_response(
-                                        &routing,
-                                        Response {
-                                            id: r.id,
-                                            response: format!("error: {e}"),
-                                            ok: false,
-                                            budget: 0,
-                                            predicted: 0.0,
-                                            reward: 0.0,
-                                            latency_us: 0,
-                                        },
-                                    );
-                                }
+                        }
+                        Err(e) => {
+                            eprintln!("epoch failed: {e:#}");
+                            for r in &epoch {
+                                this.send_response(
+                                    &routing,
+                                    Response {
+                                        id: r.id,
+                                        response: format!("error: {e}"),
+                                        ok: false,
+                                        budget: 0,
+                                        predicted: 0.0,
+                                        reward: 0.0,
+                                        latency_us: 0,
+                                        procedure: r
+                                            .procedure
+                                            .unwrap_or(default_procedure),
+                                    },
+                                );
                             }
                         }
                     }
@@ -176,6 +178,22 @@ impl Server {
                             .and_then(Json::as_f64)
                             .map(|x| x as u64)
                             .unwrap_or(id);
+                        let procedure = match v.get("procedure").and_then(Json::as_str) {
+                            None => None,
+                            Some(s) => match s.parse::<ProcedureKind>() {
+                                Ok(k) => Some(k),
+                                Err(e) => {
+                                    // carry the id so pipelining clients that
+                                    // match responses by id aren't left hanging
+                                    let j = Json::obj(vec![
+                                        ("id", Json::Num(client_id as f64)),
+                                        ("error", Json::Str(e.to_string())),
+                                    ]);
+                                    this.write_line(conn, &j.to_string());
+                                    continue;
+                                }
+                            },
+                        };
                         routing.map.lock().unwrap().insert(client_id, conn);
                         this.batcher.submit(Request {
                             id: client_id,
@@ -190,10 +208,11 @@ impl Server {
                                 .unwrap_or("code")
                                 .to_string(),
                             arrived_us: 0,
+                            procedure,
                         });
                     }
                     Err(e) => {
-                        this.write_line(conn, &format!("{{\"error\":\"{e}\"}}"));
+                        this.write_error(conn, &e.to_string());
                     }
                 }
             }
@@ -213,7 +232,7 @@ impl Server {
                 self.batcher.close();
             }
             other => {
-                self.write_line(conn, &format!("{{\"error\":\"unknown cmd {other}\"}}"));
+                self.write_error(conn, &format!("unknown cmd {other}"));
             }
         }
     }
@@ -229,8 +248,16 @@ impl Server {
             ("predicted", Json::Num(resp.predicted)),
             ("reward", Json::Num(resp.reward as f64)),
             ("latency_us", Json::Num(resp.latency_us as f64)),
+            ("procedure", Json::Str(resp.procedure.name().to_string())),
         ]);
         self.write_line(conn, &json.to_string());
+    }
+
+    /// Emit a protocol error line with proper JSON string escaping (error
+    /// text may echo client-controlled input).
+    fn write_error(&self, conn: u64, msg: &str) {
+        let j = Json::obj(vec![("error", Json::Str(msg.to_string()))]);
+        self.write_line(conn, &j.to_string());
     }
 
     fn write_line(&self, conn: u64, line: &str) {
@@ -261,6 +288,26 @@ impl Client {
             ("id", Json::Num(id as f64)),
             ("text", Json::Str(text.to_string())),
             ("domain", Json::Str(domain.to_string())),
+        ]);
+        writeln!(self.writer, "{}", j.to_string())?;
+        self.writer.flush()?;
+        Ok(())
+    }
+
+    /// Like [`Client::request`] but pinning the decode procedure
+    /// ("adaptive" | "route") instead of the server default.
+    pub fn request_with_procedure(
+        &mut self,
+        id: u64,
+        text: &str,
+        domain: &str,
+        procedure: &str,
+    ) -> Result<()> {
+        let j = Json::obj(vec![
+            ("id", Json::Num(id as f64)),
+            ("text", Json::Str(text.to_string())),
+            ("domain", Json::Str(domain.to_string())),
+            ("procedure", Json::Str(procedure.to_string())),
         ]);
         writeln!(self.writer, "{}", j.to_string())?;
         self.writer.flush()?;

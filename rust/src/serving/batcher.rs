@@ -4,12 +4,50 @@
 //! `batch_queries` are waiting or the oldest has waited `max_wait_ms`
 //! (the classic size-or-deadline dynamic batching rule). The scheduler
 //! drains epochs; queue depth is exposed as a gauge for backpressure.
+//!
+//! Epochs are *mixed*: requests of any domain/procedure ride in one cut, and
+//! [`partition_epoch`] splits a cut into the domain- and procedure-
+//! homogeneous sub-epochs the model pipeline needs (probe heads and
+//! verification are per-domain). This replaces the old rule that every epoch
+//! had to be per-domain upstream of the scheduler.
 
 use std::collections::VecDeque;
 use std::sync::{Condvar, Mutex};
 use std::time::{Duration, Instant};
 
 use super::Request;
+use crate::config::ProcedureKind;
+
+/// A domain- and procedure-homogeneous slice of a mixed epoch.
+#[derive(Clone, Debug)]
+pub struct SubEpoch {
+    pub domain: String,
+    pub kind: ProcedureKind,
+    /// Positions in the parent epoch, in arrival order.
+    pub indices: Vec<usize>,
+}
+
+/// Split a mixed epoch into sub-epochs, preserving arrival order within each
+/// and first-seen order across them. Requests without an explicit procedure
+/// fall back to `default_kind`.
+pub fn partition_epoch(reqs: &[Request], default_kind: ProcedureKind) -> Vec<SubEpoch> {
+    let mut subs: Vec<SubEpoch> = Vec::new();
+    for (i, r) in reqs.iter().enumerate() {
+        let kind = r.procedure.unwrap_or(default_kind);
+        match subs
+            .iter_mut()
+            .find(|s| s.kind == kind && s.domain == r.domain)
+        {
+            Some(s) => s.indices.push(i),
+            None => subs.push(SubEpoch {
+                domain: r.domain.clone(),
+                kind,
+                indices: vec![i],
+            }),
+        }
+    }
+    subs
+}
 
 pub struct Batcher {
     queue: Mutex<BatchState>,
@@ -86,7 +124,7 @@ mod tests {
     use std::sync::Arc;
 
     fn req(id: u64) -> Request {
-        Request { id, text: format!("q{id}"), domain: "code".into(), arrived_us: 0 }
+        Request::new(id, format!("q{id}"), "code")
     }
 
     #[test]
@@ -137,6 +175,36 @@ mod tests {
         }
         let epoch = b.next_epoch().unwrap();
         assert_eq!(epoch.len(), 64);
+    }
+
+    #[test]
+    fn partition_groups_by_domain_and_procedure() {
+        let mut rs = vec![req(0), req(1), req(2), req(3)];
+        rs[1].domain = "chat".into();
+        rs[3].domain = "chat".into();
+        rs[3].procedure = Some(ProcedureKind::WeakStrongRoute);
+        let subs = partition_epoch(&rs, ProcedureKind::AdaptiveBestOfK);
+        assert_eq!(subs.len(), 3);
+        // first-seen order across sub-epochs, arrival order within
+        assert_eq!(subs[0].domain, "code");
+        assert_eq!(subs[0].indices, vec![0, 2]);
+        assert_eq!(subs[1].domain, "chat");
+        assert_eq!(subs[1].kind, ProcedureKind::AdaptiveBestOfK);
+        assert_eq!(subs[1].indices, vec![1]);
+        assert_eq!(subs[2].kind, ProcedureKind::WeakStrongRoute);
+        assert_eq!(subs[2].indices, vec![3]);
+        // every index appears exactly once
+        let mut all: Vec<usize> = subs.iter().flat_map(|s| s.indices.clone()).collect();
+        all.sort();
+        assert_eq!(all, vec![0, 1, 2, 3]);
+    }
+
+    #[test]
+    fn partition_respects_default_kind() {
+        let rs = vec![req(0), req(1)];
+        let subs = partition_epoch(&rs, ProcedureKind::WeakStrongRoute);
+        assert_eq!(subs.len(), 1);
+        assert_eq!(subs[0].kind, ProcedureKind::WeakStrongRoute);
     }
 
     #[test]

@@ -1,11 +1,16 @@
 //! Serving layer: request types, the batched generator, the dynamic batcher
-//! and the budget-aware scheduler that composes predictor → allocator →
-//! generator → verifier/reranker. This is the paper's method embedded in a
+//! and the budget-aware scheduler that dispatches epochs through a
+//! [`procedure::DecodeProcedure`] (adaptive best-of-k or weak/strong
+//! routing), each composing predictor → allocator → generator →
+//! verifier/reranker plumbing. This is the paper's method embedded in a
 //! vLLM-shaped pipeline; `server/` exposes it over TCP.
 
 pub mod batcher;
 pub mod generator;
+pub mod procedure;
 pub mod scheduler;
+
+use crate::config::ProcedureKind;
 
 /// A query admitted to the system.
 #[derive(Clone, Debug)]
@@ -15,6 +20,20 @@ pub struct Request {
     /// "code" | "math" | "chat" — selects probe head + verification mode.
     pub domain: String,
     pub arrived_us: u64,
+    /// Per-request decode-procedure override; None ⇒ the configured default.
+    pub procedure: Option<ProcedureKind>,
+}
+
+impl Request {
+    pub fn new(id: u64, text: impl Into<String>, domain: impl Into<String>) -> Request {
+        Request {
+            id,
+            text: text.into(),
+            domain: domain.into(),
+            arrived_us: 0,
+            procedure: None,
+        }
+    }
 }
 
 /// The served answer.
@@ -27,9 +46,11 @@ pub struct Response {
     pub ok: bool,
     /// Samples actually spent on this query.
     pub budget: usize,
-    /// Predicted difficulty (λ̂ or Δ̂₁) that drove the allocation.
+    /// Predicted difficulty (λ̂, Δ̂₁ or p̂(S≻W)) that drove the decision.
     pub predicted: f64,
     /// Chat: reward-model score of the selected response.
     pub reward: f32,
     pub latency_us: u64,
+    /// Which decode procedure actually served this query.
+    pub procedure: ProcedureKind,
 }

@@ -1,0 +1,265 @@
+//! Decode procedures: the unit of dispatch for a served sub-epoch.
+//!
+//! The paper proposes two input-adaptive serving procedures and this module
+//! makes both first-class in the live path:
+//!
+//! * [`AdaptiveBestOfK`] (§3.2, eq. 5) — predict per-query difficulty, split
+//!   the batch budget adaptively, sample best-of-bᵢ, verify/rerank.
+//! * [`WeakStrongRoute`] (§3.3, eq. 8) — predict p̂(S ≻ W | x) and route each
+//!   query to either the expensive strong decode (the full adaptive
+//!   best-of-k + rerank pipeline) or a cheap weak decode (a single sample),
+//!   with the threshold calibrated at startup on a held-out workload so the
+//!   realized strong fraction matches `route.strong_fraction`.
+//!
+//! Both procedures are thin compositions of the [`Scheduler`]'s shared stage
+//! helpers (predict / allocate / generate / select), so they stay in lockstep
+//! on metrics, budget accounting and response shape. Routing telemetry lands
+//! under `serving.route.*`:
+//!
+//! * counters `serving.route.strong` / `serving.route.weak`,
+//! * gauge `serving.route.strong_fraction` (cumulative realized fraction),
+//! * histograms `serving.route.strong_us` / `serving.route.weak_us`
+//!   (per-arm batch latency),
+//! * gauges `serving.route.reward_strong.<domain>` /
+//!   `serving.route.reward_weak.<domain>` (last sub-epoch's mean reward per
+//!   arm, keyed by domain since reward scales differ per domain),
+//! * gauge `serving.route.threshold.<domain>` (calibrated threshold).
+
+use std::time::Instant;
+
+use anyhow::Result;
+
+use super::scheduler::Scheduler;
+use super::{Request, Response};
+use crate::allocator::online::Predictions;
+use crate::config::ProcedureKind;
+use crate::prng::Pcg64;
+
+/// A strategy for serving one domain-homogeneous sub-epoch end to end.
+///
+/// Implementations must return exactly one [`Response`] per request, in
+/// request order; the scheduler stamps `Response::procedure` after dispatch.
+/// Requests are passed by reference — sub-epochs are views into the parent
+/// epoch, never copies.
+pub trait DecodeProcedure: Sync {
+    fn name(&self) -> &'static str;
+
+    /// Serve `reqs` (all of one domain). `rng` drives sampling only.
+    fn serve(
+        &self,
+        sched: &Scheduler,
+        reqs: &[&Request],
+        rng: &mut Pcg64,
+    ) -> Result<Vec<Response>>;
+}
+
+/// The paper's §3.2 procedure: adaptive best-of-k under a batch budget.
+pub struct AdaptiveBestOfK;
+
+impl AdaptiveBestOfK {
+    /// Serve with an explicit serving-start instant and procedure identity,
+    /// so a caller that did work before delegating here (routing: preference
+    /// prediction, router calibration, the other arm) keeps end-to-end
+    /// response latencies and correct procedure stamps. A caller that
+    /// already holds this batch's difficulty predictions passes them as
+    /// `preheated` to skip the probe pass.
+    pub fn serve_from(
+        &self,
+        sched: &Scheduler,
+        reqs: &[&Request],
+        rng: &mut Pcg64,
+        t0: Instant,
+        kind: ProcedureKind,
+        preheated: Option<(Predictions, Vec<f64>)>,
+    ) -> Result<Vec<Response>> {
+        if reqs.is_empty() {
+            return Ok(Vec::new());
+        }
+        let domain = reqs[0].domain.clone();
+        debug_assert!(
+            reqs.iter().all(|r| r.domain == domain),
+            "sub-epochs are per-domain"
+        );
+        let texts: Vec<&str> = reqs.iter().map(|r| r.text.as_str()).collect();
+        let (preds, scalar_preds) = match preheated {
+            Some(p) => p,
+            None => sched.predict(&domain, &texts)?,
+        };
+        let budgets = sched.allocate(&domain, &preds, &scalar_preds)?;
+        let samples = sched.generate(&texts, &budgets, rng)?;
+        sched.select(&domain, reqs, &texts, &budgets, &samples, &scalar_preds, t0, kind)
+    }
+}
+
+impl DecodeProcedure for AdaptiveBestOfK {
+    fn name(&self) -> &'static str {
+        "adaptive"
+    }
+
+    fn serve(
+        &self,
+        sched: &Scheduler,
+        reqs: &[&Request],
+        rng: &mut Pcg64,
+    ) -> Result<Vec<Response>> {
+        self.serve_from(
+            sched,
+            reqs,
+            rng,
+            Instant::now(),
+            ProcedureKind::AdaptiveBestOfK,
+            None,
+        )
+    }
+}
+
+/// The paper's §3.3 procedure: weak/strong routing in the live path.
+pub struct WeakStrongRoute;
+
+impl DecodeProcedure for WeakStrongRoute {
+    fn name(&self) -> &'static str {
+        "route"
+    }
+
+    fn serve(
+        &self,
+        sched: &Scheduler,
+        reqs: &[&Request],
+        rng: &mut Pcg64,
+    ) -> Result<Vec<Response>> {
+        if reqs.is_empty() {
+            return Ok(Vec::new());
+        }
+        // serving of this batch starts here: response latencies must cover
+        // preference prediction, (first-use) router calibration and both arms
+        let t0 = Instant::now();
+        let domain = reqs[0].domain.clone();
+        debug_assert!(
+            reqs.iter().all(|r| r.domain == domain),
+            "sub-epochs are per-domain"
+        );
+        let texts: Vec<&str> = reqs.iter().map(|r| r.text.as_str()).collect();
+        let prefs = sched.strong_preference(&domain, &texts)?;
+        let router = sched.router_for(&domain)?;
+        let mask = router.route(&prefs);
+
+        let strong_idx: Vec<usize> =
+            (0..reqs.len()).filter(|&i| mask[i]).collect();
+        let weak_idx: Vec<usize> =
+            (0..reqs.len()).filter(|&i| !mask[i]).collect();
+        let mut out: Vec<Option<Response>> = (0..reqs.len()).map(|_| None).collect();
+
+        // strong arm: full adaptive best-of-k + rerank on the routed subset
+        if !strong_idx.is_empty() {
+            let t_strong = Instant::now();
+            let sreqs: Vec<&Request> =
+                strong_idx.iter().map(|&i| reqs[i]).collect();
+            // binary domains: the preference pass already ran the λ̂ probe
+            // (pref = 1 − λ̂), so hand the reconstructed predictions to the
+            // strong arm instead of paying a second encode+probe call. Chat
+            // preferences come from a different head than the Δ̂ allocation
+            // input, so chat (and the raw route/vas domains) predict afresh.
+            let preheated = if domain == "code" || domain == "math" {
+                let lams: Vec<f64> = strong_idx
+                    .iter()
+                    .map(|&i| (1.0 - prefs[i]).clamp(0.0, 1.0))
+                    .collect();
+                Some((Predictions::Lambdas(lams.clone()), lams))
+            } else {
+                None
+            };
+            let responses = AdaptiveBestOfK.serve_from(
+                sched,
+                &sreqs,
+                rng,
+                t0,
+                ProcedureKind::WeakStrongRoute,
+                preheated,
+            )?;
+            sched
+                .metrics
+                .histogram("serving.route.strong_us")
+                .record_ns(t_strong.elapsed().as_nanos() as u64);
+            let mean_reward = responses.iter().map(|r| r.reward as f64).sum::<f64>()
+                / responses.len() as f64;
+            sched
+                .metrics
+                .gauge(&format!("serving.route.reward_strong.{domain}"))
+                .set(mean_reward);
+            for (&i, mut resp) in strong_idx.iter().zip(responses) {
+                // the routing decision was driven by the preference score
+                resp.predicted = prefs[i];
+                out[i] = Some(resp);
+            }
+        }
+
+        // weak arm: one cheap sample per query through the same
+        // generate/select plumbing (no allocation solve, no multi-candidate
+        // rerank — k = weak_budget candidates, 1 by default)
+        if !weak_idx.is_empty() {
+            let t_weak = Instant::now();
+            let wreqs: Vec<&Request> =
+                weak_idx.iter().map(|&i| reqs[i]).collect();
+            let wtexts: Vec<&str> =
+                weak_idx.iter().map(|&i| texts[i]).collect();
+            let wprefs: Vec<f64> = weak_idx.iter().map(|&i| prefs[i]).collect();
+            let budgets = vec![sched.cfg.route.weak_budget; weak_idx.len()];
+            sched
+                .metrics
+                .counter("serving.units_allocated")
+                .add(budgets.iter().sum::<usize>() as u64);
+            let samples = sched.generate(&wtexts, &budgets, rng)?;
+            let responses = sched.select(
+                &domain,
+                &wreqs,
+                &wtexts,
+                &budgets,
+                &samples,
+                &wprefs,
+                t0,
+                ProcedureKind::WeakStrongRoute,
+            )?;
+            sched
+                .metrics
+                .histogram("serving.route.weak_us")
+                .record_ns(t_weak.elapsed().as_nanos() as u64);
+            let mean_reward = responses.iter().map(|r| r.reward as f64).sum::<f64>()
+                / responses.len() as f64;
+            sched
+                .metrics
+                .gauge(&format!("serving.route.reward_weak.{domain}"))
+                .set(mean_reward);
+            for (&i, resp) in weak_idx.iter().zip(responses) {
+                out[i] = Some(resp);
+            }
+        }
+
+        let strong_c = sched.metrics.counter("serving.route.strong");
+        strong_c.add(strong_idx.len() as u64);
+        let weak_c = sched.metrics.counter("serving.route.weak");
+        weak_c.add(weak_idx.len() as u64);
+        let total = strong_c.get() + weak_c.get();
+        if total > 0 {
+            sched
+                .metrics
+                .gauge("serving.route.strong_fraction")
+                .set(strong_c.get() as f64 / total as f64);
+        }
+
+        out.into_iter()
+            .map(|o| o.ok_or_else(|| anyhow::anyhow!("query missed by routing")))
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn procedure_names_match_config_kinds() {
+        use crate::config::ProcedureKind;
+        assert_eq!(AdaptiveBestOfK.name(), ProcedureKind::AdaptiveBestOfK.name());
+        assert_eq!(WeakStrongRoute.name(), ProcedureKind::WeakStrongRoute.name());
+    }
+}

@@ -1,14 +1,18 @@
 //! Budget-aware scheduler: composes the full pipeline per allocation epoch.
 //!
-//!   epoch = batcher.next_epoch()
-//!     → predictor (one fused encode+probe PJRT call per chunk)
-//!     → allocator (online eq. 5 / offline bins / uniform / oracle)
-//!     → generator (bᵢ samples per query over the decode executable)
-//!     → binary domains: synthetic verifier picks any passing sample
-//!       chat: reward executable scores candidates, rerank reduce selects
+//!   epoch = batcher.next_epoch()            (mixed domains/procedures)
+//!     → partition_epoch → per-(domain, procedure) sub-epochs
+//!     → DecodeProcedure::serve per sub-epoch, each composing the shared
+//!       stage helpers below:
+//!         predict  — one fused encode+probe PJRT call per chunk
+//!         allocate — online eq. 5 / offline bins / uniform / oracle
+//!         generate — bᵢ samples per query over the decode executable
+//!         select   — binary: synthetic verifier picks any passing sample;
+//!                    chat: reward executable scores candidates, rerank
+//!                    reduce selects
 //!
 //! Budget accounting, latencies and allocation histograms land in the
-//! metrics registry (`serving.*`).
+//! metrics registry (`serving.*`; routing splits under `serving.route.*`).
 
 use std::sync::Arc;
 use std::time::Instant;
@@ -16,15 +20,18 @@ use std::time::Instant;
 
 use anyhow::Result;
 
+use super::batcher::partition_epoch;
 use super::generator::{self, GenConfig};
+use super::procedure::{AdaptiveBestOfK, DecodeProcedure, WeakStrongRoute};
 use super::{Request, Response};
 use crate::allocator::offline::OfflinePolicy;
 use crate::allocator::online::{OnlineAllocator, Predictions};
 use crate::allocator::DeltaMatrix;
 use crate::baselines::uniform_best_of_k;
-use crate::config::{AllocPolicy, Config};
+use crate::config::{AllocPolicy, Config, ProcedureKind};
 use crate::metrics::Registry;
 use crate::prng::Pcg64;
+use crate::router::ThresholdRouter;
 use crate::runtime::predictor::{Predictor, ProbeKind};
 use crate::runtime::{Artifact, Engine};
 use crate::tokenizer;
@@ -37,28 +44,101 @@ pub struct Scheduler {
     /// Offline policies are fitted lazily per domain on generated held-out
     /// data the first time the domain is seen.
     offline: std::sync::Mutex<std::collections::BTreeMap<String, OfflinePolicy>>,
+    /// Threshold routers are calibrated lazily per domain the same way.
+    routers: std::sync::Mutex<std::collections::BTreeMap<String, ThresholdRouter>>,
 }
 
 impl Scheduler {
     pub fn new(engine: Engine, cfg: Config, metrics: Arc<Registry>) -> Self {
-        Self { engine, cfg, metrics, offline: Default::default() }
+        Self {
+            engine,
+            cfg,
+            metrics,
+            offline: Default::default(),
+            routers: Default::default(),
+        }
     }
 
-    /// Serve one epoch of same-domain requests; returns responses in order.
+    /// Resolve a procedure kind to its implementation.
+    fn procedure(&self, kind: ProcedureKind) -> &'static dyn DecodeProcedure {
+        match kind {
+            ProcedureKind::AdaptiveBestOfK => &AdaptiveBestOfK,
+            ProcedureKind::WeakStrongRoute => &WeakStrongRoute,
+        }
+    }
+
+    /// Serve one (possibly mixed-domain) epoch; returns responses in request
+    /// order. The epoch is partitioned into domain- and procedure-
+    /// homogeneous sub-epochs and each is dispatched through its
+    /// [`DecodeProcedure`].
     pub fn serve_epoch(&self, reqs: &[Request], rng: &mut Pcg64) -> Result<Vec<Response>> {
         if reqs.is_empty() {
             return Ok(Vec::new());
         }
         let t0 = Instant::now();
-        let domain = reqs[0].domain.clone();
-        debug_assert!(reqs.iter().all(|r| r.domain == domain),
-            "epochs are per-domain");
-        let texts: Vec<&str> = reqs.iter().map(|r| r.text.as_str()).collect();
+        let subs = partition_epoch(reqs, self.cfg.route.procedure);
+        let mut out: Vec<Option<Response>> = (0..reqs.len()).map(|_| None).collect();
+        for sub in &subs {
+            // borrow, don't clone: sub-epochs are views into the epoch
+            let sub_reqs: Vec<&Request> =
+                sub.indices.iter().map(|&i| &reqs[i]).collect();
+            // failure isolation: one bad sub-epoch (e.g. an unknown domain)
+            // must not poison the other domains sharing the mixed epoch
+            let result = self.procedure(sub.kind).serve(self, &sub_reqs, rng).and_then(
+                |responses| {
+                    anyhow::ensure!(
+                        responses.len() == sub.indices.len(),
+                        "procedure {:?} returned {} responses for {} requests",
+                        sub.kind,
+                        responses.len(),
+                        sub.indices.len()
+                    );
+                    Ok(responses)
+                },
+            );
+            match result {
+                Ok(responses) => {
+                    for (&i, mut resp) in sub.indices.iter().zip(responses) {
+                        resp.procedure = sub.kind;
+                        out[i] = Some(resp);
+                    }
+                }
+                Err(e) => {
+                    eprintln!("sub-epoch ({}, {:?}) failed: {e:#}", sub.domain, sub.kind);
+                    self.metrics.counter("serving.subepoch_errors").inc();
+                    for &i in &sub.indices {
+                        out[i] = Some(Response {
+                            id: reqs[i].id,
+                            response: format!("error: {e}"),
+                            ok: false,
+                            budget: 0,
+                            predicted: 0.0,
+                            reward: 0.0,
+                            latency_us: t0.elapsed().as_micros() as u64,
+                            procedure: sub.kind,
+                        });
+                    }
+                }
+            }
+        }
+        self.metrics
+            .histogram("serving.epoch_us")
+            .record_ns(t0.elapsed().as_nanos() as u64);
+        self.metrics.counter("serving.queries").add(reqs.len() as u64);
+        out.into_iter()
+            .map(|o| o.ok_or_else(|| anyhow::anyhow!("request missed by partition")))
+            .collect()
+    }
 
-        // 1. difficulty prediction
+    // --- shared pipeline stages (used by the DecodeProcedure impls) ----------
+
+    /// Stage 1: difficulty prediction for a domain-homogeneous batch.
+    /// Returns the allocator-shaped predictions plus their scalar view
+    /// (λ̂ or Δ̂₁) used for offline bin lookup and response reporting.
+    pub fn predict(&self, domain: &str, texts: &[&str]) -> Result<(Predictions, Vec<f64>)> {
         let t_pred = Instant::now();
         let predictor = Predictor::new(&self.engine);
-        let preds = predictor.predictions_for_domain(&domain, &texts)?;
+        let preds = predictor.predictions_for_domain(domain, texts)?;
         let scalar_preds: Vec<f64> = match &preds {
             Predictions::Lambdas(l) => l.clone(),
             Predictions::Deltas(d) => d.rows.iter().map(|r| r[0]).collect(),
@@ -66,14 +146,22 @@ impl Scheduler {
         self.metrics
             .histogram("serving.predict_us")
             .record_ns(t_pred.elapsed().as_nanos() as u64);
+        Ok((preds, scalar_preds))
+    }
 
-        // 2. allocation
+    /// Stage 2: budget allocation under the configured policy.
+    pub fn allocate(
+        &self,
+        domain: &str,
+        preds: &Predictions,
+        scalar_preds: &[f64],
+    ) -> Result<Vec<usize>> {
         let t_alloc = Instant::now();
         let a = &self.cfg.allocator;
         let min_budget = if domain == "chat" { a.min_budget.max(1) } else { a.min_budget };
         let budgets: Vec<usize> = match a.policy {
             AllocPolicy::Uniform => {
-                let mut u = uniform_best_of_k(reqs.len(), a.budget_per_query, a.b_max);
+                let mut u = uniform_best_of_k(preds.n(), a.budget_per_query, a.b_max);
                 for b in &mut u.budgets {
                     *b = (*b).max(min_budget);
                 }
@@ -84,12 +172,15 @@ impl Scheduler {
                 // server cannot know ground truth, so Oracle falls back to
                 // predictions here (experiment drivers use true Δ directly).
                 OnlineAllocator::new(a.b_max, min_budget)
-                    .allocate(&preds, a.budget_per_query)
+                    .allocate(preds, a.budget_per_query)
                     .budgets
             }
             AllocPolicy::Offline => {
-                let policy = self.offline_policy(&domain)?;
-                scalar_preds.iter().map(|&s| policy.budget_for(s).max(min_budget)).collect()
+                let policy = self.offline_policy(domain)?;
+                scalar_preds
+                    .iter()
+                    .map(|&s| policy.budget_for(s).max(min_budget))
+                    .collect()
             }
         };
         self.metrics
@@ -98,10 +189,18 @@ impl Scheduler {
         self.metrics
             .counter("serving.units_allocated")
             .add(budgets.iter().sum::<usize>() as u64);
+        Ok(budgets)
+    }
 
-        // 3. generation
+    /// Stage 3: sample `budgets[i]` completions for each query.
+    pub fn generate(
+        &self,
+        texts: &[&str],
+        budgets: &[usize],
+        rng: &mut Pcg64,
+    ) -> Result<Vec<generator::Sample>> {
         let t_gen = Instant::now();
-        let jobs = generator::jobs_for_allocation(&texts, &budgets);
+        let jobs = generator::jobs_for_allocation(texts, budgets);
         let gen_cfg = GenConfig {
             max_new_tokens: self.cfg.server.max_new_tokens,
             temperature: self.cfg.server.temperature,
@@ -110,22 +209,37 @@ impl Scheduler {
         self.metrics
             .histogram("serving.generate_us")
             .record_ns(t_gen.elapsed().as_nanos() as u64);
+        Ok(samples)
+    }
 
-        // 4. select best per query
+    /// Stage 4: pick the best sample per query. `t0` is when serving of this
+    /// batch began — every response carries the real end-to-end latency.
+    /// `kind` is the procedure serving this batch (stamped on responses).
+    pub fn select(
+        &self,
+        domain: &str,
+        reqs: &[&Request],
+        texts: &[&str],
+        budgets: &[usize],
+        samples: &[generator::Sample],
+        scalar_preds: &[f64],
+        t0: Instant,
+        kind: ProcedureKind,
+    ) -> Result<Vec<Response>> {
         let t_sel = Instant::now();
-        let mut out = Vec::with_capacity(reqs.len());
-        if domain == "chat" {
-            out = self.select_by_reward(reqs, &texts, &budgets, &samples, &scalar_preds)?;
+        let out = if domain == "chat" {
+            self.select_by_reward(reqs, texts, budgets, samples, scalar_preds, t0, kind)?
         } else {
             // binary domains: the verifier recomputes the task's answer from
             // the query text (the unit-test analogue)
             let answers: Vec<String> = texts.iter().map(|t| compute_answer(t)).collect();
             let mut best: Vec<Option<String>> = vec![None; reqs.len()];
-            for s in &samples {
+            for s in samples {
                 if best[s.query].is_none() && s.text.trim() == answers[s.query] {
                     best[s.query] = Some(s.text.trim().to_string());
                 }
             }
+            let mut out = Vec::with_capacity(reqs.len());
             for (i, r) in reqs.iter().enumerate() {
                 let ok = best[i].is_some();
                 out.push(Response {
@@ -136,16 +250,14 @@ impl Scheduler {
                     predicted: scalar_preds[i],
                     reward: if ok { 1.0 } else { 0.0 },
                     latency_us: t0.elapsed().as_micros() as u64,
+                    procedure: kind,
                 });
             }
-        }
+            out
+        };
         self.metrics
             .histogram("serving.select_us")
             .record_ns(t_sel.elapsed().as_nanos() as u64);
-        self.metrics
-            .histogram("serving.epoch_us")
-            .record_ns(t0.elapsed().as_nanos() as u64);
-        self.metrics.counter("serving.queries").add(reqs.len() as u64);
         Ok(out)
     }
 
@@ -153,11 +265,13 @@ impl Scheduler {
     /// pick per-query argmax via the rerank reduce.
     fn select_by_reward(
         &self,
-        reqs: &[Request],
+        reqs: &[&Request],
         texts: &[&str],
         budgets: &[usize],
         samples: &[generator::Sample],
         scalar_preds: &[f64],
+        t0: Instant,
+        kind: ProcedureKind,
     ) -> Result<Vec<Response>> {
         let seq = self.engine.max_seq();
         // score candidates in engine-batch chunks
@@ -220,10 +334,57 @@ impl Scheduler {
                 budget: budgets[i],
                 predicted: scalar_preds[i],
                 reward: if best.1 == f32::MIN { 0.0 } else { best.1 },
-                latency_us: 0,
+                latency_us: t0.elapsed().as_micros() as u64,
+                procedure: kind,
             });
         }
         Ok(out)
+    }
+
+    // --- routing support (used by WeakStrongRoute) ----------------------------
+
+    /// Predicted preference for the strong decode, per query. Chat uses the
+    /// learned p̂(S≻W) preference head (eq. 8); binary domains reuse the
+    /// difficulty probe — harder queries (lower λ̂) prefer the strong decode.
+    pub fn strong_preference(&self, domain: &str, texts: &[&str]) -> Result<Vec<f64>> {
+        let predictor = Predictor::new(&self.engine);
+        match domain {
+            "chat" => {
+                let kind = if self.cfg.route.use_vas_probe {
+                    ProbeKind::VasPreference
+                } else {
+                    ProbeKind::RoutePreference
+                };
+                predictor.predict_scalar(kind, texts)
+            }
+            "route" | "vas" => {
+                predictor.predict_scalar(ProbeKind::for_domain(domain)?, texts)
+            }
+            _ => Ok(predictor
+                .predict_scalar(ProbeKind::for_domain(domain)?, texts)?
+                .into_iter()
+                .map(|l| 1.0 - l)
+                .collect()),
+        }
+    }
+
+    /// The calibrated per-domain threshold router (fitted on first use on a
+    /// generated held-out workload, like the offline allocation policy).
+    pub fn router_for(&self, domain: &str) -> Result<ThresholdRouter> {
+        let mut cache = self.routers.lock().unwrap();
+        if let Some(r) = cache.get(domain) {
+            return Ok(r.clone());
+        }
+        let rc = &self.cfg.route;
+        let held = workload::gen_dataset(domain, rc.heldout_n, rc.heldout_seed);
+        let texts: Vec<&str> = held.iter().map(|q| q.text.as_str()).collect();
+        let prefs = self.strong_preference(domain, &texts)?;
+        let router = ThresholdRouter::fit(&prefs, rc.strong_fraction);
+        self.metrics
+            .gauge(&format!("serving.route.threshold.{domain}"))
+            .set(router.threshold);
+        cache.insert(domain.to_string(), router.clone());
+        Ok(router)
     }
 
     fn offline_policy(&self, domain: &str) -> Result<OfflinePolicy> {

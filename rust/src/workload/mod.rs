@@ -148,15 +148,30 @@ pub fn gen_chat(rng: &mut Pcg64) -> Query {
     }
 }
 
+/// One query of the given domain ("route"/"vas" alias chat's text universe).
+pub fn gen_query(domain: &str, rng: &mut Pcg64) -> Query {
+    match domain {
+        "code" => gen_code(rng),
+        "math" => gen_math(rng),
+        "chat" | "route" | "vas" => gen_chat(rng),
+        other => panic!("unknown domain `{other}`"),
+    }
+}
+
 pub fn gen_dataset(domain: &str, n: usize, seed: u64) -> Vec<Query> {
     let mut rng = Pcg64::new(seed);
+    (0..n).map(|_| gen_query(domain, &mut rng)).collect()
+}
+
+/// Mixed-domain dataset: query i comes from `domains[i % domains.len()]`
+/// (deterministic round-robin, so every prefix carries every domain). The
+/// serving integration tests and routed examples feed these straight through
+/// the batcher — epochs are no longer required to be per-domain.
+pub fn gen_mixed_dataset(domains: &[&str], n: usize, seed: u64) -> Vec<Query> {
+    assert!(!domains.is_empty());
+    let mut rng = Pcg64::new(seed);
     (0..n)
-        .map(|_| match domain {
-            "code" => gen_code(&mut rng),
-            "math" => gen_math(&mut rng),
-            "chat" | "route" | "vas" => gen_chat(&mut rng),
-            other => panic!("unknown domain `{other}`"),
-        })
+        .map(|i| gen_query(domains[i % domains.len()], &mut rng))
         .collect()
 }
 
@@ -359,6 +374,19 @@ mod tests {
             (v.iter().map(|x| (x - m) * (x - m)).sum::<f64>() / v.len() as f64).sqrt()
         };
         assert!(std(&pv) < std(&p), "VAS should be lower-entropy");
+    }
+
+    #[test]
+    fn mixed_dataset_round_robins_domains() {
+        let qs = gen_mixed_dataset(&["code", "math", "chat"], 9, 3);
+        assert_eq!(qs.len(), 9);
+        for (i, q) in qs.iter().enumerate() {
+            let want = ["code", "math", "chat"][i % 3];
+            assert_eq!(q.domain, want, "query {i}");
+        }
+        // deterministic under the same seed
+        let qs2 = gen_mixed_dataset(&["code", "math", "chat"], 9, 3);
+        assert_eq!(qs[4].text, qs2[4].text);
     }
 
     #[test]

@@ -44,12 +44,7 @@ fn reqs(domain: &str, n: usize, seed: u64) -> Vec<Request> {
     workload::gen_dataset(domain, n, seed)
         .into_iter()
         .enumerate()
-        .map(|(i, q)| Request {
-            id: i as u64,
-            text: q.text,
-            domain: domain.to_string(),
-            arrived_us: 0,
-        })
+        .map(|(i, q)| Request::new(i as u64, q.text, domain))
         .collect()
 }
 
@@ -100,6 +95,37 @@ fn scheduler_epoch_chat_reranks() {
     assert_eq!(out.len(), 16);
     for r in &out {
         assert!(r.budget >= 1, "chat must sample at least once");
+        // regression: chat responses used to report latency_us = 0
+        assert!(r.latency_us > 0, "chat response carries no latency");
+    }
+}
+
+#[test]
+fn scheduler_serves_mixed_domain_epoch() {
+    skip_without_artifacts!();
+    let cfg = config(AllocPolicy::Online, 2.0);
+    let metrics = Arc::new(Registry::default());
+    let engine = Engine::load_all(&cfg.runtime).unwrap();
+    let scheduler = Scheduler::new(engine, cfg, metrics);
+    let mut rng = Pcg64::new(4);
+    // one epoch holding code, math and chat interleaved — the scheduler
+    // partitions it into per-domain sub-epochs internally
+    let batch: Vec<Request> = workload::gen_mixed_dataset(&["code", "math", "chat"], 24, 11)
+        .into_iter()
+        .enumerate()
+        .map(|(i, q)| Request::new(i as u64, q.text, q.domain))
+        .collect();
+    let out = scheduler.serve_epoch(&batch, &mut rng).unwrap();
+    assert_eq!(out.len(), 24);
+    // responses come back in request order despite the internal partition
+    for (r, o) in batch.iter().zip(&out) {
+        assert_eq!(r.id, o.id);
+    }
+    for (i, o) in out.iter().enumerate() {
+        if batch[i].domain == "chat" {
+            assert!(o.budget >= 1);
+        }
+        assert!(o.latency_us > 0);
     }
 }
 

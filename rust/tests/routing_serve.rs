@@ -1,0 +1,169 @@
+//! End-to-end weak/strong routing (paper §3.3 in the live serving path):
+//! a deterministic mixed-domain request stream flows through the dynamic
+//! batcher into the scheduler with `WeakStrongRoute` as the default decode
+//! procedure. Asserts the realized strong fraction lands within ±0.05 of the
+//! configured target, that `serving.route.*` telemetry is populated, and
+//! that mixed-domain epochs are served without the old per-domain
+//! restriction. Skipped when artifacts are missing.
+
+use std::path::PathBuf;
+use std::sync::Arc;
+use std::time::Duration;
+
+use thinkalloc::config::{AllocPolicy, Config, ProcedureKind};
+use thinkalloc::metrics::Registry;
+use thinkalloc::prng::Pcg64;
+use thinkalloc::runtime::Engine;
+use thinkalloc::serving::batcher::Batcher;
+use thinkalloc::serving::scheduler::Scheduler;
+use thinkalloc::serving::{Request, Response};
+use thinkalloc::workload;
+
+fn artifacts_dir() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+macro_rules! skip_without_artifacts {
+    () => {
+        if !artifacts_dir().join("MANIFEST.json").exists() {
+            eprintln!("skipping: artifacts not built (run `make artifacts`)");
+            return;
+        }
+    };
+}
+
+const N: usize = 600;
+const TARGET: f64 = 0.5;
+
+#[test]
+fn routed_mixed_stream_hits_target_fraction() {
+    skip_without_artifacts!();
+    let mut cfg = Config::default();
+    cfg.runtime.artifacts_dir = artifacts_dir();
+    cfg.allocator.policy = AllocPolicy::Online;
+    cfg.allocator.budget_per_query = 2.0;
+    cfg.allocator.b_max = 8;
+    cfg.route.procedure = ProcedureKind::WeakStrongRoute;
+    cfg.route.strong_fraction = TARGET;
+    cfg.route.weak_budget = 1;
+    cfg.route.heldout_n = 512;
+    cfg.route.heldout_seed = 0xBEEF;
+    cfg.validate().unwrap();
+
+    let metrics = Arc::new(Registry::default());
+    let engine = Engine::load_all(&cfg.runtime).unwrap();
+    let scheduler = Scheduler::new(engine, cfg, metrics.clone());
+    let mut rng = Pcg64::new(0xD1CE);
+
+    // deterministic mixed-domain stream through the batcher: epochs are cut
+    // by size and stay mixed — no per-domain pre-sorting anywhere
+    let batcher = Batcher::new(64, Duration::from_secs(30));
+    let queries = workload::gen_mixed_dataset(&["code", "math", "chat"], N, 0x5EED);
+    for (i, q) in queries.iter().enumerate() {
+        batcher.submit(Request::new(i as u64, q.text.clone(), q.domain));
+    }
+    batcher.close();
+
+    let mut responses: Vec<Response> = Vec::with_capacity(N);
+    while let Some(epoch) = batcher.next_epoch() {
+        // every full epoch carries all three domains (round-robin stream)
+        if epoch.len() == 64 {
+            let domains: std::collections::BTreeSet<&str> =
+                epoch.iter().map(|r| r.domain.as_str()).collect();
+            assert_eq!(domains.len(), 3, "epoch lost its domain mix");
+        }
+        responses.extend(scheduler.serve_epoch(&epoch, &mut rng).unwrap());
+    }
+    assert_eq!(responses.len(), N);
+
+    // routed responses are well-formed: ids preserved, real latency, the
+    // routing preference recorded, chat always sampled at least once
+    let mut seen = std::collections::BTreeSet::new();
+    for r in &responses {
+        seen.insert(r.id);
+        assert_eq!(r.procedure, ProcedureKind::WeakStrongRoute);
+        assert!(r.latency_us > 0, "id {} has no latency", r.id);
+        assert!(r.predicted.is_finite());
+        // weak arm always spends exactly weak_budget; the strong arm's
+        // adaptive allocation may spend 0 on predicted-impossible binary
+        // queries ("I don't know") up to b_max
+        assert!(r.budget <= 8);
+        if queries[r.id as usize].domain == "chat" {
+            assert!(r.budget >= 1, "chat must sample at least once (id {})", r.id);
+            assert!(r.reward.is_finite());
+        } else if r.ok {
+            assert!(!r.response.is_empty());
+        } else {
+            assert!(r.response.is_empty());
+        }
+    }
+    assert_eq!(seen.len(), N, "duplicate or missing response ids");
+
+    // realized strong fraction within ±0.05 of the calibrated target
+    let strong = metrics.counter("serving.route.strong").get();
+    let weak = metrics.counter("serving.route.weak").get();
+    assert_eq!(strong + weak, N as u64, "every query routed exactly once");
+    let realized = strong as f64 / N as f64;
+    assert!(
+        (realized - TARGET).abs() <= 0.05,
+        "realized strong fraction {realized:.3} vs target {TARGET}"
+    );
+
+    // serving.route.* telemetry populated
+    assert!(metrics.histogram("serving.route.strong_us").count() > 0);
+    assert!(metrics.histogram("serving.route.weak_us").count() > 0);
+    let frac_gauge = metrics.gauge("serving.route.strong_fraction").get();
+    assert!((frac_gauge - realized).abs() < 1e-9, "gauge {frac_gauge} vs {realized}");
+    for domain in ["code", "math", "chat"] {
+        let thr = metrics.gauge(&format!("serving.route.threshold.{domain}")).get();
+        assert!(thr.is_finite(), "no calibrated threshold for {domain}");
+    }
+
+    // strong-routed queries get the expensive decode: their mean budget must
+    // exceed the weak arm's single sample
+    let strong_budget: usize = responses.iter().filter(|r| r.budget > 1).map(|r| r.budget).sum();
+    assert!(strong_budget > 0, "no query received a multi-sample strong decode");
+}
+
+#[test]
+fn per_request_procedure_override_wins() {
+    skip_without_artifacts!();
+    let mut cfg = Config::default();
+    cfg.runtime.artifacts_dir = artifacts_dir();
+    cfg.allocator.budget_per_query = 2.0;
+    cfg.allocator.b_max = 8;
+    // default is adaptive; individual requests opt into routing
+    cfg.route.procedure = ProcedureKind::AdaptiveBestOfK;
+    cfg.route.strong_fraction = 0.5;
+
+    let metrics = Arc::new(Registry::default());
+    let engine = Engine::load_all(&cfg.runtime).unwrap();
+    let scheduler = Scheduler::new(engine, cfg, metrics.clone());
+    let mut rng = Pcg64::new(7);
+
+    let mut batch: Vec<Request> = workload::gen_dataset("code", 16, 21)
+        .into_iter()
+        .enumerate()
+        .map(|(i, q)| Request::new(i as u64, q.text, "code"))
+        .collect();
+    for r in batch.iter_mut().skip(8) {
+        r.procedure = Some(ProcedureKind::WeakStrongRoute);
+    }
+    let out = scheduler.serve_epoch(&batch, &mut rng).unwrap();
+    assert_eq!(out.len(), 16);
+    for (i, o) in out.iter().enumerate() {
+        let want = if i < 8 {
+            ProcedureKind::AdaptiveBestOfK
+        } else {
+            ProcedureKind::WeakStrongRoute
+        };
+        assert_eq!(o.procedure, want, "response {i}");
+        assert_eq!(o.id, batch[i].id);
+    }
+    assert_eq!(
+        metrics.counter("serving.route.strong").get()
+            + metrics.counter("serving.route.weak").get(),
+        8,
+        "only the opted-in half goes through the router"
+    );
+}
