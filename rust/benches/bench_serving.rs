@@ -2,20 +2,115 @@
 //! → allocate → generate → verify — per policy, reporting epoch latency and
 //! query/sample throughput. This is the paper's headline-claim substrate:
 //! adaptive vs uniform at matched compute.
+//!
+//! Second half: the sharded scheduler pool on a mixed-domain workload —
+//! workers=1 vs workers=4 draining one shared batcher (engine compile time
+//! excluded via the `on_worker_ready` hook), plus a prediction-cache
+//! cold/warm pass.
 
 #[path = "harness/mod.rs"]
 mod harness;
 
+use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Arc;
+use std::time::{Duration, Instant};
 
 use harness::{bench, section};
 use thinkalloc::config::{AllocPolicy, Config};
 use thinkalloc::metrics::Registry;
 use thinkalloc::prng::Pcg64;
 use thinkalloc::runtime::Engine;
-use thinkalloc::serving::scheduler::Scheduler;
-use thinkalloc::serving::Request;
+use thinkalloc::serving::batcher::Batcher;
+use thinkalloc::serving::scheduler::{Scheduler, SchedulerShared};
+use thinkalloc::serving::shard::{EpochSink, ShardPool};
+use thinkalloc::serving::{Request, Response};
 use thinkalloc::workload;
+
+/// Counting sink for pool benches: tracks ready workers and responses.
+/// Failures are recorded, not panicked — a panic on a worker thread would
+/// only kill that thread while main spins waiting on `ready` forever.
+struct CountSink {
+    ready: AtomicUsize,
+    responses: AtomicUsize,
+    failure: std::sync::Mutex<Option<String>>,
+}
+
+impl CountSink {
+    fn fail(&self, msg: String) {
+        self.failure.lock().unwrap().get_or_insert(msg);
+    }
+
+    fn check(&self) {
+        if let Some(msg) = self.failure.lock().unwrap().as_ref() {
+            panic!("{msg}");
+        }
+    }
+}
+
+impl EpochSink for CountSink {
+    fn on_worker_ready(&self, _worker: usize) {
+        self.ready.fetch_add(1, Ordering::SeqCst);
+    }
+
+    fn on_response(&self, _resp: Response) {
+        self.responses.fetch_add(1, Ordering::SeqCst);
+    }
+
+    fn on_epoch_error(&self, _epoch: &[Request], err: &anyhow::Error, _el: Duration) {
+        self.fail(format!("epoch failed in bench: {err:#}"));
+    }
+
+    fn on_fatal(&self, worker: usize, err: &anyhow::Error) {
+        self.fail(format!("worker {worker} failed to load engine: {err:#}"));
+    }
+}
+
+fn pool_config() -> Config {
+    let mut cfg = Config::default();
+    cfg.allocator.policy = AllocPolicy::Online;
+    cfg.allocator.budget_per_query = 2.0;
+    cfg.allocator.b_max = 8;
+    cfg.server.batch_queries = 16;
+    cfg.server.max_wait_ms = 5;
+    // measure raw epoch throughput; the cache pass below measures caching
+    cfg.server.predict_cache_capacity = 0;
+    cfg
+}
+
+/// Run `reqs` through a `workers`-wide shard pool; returns wall time from
+/// first submit (all engines hot) to last response.
+fn run_pool(workers: usize, reqs: &[Request], cfg: Config) -> Duration {
+    let metrics = Arc::new(Registry::default());
+    let batcher = Arc::new(Batcher::new(
+        cfg.server.batch_queries,
+        Duration::from_millis(cfg.server.max_wait_ms),
+    ));
+    let shared = SchedulerShared::new(cfg, metrics);
+    let sink = Arc::new(CountSink {
+        ready: AtomicUsize::new(0),
+        responses: AtomicUsize::new(0),
+        failure: std::sync::Mutex::new(None),
+    });
+    let pool = ShardPool::spawn(workers, batcher.clone(), shared, sink.clone());
+    while sink.ready.load(Ordering::SeqCst) < workers {
+        sink.check(); // surface engine-load failures instead of spinning
+        std::thread::sleep(Duration::from_millis(20));
+    }
+    let t0 = Instant::now();
+    for r in reqs {
+        assert!(batcher.submit(r.clone()));
+    }
+    batcher.close();
+    pool.join();
+    let dt = t0.elapsed();
+    sink.check();
+    assert_eq!(
+        sink.responses.load(Ordering::SeqCst),
+        reqs.len(),
+        "pool lost or duplicated responses"
+    );
+    dt
+}
 
 fn main() {
     let base = Config::default();
@@ -55,4 +150,51 @@ fn main() {
         );
         println!("  solved (cumulative over iters): {solved_total}");
     }
+
+    // --- sharded pool: workers=1 vs workers=4, mixed-domain workload --------
+    section("shard pool: 256 mixed-domain queries, epochs of 16");
+    let mixed: Vec<Request> =
+        workload::gen_mixed_dataset(&["code", "math", "chat"], 256, 0xBE9C)
+            .into_iter()
+            .enumerate()
+            .map(|(i, q)| Request::new(i as u64, q.text, q.domain))
+            .collect();
+    let mut per_workers = Vec::new();
+    for workers in [1usize, 4] {
+        let dt = run_pool(workers, &mixed, pool_config());
+        let qps = mixed.len() as f64 / dt.as_secs_f64();
+        println!(
+            "  workers={workers}: {:>8.1} ms total, {qps:>7.1} queries/s",
+            dt.as_secs_f64() * 1e3
+        );
+        per_workers.push((workers, dt));
+    }
+    if let [(_, d1), (_, d4)] = per_workers.as_slice() {
+        println!(
+            "  speedup workers=4 over workers=1: {:.2}×",
+            d1.as_secs_f64() / d4.as_secs_f64()
+        );
+    }
+
+    // --- prediction cache: cold vs warm epoch over one scheduler ------------
+    section("prediction cache: repeat epoch of 32 code queries");
+    let mut cfg = pool_config();
+    cfg.server.predict_cache_capacity = 4096;
+    let metrics = Arc::new(Registry::default());
+    let engine = Engine::load_all(&cfg.runtime).expect("engine");
+    let scheduler = Scheduler::new(engine, cfg, metrics.clone());
+    let mut rng = Pcg64::new(17);
+    let t_cold = Instant::now();
+    scheduler.serve_epoch(&reqs, &mut rng).unwrap();
+    let cold = t_cold.elapsed();
+    let t_warm = Instant::now();
+    scheduler.serve_epoch(&reqs, &mut rng).unwrap();
+    let warm = t_warm.elapsed();
+    println!(
+        "  cold {:.1} ms, warm {:.1} ms | predict_cache hit {} miss {}",
+        cold.as_secs_f64() * 1e3,
+        warm.as_secs_f64() * 1e3,
+        metrics.counter("serving.predict_cache.hit").get(),
+        metrics.counter("serving.predict_cache.miss").get(),
+    );
 }

@@ -330,6 +330,10 @@ impl Default for RouteConfig {
 #[derive(Clone, Debug)]
 pub struct ServerConfig {
     pub addr: String,
+    /// Scheduler shard pool size: each worker thread compiles and owns its
+    /// own Engine and drains the shared batcher. 1 (the default) reproduces
+    /// the single-scheduler behaviour bit-for-bit — deterministic tests rely
+    /// on that; raise it to parallelise independent epochs.
     pub workers: usize,
     /// Allocation epoch: flush a batch when this many queries are waiting...
     pub batch_queries: usize,
@@ -337,17 +341,21 @@ pub struct ServerConfig {
     pub max_wait_ms: u64,
     pub max_new_tokens: usize,
     pub temperature: f64,
+    /// Bounded LRU over probe outputs keyed by (domain, text); repeated
+    /// queries skip the predict PJRT call entirely. 0 disables the cache.
+    pub predict_cache_capacity: usize,
 }
 
 impl Default for ServerConfig {
     fn default() -> Self {
         Self {
             addr: "127.0.0.1:7071".into(),
-            workers: 4,
+            workers: 1,
             batch_queries: 64,
             max_wait_ms: 50,
             max_new_tokens: 24,
             temperature: 0.7,
+            predict_cache_capacity: 4096,
         }
     }
 }
@@ -439,6 +447,9 @@ impl Config {
             "server.max_wait_ms" => self.server.max_wait_ms = f64_of!() as u64,
             "server.max_new_tokens" => self.server.max_new_tokens = usize_of!(),
             "server.temperature" => self.server.temperature = f64_of!(),
+            "server.predict_cache_capacity" => {
+                self.server.predict_cache_capacity = usize_of!()
+            }
             "workload.domain" => self.workload.domain = str_of!(),
             "workload.n_queries" => self.workload.n_queries = usize_of!(),
             "workload.seed" => self.workload.seed = f64_of!() as u64,
@@ -470,6 +481,13 @@ impl Config {
             "min_budget exceeds b_max"
         );
         anyhow::ensure!(self.server.workers >= 1, "need at least one worker");
+        // each worker compiles its own engine (nine executables): triple-digit
+        // pools are a config typo, not a deployment
+        anyhow::ensure!(
+            self.server.workers <= 64,
+            "server.workers = {} is absurd (each worker owns a full engine)",
+            self.server.workers
+        );
         anyhow::ensure!(self.runtime.batch >= 1 && self.runtime.decode_batch >= 1,
             "batch sizes must be ≥ 1");
         anyhow::ensure!(
@@ -578,6 +596,32 @@ mod tests {
         assert!(err.to_string().contains("weak_budget"));
         let err = Config::from_toml_str("[route]\nheldout_n = 1\n").unwrap_err();
         assert!(err.to_string().contains("heldout_n"));
+    }
+
+    #[test]
+    fn server_pool_and_cache_roundtrip() {
+        let cfg = Config::from_toml_str(
+            "[server]\nworkers = 4\npredict_cache_capacity = 512\n",
+        )
+        .unwrap();
+        assert_eq!(cfg.server.workers, 4);
+        assert_eq!(cfg.server.predict_cache_capacity, 512);
+        // defaults: single worker (deterministic), cache on
+        let d = Config::default();
+        assert_eq!(d.server.workers, 1);
+        assert!(d.server.predict_cache_capacity > 0);
+        // cache can be disabled outright
+        let off = Config::from_toml_str("[server]\npredict_cache_capacity = 0\n")
+            .unwrap();
+        assert_eq!(off.server.predict_cache_capacity, 0);
+    }
+
+    #[test]
+    fn validation_rejects_bad_workers() {
+        let err = Config::from_toml_str("[server]\nworkers = 0\n").unwrap_err();
+        assert!(err.to_string().contains("worker"));
+        let err = Config::from_toml_str("[server]\nworkers = 100\n").unwrap_err();
+        assert!(err.to_string().contains("workers"));
     }
 
     #[test]

@@ -35,6 +35,12 @@ fn cli() -> Cli {
             help: "routing: target fraction of strong decodes",
             default: Some("0.5"),
         },
+        FlagSpec {
+            name: "workers",
+            help: "scheduler worker pool size (one engine per worker); \
+                   empty = value from --config (default 1)",
+            default: Some(""),
+        },
     ]);
     Cli {
         binary: "thinkalloc",
@@ -125,15 +131,24 @@ fn cmd_serve(args: &Args) -> Result<()> {
     cfg.allocator.b_max = args.usize_flag("b-max")?;
     cfg.route.procedure = args.str_flag("procedure")?.parse()?;
     cfg.route.strong_fraction = args.f64_flag("strong-fraction")?;
+    // empty = keep whatever --config (or the default) says — the flag must
+    // not silently clobber a file-configured pool
+    let workers_flag = args.str_flag("workers")?;
+    if !workers_flag.is_empty() {
+        cfg.server.workers = workers_flag
+            .parse()
+            .map_err(|e| anyhow::anyhow!("--workers: {e}"))?;
+    }
     cfg.validate()?;
 
     let metrics = Arc::new(Registry::default());
     println!(
-        "thinkalloc serving on {} (policy {:?}, B={}, procedure {})",
+        "thinkalloc serving on {} (policy {:?}, B={}, procedure {}, workers {})",
         cfg.server.addr,
         cfg.allocator.policy,
         cfg.allocator.budget_per_query,
         cfg.route.procedure.name(),
+        cfg.server.workers,
     );
     let server = Server::new(cfg, metrics);
     server.run(|addr| println!("listening on {addr}"))

@@ -198,6 +198,14 @@ impl Registry {
             .clone()
     }
 
+    /// Per-worker labelled view for the scheduler shard pool: metric names
+    /// gain a `.worker.<i>` suffix, so the sorted JSON dump groups all
+    /// workers' series for one metric together
+    /// (`serving.epochs.worker.0`, `serving.epochs.worker.1`, …).
+    pub fn worker(&self, worker: usize) -> Labeled<'_> {
+        Labeled { registry: self, suffix: format!("worker.{worker}") }
+    }
+
     /// Render all metrics as a JSON object (for `/metrics`-style dumps).
     pub fn to_json(&self) -> crate::jsonio::Json {
         use crate::jsonio::Json;
@@ -223,6 +231,31 @@ impl Registry {
             );
         }
         Json::Obj(obj)
+    }
+}
+
+/// A registry view that suffixes every metric name with a label
+/// (`<name>.<suffix>`); see [`Registry::worker`].
+pub struct Labeled<'r> {
+    registry: &'r Registry,
+    suffix: String,
+}
+
+impl Labeled<'_> {
+    fn name(&self, base: &str) -> String {
+        format!("{base}.{}", self.suffix)
+    }
+
+    pub fn counter(&self, base: &str) -> std::sync::Arc<Counter> {
+        self.registry.counter(&self.name(base))
+    }
+
+    pub fn gauge(&self, base: &str) -> std::sync::Arc<Gauge> {
+        self.registry.gauge(&self.name(base))
+    }
+
+    pub fn histogram(&self, base: &str) -> std::sync::Arc<Histogram> {
+        self.registry.histogram(&self.name(base))
     }
 }
 
@@ -267,6 +300,20 @@ mod tests {
         assert_eq!(Histogram::bucket_of(500), 0); // <1µs
         assert_eq!(Histogram::bucket_of(1_000), 1); // 1µs
         assert_eq!(Histogram::bucket_of(3_000), 2); // [2,4)µs
+    }
+
+    #[test]
+    fn worker_labels_are_distinct_series() {
+        let r = Registry::default();
+        r.worker(0).counter("serving.epochs").inc();
+        r.worker(1).counter("serving.epochs").add(2);
+        assert_eq!(r.counter("serving.epochs.worker.0").get(), 1);
+        assert_eq!(r.counter("serving.epochs.worker.1").get(), 2);
+        r.worker(3).histogram("serving.busy_us").record_ns(1_000);
+        assert_eq!(r.histogram("serving.busy_us.worker.3").count(), 1);
+        let dump = r.to_json().to_string();
+        assert!(dump.contains("serving.epochs.worker.0"));
+        assert!(dump.contains("serving.epochs.worker.1"));
     }
 
     #[test]

@@ -11,10 +11,15 @@
 //! Special requests: {"cmd": "metrics"} → metrics dump; {"cmd": "shutdown"}.
 //!
 //! One acceptor thread per listener; each connection gets a reader thread
-//! that feeds the shared [`Batcher`]; a single scheduler thread drains
-//! mixed-domain epochs (the scheduler partitions them into per-domain,
-//! per-procedure sub-epochs) and routes responses back over the originating
-//! connection's write half.
+//! that feeds the shared [`Batcher`]; a [`ShardPool`] of `server.workers`
+//! scheduler threads (each owning its own `!Send` Engine) drains
+//! mixed-domain epochs concurrently and routes responses back over the
+//! originating connection's write half.
+//!
+//! Response routing is keyed by the server-allocated internal request id —
+//! never by the client-supplied id, which two connections (or pipelined
+//! duplicates on one connection) may legitimately reuse. The client id is
+//! echoed back verbatim as `"id"` in the response JSON.
 
 use std::collections::BTreeMap;
 use std::io::{BufRead, BufReader, Write};
@@ -28,14 +33,10 @@ use anyhow::Result;
 use crate::config::{Config, ProcedureKind};
 use crate::jsonio::{self, Json};
 use crate::metrics::Registry;
-use crate::prng::Pcg64;
-use crate::runtime::Engine;
 use crate::serving::batcher::Batcher;
-use crate::serving::scheduler::Scheduler;
+use crate::serving::scheduler::SchedulerShared;
+use crate::serving::shard::{EpochSink, ShardPool};
 use crate::serving::{Request, Response};
-
-// The xla Engine is !Send, so the scheduler thread *constructs and owns* it
-// (actor style); the rest of the server only touches the batcher + sockets.
 
 type WriterMap = Arc<Mutex<BTreeMap<u64, Arc<Mutex<TcpStream>>>>>;
 
@@ -49,9 +50,71 @@ pub struct Server {
     shutdown: Arc<AtomicBool>,
 }
 
-/// Map request-id → connection-id for response routing.
+/// Map internal request id → connection id (the client id travels inside
+/// [`Response`] itself).
 struct Routing {
     map: Mutex<BTreeMap<u64, u64>>,
+}
+
+/// Delivery half of the scheduler workers: routes responses to their
+/// originating connection, synthesizes error responses for failed epochs.
+struct ServerSink {
+    server: Arc<Server>,
+    routing: Arc<Routing>,
+    default_procedure: ProcedureKind,
+}
+
+impl EpochSink for ServerSink {
+    fn on_response(&self, resp: Response) {
+        self.server.send_response(&self.routing, resp);
+    }
+
+    fn on_epoch_error(
+        &self,
+        epoch: &[Request],
+        err: &anyhow::Error,
+        elapsed: Duration,
+    ) {
+        eprintln!("epoch failed: {err:#}");
+        // the epoch really did cost this much wall time — stamp it (the
+        // old path reported latency_us: 0 here)
+        let latency_us = elapsed.as_micros() as u64;
+        for r in epoch {
+            self.server.send_response(
+                &self.routing,
+                Response {
+                    id: r.id,
+                    client_id: r.client_id,
+                    response: format!("error: {err}"),
+                    ok: false,
+                    budget: 0,
+                    predicted: 0.0,
+                    reward: 0.0,
+                    latency_us,
+                    procedure: r.procedure.unwrap_or(self.default_procedure),
+                },
+            );
+        }
+    }
+
+    fn on_fatal(&self, worker: usize, err: &anyhow::Error) {
+        eprintln!("worker {worker}: engine load failed: {err:#}");
+        self.server.shutdown.store(true, Ordering::Release);
+        self.server.batcher.close();
+        // the failing worker may have been the only drainer: fail whatever
+        // was already queued back to its clients instead of stranding it.
+        // (Surviving workers racing this drain is fine — each epoch goes to
+        // exactly one consumer, and closed+empty yields None.)
+        while let Some(epoch) = self.server.batcher.next_epoch() {
+            let now = self.server.batcher.now_us();
+            let waited = epoch
+                .iter()
+                .map(|r| now.saturating_sub(r.arrived_us))
+                .max()
+                .unwrap_or(0);
+            self.on_epoch_error(&epoch, err, Duration::from_micros(waited));
+        }
+    }
 }
 
 impl Server {
@@ -81,59 +144,21 @@ impl Server {
 
         let routing = Arc::new(Routing { map: Mutex::new(BTreeMap::new()) });
 
-        // scheduler thread: owns the Engine (xla handles are !Send), drains
-        // epochs, sends responses back over the originating connection
-        let sched_handle = {
-            let this = self.clone();
-            let routing = routing.clone();
-            let cfg = self.cfg.clone();
-            let metrics = self.metrics.clone();
-            std::thread::spawn(move || {
-                let engine = match Engine::load_all(&cfg.runtime) {
-                    Ok(e) => e,
-                    Err(e) => {
-                        eprintln!("engine load failed: {e:#}");
-                        this.shutdown.store(true, Ordering::Release);
-                        this.batcher.close();
-                        return;
-                    }
-                };
-                let default_procedure = cfg.route.procedure;
-                let scheduler = Scheduler::new(engine, cfg, metrics);
-                let mut rng = Pcg64::new(0x5E7E);
-                while let Some(epoch) = this.batcher.next_epoch() {
-                    // mixed-domain epoch: the scheduler partitions it into
-                    // per-(domain, procedure) sub-epochs itself
-                    match scheduler.serve_epoch(&epoch, &mut rng) {
-                        Ok(responses) => {
-                            for resp in responses {
-                                this.send_response(&routing, resp);
-                            }
-                        }
-                        Err(e) => {
-                            eprintln!("epoch failed: {e:#}");
-                            for r in &epoch {
-                                this.send_response(
-                                    &routing,
-                                    Response {
-                                        id: r.id,
-                                        response: format!("error: {e}"),
-                                        ok: false,
-                                        budget: 0,
-                                        predicted: 0.0,
-                                        reward: 0.0,
-                                        latency_us: 0,
-                                        procedure: r
-                                            .procedure
-                                            .unwrap_or(default_procedure),
-                                    },
-                                );
-                            }
-                        }
-                    }
-                }
-            })
-        };
+        // scheduler shard pool: `server.workers` threads, each owning its
+        // own Engine (xla handles are !Send), draining the shared batcher
+        // concurrently; fitted policies + the prediction cache are shared
+        let shared = SchedulerShared::new(self.cfg.clone(), self.metrics.clone());
+        let sink = Arc::new(ServerSink {
+            server: self.clone(),
+            routing: routing.clone(),
+            default_procedure: self.cfg.route.procedure,
+        });
+        let pool = ShardPool::spawn(
+            self.cfg.server.workers,
+            self.batcher.clone(),
+            shared,
+            sink,
+        );
 
         // accept loop
         let mut conn_id = 0u64;
@@ -150,7 +175,7 @@ impl Server {
             }
         }
         self.batcher.close();
-        let _ = sched_handle.join();
+        pool.join();
         Ok(())
     }
 
@@ -172,6 +197,8 @@ impl Server {
                             this.handle_cmd(conn, cmd);
                             continue;
                         }
+                        // the internal id is the routing key: unique even
+                        // when clients reuse or omit their own ids
                         let id = this.next_req.fetch_add(1, Ordering::Relaxed);
                         let client_id = v
                             .get("id")
@@ -194,9 +221,10 @@ impl Server {
                                 }
                             },
                         };
-                        routing.map.lock().unwrap().insert(client_id, conn);
-                        this.batcher.submit(Request {
-                            id: client_id,
+                        routing.map.lock().unwrap().insert(id, conn);
+                        let accepted = this.batcher.submit(Request {
+                            id,
+                            client_id,
                             text: v
                                 .get("text")
                                 .and_then(Json::as_str)
@@ -207,9 +235,21 @@ impl Server {
                                 .and_then(Json::as_str)
                                 .unwrap_or("code")
                                 .to_string(),
+                            // stamped by Batcher::submit
                             arrived_us: 0,
                             procedure,
                         });
+                        if !accepted {
+                            // batcher already closed (shutdown raced the
+                            // submit): fail the request back instead of
+                            // leaving the client waiting forever
+                            routing.map.lock().unwrap().remove(&id);
+                            let j = Json::obj(vec![
+                                ("id", Json::Num(client_id as f64)),
+                                ("error", Json::Str("server shutting down".into())),
+                            ]);
+                            this.write_line(conn, &j.to_string());
+                        }
                     }
                     Err(e) => {
                         this.write_error(conn, &e.to_string());
@@ -238,10 +278,11 @@ impl Server {
     }
 
     fn send_response(&self, routing: &Routing, resp: Response) {
+        // route by the internal id; echo the client's id on the wire
         let conn = routing.map.lock().unwrap().remove(&resp.id);
         let Some(conn) = conn else { return };
         let json = Json::obj(vec![
-            ("id", Json::Num(resp.id as f64)),
+            ("id", Json::Num(resp.client_id as f64)),
             ("response", Json::Str(resp.response)),
             ("ok", Json::Bool(resp.ok)),
             ("budget", Json::Num(resp.budget as f64)),
@@ -281,6 +322,13 @@ impl Client {
         let stream = TcpStream::connect(addr)?;
         let writer = stream.try_clone()?;
         Ok(Client { reader: BufReader::new(stream), writer })
+    }
+
+    /// Fail reads that block longer than `timeout` (None = block forever).
+    /// Tests use this so a misrouted response fails fast instead of hanging.
+    pub fn set_read_timeout(&self, timeout: Option<Duration>) -> Result<()> {
+        self.reader.get_ref().set_read_timeout(timeout)?;
+        Ok(())
     }
 
     pub fn request(&mut self, id: u64, text: &str, domain: &str) -> Result<()> {
@@ -328,7 +376,10 @@ impl Client {
     }
 
     pub fn command(&mut self, cmd: &str) -> Result<Json> {
-        writeln!(self.writer, "{{\"cmd\":\"{cmd}\"}}")?;
+        // build through Json::obj like every other write: the command
+        // string must be escaped, not interpolated into raw JSON
+        let j = Json::obj(vec![("cmd", Json::Str(cmd.to_string()))]);
+        writeln!(self.writer, "{}", j.to_string())?;
         self.writer.flush()?;
         self.read_response()
     }

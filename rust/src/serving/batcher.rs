@@ -54,6 +54,9 @@ pub struct Batcher {
     arrived: Condvar,
     pub batch_queries: usize,
     pub max_wait: Duration,
+    /// Epoch of the batcher's µs clock (`arrived_us` stamps, queue-wait
+    /// telemetry).
+    start: Instant,
 }
 
 struct BatchState {
@@ -69,15 +72,34 @@ impl Batcher {
             arrived: Condvar::new(),
             batch_queries,
             max_wait,
+            start: Instant::now(),
         }
     }
 
-    /// Admit a request (non-blocking).
-    pub fn submit(&self, req: Request) {
+    /// Microseconds since this batcher was created — the clock `arrived_us`
+    /// is stamped on. Consumers diff against it for queue-wait telemetry.
+    pub fn now_us(&self) -> u64 {
+        self.start.elapsed().as_micros() as u64
+    }
+
+    /// Admit a request (non-blocking). Stamps `arrived_us` so queue wait is
+    /// observable downstream. Returns false (and drops the request) once the
+    /// batcher is closed — no drainer would ever serve it, so the caller
+    /// must error out instead of letting the client wait forever.
+    #[must_use = "a rejected request must be failed back to its client"]
+    pub fn submit(&self, mut req: Request) -> bool {
+        let now = Instant::now();
+        req.arrived_us = now.duration_since(self.start).as_micros() as u64;
         let mut q = self.queue.lock().unwrap();
-        q.items.push_back((req, Instant::now()));
+        if q.closed {
+            return false;
+        }
+        q.items.push_back((req, now));
         drop(q);
+        // notify_all, not notify_one: with several drainers a single token
+        // can land on a consumer that is already mid-drain and be lost
         self.arrived.notify_all();
+        true
     }
 
     /// No more requests will arrive; wakes any waiting epoch cut.
@@ -91,6 +113,12 @@ impl Batcher {
     }
 
     /// Block until an epoch is ready; None once closed and drained.
+    ///
+    /// Multi-consumer safe: any number of drainer threads may call this
+    /// concurrently. Each cut happens under the queue lock (an epoch goes to
+    /// exactly one drainer), and a drainer that leaves a still-cuttable
+    /// backlog behind re-notifies so its peers don't sleep out their full
+    /// deadline on work that is already ready.
     pub fn next_epoch(&self) -> Option<Vec<Request>> {
         let mut q = self.queue.lock().unwrap();
         loop {
@@ -100,7 +128,15 @@ impl Batcher {
             let expired = oldest_wait.is_some_and(|w| w >= self.max_wait);
             if full || (expired && !q.items.is_empty()) || (q.closed && !q.items.is_empty()) {
                 let take = q.items.len().min(self.batch_queries);
-                return Some(q.items.drain(..take).map(|(r, _)| r).collect());
+                let epoch: Vec<Request> =
+                    q.items.drain(..take).map(|(r, _)| r).collect();
+                // an oversized backlog leaves a ready epoch behind: wake the
+                // other drainers now instead of letting them ride out the
+                // timeout they computed from the (now-drained) old front
+                if !q.items.is_empty() {
+                    self.arrived.notify_all();
+                }
+                return Some(epoch);
             }
             if q.closed {
                 return None;
@@ -131,7 +167,7 @@ mod tests {
     fn cuts_on_size() {
         let b = Batcher::new(3, Duration::from_secs(10));
         for i in 0..3 {
-            b.submit(req(i));
+            assert!(b.submit(req(i)));
         }
         let epoch = b.next_epoch().unwrap();
         assert_eq!(epoch.len(), 3);
@@ -141,7 +177,7 @@ mod tests {
     #[test]
     fn cuts_on_deadline() {
         let b = Batcher::new(100, Duration::from_millis(30));
-        b.submit(req(1));
+        assert!(b.submit(req(1)));
         let t0 = Instant::now();
         let epoch = b.next_epoch().unwrap();
         assert_eq!(epoch.len(), 1);
@@ -151,8 +187,8 @@ mod tests {
     #[test]
     fn close_drains_then_none() {
         let b = Batcher::new(10, Duration::from_secs(10));
-        b.submit(req(1));
-        b.submit(req(2));
+        assert!(b.submit(req(1)));
+        assert!(b.submit(req(2)));
         b.close();
         assert_eq!(b.next_epoch().unwrap().len(), 2);
         assert!(b.next_epoch().is_none());
@@ -166,7 +202,7 @@ mod tests {
             let b = b.clone();
             handles.push(std::thread::spawn(move || {
                 for i in 0..16 {
-                    b.submit(req(t * 100 + i));
+                    assert!(b.submit(req(t * 100 + i)));
                 }
             }));
         }
@@ -175,6 +211,27 @@ mod tests {
         }
         let epoch = b.next_epoch().unwrap();
         assert_eq!(epoch.len(), 64);
+    }
+
+    #[test]
+    fn submit_after_close_is_rejected() {
+        let b = Batcher::new(4, Duration::from_secs(10));
+        assert!(b.submit(req(1)));
+        b.close();
+        assert!(!b.submit(req(2)), "post-close submit must be refused");
+        assert_eq!(b.next_epoch().unwrap().len(), 1);
+        assert!(b.next_epoch().is_none());
+    }
+
+    #[test]
+    fn submit_stamps_arrival_time() {
+        let b = Batcher::new(4, Duration::from_secs(10));
+        assert!(b.submit(req(1)));
+        std::thread::sleep(Duration::from_millis(3));
+        b.close();
+        let epoch = b.next_epoch().unwrap();
+        let waited = b.now_us().saturating_sub(epoch[0].arrived_us);
+        assert!(waited >= 3_000, "queue wait {waited}µs not observable");
     }
 
     #[test]
@@ -211,7 +268,7 @@ mod tests {
     fn oversized_backlog_splits() {
         let b = Batcher::new(4, Duration::from_secs(10));
         for i in 0..10 {
-            b.submit(req(i));
+            assert!(b.submit(req(i)));
         }
         b.close();
         assert_eq!(b.next_epoch().unwrap().len(), 4);

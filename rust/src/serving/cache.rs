@@ -1,0 +1,135 @@
+//! Bounded LRU cache for the serving hot path (no external deps in the
+//! build environment, so this is a small hand-rolled implementation).
+//!
+//! Recency is tracked with a monotone tick: `map` holds `key → (value,
+//! tick)` and `order` holds the inverse `tick → key`, so both lookup and
+//! eviction are O(log n) on `BTreeMap`s. That is plenty for a prediction
+//! cache whose hit path replaces a PJRT probe call (hundreds of µs), and
+//! keeps the structure trivially auditable.
+//!
+//! The cache is not internally synchronized — wrap it in the lock of the
+//! owning structure (see `scheduler::SchedulerShared`).
+
+use std::collections::BTreeMap;
+
+pub struct LruCache<K: Ord + Clone, V> {
+    capacity: usize,
+    map: BTreeMap<K, (V, u64)>,
+    order: BTreeMap<u64, K>,
+    tick: u64,
+}
+
+impl<K: Ord + Clone, V> LruCache<K, V> {
+    /// `capacity` 0 means "always empty": inserts are dropped, gets miss.
+    pub fn new(capacity: usize) -> Self {
+        Self { capacity, map: BTreeMap::new(), order: BTreeMap::new(), tick: 0 }
+    }
+
+    pub fn len(&self) -> usize {
+        self.map.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.map.is_empty()
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    fn next_tick(&mut self) -> u64 {
+        self.tick += 1;
+        self.tick
+    }
+
+    /// Look up `key`, refreshing its recency on a hit.
+    pub fn get(&mut self, key: &K) -> Option<&V> {
+        let tick = self.next_tick();
+        match self.map.get_mut(key) {
+            None => None,
+            Some((v, at)) => {
+                self.order.remove(at);
+                *at = tick;
+                self.order.insert(tick, key.clone());
+                Some(&*v)
+            }
+        }
+    }
+
+    /// Insert (or refresh) `key`, evicting the least-recently-used entry
+    /// when full.
+    pub fn insert(&mut self, key: K, value: V) {
+        if self.capacity == 0 {
+            return;
+        }
+        let tick = self.next_tick();
+        if let Some((_, old)) = self.map.insert(key.clone(), (value, tick)) {
+            self.order.remove(&old);
+        }
+        self.order.insert(tick, key);
+        while self.map.len() > self.capacity {
+            // first entry in `order` is the stalest tick
+            let (&stale, _) = self.order.iter().next().expect("order tracks map");
+            let victim = self.order.remove(&stale).expect("present");
+            self.map.remove(&victim);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn hit_and_miss() {
+        let mut c = LruCache::new(4);
+        assert!(c.get(&"a").is_none());
+        c.insert("a", 1);
+        assert_eq!(c.get(&"a"), Some(&1));
+        assert_eq!(c.len(), 1);
+    }
+
+    #[test]
+    fn evicts_least_recently_used() {
+        let mut c = LruCache::new(2);
+        c.insert("a", 1);
+        c.insert("b", 2);
+        // touch "a" so "b" is the LRU entry
+        assert!(c.get(&"a").is_some());
+        c.insert("c", 3);
+        assert_eq!(c.len(), 2);
+        assert!(c.get(&"b").is_none(), "LRU entry survived eviction");
+        assert_eq!(c.get(&"a"), Some(&1));
+        assert_eq!(c.get(&"c"), Some(&3));
+    }
+
+    #[test]
+    fn insert_refreshes_recency_and_value() {
+        let mut c = LruCache::new(2);
+        c.insert("a", 1);
+        c.insert("b", 2);
+        c.insert("a", 10); // refresh: "b" becomes LRU
+        c.insert("c", 3);
+        assert!(c.get(&"b").is_none());
+        assert_eq!(c.get(&"a"), Some(&10));
+    }
+
+    #[test]
+    fn capacity_zero_never_stores() {
+        let mut c = LruCache::new(0);
+        c.insert("a", 1);
+        assert!(c.get(&"a").is_none());
+        assert!(c.is_empty());
+    }
+
+    #[test]
+    fn capacity_one_churns() {
+        let mut c = LruCache::new(1);
+        for i in 0..10u64 {
+            c.insert(i, i * 2);
+            assert_eq!(c.len(), 1);
+            assert_eq!(c.get(&i), Some(&(i * 2)));
+        }
+        assert!(c.get(&0).is_none());
+    }
+}

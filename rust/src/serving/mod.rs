@@ -3,22 +3,32 @@
 //! [`procedure::DecodeProcedure`] (adaptive best-of-k or weak/strong
 //! routing), each composing predictor → allocator → generator →
 //! verifier/reranker plumbing. This is the paper's method embedded in a
-//! vLLM-shaped pipeline; `server/` exposes it over TCP.
+//! vLLM-shaped pipeline; `server/` exposes it over TCP, and [`shard`]
+//! replicates the scheduler across an engine-per-worker pool.
 
 pub mod batcher;
+pub mod cache;
 pub mod generator;
 pub mod procedure;
 pub mod scheduler;
+pub mod shard;
 
 use crate::config::ProcedureKind;
 
 /// A query admitted to the system.
 #[derive(Clone, Debug)]
 pub struct Request {
+    /// Internal request id, unique across the server's lifetime. Response
+    /// routing keys on this — never on the client-supplied id, which two
+    /// connections (or a pipelining client) may reuse.
     pub id: u64,
+    /// The id the client supplied, echoed verbatim in the response JSON.
+    pub client_id: u64,
     pub text: String,
     /// "code" | "math" | "chat" — selects probe head + verification mode.
     pub domain: String,
+    /// Admission timestamp in µs on the batcher's clock (0 = unstamped);
+    /// set by `Batcher::submit` so queue wait is observable.
     pub arrived_us: u64,
     /// Per-request decode-procedure override; None ⇒ the configured default.
     pub procedure: Option<ProcedureKind>,
@@ -28,6 +38,7 @@ impl Request {
     pub fn new(id: u64, text: impl Into<String>, domain: impl Into<String>) -> Request {
         Request {
             id,
+            client_id: id,
             text: text.into(),
             domain: domain.into(),
             arrived_us: 0,
@@ -39,10 +50,14 @@ impl Request {
 /// The served answer.
 #[derive(Clone, Debug)]
 pub struct Response {
+    /// Internal request id (mirrors [`Request::id`]) — the routing key.
     pub id: u64,
+    /// Client-supplied id, echoed on the wire as `"id"`.
+    pub client_id: u64,
     /// The selected best response ("" with ok=false ⇒ "I don't know").
     pub response: String,
     /// Binary domains: did the selected response verify?
+    /// Chat: was any candidate scored at all?
     pub ok: bool,
     /// Samples actually spent on this query.
     pub budget: usize,

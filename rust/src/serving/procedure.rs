@@ -177,13 +177,13 @@ impl DecodeProcedure for WeakStrongRoute {
                 preheated,
             )?;
             sched
-                .metrics
+                .metrics()
                 .histogram("serving.route.strong_us")
                 .record_ns(t_strong.elapsed().as_nanos() as u64);
             let mean_reward = responses.iter().map(|r| r.reward as f64).sum::<f64>()
                 / responses.len() as f64;
             sched
-                .metrics
+                .metrics()
                 .gauge(&format!("serving.route.reward_strong.{domain}"))
                 .set(mean_reward);
             for (&i, mut resp) in strong_idx.iter().zip(responses) {
@@ -203,9 +203,9 @@ impl DecodeProcedure for WeakStrongRoute {
             let wtexts: Vec<&str> =
                 weak_idx.iter().map(|&i| texts[i]).collect();
             let wprefs: Vec<f64> = weak_idx.iter().map(|&i| prefs[i]).collect();
-            let budgets = vec![sched.cfg.route.weak_budget; weak_idx.len()];
+            let budgets = vec![sched.cfg().route.weak_budget; weak_idx.len()];
             sched
-                .metrics
+                .metrics()
                 .counter("serving.units_allocated")
                 .add(budgets.iter().sum::<usize>() as u64);
             let samples = sched.generate(&wtexts, &budgets, rng)?;
@@ -220,13 +220,13 @@ impl DecodeProcedure for WeakStrongRoute {
                 ProcedureKind::WeakStrongRoute,
             )?;
             sched
-                .metrics
+                .metrics()
                 .histogram("serving.route.weak_us")
                 .record_ns(t_weak.elapsed().as_nanos() as u64);
             let mean_reward = responses.iter().map(|r| r.reward as f64).sum::<f64>()
                 / responses.len() as f64;
             sched
-                .metrics
+                .metrics()
                 .gauge(&format!("serving.route.reward_weak.{domain}"))
                 .set(mean_reward);
             for (&i, resp) in weak_idx.iter().zip(responses) {
@@ -234,14 +234,14 @@ impl DecodeProcedure for WeakStrongRoute {
             }
         }
 
-        let strong_c = sched.metrics.counter("serving.route.strong");
+        let strong_c = sched.metrics().counter("serving.route.strong");
         strong_c.add(strong_idx.len() as u64);
-        let weak_c = sched.metrics.counter("serving.route.weak");
+        let weak_c = sched.metrics().counter("serving.route.weak");
         weak_c.add(weak_idx.len() as u64);
         let total = strong_c.get() + weak_c.get();
         if total > 0 {
             sched
-                .metrics
+                .metrics()
                 .gauge("serving.route.strong_fraction")
                 .set(strong_c.get() as f64 / total as f64);
         }

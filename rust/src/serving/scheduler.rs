@@ -4,15 +4,23 @@
 //!     → partition_epoch → per-(domain, procedure) sub-epochs
 //!     → DecodeProcedure::serve per sub-epoch, each composing the shared
 //!       stage helpers below:
-//!         predict  — one fused encode+probe PJRT call per chunk
+//!         predict  — one fused encode+probe PJRT call per chunk, fronted
+//!                    by a bounded LRU cache keyed by (domain, text)
 //!         allocate — online eq. 5 / offline bins / uniform / oracle
 //!         generate — bᵢ samples per query over the decode executable
 //!         select   — binary: synthetic verifier picks any passing sample;
 //!                    chat: reward executable scores candidates, rerank
 //!                    reduce selects
 //!
+//! A `Scheduler` pairs one (thread-owned, `!Send`) [`Engine`] with an
+//! [`Arc<SchedulerShared>`]: the config, metrics and the lazily-fitted
+//! offline-policy / router / prediction caches. The shared half is what the
+//! engine-per-worker pool ([`super::shard`]) replicates *around* — policies
+//! are fitted once per domain for the whole pool, not once per worker.
+//!
 //! Budget accounting, latencies and allocation histograms land in the
-//! metrics registry (`serving.*`; routing splits under `serving.route.*`).
+//! metrics registry (`serving.*`; routing splits under `serving.route.*`;
+//! cache hits/misses under `serving.predict_cache.*`).
 
 use std::sync::Arc;
 use std::time::Instant;
@@ -21,6 +29,7 @@ use std::time::Instant;
 use anyhow::Result;
 
 use super::batcher::partition_epoch;
+use super::cache::LruCache;
 use super::generator::{self, GenConfig};
 use super::procedure::{AdaptiveBestOfK, DecodeProcedure, WeakStrongRoute};
 use super::{Request, Response};
@@ -37,8 +46,21 @@ use crate::runtime::{Artifact, Engine};
 use crate::tokenizer;
 use crate::workload;
 
-pub struct Scheduler {
-    pub engine: Engine,
+/// One cached probe output: a scalar λ̂/preference for binary domains, a Δ̂
+/// row for chat. Predictions are pure functions of (domain, text), so a hit
+/// is bit-identical to re-running the probe.
+#[derive(Clone, Debug)]
+enum CachedPred {
+    Lambda(f64),
+    Deltas(Vec<f64>),
+}
+
+/// State shared by every scheduler worker in a pool: immutable config and
+/// metrics, plus the lazily-fitted per-domain caches. Fits run outside the
+/// cache locks (they cost a held-out probe pass) with insert-if-absent on
+/// completion; fitting is deterministic, so a rare same-domain race wastes
+/// one fit but never produces divergent policies.
+pub struct SchedulerShared {
     pub cfg: Config,
     pub metrics: Arc<Registry>,
     /// Offline policies are fitted lazily per domain on generated held-out
@@ -46,17 +68,56 @@ pub struct Scheduler {
     offline: std::sync::Mutex<std::collections::BTreeMap<String, OfflinePolicy>>,
     /// Threshold routers are calibrated lazily per domain the same way.
     routers: std::sync::Mutex<std::collections::BTreeMap<String, ThresholdRouter>>,
+    /// Bounded LRU over probe outputs, keyed by (domain, text).
+    predict_cache: std::sync::Mutex<LruCache<(String, String), CachedPred>>,
 }
 
-impl Scheduler {
-    pub fn new(engine: Engine, cfg: Config, metrics: Arc<Registry>) -> Self {
-        Self {
-            engine,
+impl SchedulerShared {
+    pub fn new(cfg: Config, metrics: Arc<Registry>) -> Arc<Self> {
+        let cache_cap = cfg.server.predict_cache_capacity;
+        Arc::new(Self {
             cfg,
             metrics,
             offline: Default::default(),
             routers: Default::default(),
-        }
+            predict_cache: std::sync::Mutex::new(LruCache::new(cache_cap)),
+        })
+    }
+
+    /// Entries currently held by the prediction cache (telemetry/tests).
+    pub fn predict_cache_len(&self) -> usize {
+        self.predict_cache.lock().unwrap().len()
+    }
+}
+
+pub struct Scheduler {
+    pub engine: Engine,
+    shared: Arc<SchedulerShared>,
+}
+
+impl Scheduler {
+    /// Single-owner construction (tests, benches, experiment drivers): the
+    /// scheduler builds its own private shared state.
+    pub fn new(engine: Engine, cfg: Config, metrics: Arc<Registry>) -> Self {
+        Self::with_shared(engine, SchedulerShared::new(cfg, metrics))
+    }
+
+    /// Pool construction: one engine per worker, shared fitted-policy and
+    /// prediction caches across all of them.
+    pub fn with_shared(engine: Engine, shared: Arc<SchedulerShared>) -> Self {
+        Self { engine, shared }
+    }
+
+    pub fn cfg(&self) -> &Config {
+        &self.shared.cfg
+    }
+
+    pub fn metrics(&self) -> &Arc<Registry> {
+        &self.shared.metrics
+    }
+
+    pub fn shared(&self) -> &Arc<SchedulerShared> {
+        &self.shared
     }
 
     /// Resolve a procedure kind to its implementation.
@@ -76,7 +137,7 @@ impl Scheduler {
             return Ok(Vec::new());
         }
         let t0 = Instant::now();
-        let subs = partition_epoch(reqs, self.cfg.route.procedure);
+        let subs = partition_epoch(reqs, self.shared.cfg.route.procedure);
         let mut out: Vec<Option<Response>> = (0..reqs.len()).map(|_| None).collect();
         for sub in &subs {
             // borrow, don't clone: sub-epochs are views into the epoch
@@ -105,10 +166,11 @@ impl Scheduler {
                 }
                 Err(e) => {
                     eprintln!("sub-epoch ({}, {:?}) failed: {e:#}", sub.domain, sub.kind);
-                    self.metrics.counter("serving.subepoch_errors").inc();
+                    self.shared.metrics.counter("serving.subepoch_errors").inc();
                     for &i in &sub.indices {
                         out[i] = Some(Response {
                             id: reqs[i].id,
+                            client_id: reqs[i].client_id,
                             response: format!("error: {e}"),
                             ok: false,
                             budget: 0,
@@ -121,10 +183,11 @@ impl Scheduler {
                 }
             }
         }
-        self.metrics
+        self.shared
+            .metrics
             .histogram("serving.epoch_us")
             .record_ns(t0.elapsed().as_nanos() as u64);
-        self.metrics.counter("serving.queries").add(reqs.len() as u64);
+        self.shared.metrics.counter("serving.queries").add(reqs.len() as u64);
         out.into_iter()
             .map(|o| o.ok_or_else(|| anyhow::anyhow!("request missed by partition")))
             .collect()
@@ -135,18 +198,106 @@ impl Scheduler {
     /// Stage 1: difficulty prediction for a domain-homogeneous batch.
     /// Returns the allocator-shaped predictions plus their scalar view
     /// (λ̂ or Δ̂₁) used for offline bin lookup and response reporting.
+    ///
+    /// Fronted by the shared LRU prediction cache: repeat queries skip the
+    /// probe call entirely; a partial hit probes only the missing texts.
     pub fn predict(&self, domain: &str, texts: &[&str]) -> Result<(Predictions, Vec<f64>)> {
         let t_pred = Instant::now();
-        let predictor = Predictor::new(&self.engine);
-        let preds = predictor.predictions_for_domain(domain, texts)?;
+        let preds = if self.shared.cfg.server.predict_cache_capacity == 0 {
+            let predictor = Predictor::new(&self.engine);
+            predictor.predictions_for_domain(domain, texts)?
+        } else {
+            self.predict_cached(domain, texts)?
+        };
         let scalar_preds: Vec<f64> = match &preds {
             Predictions::Lambdas(l) => l.clone(),
             Predictions::Deltas(d) => d.rows.iter().map(|r| r[0]).collect(),
         };
-        self.metrics
+        self.shared
+            .metrics
             .histogram("serving.predict_us")
             .record_ns(t_pred.elapsed().as_nanos() as u64);
         Ok((preds, scalar_preds))
+    }
+
+    /// Cache-fronted prediction: look every text up, batch-probe only the
+    /// misses, reassemble in request order and remember the fresh rows.
+    fn predict_cached(&self, domain: &str, texts: &[&str]) -> Result<Predictions> {
+        let mut rows: Vec<Option<CachedPred>> = Vec::with_capacity(texts.len());
+        {
+            let mut cache = self.shared.predict_cache.lock().unwrap();
+            for t in texts {
+                rows.push(cache.get(&(domain.to_string(), t.to_string())).cloned());
+            }
+        }
+        let miss_idx: Vec<usize> =
+            (0..texts.len()).filter(|&i| rows[i].is_none()).collect();
+        let hits = texts.len() - miss_idx.len();
+        self.shared
+            .metrics
+            .counter("serving.predict_cache.hit")
+            .add(hits as u64);
+        self.shared
+            .metrics
+            .counter("serving.predict_cache.miss")
+            .add(miss_idx.len() as u64);
+
+        if !miss_idx.is_empty() {
+            let miss_texts: Vec<&str> = miss_idx.iter().map(|&i| texts[i]).collect();
+            let predictor = Predictor::new(&self.engine);
+            let fresh = predictor.predictions_for_domain(domain, &miss_texts)?;
+            let fresh_rows: Vec<CachedPred> = match fresh {
+                Predictions::Lambdas(ls) => {
+                    ls.into_iter().map(CachedPred::Lambda).collect()
+                }
+                Predictions::Deltas(d) => {
+                    d.rows.into_iter().map(CachedPred::Deltas).collect()
+                }
+            };
+            anyhow::ensure!(
+                fresh_rows.len() == miss_idx.len(),
+                "predictor returned {} rows for {} texts",
+                fresh_rows.len(),
+                miss_idx.len()
+            );
+            let mut cache = self.shared.predict_cache.lock().unwrap();
+            for (&i, row) in miss_idx.iter().zip(fresh_rows) {
+                cache.insert(
+                    (domain.to_string(), texts[i].to_string()),
+                    row.clone(),
+                );
+                rows[i] = Some(row);
+            }
+            self.shared
+                .metrics
+                .gauge("serving.predict_cache.size")
+                .set(cache.len() as f64);
+        }
+
+        // reassemble: every row of a domain-homogeneous batch has one shape
+        if domain == "chat" {
+            let mut d_rows = Vec::with_capacity(rows.len());
+            for r in rows {
+                match r.expect("filled above") {
+                    CachedPred::Deltas(d) => d_rows.push(d),
+                    CachedPred::Lambda(_) => {
+                        anyhow::bail!("scalar prediction cached for chat domain")
+                    }
+                }
+            }
+            Ok(Predictions::Deltas(DeltaMatrix::new(d_rows)))
+        } else {
+            let mut lams = Vec::with_capacity(rows.len());
+            for r in rows {
+                match r.expect("filled above") {
+                    CachedPred::Lambda(l) => lams.push(l),
+                    CachedPred::Deltas(_) => {
+                        anyhow::bail!("Δ row cached for scalar domain `{domain}`")
+                    }
+                }
+            }
+            Ok(Predictions::Lambdas(lams))
+        }
     }
 
     /// Stage 2: budget allocation under the configured policy.
@@ -157,7 +308,7 @@ impl Scheduler {
         scalar_preds: &[f64],
     ) -> Result<Vec<usize>> {
         let t_alloc = Instant::now();
-        let a = &self.cfg.allocator;
+        let a = &self.shared.cfg.allocator;
         let min_budget = if domain == "chat" { a.min_budget.max(1) } else { a.min_budget };
         let budgets: Vec<usize> = match a.policy {
             AllocPolicy::Uniform => {
@@ -183,10 +334,12 @@ impl Scheduler {
                     .collect()
             }
         };
-        self.metrics
+        self.shared
+            .metrics
             .histogram("serving.alloc_us")
             .record_ns(t_alloc.elapsed().as_nanos() as u64);
-        self.metrics
+        self.shared
+            .metrics
             .counter("serving.units_allocated")
             .add(budgets.iter().sum::<usize>() as u64);
         Ok(budgets)
@@ -202,11 +355,12 @@ impl Scheduler {
         let t_gen = Instant::now();
         let jobs = generator::jobs_for_allocation(texts, budgets);
         let gen_cfg = GenConfig {
-            max_new_tokens: self.cfg.server.max_new_tokens,
-            temperature: self.cfg.server.temperature,
+            max_new_tokens: self.shared.cfg.server.max_new_tokens,
+            temperature: self.shared.cfg.server.temperature,
         };
         let samples = generator::generate(&self.engine, &jobs, &gen_cfg, rng)?;
-        self.metrics
+        self.shared
+            .metrics
             .histogram("serving.generate_us")
             .record_ns(t_gen.elapsed().as_nanos() as u64);
         Ok(samples)
@@ -244,6 +398,7 @@ impl Scheduler {
                 let ok = best[i].is_some();
                 out.push(Response {
                     id: r.id,
+                    client_id: r.client_id,
                     response: best[i].clone().unwrap_or_default(),
                     ok,
                     budget: budgets[i],
@@ -255,14 +410,16 @@ impl Scheduler {
             }
             out
         };
-        self.metrics
+        self.shared
+            .metrics
             .histogram("serving.select_us")
             .record_ns(t_sel.elapsed().as_nanos() as u64);
         Ok(out)
     }
 
     /// Chat selection: score all candidates with the reward executable and
-    /// pick per-query argmax via the rerank reduce.
+    /// pick per-query argmax via the rerank reduce. A query with zero scored
+    /// candidates gets `ok: false` and reward 0.0 — never a sentinel score.
     fn select_by_reward(
         &self,
         reqs: &[&Request],
@@ -317,23 +474,26 @@ impl Scheduler {
         for (i, r) in reqs.iter().enumerate() {
             let row = &mat[i * k_max..(i + 1) * k_max];
             let mrow = &mask[i * k_max..(i + 1) * k_max];
-            let mut best = (0usize, f32::MIN);
+            let mut best: Option<(usize, f32)> = None;
             for j in 0..k_max {
-                if mrow[j] > 0.0 && row[j] > best.1 {
-                    best = (j, row[j]);
+                if mrow[j] > 0.0 && best.map_or(true, |(_, v)| row[j] > v) {
+                    best = Some((j, row[j]));
                 }
             }
-            let resp = cand_of[i]
-                .get(best.0)
-                .map(|&ci| samples[ci].text.clone())
-                .unwrap_or_default();
+            // masked slots are filled left-to-right, so a winning slot j
+            // always has a backing candidate in cand_of[i][j]
+            let (response, ok, reward) = match best {
+                Some((j, score)) => (samples[cand_of[i][j]].text.clone(), true, score),
+                None => (String::new(), false, 0.0),
+            };
             out.push(Response {
                 id: r.id,
-                response: resp,
-                ok: true,
+                client_id: r.client_id,
+                response,
+                ok,
                 budget: budgets[i],
                 predicted: scalar_preds[i],
-                reward: if best.1 == f32::MIN { 0.0 } else { best.1 },
+                reward,
                 latency_us: t0.elapsed().as_micros() as u64,
                 procedure: kind,
             });
@@ -350,7 +510,7 @@ impl Scheduler {
         let predictor = Predictor::new(&self.engine);
         match domain {
             "chat" => {
-                let kind = if self.cfg.route.use_vas_probe {
+                let kind = if self.shared.cfg.route.use_vas_probe {
                     ProbeKind::VasPreference
                 } else {
                     ProbeKind::RoutePreference
@@ -370,26 +530,35 @@ impl Scheduler {
 
     /// The calibrated per-domain threshold router (fitted on first use on a
     /// generated held-out workload, like the offline allocation policy).
+    /// The cache is pool-shared: one calibration per domain per pool.
+    ///
+    /// Fitting runs a full held-out probe pass, so it happens *outside* the
+    /// cache lock — holding it would stall workers needing other (already
+    /// fitted) domains. The fit is deterministic (seeded workload, pure
+    /// probes): two workers racing on the same cold domain produce identical
+    /// routers and the loser's insert is a no-op.
     pub fn router_for(&self, domain: &str) -> Result<ThresholdRouter> {
-        let mut cache = self.routers.lock().unwrap();
-        if let Some(r) = cache.get(domain) {
+        if let Some(r) = self.shared.routers.lock().unwrap().get(domain) {
             return Ok(r.clone());
         }
-        let rc = &self.cfg.route;
+        let rc = &self.shared.cfg.route;
         let held = workload::gen_dataset(domain, rc.heldout_n, rc.heldout_seed);
         let texts: Vec<&str> = held.iter().map(|q| q.text.as_str()).collect();
         let prefs = self.strong_preference(domain, &texts)?;
         let router = ThresholdRouter::fit(&prefs, rc.strong_fraction);
-        self.metrics
+        self.shared
+            .metrics
             .gauge(&format!("serving.route.threshold.{domain}"))
             .set(router.threshold);
-        cache.insert(domain.to_string(), router.clone());
-        Ok(router)
+        let mut cache = self.shared.routers.lock().unwrap();
+        let r = cache.entry(domain.to_string()).or_insert(router);
+        Ok(r.clone())
     }
 
+    /// Same locking discipline as [`Scheduler::router_for`]: check, fit
+    /// outside the lock (deterministic), insert-if-absent.
     fn offline_policy(&self, domain: &str) -> Result<OfflinePolicy> {
-        let mut cache = self.offline.lock().unwrap();
-        if let Some(p) = cache.get(domain) {
+        if let Some(p) = self.shared.offline.lock().unwrap().get(domain) {
             return Ok(p.clone());
         }
         // fit on a fresh held-out workload using the live predictor
@@ -398,7 +567,7 @@ impl Scheduler {
         let predictor = Predictor::new(&self.engine);
         let kind = ProbeKind::for_domain(domain)?;
         let scores = predictor.predict_scalar(kind, &texts)?;
-        let a = &self.cfg.allocator;
+        let a = &self.shared.cfg.allocator;
         let policy = OfflinePolicy::fit(
             &scores,
             &DeltaMatrix::from_lambdas(&scores, a.b_max),
@@ -406,8 +575,9 @@ impl Scheduler {
             a.budget_per_query,
             crate::allocator::AllocConstraints::new(0, a.b_max, a.min_budget),
         );
-        cache.insert(domain.to_string(), policy.clone());
-        Ok(policy)
+        let mut cache = self.shared.offline.lock().unwrap();
+        let p = cache.entry(domain.to_string()).or_insert(policy);
+        Ok(p.clone())
     }
 }
 

@@ -1,0 +1,154 @@
+//! Sharded scheduler worker pool: N threads, each constructing and owning
+//! its own (`!Send`) [`Engine`] — the actor pattern the single scheduler
+//! thread used, replicated — all draining one shared [`Batcher`]
+//! concurrently. Independent mixed-domain epochs therefore execute their
+//! PJRT calls in parallel; what stays shared is the [`SchedulerShared`]
+//! half (config, metrics, fitted offline/router policies, the prediction
+//! cache), so per-domain calibration happens once per pool, not once per
+//! worker.
+//!
+//! Delivery is through an [`EpochSink`]: the TCP server routes responses
+//! back to their originating connection, benches count them. Per-worker
+//! telemetry lands under labelled names (`serving.epochs…worker.<i>`, see
+//! [`crate::metrics::Registry::worker`]); queue wait is recorded from the
+//! `arrived_us` stamps the batcher put on each request.
+//!
+//! Determinism: worker 0 seeds its sampling rng with the same constant the
+//! old single scheduler thread used, so a pool of `workers = 1` reproduces
+//! the previous serving behaviour bit-for-bit. Additional workers derive
+//! disjoint streams from their index.
+
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::Instant;
+
+use crate::prng::Pcg64;
+use crate::runtime::Engine;
+use crate::serving::batcher::Batcher;
+use crate::serving::scheduler::{Scheduler, SchedulerShared};
+use crate::serving::{Request, Response};
+
+/// Seed of worker 0's sampling rng — the historical single-scheduler seed.
+pub const WORKER_SEED: u64 = 0x5E7E;
+
+/// Where a worker delivers its results. Implementations must be cheap and
+/// non-blocking-ish: they run on the worker thread between epochs.
+pub trait EpochSink: Send + Sync + 'static {
+    /// A worker finished compiling its engine and is about to start
+    /// draining (benches use this to exclude startup from measurements).
+    fn on_worker_ready(&self, _worker: usize) {}
+
+    fn on_response(&self, resp: Response);
+    /// A whole epoch failed; `elapsed` is the real time spent serving it
+    /// (stamp it on error responses — never report `latency_us: 0`).
+    fn on_epoch_error(
+        &self,
+        epoch: &[Request],
+        err: &anyhow::Error,
+        elapsed: std::time::Duration,
+    );
+    /// A worker could not construct its engine and is exiting.
+    fn on_fatal(&self, worker: usize, err: &anyhow::Error);
+}
+
+/// Per-worker sampling-rng seed: worker 0 keeps [`WORKER_SEED`] exactly
+/// (bit-for-bit compatibility at `workers = 1`); higher workers get
+/// golden-ratio-scrambled disjoint seeds.
+pub fn worker_seed(worker: usize) -> u64 {
+    WORKER_SEED ^ (worker as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15)
+}
+
+pub struct ShardPool {
+    handles: Vec<JoinHandle<()>>,
+}
+
+impl ShardPool {
+    /// Spawn `workers` scheduler threads. Each compiles its own engine from
+    /// `shared.cfg.runtime` (startup cost scales with the pool), then drains
+    /// `batcher` until it is closed and empty.
+    pub fn spawn(
+        workers: usize,
+        batcher: Arc<Batcher>,
+        shared: Arc<SchedulerShared>,
+        sink: Arc<dyn EpochSink>,
+    ) -> ShardPool {
+        assert!(workers >= 1, "a pool needs at least one worker");
+        let handles = (0..workers)
+            .map(|w| {
+                let batcher = batcher.clone();
+                let shared = shared.clone();
+                let sink = sink.clone();
+                std::thread::Builder::new()
+                    .name(format!("sched-worker-{w}"))
+                    .spawn(move || worker_loop(w, &batcher, shared, &*sink))
+                    .expect("spawn scheduler worker")
+            })
+            .collect();
+        ShardPool { handles }
+    }
+
+    pub fn workers(&self) -> usize {
+        self.handles.len()
+    }
+
+    /// Wait for every worker to exit (they exit when the batcher is closed
+    /// and drained, or on a fatal engine-load error).
+    pub fn join(self) {
+        for h in self.handles {
+            let _ = h.join();
+        }
+    }
+}
+
+fn worker_loop(
+    worker: usize,
+    batcher: &Batcher,
+    shared: Arc<SchedulerShared>,
+    sink: &dyn EpochSink,
+) {
+    let engine = match Engine::load_all(&shared.cfg.runtime) {
+        Ok(e) => e,
+        Err(e) => {
+            sink.on_fatal(worker, &e);
+            return;
+        }
+    };
+    sink.on_worker_ready(worker);
+    let metrics = shared.metrics.clone();
+    let scheduler = Scheduler::with_shared(engine, shared);
+    let mut rng = Pcg64::new(worker_seed(worker));
+    let epochs = metrics.worker(worker).counter("serving.epochs");
+    let busy = metrics.worker(worker).histogram("serving.busy_us");
+    let queue_wait = metrics.histogram("serving.queue_wait_us");
+    while let Some(epoch) = batcher.next_epoch() {
+        let now_us = batcher.now_us();
+        for r in &epoch {
+            queue_wait.record_ns(now_us.saturating_sub(r.arrived_us) * 1_000);
+        }
+        let t0 = Instant::now();
+        match scheduler.serve_epoch(&epoch, &mut rng) {
+            Ok(responses) => {
+                for resp in responses {
+                    sink.on_response(resp);
+                }
+            }
+            Err(e) => sink.on_epoch_error(&epoch, &e, t0.elapsed()),
+        }
+        epochs.inc();
+        busy.record_ns(t0.elapsed().as_nanos() as u64);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn worker_zero_keeps_historical_seed() {
+        assert_eq!(worker_seed(0), 0x5E7E);
+        // higher workers get distinct streams
+        let seeds: std::collections::BTreeSet<u64> =
+            (0..16).map(worker_seed).collect();
+        assert_eq!(seeds.len(), 16);
+    }
+}

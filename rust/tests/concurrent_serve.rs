@@ -1,0 +1,259 @@
+//! Concurrent-serving integration: response routing under duplicate client
+//! ids across (and within) connections, multi-consumer batcher draining,
+//! and prediction-cache behaviour over repeated epochs. Model-dependent
+//! tests skip gracefully without artifacts; the batcher test always runs.
+
+use std::path::PathBuf;
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+use thinkalloc::config::{AllocPolicy, Config};
+use thinkalloc::jsonio::Json;
+use thinkalloc::metrics::Registry;
+use thinkalloc::prng::Pcg64;
+use thinkalloc::runtime::Engine;
+use thinkalloc::serving::batcher::Batcher;
+use thinkalloc::serving::scheduler::Scheduler;
+use thinkalloc::serving::Request;
+use thinkalloc::server::{Client, Server};
+use thinkalloc::workload;
+
+fn artifacts_dir() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+macro_rules! skip_without_artifacts {
+    () => {
+        if !artifacts_dir().join("MANIFEST.json").exists() {
+            eprintln!("skipping: artifacts not built (run `make artifacts`)");
+            return;
+        }
+    };
+}
+
+/// Two drainer threads over one batcher: every submitted request is
+/// delivered to exactly one drainer — nothing lost, nothing duplicated.
+#[test]
+fn batcher_two_drainers_no_loss_no_duplication() {
+    const N: u64 = 200;
+    let b = Arc::new(Batcher::new(8, Duration::from_millis(20)));
+    let seen = Arc::new(Mutex::new(Vec::<u64>::new()));
+
+    let drainers: Vec<_> = (0..2)
+        .map(|_| {
+            let b = b.clone();
+            let seen = seen.clone();
+            std::thread::spawn(move || {
+                while let Some(epoch) = b.next_epoch() {
+                    let mut s = seen.lock().unwrap();
+                    s.extend(epoch.iter().map(|r| r.id));
+                }
+            })
+        })
+        .collect();
+
+    let producers: Vec<_> = (0..2)
+        .map(|p| {
+            let b = b.clone();
+            std::thread::spawn(move || {
+                for i in 0..N / 2 {
+                    assert!(b.submit(Request::new(p * (N / 2) + i, "ADD 1 2", "code")));
+                    if i % 16 == 0 {
+                        std::thread::sleep(Duration::from_millis(1));
+                    }
+                }
+            })
+        })
+        .collect();
+    for p in producers {
+        p.join().unwrap();
+    }
+    b.close();
+    for d in drainers {
+        d.join().unwrap();
+    }
+
+    let mut ids = Arc::try_unwrap(seen).unwrap().into_inner().unwrap();
+    assert_eq!(ids.len(), N as usize, "lost or duplicated requests");
+    ids.sort_unstable();
+    ids.dedup();
+    assert_eq!(ids.len(), N as usize, "duplicated request ids");
+    assert_eq!(*ids.first().unwrap(), 0);
+    assert_eq!(*ids.last().unwrap(), N - 1);
+}
+
+/// Two connections reuse the same client id (and one pipelines a duplicate
+/// id); each must receive exactly its own responses. The decode procedure
+/// is the discriminator: client A pins "adaptive", client B pins "route" —
+/// a misrouted response carries the wrong procedure stamp.
+#[test]
+fn duplicate_client_ids_route_to_their_own_connection() {
+    skip_without_artifacts!();
+    let mut cfg = Config::default();
+    cfg.runtime.artifacts_dir = artifacts_dir();
+    cfg.allocator.policy = AllocPolicy::Online;
+    cfg.allocator.budget_per_query = 2.0;
+    cfg.allocator.b_max = 8;
+    cfg.server.addr = "127.0.0.1:0".into();
+    cfg.server.batch_queries = 4;
+    cfg.server.max_wait_ms = 20;
+    cfg.server.workers = 2; // exercise the shard pool, not just one drainer
+    cfg.validate().unwrap();
+
+    let server = Server::new(cfg, Arc::new(Registry::default()));
+    let (tx, rx) = std::sync::mpsc::channel();
+    let srv = server.clone();
+    let handle = std::thread::spawn(move || srv.run(|a| tx.send(a).unwrap()));
+    let addr = rx.recv().unwrap();
+
+    let mut a = Client::connect(&addr).unwrap();
+    let mut b = Client::connect(&addr).unwrap();
+    // fail fast instead of hanging if a response is misdelivered
+    a.set_read_timeout(Some(Duration::from_secs(120))).unwrap();
+    b.set_read_timeout(Some(Duration::from_secs(120))).unwrap();
+
+    // same client id 7 everywhere; A additionally pipelines a duplicate
+    a.request_with_procedure(7, "ADD 1 2", "code", "adaptive").unwrap();
+    a.request_with_procedure(7, "ADD 2 3", "code", "adaptive").unwrap();
+    b.request_with_procedure(7, "ADD 9 9", "code", "route").unwrap();
+    b.request_with_procedure(7, "REV xy", "code", "route").unwrap();
+
+    for _ in 0..2 {
+        let resp = a.read_response().expect("client A response");
+        assert_eq!(resp.get("id").and_then(Json::as_f64), Some(7.0));
+        assert_eq!(
+            resp.get("procedure").and_then(Json::as_str),
+            Some("adaptive"),
+            "client A received a response routed for client B: {resp:?}"
+        );
+    }
+    for _ in 0..2 {
+        let resp = b.read_response().expect("client B response");
+        assert_eq!(resp.get("id").and_then(Json::as_f64), Some(7.0));
+        assert_eq!(
+            resp.get("procedure").and_then(Json::as_str),
+            Some("route"),
+            "client B received a response routed for client A: {resp:?}"
+        );
+    }
+
+    // metrics round-trip still works through the escaped command path
+    let metrics = a.command("metrics").unwrap();
+    assert!(metrics.get("counter.serving.queries").is_some());
+    a.command("shutdown").unwrap();
+    let _ = handle.join();
+}
+
+/// Stress: four clients hammer the workers=2 pool concurrently, interleaved
+/// over mixed domains; every client gets back exactly its own id set.
+#[test]
+fn multi_client_stress_each_client_gets_its_own_responses() {
+    skip_without_artifacts!();
+    const CLIENTS: u64 = 4;
+    const PER_CLIENT: u64 = 8;
+    let mut cfg = Config::default();
+    cfg.runtime.artifacts_dir = artifacts_dir();
+    cfg.allocator.policy = AllocPolicy::Online;
+    cfg.allocator.budget_per_query = 2.0;
+    cfg.allocator.b_max = 8;
+    cfg.server.addr = "127.0.0.1:0".into();
+    cfg.server.batch_queries = 8;
+    cfg.server.max_wait_ms = 10;
+    cfg.server.workers = 2;
+    cfg.validate().unwrap();
+
+    let server = Server::new(cfg, Arc::new(Registry::default()));
+    let (tx, rx) = std::sync::mpsc::channel();
+    let srv = server.clone();
+    let handle = std::thread::spawn(move || srv.run(|a| tx.send(a).unwrap()));
+    let addr = rx.recv().unwrap();
+
+    let workers: Vec<_> = (0..CLIENTS)
+        .map(|c| {
+            let addr = addr.clone();
+            std::thread::spawn(move || {
+                let mut client = Client::connect(&addr).unwrap();
+                client
+                    .set_read_timeout(Some(Duration::from_secs(120)))
+                    .unwrap();
+                let domains = ["code", "math", "chat"];
+                for i in 0..PER_CLIENT {
+                    let id = c * 100 + i;
+                    let text = match domains[(i % 3) as usize] {
+                        "chat" => format!("CHAT hello {c} {i}"),
+                        _ => format!("ADD {} {}", c + 1, i + 1),
+                    };
+                    client
+                        .request(id, &text, domains[(i % 3) as usize])
+                        .unwrap();
+                }
+                let mut got = std::collections::BTreeSet::new();
+                for _ in 0..PER_CLIENT {
+                    let resp = client.read_response().expect("response");
+                    let id = resp.get("id").and_then(Json::as_f64).unwrap() as u64;
+                    assert!(
+                        (c * 100..c * 100 + PER_CLIENT).contains(&id),
+                        "client {c} received foreign id {id}"
+                    );
+                    assert!(got.insert(id), "client {c} received id {id} twice");
+                }
+                assert_eq!(got.len(), PER_CLIENT as usize);
+            })
+        })
+        .collect();
+    for w in workers {
+        w.join().unwrap();
+    }
+
+    let mut c = Client::connect(&addr).unwrap();
+    c.command("shutdown").unwrap();
+    let _ = handle.join();
+}
+
+/// Repeating an epoch hits the prediction cache: the second pass skips the
+/// probe call for every query and reports identical predictions.
+#[test]
+fn predict_cache_hits_on_repeated_epoch() {
+    skip_without_artifacts!();
+    let mut cfg = Config::default();
+    cfg.runtime.artifacts_dir = artifacts_dir();
+    cfg.allocator.policy = AllocPolicy::Online;
+    cfg.allocator.budget_per_query = 2.0;
+    cfg.allocator.b_max = 8;
+    cfg.server.predict_cache_capacity = 1024;
+
+    let metrics = Arc::new(Registry::default());
+    let engine = Engine::load_all(&cfg.runtime).unwrap();
+    let scheduler = Scheduler::new(engine, cfg, metrics.clone());
+    let mut rng = Pcg64::new(33);
+    let batch: Vec<Request> = workload::gen_mixed_dataset(&["code", "chat"], 24, 77)
+        .into_iter()
+        .enumerate()
+        .map(|(i, q)| Request::new(i as u64, q.text, q.domain))
+        .collect();
+
+    let distinct = batch
+        .iter()
+        .map(|r| (r.domain.clone(), r.text.clone()))
+        .collect::<std::collections::BTreeSet<_>>()
+        .len();
+
+    let first = scheduler.serve_epoch(&batch, &mut rng).unwrap();
+    let miss_after_first = metrics.counter("serving.predict_cache.miss").get();
+    assert_eq!(metrics.counter("serving.predict_cache.hit").get(), 0);
+    assert_eq!(miss_after_first, 24, "cold epoch must probe every query");
+    assert_eq!(scheduler.shared().predict_cache_len(), distinct);
+
+    let second = scheduler.serve_epoch(&batch, &mut rng).unwrap();
+    assert_eq!(
+        metrics.counter("serving.predict_cache.miss").get(),
+        miss_after_first,
+        "warm epoch should not probe"
+    );
+    assert_eq!(metrics.counter("serving.predict_cache.hit").get(), 24);
+    // cached predictions are bit-identical to the probe's output
+    for (f, s) in first.iter().zip(&second) {
+        assert_eq!(f.predicted, s.predicted, "id {}", f.id);
+        assert_eq!(f.budget, s.budget, "id {}", f.id);
+    }
+}

@@ -60,7 +60,7 @@ fn routed_mixed_stream_hits_target_fraction() {
     let batcher = Batcher::new(64, Duration::from_secs(30));
     let queries = workload::gen_mixed_dataset(&["code", "math", "chat"], N, 0x5EED);
     for (i, q) in queries.iter().enumerate() {
-        batcher.submit(Request::new(i as u64, q.text.clone(), q.domain));
+        assert!(batcher.submit(Request::new(i as u64, q.text.clone(), q.domain)));
     }
     batcher.close();
 
