@@ -44,7 +44,8 @@ fn main() -> anyhow::Result<()> {
         let t0 = std::time::Instant::now();
         let mut solved = 0usize;
         for chunk in reqs.chunks(64) {
-            let responses = scheduler.serve_epoch(chunk, &mut rng)?;
+            let responses =
+                scheduler.serve_epoch(chunk, &mut rng, scheduler.effective_budget())?;
             solved += responses.iter().filter(|r| r.ok).count();
         }
         let wall = t0.elapsed().as_secs_f64();

@@ -47,7 +47,7 @@ fn main() -> anyhow::Result<()> {
         let mut reward_sum = 0.0f64;
         let mut chat_n = 0usize;
         for chunk in reqs.chunks(64) {
-            for r in scheduler.serve_epoch(chunk, &mut rng)? {
+            for r in scheduler.serve_epoch(chunk, &mut rng, scheduler.effective_budget())? {
                 if reqs[r.id as usize].domain == "chat" {
                     reward_sum += r.reward as f64;
                     chat_n += 1;

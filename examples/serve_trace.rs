@@ -1,27 +1,38 @@
 //! End-to-end serving validation (DESIGN.md §7): start the full TCP stack,
-//! replay a workload trace of batched requests through real sockets, and
-//! report latency percentiles, throughput and quality vs the allocation
-//! policy.
+//! replay a Poisson workload trace through real sockets *with arrival
+//! pacing* (open-loop load, the standard serving-benchmark model), and
+//! report latency percentiles, queue wait, throughput and quality vs the
+//! allocation policy — optionally with the load-adaptive budget controller
+//! steering the effective budget.
 //!
-//!   cargo run --release --offline --example serve_trace -- [n] [policy] [budget]
+//!   cargo run --release --offline --example serve_trace -- \
+//!       [n] [policy] [budget] [rate_qps] [controller]
+//!
+//! `rate_qps` 0 (the default) submits the whole trace at once (closed-loop,
+//! the historical behaviour); a positive rate generates Poisson arrivals at
+//! that offered load and sleeps between submits. Passing `controller` as
+//! the fifth argument enables the `[controller]` feedback loop so the
+//! effective budget adapts to queue pressure.
 //!
 //! Everything is live: the TinyLM trained at `make artifacts` predicts
 //! difficulty, the allocator splits the budget, the decode executable
 //! generates candidates, the synthetic verifier checks them.
 
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 use thinkalloc::config::Config;
 use thinkalloc::jsonio::Json;
 use thinkalloc::metrics::Registry;
 use thinkalloc::server::{Client, Server};
-use thinkalloc::workload;
+use thinkalloc::workload::trace::Trace;
 
 fn main() -> anyhow::Result<()> {
     let args: Vec<String> = std::env::args().skip(1).collect();
     let n: usize = args.first().map(|s| s.parse()).transpose()?.unwrap_or(96);
     let policy = args.get(1).cloned().unwrap_or_else(|| "online".into());
     let budget: f64 = args.get(2).map(|s| s.parse()).transpose()?.unwrap_or(4.0);
+    let rate: f64 = args.get(3).map(|s| s.parse()).transpose()?.unwrap_or(0.0);
+    let controller = args.get(4).map(String::as_str) == Some("controller");
 
     let mut cfg = Config::default();
     cfg.server.addr = "127.0.0.1:0".into(); // ephemeral port
@@ -30,6 +41,14 @@ fn main() -> anyhow::Result<()> {
     cfg.allocator.policy = policy.parse()?;
     cfg.allocator.budget_per_query = budget;
     cfg.allocator.b_max = 16;
+    if controller {
+        cfg.controller.enabled = true;
+        cfg.controller.target_queue_wait_ms = 50.0;
+        cfg.controller.min_budget = 1.0;
+        cfg.controller.max_budget = budget.max(1.0);
+        cfg.controller.gain = 0.5;
+        cfg.controller.ewma_window = 4;
+    }
 
     let metrics = std::sync::Arc::new(Registry::default());
     let server = Server::new(cfg, metrics);
@@ -39,14 +58,26 @@ fn main() -> anyhow::Result<()> {
         srv.run(|addr| addr_tx.send(addr).unwrap()).unwrap();
     });
     let addr = addr_rx.recv()?;
-    println!("server ready on {addr} (policy {policy}, B={budget})");
+    println!(
+        "server ready on {addr} (policy {policy}, B={budget}, rate {}, controller {})",
+        if rate > 0.0 { format!("{rate} q/s") } else { "closed-loop".into() },
+        if controller { "on" } else { "off" },
+    );
 
-    // trace: mixed code workload, replayed over one connection
-    let qs = workload::gen_dataset("code", n, 777);
+    // Poisson trace: binary-domain mix so responses are verifiable. A zero
+    // rate degenerates to "submit everything now".
+    let trace = Trace::poisson(n, if rate > 0.0 { rate } else { 1e9 }, (0.7, 0.3, 0.0), 777);
     let mut client = Client::connect(&addr)?;
     let t0 = Instant::now();
-    for (i, q) in qs.iter().enumerate() {
-        client.request(i as u64, &q.text, "code")?;
+    for (i, e) in trace.entries.iter().enumerate() {
+        if rate > 0.0 {
+            let due = Duration::from_micros(e.at_us);
+            let elapsed = t0.elapsed();
+            if due > elapsed {
+                std::thread::sleep(due - elapsed);
+            }
+        }
+        client.request(i as u64, &e.text, &e.domain)?;
     }
     let mut solved = 0usize;
     let mut latencies: Vec<f64> = Vec::with_capacity(n);
@@ -69,7 +100,14 @@ fn main() -> anyhow::Result<()> {
     let pct = |q: f64| latencies[((latencies.len() - 1) as f64 * q) as usize];
 
     println!("\n== serve_trace report ==");
-    println!("queries:        {n}");
+    println!(
+        "queries:        {n} ({})",
+        if rate > 0.0 {
+            format!("offered {:.1} q/s", trace.offered_rate())
+        } else {
+            "closed-loop".to_string()
+        }
+    );
     println!("solved:         {solved} ({:.1}%)", 100.0 * solved as f64 / n as f64);
     println!("samples used:   {budgets_used} (avg {:.2}/query)", budgets_used as f64 / n as f64);
     println!("throughput:     {:.1} queries/s", n as f64 / wall);
@@ -79,6 +117,17 @@ fn main() -> anyhow::Result<()> {
     if let Some(h) = m.get("hist.serving.epoch_us") {
         println!("epoch time:     {}µs p50 (server-side)",
             h.get("p50_us").and_then(Json::as_f64).unwrap_or(0.0) as u64);
+    }
+    if let Some(h) = m.get("hist.serving.queue_wait_us") {
+        println!("queue wait:     {}µs p90 (server-side)",
+            h.get("p90_us").and_then(Json::as_f64).unwrap_or(0.0) as u64);
+    }
+    if let Some(b) = m.get("gauge.serving.controller.budget").and_then(Json::as_f64) {
+        let e = m
+            .get("gauge.serving.controller.error")
+            .and_then(Json::as_f64)
+            .unwrap_or(0.0);
+        println!("controller:     effective budget {b:.2} (smoothed error {e:+.2})");
     }
     client.command("shutdown")?;
     let _ = handle.join();

@@ -7,6 +7,12 @@
 //! workers=1 vs workers=4 draining one shared batcher (engine compile time
 //! excluded via the `on_worker_ready` hook), plus a prediction-cache
 //! cold/warm pass.
+//!
+//! Final section: the load-adaptive budget controller under overload — a
+//! Poisson trace offered at ~2× the measured sustainable rate, replayed
+//! with real arrival pacing, fixed budget vs controller-steered budget.
+//! The fixed run's queue wait diverges (open-loop overload); the controller
+//! trades per-query budget for queue wait and holds p95 near its target.
 
 #[path = "harness/mod.rs"]
 mod harness;
@@ -25,6 +31,7 @@ use thinkalloc::serving::scheduler::{Scheduler, SchedulerShared};
 use thinkalloc::serving::shard::{EpochSink, ShardPool};
 use thinkalloc::serving::{Request, Response};
 use thinkalloc::workload;
+use thinkalloc::workload::trace::Trace;
 
 /// Counting sink for pool benches: tracks ready workers and responses.
 /// Failures are recorded, not panicked — a panic on a worker thread would
@@ -75,6 +82,48 @@ fn pool_config() -> Config {
     // measure raw epoch throughput; the cache pass below measures caching
     cfg.server.predict_cache_capacity = 0;
     cfg
+}
+
+/// Replay a timed trace through a one-worker pool with real arrival pacing
+/// (open-loop: requests are submitted at their trace offsets regardless of
+/// completion). Returns the pool's metrics registry and the wall time from
+/// trace start to last response.
+fn run_trace_pool(trace: &Trace, cfg: Config) -> (Arc<Registry>, Duration) {
+    let metrics = Arc::new(Registry::default());
+    let batcher = Arc::new(Batcher::new(
+        cfg.server.batch_queries,
+        Duration::from_millis(cfg.server.max_wait_ms),
+    ));
+    let shared = SchedulerShared::new(cfg, metrics.clone());
+    let sink = Arc::new(CountSink {
+        ready: AtomicUsize::new(0),
+        responses: AtomicUsize::new(0),
+        failure: std::sync::Mutex::new(None),
+    });
+    let pool = ShardPool::spawn(1, batcher.clone(), shared, sink.clone());
+    while sink.ready.load(Ordering::SeqCst) < 1 {
+        sink.check();
+        std::thread::sleep(Duration::from_millis(20));
+    }
+    let t0 = Instant::now();
+    for (i, e) in trace.entries.iter().enumerate() {
+        let due = Duration::from_micros(e.at_us);
+        let elapsed = t0.elapsed();
+        if due > elapsed {
+            std::thread::sleep(due - elapsed);
+        }
+        assert!(batcher.submit(Request::new(i as u64, e.text.clone(), e.domain.clone())));
+    }
+    batcher.close();
+    pool.join();
+    let dt = t0.elapsed();
+    sink.check();
+    assert_eq!(
+        sink.responses.load(Ordering::SeqCst),
+        trace.entries.len(),
+        "trace pool lost or duplicated responses"
+    );
+    (metrics, dt)
 }
 
 /// Run `reqs` through a `workers`-wide shard pool; returns wall time from
@@ -137,7 +186,9 @@ fn main() {
         let mut rng = Pcg64::new(9);
         let mut solved_total = 0usize;
         let r = bench(&format!("serve_epoch [{policy:?}]"), 6, || {
-            let out = scheduler.serve_epoch(&reqs, &mut rng).unwrap();
+            let out = scheduler
+                .serve_epoch(&reqs, &mut rng, scheduler.effective_budget())
+                .unwrap();
             solved_total += out.iter().filter(|o| o.ok).count();
         });
         r.print_with_throughput("queries", 32.0);
@@ -185,10 +236,14 @@ fn main() {
     let scheduler = Scheduler::new(engine, cfg, metrics.clone());
     let mut rng = Pcg64::new(17);
     let t_cold = Instant::now();
-    scheduler.serve_epoch(&reqs, &mut rng).unwrap();
+    scheduler
+        .serve_epoch(&reqs, &mut rng, scheduler.effective_budget())
+        .unwrap();
     let cold = t_cold.elapsed();
     let t_warm = Instant::now();
-    scheduler.serve_epoch(&reqs, &mut rng).unwrap();
+    scheduler
+        .serve_epoch(&reqs, &mut rng, scheduler.effective_budget())
+        .unwrap();
     let warm = t_warm.elapsed();
     println!(
         "  cold {:.1} ms, warm {:.1} ms | predict_cache hit {} miss {}",
@@ -197,4 +252,54 @@ fn main() {
         metrics.counter("serving.predict_cache.hit").get(),
         metrics.counter("serving.predict_cache.miss").get(),
     );
+
+    // --- budget controller under 2× overload: fixed vs adaptive budget ------
+    // Calibrate the sustainable rate with a closed-loop pool run under the
+    // *same* fixed budget the overload baseline will use (B = 4; the earlier
+    // pool section ran at B = 2, whose throughput would be ~2× too high).
+    // The Poisson trace then offers twice that, so a fixed budget must queue.
+    let mut cal_cfg = pool_config();
+    cal_cfg.allocator.budget_per_query = 4.0;
+    let cal_dt = run_pool(1, &mixed, cal_cfg);
+    let sustain_qps = mixed.len() as f64 / cal_dt.as_secs_f64();
+    section(&format!(
+        "budget controller: Poisson trace at 2× sustainable ({sustain_qps:.0} q/s \
+         at fixed B=4)"
+    ));
+    let trace = Trace::poisson(192, sustain_qps * 2.0, (0.6, 0.4, 0.0), 0xC0DE);
+    let mut p95 = Vec::new();
+    for enabled in [false, true] {
+        let mut cfg = pool_config();
+        cfg.allocator.budget_per_query = 4.0;
+        cfg.controller.enabled = enabled;
+        cfg.controller.target_queue_wait_ms = 30.0;
+        cfg.controller.min_budget = 1.0;
+        cfg.controller.max_budget = 4.0;
+        cfg.controller.gain = 0.5;
+        cfg.controller.ewma_window = 4;
+        let (metrics, dt) = run_trace_pool(&trace, cfg);
+        let hist = metrics.histogram("serving.queue_wait_us");
+        let p95_us = hist.percentile_us(0.95);
+        let budget_now = metrics.gauge("serving.controller.budget").get();
+        println!(
+            "  controller={}: drained in {:>7.1} ms | queue wait p50 {:>9.0}µs \
+             p95 {:>9.0}µs | final budget {}",
+            if enabled { "on " } else { "off" },
+            dt.as_secs_f64() * 1e3,
+            hist.percentile_us(0.5),
+            p95_us,
+            if enabled {
+                format!("{budget_now:.2}")
+            } else {
+                "4.00 (fixed)".to_string()
+            },
+        );
+        p95.push(p95_us);
+    }
+    if let [off, on] = p95.as_slice() {
+        println!(
+            "  p95 queue wait: fixed {off:.0}µs vs controller {on:.0}µs ({:.2}×)",
+            off / on.max(1.0)
+        );
+    }
 }

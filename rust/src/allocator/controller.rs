@@ -1,0 +1,375 @@
+//! Load-adaptive budget controller: feedback control of the per-query
+//! budget B *across* allocation epochs.
+//!
+//! The paper allocates compute adaptively *within* a batch (eq. 5) under a
+//! fixed per-batch budget B. A production deployment also has to adapt B
+//! *across time*: when the admission queue backs up, every unit of per-query
+//! budget buys latency for everyone behind it; when the queue is empty, the
+//! hardware has slack that should be spent on quality. This module lifts the
+//! paper's "spend compute where it buys the most reward" principle one level
+//! up — the same marginal-value reasoning, applied to the budget knob itself.
+//!
+//! Control law (one update per served epoch):
+//!
+//! 1. Observe a pressure signal from live serving telemetry — either the
+//!    epoch's worst queue wait ([`ControllerTarget::QueueWait`], the default)
+//!    or the realized generated-token throughput
+//!    ([`ControllerTarget::TokensPerS`]).
+//! 2. Form the relative error `e = (observed − target) / target`, clamped to
+//!    [`ERR_CLAMP`] so one pathological epoch cannot slam the budget.
+//! 3. Smooth it with an EWMA over `ewma_window` epochs
+//!    (`α = 2 / (window + 1)`, the standard span convention).
+//! 4. Apply a multiplicative-decrease/multiplicative-increase step
+//!    `B ← clamp(B · exp(−gain · ē), min_budget, max_budget)`.
+//!
+//! The exponential step makes the response *monotone* in the observed
+//! pressure (more pressure ⇒ never a larger budget) and symmetric in log
+//! space: sustained +e and −e errors of equal size cancel exactly. Clamps
+//! are hard invariants — the effective budget never leaves
+//! `[min_budget, max_budget]` (property-tested below).
+//!
+//! With `enabled = false` (the default) the controller is inert:
+//! [`BudgetController::effective_budget`] returns the configured
+//! `allocator.budget_per_query` bit-for-bit and observations are ignored, so
+//! serving output is identical to a build without the controller.
+//!
+//! The single [`BudgetController`] instance lives in
+//! [`crate::serving::scheduler::SchedulerShared`], so every worker of a
+//! shard pool steers one global budget; per-epoch decisions are exported as
+//! `serving.controller.{budget,error,queue_depth}` metrics by the caller.
+
+use std::sync::Mutex;
+
+use crate::config::{ControllerConfig, ControllerTarget};
+
+/// Relative-error clamp: a single epoch can push the smoothed error no
+/// further than this band, bounding the per-epoch budget step to
+/// `exp(±gain · clamp)`.
+pub const ERR_CLAMP: f64 = 4.0;
+
+/// One epoch's worth of serving signals, gathered by the shard worker that
+/// served it. All fields are observable without extra synchronization:
+/// queue depth comes from the batcher, waits from the `arrived_us` stamps,
+/// units from the responses themselves.
+#[derive(Clone, Copy, Debug)]
+pub struct EpochObservation {
+    /// Requests still queued when this epoch finished (backpressure).
+    pub queue_depth: usize,
+    /// Worst admission→epoch-start wait in this epoch, µs.
+    pub queue_wait_us: u64,
+    /// Wall time spent serving the epoch, µs.
+    pub epoch_us: u64,
+    /// Queries in the epoch.
+    pub queries: usize,
+    /// Decode units (samples) actually spent on the epoch.
+    pub units: usize,
+}
+
+impl EpochObservation {
+    /// Realized generated-token throughput, tokens/s, given the serving
+    /// `max_new_tokens` (each unit decodes up to that many tokens).
+    pub fn tokens_per_s(&self, max_new_tokens: usize) -> f64 {
+        if self.epoch_us == 0 {
+            return 0.0;
+        }
+        (self.units * max_new_tokens) as f64 / (self.epoch_us as f64 / 1e6)
+    }
+}
+
+/// The controller's decision after absorbing one observation.
+#[derive(Clone, Copy, Debug)]
+pub struct Decision {
+    /// Effective per-query budget for subsequent epochs.
+    pub budget: f64,
+    /// Smoothed relative error that drove the step (>0 ⇒ over target).
+    pub error: f64,
+    /// This epoch's raw (clamped, unsmoothed) relative error.
+    pub raw_error: f64,
+}
+
+struct CtrlState {
+    budget: f64,
+    ewma: f64,
+    epochs: u64,
+}
+
+/// Feedback controller for the effective per-query budget. Cheap to share:
+/// one mutex acquisition per epoch served, none at all when disabled.
+pub struct BudgetController {
+    cfg: ControllerConfig,
+    /// The statically configured `allocator.budget_per_query` — returned
+    /// verbatim while disabled, used as the starting point when enabled.
+    base_budget: f64,
+    /// `max_new_tokens` of the serving config (tokens/s accounting).
+    max_new_tokens: usize,
+    state: Mutex<CtrlState>,
+}
+
+impl BudgetController {
+    pub fn new(cfg: ControllerConfig, base_budget: f64, max_new_tokens: usize) -> Self {
+        let start = if cfg.enabled {
+            base_budget.clamp(cfg.min_budget, cfg.max_budget)
+        } else {
+            base_budget
+        };
+        Self {
+            cfg,
+            base_budget,
+            max_new_tokens,
+            state: Mutex::new(CtrlState { budget: start, ewma: 0.0, epochs: 0 }),
+        }
+    }
+
+    pub fn enabled(&self) -> bool {
+        self.cfg.enabled
+    }
+
+    /// The per-query budget the next epoch should be allocated under.
+    /// Disabled ⇒ exactly the configured `allocator.budget_per_query`.
+    pub fn effective_budget(&self) -> f64 {
+        if !self.cfg.enabled {
+            return self.base_budget;
+        }
+        self.state.lock().unwrap().budget
+    }
+
+    /// Epochs absorbed so far (telemetry/tests).
+    pub fn epochs(&self) -> u64 {
+        self.state.lock().unwrap().epochs
+    }
+
+    /// Absorb one epoch's signals and move the effective budget. Returns
+    /// `None` when disabled (no state is touched).
+    pub fn observe(&self, obs: &EpochObservation) -> Option<Decision> {
+        if !self.cfg.enabled {
+            return None;
+        }
+        let raw = self.raw_error(obs);
+        let mut s = self.state.lock().unwrap();
+        let alpha = 2.0 / (self.cfg.ewma_window as f64 + 1.0);
+        s.ewma = alpha * raw + (1.0 - alpha) * s.ewma;
+        s.budget = (s.budget * (-self.cfg.gain * s.ewma).exp())
+            .clamp(self.cfg.min_budget, self.cfg.max_budget);
+        s.epochs += 1;
+        Some(Decision { budget: s.budget, error: s.ewma, raw_error: raw })
+    }
+
+    /// Clamped relative error of one observation against the configured
+    /// target. Positive ⇒ the system is over target (queueing too long, or
+    /// burning more tokens/s than budgeted) ⇒ the budget should shrink.
+    fn raw_error(&self, obs: &EpochObservation) -> f64 {
+        let e = match self.cfg.target {
+            ControllerTarget::QueueWait => {
+                let observed_ms = obs.queue_wait_us as f64 / 1e3;
+                (observed_ms - self.cfg.target_queue_wait_ms)
+                    / self.cfg.target_queue_wait_ms
+            }
+            ControllerTarget::TokensPerS => {
+                let observed = obs.tokens_per_s(self.max_new_tokens);
+                (observed - self.cfg.target_tokens_per_s)
+                    / self.cfg.target_tokens_per_s
+            }
+        };
+        e.clamp(-ERR_CLAMP, ERR_CLAMP)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::proputil::{prop_check, PropConfig};
+
+    fn enabled_cfg() -> ControllerConfig {
+        ControllerConfig {
+            enabled: true,
+            target: ControllerTarget::QueueWait,
+            target_queue_wait_ms: 50.0,
+            target_tokens_per_s: 0.0,
+            min_budget: 1.0,
+            max_budget: 16.0,
+            gain: 0.25,
+            ewma_window: 8,
+        }
+    }
+
+    fn obs_wait_ms(ms: f64) -> EpochObservation {
+        EpochObservation {
+            queue_depth: 0,
+            queue_wait_us: (ms * 1e3) as u64,
+            epoch_us: 10_000,
+            queries: 16,
+            units: 32,
+        }
+    }
+
+    #[test]
+    fn disabled_controller_is_inert() {
+        let cfg = ControllerConfig::default();
+        assert!(!cfg.enabled, "controller must default to disabled");
+        let c = BudgetController::new(cfg, 8.0, 24);
+        assert_eq!(c.effective_budget(), 8.0);
+        assert!(c.observe(&obs_wait_ms(10_000.0)).is_none());
+        // the budget is the configured value bit-for-bit, forever
+        assert_eq!(c.effective_budget().to_bits(), 8.0f64.to_bits());
+        assert_eq!(c.epochs(), 0);
+    }
+
+    #[test]
+    fn sustained_overload_pins_to_min_clamp() {
+        let c = BudgetController::new(enabled_cfg(), 8.0, 24);
+        for _ in 0..200 {
+            let d = c.observe(&obs_wait_ms(5_000.0)).unwrap();
+            assert!(d.budget >= 1.0 && d.budget <= 16.0);
+        }
+        assert_eq!(c.effective_budget(), 1.0, "overload must hit the floor");
+    }
+
+    #[test]
+    fn sustained_idle_rises_to_max_clamp() {
+        let c = BudgetController::new(enabled_cfg(), 8.0, 24);
+        for _ in 0..200 {
+            let d = c.observe(&obs_wait_ms(0.0)).unwrap();
+            assert!(d.budget >= 1.0 && d.budget <= 16.0);
+        }
+        assert_eq!(c.effective_budget(), 16.0, "idle must reach the ceiling");
+    }
+
+    #[test]
+    fn response_is_monotone_in_pressure() {
+        // from identical state, a worse queue wait never yields a larger
+        // next budget
+        let waits = [0.0, 10.0, 50.0, 80.0, 200.0, 1_000.0, 50_000.0];
+        let budgets: Vec<f64> = waits
+            .iter()
+            .map(|&w| {
+                let c = BudgetController::new(enabled_cfg(), 8.0, 24);
+                c.observe(&obs_wait_ms(w)).unwrap().budget
+            })
+            .collect();
+        for pair in budgets.windows(2) {
+            assert!(
+                pair[1] <= pair[0] + 1e-12,
+                "budget grew under higher pressure: {budgets:?}"
+            );
+        }
+        // and the direction is right around the target
+        assert!(budgets[0] > 8.0, "under target must grow");
+        assert!(*budgets.last().unwrap() < 8.0, "over target must shrink");
+    }
+
+    #[test]
+    fn converges_on_synthetic_load_step() {
+        // plant: queue wait proportional to the budget the previous epoch
+        // ran with (service time scales with samples/query under overload)
+        let c = BudgetController::new(enabled_cfg(), 8.0, 24);
+        let mut run = |slope_ms_per_unit: f64, epochs: usize| {
+            for _ in 0..epochs {
+                let wait = slope_ms_per_unit * c.effective_budget();
+                c.observe(&obs_wait_ms(wait)).unwrap();
+            }
+        };
+        // phase 1: wait = 12.5·B ⇒ fixed point B* = 4
+        run(12.5, 300);
+        let b1 = c.effective_budget();
+        assert!((b1 - 4.0).abs() < 0.5, "phase-1 budget {b1} not near 4");
+        let w1 = 12.5 * b1;
+        assert!((w1 - 50.0).abs() / 50.0 < 0.15, "phase-1 wait {w1}ms off target");
+        // phase 2 (load step, 2× heavier): wait = 25·B ⇒ B* = 2
+        run(25.0, 300);
+        let b2 = c.effective_budget();
+        assert!((b2 - 2.0).abs() < 0.3, "phase-2 budget {b2} not near 2");
+    }
+
+    #[test]
+    fn tokens_per_s_target_steers_utilization() {
+        let cfg = ControllerConfig {
+            target: ControllerTarget::TokensPerS,
+            target_tokens_per_s: 48_000.0,
+            ..enabled_cfg()
+        };
+        let c = BudgetController::new(cfg, 4.0, 24);
+        // plant: tokens/s proportional to budget (more samples ⇒ more decode
+        // work per wall-second at fixed queries/epoch)
+        for _ in 0..300 {
+            let b = c.effective_budget();
+            let obs = EpochObservation {
+                queue_depth: 0,
+                queue_wait_us: 0,
+                epoch_us: 10_000,
+                queries: 16,
+                // 16 queries · b units each over 10ms
+                units: (16.0 * b).round() as usize,
+            };
+            c.observe(&obs).unwrap();
+        }
+        // 48k tokens/s at 24 tokens/unit over 10ms ⇒ 20 units ⇒ B* = 1.25
+        let b = c.effective_budget();
+        assert!((b - 1.25).abs() < 0.25, "budget {b} not near 1.25");
+    }
+
+    #[test]
+    fn prop_budget_always_within_clamps() {
+        prop_check(
+            "controller clamps",
+            PropConfig { cases: 64, max_size: 64 },
+            |rng, size| {
+                let mut cfg = enabled_cfg();
+                cfg.min_budget = 0.5 + rng.f64() * 2.0;
+                cfg.max_budget = cfg.min_budget + 0.5 + rng.f64() * 20.0;
+                cfg.gain = 0.05 + rng.f64() * 1.5;
+                cfg.ewma_window = 1 + rng.range_usize(0, 16);
+                let c = BudgetController::new(cfg.clone(), rng.f64() * 32.0, 24);
+                for _ in 0..size {
+                    // wildly varying pressure, including zero-wait epochs
+                    let wait_ms = if rng.bernoulli(0.3) {
+                        0.0
+                    } else {
+                        rng.f64() * 10_000.0
+                    };
+                    let d = c.observe(&obs_wait_ms(wait_ms)).unwrap();
+                    if d.budget < cfg.min_budget - 1e-12
+                        || d.budget > cfg.max_budget + 1e-12
+                    {
+                        return Err(format!(
+                            "budget {} escaped [{}, {}]",
+                            d.budget, cfg.min_budget, cfg.max_budget
+                        ));
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn prop_monotone_from_any_state() {
+        // drive two controllers through an identical random prefix, then
+        // diverge with one higher-pressure observation: the pressured one
+        // must never end up with the larger budget
+        prop_check(
+            "controller monotone",
+            PropConfig { cases: 48, max_size: 32 },
+            |rng, size| {
+                let a = BudgetController::new(enabled_cfg(), 8.0, 24);
+                let b = BudgetController::new(enabled_cfg(), 8.0, 24);
+                for _ in 0..size {
+                    let w = rng.f64() * 500.0;
+                    a.observe(&obs_wait_ms(w));
+                    b.observe(&obs_wait_ms(w));
+                }
+                let w = rng.f64() * 400.0;
+                let extra = 1.0 + rng.f64() * 1_000.0;
+                let da = a.observe(&obs_wait_ms(w)).unwrap();
+                let db = b.observe(&obs_wait_ms(w + extra)).unwrap();
+                if db.budget > da.budget + 1e-12 {
+                    return Err(format!(
+                        "budget under wait {w}+{extra} ({}) exceeds budget \
+                         under wait {w} ({})",
+                        db.budget, da.budget
+                    ));
+                }
+                Ok(())
+            },
+        );
+    }
+}

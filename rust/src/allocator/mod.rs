@@ -18,9 +18,13 @@
 //! * [`exact`]   — O(n·T·Bmax) DP used as the test oracle,
 //! * [`binary`]  — analytic Δ for binary rewards: Δᵢⱼ = λ(1−λ)^(j−1)  (§3.3),
 //! * [`online`]  — batch allocation from predictor outputs (§3.2 "online"),
-//! * [`offline`] — fit/store/lookup bin policy (§3.2 "offline").
+//! * [`offline`] — fit/store/lookup bin policy (§3.2 "offline"),
+//! * [`controller`] — feedback control of the per-query budget B *across*
+//!   epochs from live queue-pressure signals (the paper's within-batch
+//!   principle lifted one level up).
 
 pub mod binary;
+pub mod controller;
 pub mod exact;
 pub mod greedy;
 pub mod offline;

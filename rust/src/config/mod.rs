@@ -327,6 +327,71 @@ impl Default for RouteConfig {
     }
 }
 
+/// Which live signal the budget controller steers toward
+/// (see [`crate::allocator::controller`]).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ControllerTarget {
+    /// Hold the epoch's worst queue wait at `target_queue_wait_ms`.
+    QueueWait,
+    /// Hold realized generated-token throughput at `target_tokens_per_s`.
+    TokensPerS,
+}
+
+impl std::str::FromStr for ControllerTarget {
+    type Err = anyhow::Error;
+    fn from_str(s: &str) -> anyhow::Result<Self> {
+        Ok(match s {
+            "queue-wait" => ControllerTarget::QueueWait,
+            "tokens-per-s" => ControllerTarget::TokensPerS,
+            other => anyhow::bail!("unknown controller target `{other}`"),
+        })
+    }
+}
+
+/// Load-adaptive budget controller (`[controller]` section): feedback
+/// control of the effective per-query budget across allocation epochs.
+/// Disabled by default — serving then behaves bit-for-bit as if the
+/// controller did not exist, with `allocator.budget_per_query` used
+/// unconditionally. See [`crate::allocator::controller`] for the control
+/// law.
+#[derive(Clone, Debug)]
+pub struct ControllerConfig {
+    pub enabled: bool,
+    pub target: ControllerTarget,
+    /// QueueWait mode: target worst-in-epoch queue wait, milliseconds.
+    pub target_queue_wait_ms: f64,
+    /// TokensPerS mode: target generated-token throughput, tokens/second
+    /// (must be > 0 when that mode is selected).
+    pub target_tokens_per_s: f64,
+    /// Hard lower clamp on the effective per-query budget.
+    pub min_budget: f64,
+    /// Hard upper clamp on the effective per-query budget. Additionally
+    /// capped at `allocator.b_max` when the serving stack constructs the
+    /// controller — budgets above the per-query cap are a dead actuation
+    /// zone and letting the loop wind up into it would delay its response
+    /// to a load spike.
+    pub max_budget: f64,
+    /// Proportional gain of the multiplicative update step.
+    pub gain: f64,
+    /// EWMA smoothing span over the error signal, in epochs.
+    pub ewma_window: usize,
+}
+
+impl Default for ControllerConfig {
+    fn default() -> Self {
+        Self {
+            enabled: false,
+            target: ControllerTarget::QueueWait,
+            target_queue_wait_ms: 50.0,
+            target_tokens_per_s: 0.0,
+            min_budget: 1.0,
+            max_budget: 32.0,
+            gain: 0.25,
+            ewma_window: 8,
+        }
+    }
+}
+
 #[derive(Clone, Debug)]
 pub struct ServerConfig {
     pub addr: String,
@@ -382,6 +447,7 @@ pub struct Config {
     pub server: ServerConfig,
     pub workload: WorkloadConfig,
     pub route: RouteConfig,
+    pub controller: ControllerConfig,
 }
 
 impl Config {
@@ -465,6 +531,23 @@ impl Config {
                     _ => return Err(invalid()),
                 }
             }
+            "controller.enabled" => {
+                self.controller.enabled = match val {
+                    TomlValue::Bool(b) => *b,
+                    _ => return Err(invalid()),
+                }
+            }
+            "controller.target" => self.controller.target = str_of!().parse()?,
+            "controller.target_queue_wait_ms" => {
+                self.controller.target_queue_wait_ms = f64_of!()
+            }
+            "controller.target_tokens_per_s" => {
+                self.controller.target_tokens_per_s = f64_of!()
+            }
+            "controller.min_budget" => self.controller.min_budget = f64_of!(),
+            "controller.max_budget" => self.controller.max_budget = f64_of!(),
+            "controller.gain" => self.controller.gain = f64_of!(),
+            "controller.ewma_window" => self.controller.ewma_window = usize_of!(),
             _ => return Ok(false),
         }
         Ok(true)
@@ -497,6 +580,27 @@ impl Config {
         anyhow::ensure!(self.route.weak_budget >= 1, "route.weak_budget must be ≥ 1");
         anyhow::ensure!(self.route.heldout_n >= 2,
             "route.heldout_n must be ≥ 2 for quantile calibration");
+        let c = &self.controller;
+        anyhow::ensure!(
+            c.min_budget > 0.0 && c.min_budget <= c.max_budget,
+            "controller clamps need 0 < min_budget ≤ max_budget \
+             (got [{}, {}])",
+            c.min_budget,
+            c.max_budget
+        );
+        anyhow::ensure!(c.gain > 0.0, "controller.gain must be positive");
+        anyhow::ensure!(c.ewma_window >= 1, "controller.ewma_window must be ≥ 1");
+        anyhow::ensure!(
+            c.target_queue_wait_ms > 0.0,
+            "controller.target_queue_wait_ms must be positive"
+        );
+        if c.enabled && c.target == ControllerTarget::TokensPerS {
+            anyhow::ensure!(
+                c.target_tokens_per_s > 0.0,
+                "controller.target_tokens_per_s must be positive for the \
+                 tokens-per-s target"
+            );
+        }
         Ok(())
     }
 }
@@ -622,6 +726,57 @@ mod tests {
         assert!(err.to_string().contains("worker"));
         let err = Config::from_toml_str("[server]\nworkers = 100\n").unwrap_err();
         assert!(err.to_string().contains("workers"));
+    }
+
+    #[test]
+    fn controller_section_roundtrip() {
+        let cfg = Config::from_toml_str(
+            "[controller]\nenabled = true\ntarget = \"queue-wait\"\n\
+             target_queue_wait_ms = 25.0\nmin_budget = 2.0\nmax_budget = 12.0\n\
+             gain = 0.5\newma_window = 4\n",
+        )
+        .unwrap();
+        assert!(cfg.controller.enabled);
+        assert_eq!(cfg.controller.target, ControllerTarget::QueueWait);
+        assert!((cfg.controller.target_queue_wait_ms - 25.0).abs() < 1e-12);
+        assert!((cfg.controller.min_budget - 2.0).abs() < 1e-12);
+        assert!((cfg.controller.max_budget - 12.0).abs() < 1e-12);
+        assert!((cfg.controller.gain - 0.5).abs() < 1e-12);
+        assert_eq!(cfg.controller.ewma_window, 4);
+        // default: disabled, so fixed-budget serving is untouched
+        assert!(!Config::default().controller.enabled);
+    }
+
+    #[test]
+    fn controller_target_parses() {
+        assert_eq!(
+            "tokens-per-s".parse::<ControllerTarget>().unwrap(),
+            ControllerTarget::TokensPerS
+        );
+        assert!("latency".parse::<ControllerTarget>().is_err());
+    }
+
+    #[test]
+    fn validation_rejects_bad_controller_config() {
+        let err = Config::from_toml_str("[controller]\nmin_budget = 0.0\n")
+            .unwrap_err();
+        assert!(err.to_string().contains("min_budget"));
+        let err = Config::from_toml_str(
+            "[controller]\nmin_budget = 8.0\nmax_budget = 2.0\n",
+        )
+        .unwrap_err();
+        assert!(err.to_string().contains("min_budget"));
+        let err = Config::from_toml_str("[controller]\ngain = 0.0\n").unwrap_err();
+        assert!(err.to_string().contains("gain"));
+        let err =
+            Config::from_toml_str("[controller]\newma_window = 0\n").unwrap_err();
+        assert!(err.to_string().contains("ewma_window"));
+        // tokens-per-s target needs an explicit positive rate once enabled
+        let err = Config::from_toml_str(
+            "[controller]\nenabled = true\ntarget = \"tokens-per-s\"\n",
+        )
+        .unwrap_err();
+        assert!(err.to_string().contains("target_tokens_per_s"));
     }
 
     #[test]

@@ -41,6 +41,24 @@ fn cli() -> Cli {
                    empty = value from --config (default 1)",
             default: Some(""),
         },
+        FlagSpec {
+            name: "controller",
+            help: "enable the load-adaptive budget controller \
+                   ([controller] section)",
+            default: None,
+        },
+        FlagSpec {
+            name: "controller-target-ms",
+            help: "controller: target worst-in-epoch queue wait in ms; \
+                   empty = value from --config (default 50)",
+            default: Some(""),
+        },
+        FlagSpec {
+            name: "controller-gain",
+            help: "controller: proportional gain of the budget update; \
+                   empty = value from --config (default 0.25)",
+            default: Some(""),
+        },
     ]);
     Cli {
         binary: "thinkalloc",
@@ -139,16 +157,44 @@ fn cmd_serve(args: &Args) -> Result<()> {
             .parse()
             .map_err(|e| anyhow::anyhow!("--workers: {e}"))?;
     }
+    // the switch only ever enables: a config file with `controller.enabled
+    // = true` is not silently overridden by the flag's absence
+    if args.switch("controller") {
+        cfg.controller.enabled = true;
+    }
+    let target_flag = args.str_flag("controller-target-ms")?;
+    if !target_flag.is_empty() {
+        cfg.controller.target_queue_wait_ms = target_flag
+            .parse()
+            .map_err(|e| anyhow::anyhow!("--controller-target-ms: {e}"))?;
+    }
+    let gain_flag = args.str_flag("controller-gain")?;
+    if !gain_flag.is_empty() {
+        cfg.controller.gain = gain_flag
+            .parse()
+            .map_err(|e| anyhow::anyhow!("--controller-gain: {e}"))?;
+    }
     cfg.validate()?;
 
     let metrics = Arc::new(Registry::default());
     println!(
-        "thinkalloc serving on {} (policy {:?}, B={}, procedure {}, workers {})",
+        "thinkalloc serving on {} (policy {:?}, B={}, procedure {}, workers {}, \
+         controller {})",
         cfg.server.addr,
         cfg.allocator.policy,
         cfg.allocator.budget_per_query,
         cfg.route.procedure.name(),
         cfg.server.workers,
+        if cfg.controller.enabled {
+            format!(
+                "on [{}, {}] target {}ms",
+                cfg.controller.min_budget,
+                cfg.controller.max_budget,
+                cfg.controller.target_queue_wait_ms
+            )
+        } else {
+            "off".to_string()
+        },
     );
     let server = Server::new(cfg, metrics);
     server.run(|addr| println!("listening on {addr}"))

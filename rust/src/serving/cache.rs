@@ -8,7 +8,8 @@
 //! keeps the structure trivially auditable.
 //!
 //! The cache is not internally synchronized — wrap it in the lock of the
-//! owning structure (see `scheduler::SchedulerShared`).
+//! owning structure (see [`super::scheduler::SchedulerShared`], whose
+//! prediction cache is the one consumer on the serving path).
 
 use std::collections::BTreeMap;
 

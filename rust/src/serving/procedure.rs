@@ -44,12 +44,17 @@ use crate::prng::Pcg64;
 pub trait DecodeProcedure: Sync {
     fn name(&self) -> &'static str;
 
-    /// Serve `reqs` (all of one domain). `rng` drives sampling only.
+    /// Serve `reqs` (all of one domain). `rng` drives sampling only;
+    /// `budget_per_query` is the effective average budget for this epoch,
+    /// resolved once by the caller (the controller's steered value, or the
+    /// configured `allocator.budget_per_query` when the controller is
+    /// disabled — see [`crate::allocator::controller`]).
     fn serve(
         &self,
         sched: &Scheduler,
         reqs: &[&Request],
         rng: &mut Pcg64,
+        budget_per_query: f64,
     ) -> Result<Vec<Response>>;
 }
 
@@ -68,6 +73,7 @@ impl AdaptiveBestOfK {
         sched: &Scheduler,
         reqs: &[&Request],
         rng: &mut Pcg64,
+        budget_per_query: f64,
         t0: Instant,
         kind: ProcedureKind,
         preheated: Option<(Predictions, Vec<f64>)>,
@@ -85,7 +91,7 @@ impl AdaptiveBestOfK {
             Some(p) => p,
             None => sched.predict(&domain, &texts)?,
         };
-        let budgets = sched.allocate(&domain, &preds, &scalar_preds)?;
+        let budgets = sched.allocate(&domain, &preds, &scalar_preds, budget_per_query)?;
         let samples = sched.generate(&texts, &budgets, rng)?;
         sched.select(&domain, reqs, &texts, &budgets, &samples, &scalar_preds, t0, kind)
     }
@@ -101,11 +107,13 @@ impl DecodeProcedure for AdaptiveBestOfK {
         sched: &Scheduler,
         reqs: &[&Request],
         rng: &mut Pcg64,
+        budget_per_query: f64,
     ) -> Result<Vec<Response>> {
         self.serve_from(
             sched,
             reqs,
             rng,
+            budget_per_query,
             Instant::now(),
             ProcedureKind::AdaptiveBestOfK,
             None,
@@ -126,6 +134,7 @@ impl DecodeProcedure for WeakStrongRoute {
         sched: &Scheduler,
         reqs: &[&Request],
         rng: &mut Pcg64,
+        budget_per_query: f64,
     ) -> Result<Vec<Response>> {
         if reqs.is_empty() {
             return Ok(Vec::new());
@@ -168,10 +177,14 @@ impl DecodeProcedure for WeakStrongRoute {
             } else {
                 None
             };
+            // the controller-steered budget applies to the strong arm (the
+            // adaptive best-of-k pipeline); the weak arm stays at the fixed
+            // `route.weak_budget` — it is the cheap floor by construction
             let responses = AdaptiveBestOfK.serve_from(
                 sched,
                 &sreqs,
                 rng,
+                budget_per_query,
                 t0,
                 ProcedureKind::WeakStrongRoute,
                 preheated,

@@ -13,10 +13,18 @@
 //!                    reduce selects
 //!
 //! A `Scheduler` pairs one (thread-owned, `!Send`) [`Engine`] with an
-//! [`Arc<SchedulerShared>`]: the config, metrics and the lazily-fitted
-//! offline-policy / router / prediction caches. The shared half is what the
-//! engine-per-worker pool ([`super::shard`]) replicates *around* — policies
-//! are fitted once per domain for the whole pool, not once per worker.
+//! [`Arc<SchedulerShared>`]: the config, metrics, the lazily-fitted
+//! offline-policy / router / prediction caches, and the pool-global
+//! [`BudgetController`]. The shared half is what the engine-per-worker
+//! pool ([`super::shard`]) replicates *around* — policies are fitted once
+//! per domain for the whole pool, not once per worker, and all workers
+//! steer (and serve under) one effective budget.
+//!
+//! The per-query budget is an *input* to [`Scheduler::serve_epoch`], the
+//! [`DecodeProcedure`]s and [`Scheduler::allocate`], resolved once per
+//! epoch by the caller via [`SchedulerShared::effective_budget`]: the
+//! controller's steered value, or exactly `allocator.budget_per_query`
+//! while `controller.enabled = false`.
 //!
 //! Budget accounting, latencies and allocation histograms land in the
 //! metrics registry (`serving.*`; routing splits under `serving.route.*`;
@@ -33,6 +41,7 @@ use super::cache::LruCache;
 use super::generator::{self, GenConfig};
 use super::procedure::{AdaptiveBestOfK, DecodeProcedure, WeakStrongRoute};
 use super::{Request, Response};
+use crate::allocator::controller::{BudgetController, EpochObservation};
 use crate::allocator::offline::OfflinePolicy;
 use crate::allocator::online::{OnlineAllocator, Predictions};
 use crate::allocator::DeltaMatrix;
@@ -63,6 +72,11 @@ enum CachedPred {
 pub struct SchedulerShared {
     pub cfg: Config,
     pub metrics: Arc<Registry>,
+    /// The pool-global budget controller: all workers read one effective
+    /// budget and feed their epoch observations into the same loop. With
+    /// `controller.enabled = false` it returns the configured
+    /// `allocator.budget_per_query` bit-for-bit and ignores observations.
+    pub controller: BudgetController,
     /// Offline policies are fitted lazily per domain on generated held-out
     /// data the first time the domain is seen.
     offline: std::sync::Mutex<std::collections::BTreeMap<String, OfflinePolicy>>,
@@ -75,9 +89,23 @@ pub struct SchedulerShared {
 impl SchedulerShared {
     pub fn new(cfg: Config, metrics: Arc<Registry>) -> Arc<Self> {
         let cache_cap = cfg.server.predict_cache_capacity;
+        // anti-windup: budgets above the per-query cap b_max are a dead
+        // actuation zone (the allocators clamp them away), so a controller
+        // allowed to wander up there would have to walk all the way back
+        // down before a load spike sees any real reduction. Cap the upper
+        // clamp at the actuator's own limit.
+        let mut ctrl_cfg = cfg.controller.clone();
+        ctrl_cfg.max_budget = ctrl_cfg.max_budget.min(cfg.allocator.b_max as f64);
+        ctrl_cfg.min_budget = ctrl_cfg.min_budget.min(ctrl_cfg.max_budget);
+        let controller = BudgetController::new(
+            ctrl_cfg,
+            cfg.allocator.budget_per_query,
+            cfg.server.max_new_tokens,
+        );
         Arc::new(Self {
             cfg,
             metrics,
+            controller,
             offline: Default::default(),
             routers: Default::default(),
             predict_cache: std::sync::Mutex::new(LruCache::new(cache_cap)),
@@ -87,6 +115,26 @@ impl SchedulerShared {
     /// Entries currently held by the prediction cache (telemetry/tests).
     pub fn predict_cache_len(&self) -> usize {
         self.predict_cache.lock().unwrap().len()
+    }
+
+    /// The per-query budget the next epoch should run under — the
+    /// controller's steered value, or exactly `allocator.budget_per_query`
+    /// while the controller is disabled.
+    pub fn effective_budget(&self) -> f64 {
+        self.controller.effective_budget()
+    }
+
+    /// Feed one served epoch's signals into the budget controller and
+    /// export the decision as `serving.controller.{budget,error,
+    /// queue_depth}` gauges. A no-op while the controller is disabled.
+    pub fn observe_epoch(&self, obs: &EpochObservation) {
+        if let Some(d) = self.controller.observe(obs) {
+            self.metrics.gauge("serving.controller.budget").set(d.budget);
+            self.metrics.gauge("serving.controller.error").set(d.error);
+            self.metrics
+                .gauge("serving.controller.queue_depth")
+                .set(obs.queue_depth as f64);
+        }
     }
 }
 
@@ -120,6 +168,11 @@ impl Scheduler {
         &self.shared
     }
 
+    /// Convenience passthrough to [`SchedulerShared::effective_budget`].
+    pub fn effective_budget(&self) -> f64 {
+        self.shared.effective_budget()
+    }
+
     /// Resolve a procedure kind to its implementation.
     fn procedure(&self, kind: ProcedureKind) -> &'static dyn DecodeProcedure {
         match kind {
@@ -128,11 +181,23 @@ impl Scheduler {
         }
     }
 
-    /// Serve one (possibly mixed-domain) epoch; returns responses in request
-    /// order. The epoch is partitioned into domain- and procedure-
-    /// homogeneous sub-epochs and each is dispatched through its
-    /// [`DecodeProcedure`].
-    pub fn serve_epoch(&self, reqs: &[Request], rng: &mut Pcg64) -> Result<Vec<Response>> {
+    /// Serve one (possibly mixed-domain) epoch under an explicit per-query
+    /// budget; returns responses in request order. The epoch is partitioned
+    /// into domain- and procedure-homogeneous sub-epochs and each is
+    /// dispatched through its [`DecodeProcedure`].
+    ///
+    /// `budget_per_query` is the *effective* budget for this epoch — the
+    /// caller resolves it once (typically [`Scheduler::effective_budget`],
+    /// which is the controller's steered value, or exactly
+    /// `allocator.budget_per_query` when the controller is disabled) so a
+    /// mid-epoch controller update can never split one epoch across two
+    /// budgets.
+    pub fn serve_epoch(
+        &self,
+        reqs: &[Request],
+        rng: &mut Pcg64,
+        budget_per_query: f64,
+    ) -> Result<Vec<Response>> {
         if reqs.is_empty() {
             return Ok(Vec::new());
         }
@@ -145,7 +210,10 @@ impl Scheduler {
                 sub.indices.iter().map(|&i| &reqs[i]).collect();
             // failure isolation: one bad sub-epoch (e.g. an unknown domain)
             // must not poison the other domains sharing the mixed epoch
-            let result = self.procedure(sub.kind).serve(self, &sub_reqs, rng).and_then(
+            let result = self
+                .procedure(sub.kind)
+                .serve(self, &sub_reqs, rng, budget_per_query)
+                .and_then(
                 |responses| {
                     anyhow::ensure!(
                         responses.len() == sub.indices.len(),
@@ -300,19 +368,22 @@ impl Scheduler {
         }
     }
 
-    /// Stage 2: budget allocation under the configured policy.
+    /// Stage 2: budget allocation under the configured policy, spending an
+    /// average of `budget_per_query` units per query (the caller-resolved
+    /// effective budget — see [`Scheduler::serve_epoch`]).
     pub fn allocate(
         &self,
         domain: &str,
         preds: &Predictions,
         scalar_preds: &[f64],
+        budget_per_query: f64,
     ) -> Result<Vec<usize>> {
         let t_alloc = Instant::now();
         let a = &self.shared.cfg.allocator;
         let min_budget = if domain == "chat" { a.min_budget.max(1) } else { a.min_budget };
         let budgets: Vec<usize> = match a.policy {
             AllocPolicy::Uniform => {
-                let mut u = uniform_best_of_k(preds.n(), a.budget_per_query, a.b_max);
+                let mut u = uniform_best_of_k(preds.n(), budget_per_query, a.b_max);
                 for b in &mut u.budgets {
                     *b = (*b).max(min_budget);
                 }
@@ -323,14 +394,28 @@ impl Scheduler {
                 // server cannot know ground truth, so Oracle falls back to
                 // predictions here (experiment drivers use true Δ directly).
                 OnlineAllocator::new(a.b_max, min_budget)
-                    .allocate(preds, a.budget_per_query)
+                    .allocate(preds, budget_per_query)
                     .budgets
             }
             AllocPolicy::Offline => {
+                // The bin → budget table is fitted once at the *configured*
+                // B; a controller-steered budget rescales the lookup by the
+                // ratio. ratio == 1.0 short-circuits to the fitted budget
+                // unchanged, so disabled-controller serving stays
+                // bit-for-bit identical to the pre-controller behaviour.
                 let policy = self.offline_policy(domain)?;
+                let ratio = budget_per_query / a.budget_per_query;
                 scalar_preds
                     .iter()
-                    .map(|&s| policy.budget_for(s).max(min_budget))
+                    .map(|&s| {
+                        let b = policy.budget_for(s);
+                        let b = if ratio == 1.0 {
+                            b
+                        } else {
+                            ((b as f64 * ratio).round() as usize).min(a.b_max)
+                        };
+                        b.max(min_budget)
+                    })
                     .collect()
             }
         };
@@ -600,6 +685,33 @@ pub fn compute_answer(text: &str) -> String {
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn controller_max_budget_capped_by_bmax() {
+        // anti-windup: the effective budget must never exceed the per-query
+        // cap b_max, whatever [controller].max_budget says
+        let mut cfg = Config::default();
+        cfg.allocator.b_max = 4;
+        cfg.allocator.budget_per_query = 8.0;
+        cfg.controller.enabled = true;
+        cfg.controller.max_budget = 32.0;
+        let shared = SchedulerShared::new(cfg, Arc::new(Registry::default()));
+        // sustained idle (zero queue wait) drives the budget to its ceiling
+        for _ in 0..100 {
+            shared.observe_epoch(&EpochObservation {
+                queue_depth: 0,
+                queue_wait_us: 0,
+                epoch_us: 10_000,
+                queries: 8,
+                units: 16,
+            });
+        }
+        assert!(
+            shared.effective_budget() <= 4.0,
+            "effective budget {} wound up past b_max",
+            shared.effective_budget()
+        );
+    }
 
     #[test]
     fn compute_answer_matches_workload() {

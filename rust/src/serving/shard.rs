@@ -17,11 +17,20 @@
 //! old single scheduler thread used, so a pool of `workers = 1` reproduces
 //! the previous serving behaviour bit-for-bit. Additional workers derive
 //! disjoint streams from their index.
+//!
+//! Budget control: each worker resolves the pool-global effective budget
+//! once per epoch (so one epoch never straddles two budgets) and, after the
+//! epoch completes, feeds the observed queue depth / worst queue wait /
+//! epoch latency / units spent back into the shared
+//! [`crate::allocator::controller::BudgetController`] via
+//! [`SchedulerShared::observe_epoch`]. With the controller disabled both
+//! calls are inert and serving is bit-for-bit the pre-controller behaviour.
 
 use std::sync::Arc;
 use std::thread::JoinHandle;
 use std::time::Instant;
 
+use crate::allocator::controller::EpochObservation;
 use crate::prng::Pcg64;
 use crate::runtime::Engine;
 use crate::serving::batcher::Batcher;
@@ -122,15 +131,29 @@ fn worker_loop(
     let queue_wait = metrics.histogram("serving.queue_wait_us");
     while let Some(epoch) = batcher.next_epoch() {
         let now_us = batcher.now_us();
+        let mut max_wait_us = 0u64;
         for r in &epoch {
-            queue_wait.record_ns(now_us.saturating_sub(r.arrived_us) * 1_000);
+            let wait = now_us.saturating_sub(r.arrived_us);
+            queue_wait.record_ns(wait * 1_000);
+            max_wait_us = max_wait_us.max(wait);
         }
+        // one budget per epoch: resolve before serving so a concurrent
+        // controller update from another worker can't split this epoch
+        let budget = scheduler.effective_budget();
         let t0 = Instant::now();
-        match scheduler.serve_epoch(&epoch, &mut rng) {
+        match scheduler.serve_epoch(&epoch, &mut rng, budget) {
             Ok(responses) => {
+                let units: usize = responses.iter().map(|r| r.budget).sum();
                 for resp in responses {
                     sink.on_response(resp);
                 }
+                scheduler.shared().observe_epoch(&EpochObservation {
+                    queue_depth: batcher.depth(),
+                    queue_wait_us: max_wait_us,
+                    epoch_us: t0.elapsed().as_micros() as u64,
+                    queries: epoch.len(),
+                    units,
+                });
             }
             Err(e) => sink.on_epoch_error(&epoch, &e, t0.elapsed()),
         }

@@ -238,13 +238,17 @@ fn predict_cache_hits_on_repeated_epoch() {
         .collect::<std::collections::BTreeSet<_>>()
         .len();
 
-    let first = scheduler.serve_epoch(&batch, &mut rng).unwrap();
+    let first = scheduler
+        .serve_epoch(&batch, &mut rng, scheduler.effective_budget())
+        .unwrap();
     let miss_after_first = metrics.counter("serving.predict_cache.miss").get();
     assert_eq!(metrics.counter("serving.predict_cache.hit").get(), 0);
     assert_eq!(miss_after_first, 24, "cold epoch must probe every query");
     assert_eq!(scheduler.shared().predict_cache_len(), distinct);
 
-    let second = scheduler.serve_epoch(&batch, &mut rng).unwrap();
+    let second = scheduler
+        .serve_epoch(&batch, &mut rng, scheduler.effective_budget())
+        .unwrap();
     assert_eq!(
         metrics.counter("serving.predict_cache.miss").get(),
         miss_after_first,

@@ -57,7 +57,9 @@ fn scheduler_epoch_code_online() {
     let scheduler = Scheduler::new(engine, cfg, metrics.clone());
     let mut rng = Pcg64::new(1);
     let batch = reqs("code", 32, 7);
-    let out = scheduler.serve_epoch(&batch, &mut rng).unwrap();
+    let out = scheduler
+        .serve_epoch(&batch, &mut rng, scheduler.effective_budget())
+        .unwrap();
     assert_eq!(out.len(), 32);
     // budget conservation: Σb ≤ B·n
     let used: usize = out.iter().map(|r| r.budget).sum();
@@ -91,7 +93,9 @@ fn scheduler_epoch_chat_reranks() {
     let scheduler = Scheduler::new(engine, cfg, metrics);
     let mut rng = Pcg64::new(2);
     let batch = reqs("chat", 16, 8);
-    let out = scheduler.serve_epoch(&batch, &mut rng).unwrap();
+    let out = scheduler
+        .serve_epoch(&batch, &mut rng, scheduler.effective_budget())
+        .unwrap();
     assert_eq!(out.len(), 16);
     for r in &out {
         assert!(r.budget >= 1, "chat must sample at least once");
@@ -115,7 +119,9 @@ fn scheduler_serves_mixed_domain_epoch() {
         .enumerate()
         .map(|(i, q)| Request::new(i as u64, q.text, q.domain))
         .collect();
-    let out = scheduler.serve_epoch(&batch, &mut rng).unwrap();
+    let out = scheduler
+        .serve_epoch(&batch, &mut rng, scheduler.effective_budget())
+        .unwrap();
     assert_eq!(out.len(), 24);
     // responses come back in request order despite the internal partition
     for (r, o) in batch.iter().zip(&out) {
@@ -138,7 +144,9 @@ fn scheduler_offline_policy_respects_budget_in_expectation() {
     let scheduler = Scheduler::new(engine, cfg, metrics);
     let mut rng = Pcg64::new(3);
     let batch = reqs("code", 64, 9);
-    let out = scheduler.serve_epoch(&batch, &mut rng).unwrap();
+    let out = scheduler
+        .serve_epoch(&batch, &mut rng, scheduler.effective_budget())
+        .unwrap();
     let used: usize = out.iter().map(|r| r.budget).sum();
     // offline guarantees the budget only in expectation; allow 40% slack
     assert!(used as f64 <= 64.0 * 3.0 * 1.4, "offline used {used}");

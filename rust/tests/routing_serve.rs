@@ -72,7 +72,11 @@ fn routed_mixed_stream_hits_target_fraction() {
                 epoch.iter().map(|r| r.domain.as_str()).collect();
             assert_eq!(domains.len(), 3, "epoch lost its domain mix");
         }
-        responses.extend(scheduler.serve_epoch(&epoch, &mut rng).unwrap());
+        responses.extend(
+            scheduler
+                .serve_epoch(&epoch, &mut rng, scheduler.effective_budget())
+                .unwrap(),
+        );
     }
     assert_eq!(responses.len(), N);
 
@@ -149,7 +153,9 @@ fn per_request_procedure_override_wins() {
     for r in batch.iter_mut().skip(8) {
         r.procedure = Some(ProcedureKind::WeakStrongRoute);
     }
-    let out = scheduler.serve_epoch(&batch, &mut rng).unwrap();
+    let out = scheduler
+        .serve_epoch(&batch, &mut rng, scheduler.effective_budget())
+        .unwrap();
     assert_eq!(out.len(), 16);
     for (i, o) in out.iter().enumerate() {
         let want = if i < 8 {

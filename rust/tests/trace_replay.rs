@@ -1,0 +1,150 @@
+//! End-to-end trace replay through a live TCP server, with the budget
+//! controller off and on (DESIGN.md §7). Asserts the serving contracts the
+//! controller must not break: every request gets exactly one response,
+//! responses arrive in submission order per connection (workers = 1 drains
+//! FIFO epochs), and controller telemetry appears iff the controller is
+//! enabled. Skips gracefully without artifacts.
+
+use std::path::PathBuf;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use thinkalloc::config::{AllocPolicy, Config};
+use thinkalloc::jsonio::Json;
+use thinkalloc::metrics::Registry;
+use thinkalloc::server::{Client, Server};
+use thinkalloc::workload::trace::Trace;
+
+fn artifacts_dir() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+macro_rules! skip_without_artifacts {
+    () => {
+        if !artifacts_dir().join("MANIFEST.json").exists() {
+            eprintln!("skipping: artifacts not built (run `make artifacts`)");
+            return;
+        }
+    };
+}
+
+/// A short saved-and-reloaded Poisson trace: exercising the on-disk format
+/// is part of the contract (offline analysis replays the same files).
+fn saved_trace(n: usize, seed: u64) -> Trace {
+    let trace = Trace::poisson(n, 400.0, (0.6, 0.4, 0.0), seed);
+    let path = std::env::temp_dir().join(format!("thinkalloc_replay_{seed}.json"));
+    trace.save(&path).expect("save trace");
+    let loaded = Trace::load(&path).expect("load trace");
+    assert_eq!(loaded.entries.len(), n);
+    loaded
+}
+
+/// Replay `trace` over one connection with arrival pacing; returns the
+/// response ids in arrival order plus the final metrics dump.
+fn replay(cfg: Config, trace: &Trace) -> (Vec<u64>, Json) {
+    let server = Server::new(cfg, Arc::new(Registry::default()));
+    let (tx, rx) = std::sync::mpsc::channel();
+    let srv = server.clone();
+    let handle = std::thread::spawn(move || srv.run(|a| tx.send(a).unwrap()));
+    let addr = rx.recv().unwrap();
+
+    let mut client = Client::connect(&addr).unwrap();
+    client
+        .set_read_timeout(Some(Duration::from_secs(120)))
+        .unwrap();
+    let t0 = Instant::now();
+    for (i, e) in trace.entries.iter().enumerate() {
+        let due = Duration::from_micros(e.at_us);
+        let elapsed = t0.elapsed();
+        if due > elapsed {
+            std::thread::sleep(due - elapsed);
+        }
+        client.request(i as u64, &e.text, &e.domain).unwrap();
+    }
+    let mut ids = Vec::with_capacity(trace.entries.len());
+    for _ in 0..trace.entries.len() {
+        let resp = client.read_response().expect("response");
+        let id = resp.get("id").and_then(Json::as_f64).expect("id") as u64;
+        assert!(
+            resp.get("latency_us").and_then(Json::as_f64).unwrap_or(0.0) > 0.0,
+            "response {id} reports zero latency"
+        );
+        ids.push(id);
+    }
+    let metrics = client.command("metrics").unwrap();
+    client.command("shutdown").unwrap();
+    let _ = handle.join();
+    (ids, metrics)
+}
+
+fn base_cfg() -> Config {
+    let mut cfg = Config::default();
+    cfg.runtime.artifacts_dir = artifacts_dir();
+    cfg.allocator.policy = AllocPolicy::Online;
+    cfg.allocator.budget_per_query = 4.0;
+    cfg.allocator.b_max = 8;
+    cfg.server.addr = "127.0.0.1:0".into();
+    cfg.server.batch_queries = 8;
+    cfg.server.max_wait_ms = 10;
+    cfg.server.workers = 1; // FIFO epochs ⇒ per-connection response order
+    cfg
+}
+
+#[test]
+fn trace_replay_fixed_budget_is_complete_and_ordered() {
+    skip_without_artifacts!();
+    let trace = saved_trace(24, 0xF1ED);
+    let cfg = base_cfg();
+    cfg.validate().unwrap();
+    let (ids, metrics) = replay(cfg, &trace);
+
+    assert_eq!(ids.len(), 24, "lost or duplicated responses");
+    assert!(
+        ids.windows(2).all(|w| w[0] < w[1]),
+        "responses out of submission order on one connection: {ids:?}"
+    );
+    // controller disabled ⇒ no controller telemetry is ever emitted
+    assert!(
+        metrics.get("gauge.serving.controller.budget").is_none(),
+        "disabled controller must not export gauges"
+    );
+}
+
+#[test]
+fn trace_replay_with_controller_emits_telemetry_within_clamps() {
+    skip_without_artifacts!();
+    let trace = saved_trace(24, 0xADA7);
+    let mut cfg = base_cfg();
+    cfg.controller.enabled = true;
+    cfg.controller.target_queue_wait_ms = 5.0;
+    cfg.controller.min_budget = 1.0;
+    cfg.controller.max_budget = 6.0;
+    cfg.controller.gain = 0.5;
+    cfg.controller.ewma_window = 2;
+    cfg.validate().unwrap();
+    let (ids, metrics) = replay(cfg, &trace);
+
+    // the controller must not break completeness or per-connection order
+    assert_eq!(ids.len(), 24, "lost or duplicated responses");
+    assert!(
+        ids.windows(2).all(|w| w[0] < w[1]),
+        "responses out of submission order on one connection: {ids:?}"
+    );
+    // per-epoch controller telemetry exists and respects the clamps
+    let budget = metrics
+        .get("gauge.serving.controller.budget")
+        .and_then(Json::as_f64)
+        .expect("controller budget gauge missing");
+    assert!(
+        (1.0..=6.0).contains(&budget),
+        "effective budget {budget} escaped clamps [1, 6]"
+    );
+    assert!(
+        metrics.get("gauge.serving.controller.error").is_some(),
+        "controller error gauge missing"
+    );
+    assert!(
+        metrics.get("gauge.serving.controller.queue_depth").is_some(),
+        "controller queue-depth gauge missing"
+    );
+}

@@ -1,0 +1,64 @@
+#!/usr/bin/env python3
+"""Markdown link checker for the repo's documentation surface.
+
+Usage: python3 scripts/check_links.py README.md rust/DESIGN.md docs/PROTOCOL.md
+
+Checks that every relative link target `[text](path)` in the given files
+resolves to an existing file or directory (anchors are stripped; http(s)
+and mailto links are skipped — CI must not depend on external sites).
+Exits non-zero listing every broken link.
+"""
+
+import re
+import sys
+from pathlib import Path
+
+# [text](target) — excluding images' leading "!" matters not for existence
+LINK_RE = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+# inline code spans: link-shaped text inside `...` (e.g. `m[i](j)`) is code,
+# not a link — strip before matching so the hard CI gate can't false-fail
+CODE_SPAN_RE = re.compile(r"`[^`]*`")
+
+
+def check(md_path: Path) -> list[str]:
+    errors = []
+    text = md_path.read_text(encoding="utf-8")
+    in_code = False
+    for lineno, line in enumerate(text.splitlines(), 1):
+        if line.lstrip().startswith("```"):
+            in_code = not in_code
+            continue
+        if in_code:
+            continue
+        for target in LINK_RE.findall(CODE_SPAN_RE.sub("`", line)):
+            if target.startswith(("http://", "https://", "mailto:")):
+                continue
+            path_part = target.split("#", 1)[0]
+            if not path_part:  # pure in-page anchor
+                continue
+            resolved = (md_path.parent / path_part).resolve()
+            if not resolved.exists():
+                errors.append(f"{md_path}:{lineno}: broken link `{target}`")
+    return errors
+
+
+def main() -> int:
+    if len(sys.argv) < 2:
+        print(__doc__.strip())
+        return 2
+    all_errors = []
+    for arg in sys.argv[1:]:
+        p = Path(arg)
+        if not p.exists():
+            all_errors.append(f"{arg}: file not found")
+            continue
+        all_errors.extend(check(p))
+    if all_errors:
+        print("\n".join(all_errors))
+        return 1
+    print(f"checked {len(sys.argv) - 1} files: all relative links resolve")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
