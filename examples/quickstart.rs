@@ -1,9 +1,11 @@
-//! Quickstart: load the AOT artifacts, predict difficulty for a handful of
+//! Quickstart: load the engine, predict difficulty for a handful of
 //! queries, allocate a compute budget adaptively, generate + verify.
 //!
 //!   cargo run --release --offline --example quickstart
 //!
-//! (run `make artifacts` first.)
+//! Runs out of the box on the default native backend. To use the PJRT/XLA
+//! path instead, build with `--features xla-runtime`, run `make artifacts`,
+//! and set `backend: BackendKind::Xla` on the runtime config.
 
 use thinkalloc::allocator::online::OnlineAllocator;
 use thinkalloc::config::RuntimeConfig;

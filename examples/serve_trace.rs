@@ -14,9 +14,10 @@
 //! the fifth argument enables the `[controller]` feedback loop so the
 //! effective budget adapts to queue pressure.
 //!
-//! Everything is live: the TinyLM trained at `make artifacts` predicts
-//! difficulty, the allocator splits the budget, the decode executable
-//! generates candidates, the synthetic verifier checks them.
+//! Everything is live: the configured backend (native by default; the
+//! `make artifacts` TinyLM under `--features xla-runtime`) predicts
+//! difficulty, the allocator splits the budget, the decode head generates
+//! candidates, the synthetic verifier checks them.
 
 use std::time::{Duration, Instant};
 

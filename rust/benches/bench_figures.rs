@@ -13,7 +13,16 @@ use thinkalloc::experiments;
 use thinkalloc::runtime::Engine;
 
 fn main() {
-    let cfg = RuntimeConfig::default();
+    // paper figures are regenerated from the AOT artifacts — pin the xla
+    // backend rather than silently timing the native synthetic model
+    let cfg = RuntimeConfig {
+        backend: thinkalloc::config::BackendKind::Xla,
+        ..RuntimeConfig::default()
+    };
+    if !cfg!(feature = "xla-runtime") {
+        eprintln!("built without the xla-runtime feature; skipping figure bench");
+        return;
+    }
     if !cfg.artifacts_dir.join("MANIFEST.json").exists() {
         eprintln!("artifacts not built; skipping figure bench");
         return;

@@ -12,7 +12,16 @@ use thinkalloc::runtime::{Artifact, Engine};
 use thinkalloc::{tokenizer, workload};
 
 fn main() {
-    let cfg = RuntimeConfig::default();
+    // this bench measures the AOT artifacts specifically — pin the xla
+    // backend rather than silently timing the native synthetic model
+    let cfg = RuntimeConfig {
+        backend: thinkalloc::config::BackendKind::Xla,
+        ..RuntimeConfig::default()
+    };
+    if !cfg!(feature = "xla-runtime") {
+        eprintln!("built without the xla-runtime feature; skipping predictor bench");
+        return;
+    }
     if !cfg.artifacts_dir.join("MANIFEST.json").exists() {
         eprintln!("artifacts not built; skipping predictor bench");
         return;

@@ -13,6 +13,12 @@
 //! with real arrival pacing, fixed budget vs controller-steered budget.
 //! The fixed run's queue wait diverges (open-loop overload); the controller
 //! trades per-query budget for queue wait and holds p95 near its target.
+//!
+//! Runs on whatever backend the default config selects (native unless
+//! overridden), so it works on artifact-less hosts and doubles as the CI
+//! smoke bench: `--smoke` shrinks every section to a tiny trace, and
+//! `--json <path>` writes a machine-readable summary (uploaded as a CI
+//! artifact for run-over-run comparison).
 
 #[path = "harness/mod.rs"]
 mod harness;
@@ -23,6 +29,7 @@ use std::time::{Duration, Instant};
 
 use harness::{bench, section};
 use thinkalloc::config::{AllocPolicy, Config};
+use thinkalloc::jsonio::Json;
 use thinkalloc::metrics::Registry;
 use thinkalloc::prng::Pcg64;
 use thinkalloc::runtime::Engine;
@@ -32,6 +39,24 @@ use thinkalloc::serving::shard::{EpochSink, ShardPool};
 use thinkalloc::serving::{Request, Response};
 use thinkalloc::workload;
 use thinkalloc::workload::trace::Trace;
+
+/// Section sizes: full run vs `--smoke` (CI-sized tiny trace).
+struct Scale {
+    epoch_queries: usize,
+    epoch_iters: usize,
+    pool_queries: usize,
+    trace_len: usize,
+}
+
+impl Scale {
+    fn new(smoke: bool) -> Scale {
+        if smoke {
+            Scale { epoch_queries: 16, epoch_iters: 3, pool_queries: 64, trace_len: 48 }
+        } else {
+            Scale { epoch_queries: 32, epoch_iters: 6, pool_queries: 256, trace_len: 192 }
+        }
+    }
+}
 
 /// Counting sink for pool benches: tracks ready workers and responses.
 /// Failures are recorded, not panicked — a panic on a worker thread would
@@ -162,20 +187,31 @@ fn run_pool(workers: usize, reqs: &[Request], cfg: Config) -> Duration {
 }
 
 fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let smoke = argv.iter().any(|a| a == "--smoke");
+    let json_path = argv
+        .iter()
+        .position(|a| a == "--json")
+        .and_then(|i| argv.get(i + 1))
+        .cloned();
+    let scale = Scale::new(smoke);
     let base = Config::default();
-    if !base.runtime.artifacts_dir.join("MANIFEST.json").exists() {
-        eprintln!("artifacts not built; skipping serving bench");
-        return;
-    }
+    let mut summary: Vec<(String, Json)> = vec![
+        ("backend".into(), Json::Str(base.runtime.backend.name().into())),
+        ("smoke".into(), Json::Bool(smoke)),
+    ];
 
-    let reqs: Vec<Request> = workload::gen_dataset("code", 32, 3)
+    let reqs: Vec<Request> = workload::gen_dataset("code", scale.epoch_queries, 3)
         .into_iter()
         .enumerate()
         .map(|(i, q)| Request::new(i as u64, q.text, "code"))
         .collect();
 
     for policy in [AllocPolicy::Uniform, AllocPolicy::Online, AllocPolicy::Offline] {
-        section(&format!("epoch: 32 code queries, B=2, policy {policy:?}"));
+        section(&format!(
+            "epoch: {} code queries, B=2, policy {policy:?}",
+            scale.epoch_queries
+        ));
         let mut cfg = base.clone();
         cfg.allocator.policy = policy;
         cfg.allocator.budget_per_query = 2.0;
@@ -185,13 +221,13 @@ fn main() {
         let scheduler = Scheduler::new(engine, cfg, metrics.clone());
         let mut rng = Pcg64::new(9);
         let mut solved_total = 0usize;
-        let r = bench(&format!("serve_epoch [{policy:?}]"), 6, || {
+        let r = bench(&format!("serve_epoch [{policy:?}]"), scale.epoch_iters, || {
             let out = scheduler
                 .serve_epoch(&reqs, &mut rng, scheduler.effective_budget())
                 .unwrap();
             solved_total += out.iter().filter(|o| o.ok).count();
         });
-        r.print_with_throughput("queries", 32.0);
+        r.print_with_throughput("queries", scale.epoch_queries as f64);
         println!(
             "  stage p50: predict {:.0}µs | alloc {:.0}µs | generate {:.0}µs | select {:.0}µs",
             metrics.histogram("serving.predict_us").percentile_us(0.5),
@@ -200,12 +236,28 @@ fn main() {
             metrics.histogram("serving.select_us").percentile_us(0.5),
         );
         println!("  solved (cumulative over iters): {solved_total}");
+        summary.push((
+            format!("epoch.{}", format!("{policy:?}").to_lowercase()),
+            Json::obj(vec![
+                ("mean_us", Json::Num(r.mean_us)),
+                ("p50_us", Json::Num(r.p50_us)),
+                ("p99_us", Json::Num(r.p99_us)),
+                (
+                    "queries_per_s",
+                    Json::Num(scale.epoch_queries as f64 / (r.mean_us / 1e6)),
+                ),
+                ("solved_total", Json::Num(solved_total as f64)),
+            ]),
+        ));
     }
 
     // --- sharded pool: workers=1 vs workers=4, mixed-domain workload --------
-    section("shard pool: 256 mixed-domain queries, epochs of 16");
+    section(&format!(
+        "shard pool: {} mixed-domain queries, epochs of 16",
+        scale.pool_queries
+    ));
     let mixed: Vec<Request> =
-        workload::gen_mixed_dataset(&["code", "math", "chat"], 256, 0xBE9C)
+        workload::gen_mixed_dataset(&["code", "math", "chat"], scale.pool_queries, 0xBE9C)
             .into_iter()
             .enumerate()
             .map(|(i, q)| Request::new(i as u64, q.text, q.domain))
@@ -218,17 +270,26 @@ fn main() {
             "  workers={workers}: {:>8.1} ms total, {qps:>7.1} queries/s",
             dt.as_secs_f64() * 1e3
         );
+        summary.push((
+            format!("pool.workers_{workers}"),
+            Json::obj(vec![
+                ("total_ms", Json::Num(dt.as_secs_f64() * 1e3)),
+                ("queries_per_s", Json::Num(qps)),
+            ]),
+        ));
         per_workers.push((workers, dt));
     }
     if let [(_, d1), (_, d4)] = per_workers.as_slice() {
-        println!(
-            "  speedup workers=4 over workers=1: {:.2}×",
-            d1.as_secs_f64() / d4.as_secs_f64()
-        );
+        let speedup = d1.as_secs_f64() / d4.as_secs_f64();
+        println!("  speedup workers=4 over workers=1: {speedup:.2}×");
+        summary.push(("pool.speedup_4_over_1".into(), Json::Num(speedup)));
     }
 
     // --- prediction cache: cold vs warm epoch over one scheduler ------------
-    section("prediction cache: repeat epoch of 32 code queries");
+    section(&format!(
+        "prediction cache: repeat epoch of {} code queries",
+        scale.epoch_queries
+    ));
     let mut cfg = pool_config();
     cfg.server.predict_cache_capacity = 4096;
     let metrics = Arc::new(Registry::default());
@@ -252,6 +313,17 @@ fn main() {
         metrics.counter("serving.predict_cache.hit").get(),
         metrics.counter("serving.predict_cache.miss").get(),
     );
+    summary.push((
+        "predict_cache".into(),
+        Json::obj(vec![
+            ("cold_ms", Json::Num(cold.as_secs_f64() * 1e3)),
+            ("warm_ms", Json::Num(warm.as_secs_f64() * 1e3)),
+            (
+                "hits",
+                Json::Num(metrics.counter("serving.predict_cache.hit").get() as f64),
+            ),
+        ]),
+    ));
 
     // --- budget controller under 2× overload: fixed vs adaptive budget ------
     // Calibrate the sustainable rate with a closed-loop pool run under the
@@ -266,7 +338,7 @@ fn main() {
         "budget controller: Poisson trace at 2× sustainable ({sustain_qps:.0} q/s \
          at fixed B=4)"
     ));
-    let trace = Trace::poisson(192, sustain_qps * 2.0, (0.6, 0.4, 0.0), 0xC0DE);
+    let trace = Trace::poisson(scale.trace_len, sustain_qps * 2.0, (0.6, 0.4, 0.0), 0xC0DE);
     let mut p95 = Vec::new();
     for enabled in [false, true] {
         let mut cfg = pool_config();
@@ -294,6 +366,14 @@ fn main() {
                 "4.00 (fixed)".to_string()
             },
         );
+        summary.push((
+            format!("controller.{}", if enabled { "on" } else { "off" }),
+            Json::obj(vec![
+                ("drained_ms", Json::Num(dt.as_secs_f64() * 1e3)),
+                ("queue_wait_p50_us", Json::Num(hist.percentile_us(0.5))),
+                ("queue_wait_p95_us", Json::Num(p95_us)),
+            ]),
+        ));
         p95.push(p95_us);
     }
     if let [off, on] = p95.as_slice() {
@@ -301,5 +381,13 @@ fn main() {
             "  p95 queue wait: fixed {off:.0}µs vs controller {on:.0}µs ({:.2}×)",
             off / on.max(1.0)
         );
+    }
+
+    if let Some(path) = json_path {
+        let pairs: Vec<(&str, Json)> =
+            summary.iter().map(|(k, v)| (k.as_str(), v.clone())).collect();
+        let doc = Json::obj(pairs);
+        std::fs::write(&path, format!("{doc}\n")).expect("write --json output");
+        println!("\nwrote bench summary to {path}");
     }
 }

@@ -4,6 +4,10 @@
 //! mean / p50 / p99 per-iteration wall time plus derived throughput. Used by
 //! every `[[bench]]` target (harness = false).
 
+// every bench target compiles its own copy of this module and each uses a
+// different subset of the API, so per-target dead-code analysis is noise
+#![allow(dead_code)]
+
 use std::time::Instant;
 
 pub struct BenchResult {

@@ -96,7 +96,11 @@ impl OfflinePolicy {
                     continue;
                 }
                 let gain = blocks[k][bin_budgets[k]];
-                if gain > 0.0 && best.map_or(true, |(g, _)| gain > g) {
+                let beats = match best {
+                    None => true,
+                    Some((g, _)) => gain > g,
+                };
+                if gain > 0.0 && beats {
                     best = Some((gain, k));
                 }
             }

@@ -167,6 +167,43 @@ fn split_top_level(s: &str) -> Result<Vec<String>, String> {
 }
 
 // --- typed configuration tree ---------------------------------------------------
+/// Which execution backend the [`crate::runtime::Engine`] dispatches to
+/// (see [`crate::runtime::backend`]).
+///
+/// `Native` is the default: a pure-rust deterministic model of the synthetic
+/// task universe that needs no compiled artifacts and no external runtime.
+/// `Xla` is the PJRT path over AOT-compiled HLO artifacts; it is only
+/// available when the crate is built with the `xla-runtime` cargo feature.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum BackendKind {
+    /// Pure-rust backend backed by the synthetic ground-truth model.
+    #[default]
+    Native,
+    /// PJRT/XLA backend over AOT HLO artifacts (`xla-runtime` feature).
+    Xla,
+}
+
+impl BackendKind {
+    /// Stable config/CLI name.
+    pub fn name(self) -> &'static str {
+        match self {
+            BackendKind::Native => "native",
+            BackendKind::Xla => "xla",
+        }
+    }
+}
+
+impl std::str::FromStr for BackendKind {
+    type Err = anyhow::Error;
+    fn from_str(s: &str) -> anyhow::Result<Self> {
+        Ok(match s {
+            "native" => BackendKind::Native,
+            "xla" => BackendKind::Xla,
+            other => anyhow::bail!("unknown backend `{other}` (native|xla)"),
+        })
+    }
+}
+
 /// Which kernel implementation the loaded artifacts use.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum KernelMode {
@@ -243,7 +280,10 @@ impl std::str::FromStr for ProcedureKind {
 
 #[derive(Clone, Debug)]
 pub struct RuntimeConfig {
-    /// Directory holding `*.hlo.txt` AOT artifacts + MANIFEST.json.
+    /// Execution backend the engine dispatches model calls to.
+    pub backend: BackendKind,
+    /// Directory holding `*.hlo.txt` AOT artifacts + MANIFEST.json
+    /// (xla backend only; the native backend needs no artifacts).
     pub artifacts_dir: PathBuf,
     pub kernel_mode: KernelMode,
     /// Static batch of encoder/probe/reward executables (must match export).
@@ -257,6 +297,7 @@ pub struct RuntimeConfig {
 impl Default for RuntimeConfig {
     fn default() -> Self {
         Self {
+            backend: BackendKind::Native,
             artifacts_dir: PathBuf::from("artifacts"),
             kernel_mode: KernelMode::Xla,
             batch: 64,
@@ -490,6 +531,7 @@ impl Config {
             };
         }
         match key {
+            "runtime.backend" => self.runtime.backend = str_of!().parse()?,
             "runtime.artifacts_dir" => self.runtime.artifacts_dir = PathBuf::from(str_of!()),
             "runtime.kernel_mode" => {
                 self.runtime.kernel_mode = match str_of!().as_str() {
@@ -573,6 +615,15 @@ impl Config {
         );
         anyhow::ensure!(self.runtime.batch >= 1 && self.runtime.decode_batch >= 1,
             "batch sizes must be ≥ 1");
+        // the decode head emits logits indexed by token id: the configured
+        // width must cover the tokenizer's id space (PAD/BOS/EOS included)
+        // or the serving path would panic instead of erroring
+        anyhow::ensure!(
+            self.runtime.vocab >= crate::tokenizer::VOCAB,
+            "runtime.vocab = {} is smaller than the tokenizer id space ({})",
+            self.runtime.vocab,
+            crate::tokenizer::VOCAB
+        );
         anyhow::ensure!(
             (0.0..=1.0).contains(&self.route.strong_fraction),
             "route.strong_fraction must be in [0, 1]"
@@ -777,6 +828,31 @@ mod tests {
         )
         .unwrap_err();
         assert!(err.to_string().contains("target_tokens_per_s"));
+    }
+
+    #[test]
+    fn validation_rejects_undersized_vocab() {
+        // decode logits are indexed by token id — a vocab smaller than the
+        // tokenizer id space must fail validation, not panic a worker
+        let err = Config::from_toml_str("[runtime]\nvocab = 200\n").unwrap_err();
+        assert!(err.to_string().contains("vocab"), "{err}");
+    }
+
+    #[test]
+    fn backend_key_roundtrip_and_default() {
+        // default: native — the crate must serve with no artifacts and no
+        // xla runtime present
+        assert_eq!(Config::default().runtime.backend, BackendKind::Native);
+        let cfg = Config::from_toml_str("[runtime]\nbackend = \"xla\"\n").unwrap();
+        assert_eq!(cfg.runtime.backend, BackendKind::Xla);
+        let cfg = Config::from_toml_str("[runtime]\nbackend = \"native\"\n").unwrap();
+        assert_eq!(cfg.runtime.backend, BackendKind::Native);
+        let err = Config::from_toml_str("[runtime]\nbackend = \"tpu\"\n").unwrap_err();
+        assert!(err.to_string().contains("backend"));
+        // names are stable wire/CLI identifiers
+        assert_eq!(BackendKind::Native.name(), "native");
+        assert_eq!(BackendKind::Xla.name(), "xla");
+        assert_eq!("xla".parse::<BackendKind>().unwrap(), BackendKind::Xla);
     }
 
     #[test]

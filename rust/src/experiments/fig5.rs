@@ -103,7 +103,8 @@ mod tests {
             assert!(o > r, "f={f}: oracle {o} ≤ random {r}");
         }
         // careful routing beats always-strong: weak wins on negative-gain queries
-        let all_strong = eval_routing_mask(&weak, &strong, &vec![true; qs.len()]);
+        let strong_mask = vec![true; qs.len()];
+        let all_strong = eval_routing_mask(&weak, &strong, &strong_mask);
         let best_orc = (0..=10)
             .map(|i| {
                 eval_routing_mask(&weak, &strong,

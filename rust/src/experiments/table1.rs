@@ -55,10 +55,11 @@ fn median_acc(pred: &[f64], target: &[f64]) -> f64 {
 
 fn bce_row(setting: &str, pred: &[f64], target: &[f64]) -> Row {
     let tbar = (target.iter().sum::<f64>() / target.len() as f64).clamp(1e-6, 1.0 - 1e-6);
+    let baseline = vec![tbar; target.len()];
     Row {
         setting: setting.to_string(),
         ours: bce(pred, target),
-        avg: bce(&vec![tbar; target.len()], target),
+        avg: bce(&baseline, target),
         opt: bce(target, target),
         acc: median_acc(pred, target),
     }

@@ -108,12 +108,7 @@ impl Json {
     }
 
     // --- serialization -------------------------------------------------------
-    pub fn to_string(&self) -> String {
-        let mut out = String::new();
-        self.write(&mut out);
-        out
-    }
-
+    // (via `Display`, so `.to_string()` and `format!` both work)
     fn write(&self, out: &mut String) {
         match self {
             Json::Null => out.push_str("null"),
@@ -154,6 +149,14 @@ impl Json {
                 out.push('}');
             }
         }
+    }
+}
+
+impl std::fmt::Display for Json {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let mut out = String::new();
+        self.write(&mut out);
+        f.write_str(&out)
     }
 }
 

@@ -7,9 +7,11 @@
 //! * **L3 (this crate)** — request router, dynamic batcher, budget-aware
 //!   scheduler dispatching per-request decode procedures (adaptive
 //!   best-of-k §3.2 and weak/strong routing §3.3 — see
-//!   [`serving::procedure`]), the paper's allocation engine, and a PJRT
-//!   runtime that executes AOT-compiled HLO artifacts. Python never runs at
-//!   request time.
+//!   [`serving::procedure`]), the paper's allocation engine, and a
+//!   backend-abstracted model runtime ([`runtime::backend`]): a pure-rust
+//!   deterministic native backend by default, or PJRT execution of the
+//!   AOT-compiled HLO artifacts behind the `xla-runtime` feature. Python
+//!   never runs at request time.
 //! * **L2** (`python/compile/model.py`) — TinyLM encoder/generator/reward
 //!   heads + difficulty probes, lowered once to HLO text.
 //! * **L1** (`python/compile/kernels/`) — Pallas kernels (fused attention,

@@ -13,6 +13,13 @@ use thinkalloc::server::Server;
 
 fn cli() -> Cli {
     let runtime_flags = vec![
+        FlagSpec {
+            name: "backend",
+            help: "execution backend: native|xla; empty = value from \
+                   --config (default native; xla needs the xla-runtime \
+                   build feature + artifacts)",
+            default: Some(""),
+        },
         FlagSpec { name: "artifacts", help: "artifacts directory", default: Some("artifacts") },
         FlagSpec { name: "kernel-mode", help: "pallas|xla", default: Some("xla") },
     ];
@@ -101,6 +108,10 @@ fn engine_from(args: &Args) -> Result<Engine> {
         artifacts_dir: PathBuf::from(args.str_flag("artifacts")?),
         ..Default::default()
     };
+    let backend_flag = args.str_flag("backend")?;
+    if !backend_flag.is_empty() {
+        cfg.backend = backend_flag.parse()?;
+    }
     cfg.kernel_mode = match args.str_flag("kernel-mode")?.as_str() {
         "pallas" => KernelMode::Pallas,
         "xla" => KernelMode::Xla,
@@ -143,6 +154,12 @@ fn cmd_serve(args: &Args) -> Result<()> {
         }
     };
     cfg.runtime.artifacts_dir = PathBuf::from(args.str_flag("artifacts")?);
+    // empty = keep whatever --config (or the default, native) says — the
+    // flag must not silently clobber a file-configured backend
+    let backend_flag = args.str_flag("backend")?;
+    if !backend_flag.is_empty() {
+        cfg.runtime.backend = backend_flag.parse()?;
+    }
     cfg.server.addr = args.str_flag("addr")?;
     cfg.allocator.policy = args.str_flag("policy")?.parse()?;
     cfg.allocator.budget_per_query = args.f64_flag("budget")?;
@@ -178,9 +195,10 @@ fn cmd_serve(args: &Args) -> Result<()> {
 
     let metrics = Arc::new(Registry::default());
     println!(
-        "thinkalloc serving on {} (policy {:?}, B={}, procedure {}, workers {}, \
-         controller {})",
+        "thinkalloc serving on {} (backend {}, policy {:?}, B={}, procedure {}, \
+         workers {}, controller {})",
         cfg.server.addr,
+        cfg.runtime.backend.name(),
         cfg.allocator.policy,
         cfg.allocator.budget_per_query,
         cfg.route.procedure.name(),
@@ -208,6 +226,28 @@ fn cmd_experiment(args: &Args) -> Result<()> {
         .unwrap_or("all");
     let out = PathBuf::from(args.str_flag("out")?);
     let engine = engine_from(args)?;
+    // every figure driver except `ablation` evaluates on the python-exported
+    // test datasets — whatever the backend, those must exist on disk; fail
+    // up front with instructions instead of dying mid-run on a raw read
+    // error after some figures already regenerated
+    if which != "ablation" {
+        let datasets = engine.artifacts_dir().join("datasets");
+        anyhow::ensure!(
+            datasets.is_dir(),
+            "experiment `{which}` needs the exported test datasets at {} — \
+             run `make artifacts` (python -m compile.aot) first, or run the \
+             dataset-free `experiment ablation`",
+            datasets.display()
+        );
+    }
+    // never silent about what produced the figures: the native backend
+    // regenerates them from the synthetic ground-truth model, the xla
+    // backend from the trained artifacts (the paper-reproduction setting)
+    println!(
+        "experiments on backend `{}` ({})",
+        engine.backend_kind().name(),
+        engine.platform()
+    );
     run_experiments(&engine, which, &out)
 }
 
@@ -309,6 +349,15 @@ fn cmd_gen_trace(args: &Args) -> Result<()> {
 
 fn cmd_check(args: &Args) -> Result<()> {
     let engine = engine_from(args)?;
+    // goldens are python-side outputs of the trained TinyLM: comparing the
+    // native synthetic model against them would always "fail" — refuse
+    // early with instructions instead of reporting a spurious mismatch
+    anyhow::ensure!(
+        engine.backend_kind() == thinkalloc::config::BackendKind::Xla,
+        "`check` verifies the AOT artifacts against python goldens and only \
+         makes sense on the xla backend; rerun with `--backend xla` (build \
+         with `--features xla-runtime`)"
+    );
     let report = thinkalloc::runtime::goldens::check(&engine)?;
     println!("{report}");
     Ok(())
@@ -317,6 +366,7 @@ fn cmd_check(args: &Args) -> Result<()> {
 fn cmd_info(args: &Args) -> Result<()> {
     let engine = engine_from(args)?;
     println!("platform: {}", engine.platform());
+    println!("backend: {}", engine.backend_kind().name());
     println!("kernel mode: {:?}", engine.kernel_mode());
     println!(
         "batch: {} decode_batch: {} seq: {} vocab: {}",

@@ -1,0 +1,603 @@
+//! The default pure-rust backend: a deterministic model of the synthetic
+//! task universe, built from the same ground-truth machinery the evaluation
+//! simulator uses ([`crate::workload`] for λ/μ/preference structure,
+//! [`crate::simulator::marginal_rewards`] for the chat Δ̂ head).
+//!
+//! Where the xla backend runs a trained TinyLM over AOT artifacts, this
+//! backend *computes* what that model approximates, directly from the query
+//! text (plus small deterministic hash-noise on the probe heads so they
+//! behave like learned, imperfect predictors rather than oracles). Every
+//! output is a pure function of the input tokens — see the trait contract
+//! in [`super`] — so prediction caching, `workers = 1` reproducibility and
+//! cross-worker parity all hold by construction.
+//!
+//! The decode head deserves a note: generation must stay *stochastic per
+//! sample* (best-of-k is pointless otherwise) while the backend itself
+//! stays pure. The trick is to put the randomness where it already lives —
+//! the sampler's explicit rng — by emitting *probabilities as logits*: for
+//! a binary-domain query with single-sample success rate λ and an
+//! `m`-token answer, each step gives the correct continuation token
+//! probability `p = λ^(1/(m+1))` and a corruption token `1 − p`, so a full
+//! greedy-free sample verifies with probability ≈ λ (exactly λ at
+//! temperature 1.0; a monotone distortion of it otherwise). Chat queries
+//! emit a spread over the chat alphabet, so the reward head and rerank see
+//! genuinely diverse candidates.
+
+use std::collections::BTreeSet;
+
+use anyhow::{bail, Result};
+
+use super::Backend;
+use crate::config::RuntimeConfig;
+use crate::jsonio::Json;
+use crate::prng::SplitMix64;
+use crate::runtime::Artifact;
+use crate::simulator::marginal_rewards;
+use crate::tokenizer::{self, EOS_ID};
+use crate::workload::{self, Query};
+
+/// Logit used for tokens that must never be sampled (exp(x/T) underflows
+/// to zero for every supported temperature).
+const NEG: f32 = -1e30;
+
+/// Corruption token for failed binary-domain decode steps: never appears in
+/// any ADD/REV answer, so a corrupted sample can never verify by accident.
+const WRONG_BYTE: u8 = b'#';
+
+/// Monte-Carlo draws behind the preference probes (route/vas heads).
+const PREF_MC: usize = 48;
+
+/// Samples drawn per chat query when bootstrapping its Δ̂ row.
+const CHAT_DELTA_SAMPLES: usize = 16;
+
+/// Peak absolute hash-noise added to λ̂ probes (keeps them imperfect like a
+/// learned head; exact zeros are preserved — see [`lambda_hat`]).
+const PROBE_NOISE: f64 = 0.05;
+
+/// Cap on native chat completions, in alphabet tokens.
+const CHAT_MAX_LEN: usize = 10;
+
+/// The pure-rust [`Backend`]. Construction is free; [`Backend::compile`]
+/// only records which artifact heads are callable, mirroring the xla
+/// backend's partial-load semantics.
+pub struct NativeBackend {
+    cfg: RuntimeConfig,
+    compiled: BTreeSet<Artifact>,
+}
+
+impl NativeBackend {
+    /// Create a backend for the given runtime shape (batch sizes, max_seq,
+    /// vocab). No artifacts or external libraries are touched.
+    pub fn new(cfg: RuntimeConfig) -> NativeBackend {
+        NativeBackend { cfg, compiled: BTreeSet::new() }
+    }
+
+    /// The synthesized manifest: what the xla path reads from
+    /// `MANIFEST.json`, computed here. Only `b_max_chat` is load-bearing
+    /// (the chat Δ̂ head's export width, read by the predictor).
+    pub fn manifest(&self) -> Json {
+        Json::obj(vec![
+            ("backend", Json::Str("native".into())),
+            ("b_max_chat", Json::Num(8.0)),
+            (
+                "source",
+                Json::Str("synthetic ground-truth model (no artifacts)".into()),
+            ),
+        ])
+    }
+
+    fn ensure(&self, art: Artifact) -> Result<()> {
+        if self.compiled.contains(&art) {
+            return Ok(());
+        }
+        bail!("artifact {art:?} not loaded");
+    }
+
+    /// One output row for a token-batch artifact (see dispatch below).
+    fn row_out(&self, art: Artifact, text: &str, out_cols: usize) -> Result<Vec<f32>> {
+        Ok(match art {
+            Artifact::Encoder => pseudo_embedding(text, out_cols),
+            Artifact::ProbeCode | Artifact::ProbeMath => {
+                let lam = parse_query(text).map(|q| q.lam).unwrap_or(0.0);
+                vec![lambda_hat(text, lam) as f32; out_cols]
+            }
+            Artifact::ProbeChat => chat_deltas(text, out_cols),
+            Artifact::ProbeRoute => vec![preference(text, false) as f32; out_cols],
+            Artifact::ProbeVas => vec![preference(text, true) as f32; out_cols],
+            Artifact::Reward => vec![reward_score(text); out_cols],
+            Artifact::DecodeStep => decode_logits(text, out_cols),
+            Artifact::Rerank => bail!("rerank is not a token artifact"),
+        })
+    }
+}
+
+impl Backend for NativeBackend {
+    fn compile(&mut self, artifacts: &[Artifact]) -> Result<()> {
+        self.compiled.extend(artifacts.iter().copied());
+        Ok(())
+    }
+
+    fn has(&self, art: Artifact) -> bool {
+        self.compiled.contains(&art)
+    }
+
+    fn run_tokens(
+        &self,
+        art: Artifact,
+        ids: &[i32],
+        _last_idx: &[i32],
+        batch: usize,
+        out_cols: usize,
+    ) -> Result<Vec<f32>> {
+        self.ensure(art)?;
+        let seq = self.cfg.max_seq;
+        if ids.len() != batch * seq {
+            bail!("native backend: ids len {} != {batch} × {seq}", ids.len());
+        }
+        let mut out = Vec::with_capacity(batch * out_cols);
+        // Padding rows all decode to the empty string; the heads are pure
+        // functions of the text, so compute that row once instead of
+        // re-running the (bootstrap/Monte-Carlo) heads per padding row —
+        // the engine pads every call to the static batch, so at small live
+        // counts this is most of the per-call work.
+        let mut empty_row: Option<Vec<f32>> = None;
+        for r in 0..batch {
+            let text = tokenizer::decode(&ids[r * seq..(r + 1) * seq]);
+            let row = if text.is_empty() {
+                if empty_row.is_none() {
+                    empty_row = Some(self.row_out(art, "", out_cols)?);
+                }
+                empty_row.clone().expect("filled above")
+            } else {
+                self.row_out(art, &text, out_cols)?
+            };
+            if row.len() != out_cols {
+                bail!(
+                    "native {art:?}: produced {} cols, expected {out_cols}",
+                    row.len()
+                );
+            }
+            out.extend(row);
+        }
+        Ok(out)
+    }
+
+    fn run_rerank(
+        &self,
+        scores: &[f32],
+        mask: &[f32],
+        batch: usize,
+        k: usize,
+    ) -> Result<(Vec<i32>, Vec<f32>)> {
+        self.ensure(Artifact::Rerank)?;
+        if scores.len() != batch * k || mask.len() != batch * k {
+            bail!("native rerank: shape mismatch");
+        }
+        let mut idx = Vec::with_capacity(batch);
+        let mut val = Vec::with_capacity(batch);
+        for r in 0..batch {
+            let mut best = (0i32, -1e30f32);
+            for j in 0..k {
+                let masked = if mask[r * k + j] > 0.0 { scores[r * k + j] } else { -1e30 };
+                if masked > best.1 {
+                    best = (j as i32, masked);
+                }
+            }
+            idx.push(best.0);
+            val.push(best.1);
+        }
+        Ok((idx, val))
+    }
+
+    fn platform(&self) -> String {
+        "native".to_string()
+    }
+}
+
+// --- deterministic hashing ------------------------------------------------------
+
+/// FNV-1a over the text, scrambled with a per-head salt; the basis of every
+/// "learned noise" and Monte-Carlo seed below. Pure function of its inputs.
+fn seed_for(text: &str, salt: u64) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for &b in text.as_bytes() {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01B3);
+    }
+    SplitMix64::new(h ^ salt).next_u64()
+}
+
+/// Uniform in [0, 1), deterministic in (text, salt).
+fn hash01(text: &str, salt: u64) -> f64 {
+    (seed_for(text, salt) >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+}
+
+// --- the synthetic model heads --------------------------------------------------
+
+/// Reconstruct the ground-truth [`Query`] parameters from raw text, exactly
+/// as [`crate::workload`]'s generators would have produced them. Returns
+/// None for text outside the ADD/REV/CHAT universe.
+fn parse_query(text: &str) -> Option<Query> {
+    if let Some(rest) = text.strip_prefix("ADD ") {
+        let vals: Vec<u64> =
+            rest.split_whitespace().filter_map(|t| t.parse().ok()).collect();
+        if vals.is_empty() {
+            return None;
+        }
+        let big = vals.iter().filter(|&&v| v >= 50).count();
+        return Some(Query {
+            text: text.to_string(),
+            answer: (vals.iter().sum::<u64>() % 100).to_string(),
+            lam: workload::code_lambda(vals.len(), big),
+            mu: 0.0,
+            sigma: 0.0,
+            gain: 0.0,
+            gain_vas: 0.0,
+            domain: "code",
+        });
+    }
+    if let Some(rest) = text.strip_prefix("REV ") {
+        let s = rest.trim();
+        if s.is_empty() {
+            return None;
+        }
+        let vowels = s.chars().filter(|c| "aeiou".contains(*c)).count();
+        return Some(Query {
+            text: text.to_string(),
+            answer: s.chars().rev().collect(),
+            lam: workload::math_lambda(s.len(), vowels),
+            mu: 0.0,
+            sigma: 0.0,
+            gain: 0.0,
+            gain_vas: 0.0,
+            domain: "math",
+        });
+    }
+    if text.starts_with("CHAT") {
+        let idx = chat_word_indices(text);
+        let (mu, sigma, gain, gain_vas) = workload::chat_params(&idx);
+        return Some(Query {
+            text: text.to_string(),
+            answer: String::new(),
+            lam: 0.0,
+            mu,
+            sigma,
+            gain,
+            gain_vas,
+            domain: "chat",
+        });
+    }
+    None
+}
+
+/// Alphabet indices of a chat query's characters (any text shape accepted:
+/// the wire protocol does not enforce the single-character word format).
+fn chat_word_indices(text: &str) -> Vec<usize> {
+    let idx: Vec<usize> = text
+        .strip_prefix("CHAT")
+        .unwrap_or(text)
+        .chars()
+        .filter_map(|c| workload::CHAT_ALPHABET.find(c))
+        .collect();
+    if idx.is_empty() {
+        vec![0]
+    } else {
+        idx
+    }
+}
+
+/// λ̂: the true single-sample success rate plus bounded deterministic noise,
+/// so the probe behaves like a learned head (high but imperfect
+/// correlation).
+///
+/// The output is deliberately *continuous*: structurally-impossible queries
+/// (λ = 0, ~half the code domain) report a near-zero λ̂ in
+/// (0, `PROBE_NOISE`/2) rather than an exact 0, like a trained head whose
+/// logits never saturate. An exact atom would poison downstream quantile
+/// calibration — with > 50% of held-out mass at one value, the threshold
+/// router's median lands *on* the atom and its tie-breaking rule would
+/// route the whole atom to one arm. The allocator still gives these
+/// queries budget 0 in practice: their marginal gains (≈ λ̂ per sample)
+/// rank below real queries' whenever the batch budget is scarce, which is
+/// the same mechanism that starves them under the learned xla probe.
+fn lambda_hat(text: &str, lam: f64) -> f64 {
+    let h = hash01(text, 0x9806_0B);
+    if lam == 0.0 {
+        return (PROBE_NOISE / 2.0) * h;
+    }
+    // floor at lam/2, not 0: a possible-but-hard query (lam < the noise
+    // half-width) must never report an exact 0.0 — that would both recreate
+    // a shared atom and rank it below the impossible queries above. The
+    // floor binds only for lam < PROBE_NOISE and is per-query, so no two
+    // queries share it.
+    (lam + PROBE_NOISE * (h - 0.5)).clamp(lam / 2.0, 1.0)
+}
+
+/// Chat Δ̂ row: bootstrap the best-of-b marginal-reward curve from a
+/// deterministically-seeded draw of the query's reward distribution — the
+/// same estimator the offline evaluator uses (eq. 6 target).
+fn chat_deltas(text: &str, out_cols: usize) -> Vec<f32> {
+    let q = parse_query(text).unwrap_or_else(|| Query {
+        text: text.to_string(),
+        answer: String::new(),
+        lam: 0.0,
+        mu: 0.0,
+        sigma: 0.3,
+        gain: 0.0,
+        gain_vas: 0.0,
+        domain: "chat",
+    });
+    let m = CHAT_DELTA_SAMPLES.max(out_cols);
+    let rewards = workload::sample_chat_rewards(
+        std::slice::from_ref(&q),
+        m,
+        seed_for(text, 0xC4A7_DE17),
+    );
+    marginal_rewards(&rewards, out_cols)
+        .into_iter()
+        .map(|d| d as f32)
+        .collect()
+}
+
+/// p̂(S ≻ W): Monte-Carlo preference probability under the query's true
+/// routing-gain parameters (eq. 8/11), deterministically seeded.
+fn preference(text: &str, vas: bool) -> f64 {
+    match parse_query(text) {
+        Some(q) => {
+            workload::preference_prob(
+                std::slice::from_ref(&q),
+                PREF_MC,
+                seed_for(text, if vas { 0x7A5 } else { 0x707E }),
+                vas,
+            )[0]
+        }
+        None => 0.5,
+    }
+}
+
+/// Reward-head score for a `"<query> = <response>"` candidate: the
+/// deterministic ground-truth reward (μ plus the bag-linear response
+/// quality the trained head approximates).
+fn reward_score(text: &str) -> f32 {
+    let (query, resp) = match text.split_once(" = ") {
+        Some(x) => x,
+        None => return -0.5,
+    };
+    let mu = parse_query(query).map(|q| q.mu).unwrap_or(0.0);
+    (mu + 0.8 * workload::response_quality(resp)) as f32
+}
+
+// --- the decode head ------------------------------------------------------------
+
+/// Next-token logits for a `"<query> = <partial>"` decode row.
+///
+/// Binary domains walk the ground-truth answer with per-step success
+/// probability `λ^(1/steps)` (probabilities emitted as logits — the
+/// sampler's rng supplies the randomness); a diverged row finishes
+/// immediately. Chat rows spread mass over the alphabet with a geometric
+/// stopping rule, giving the reward/rerank stages diverse candidates.
+fn decode_logits(text: &str, out_cols: usize) -> Vec<f32> {
+    // out_cols is the configured vocab width, guaranteed ≥ tokenizer::VOCAB
+    // (and hence > EOS_ID and every alphabet byte) by `backend::create`
+    let mut logits = vec![NEG; out_cols];
+    let eos = EOS_ID as usize;
+    let Some((query, partial)) = text.split_once(" = ") else {
+        // outside the completion format: end the sample immediately
+        logits[eos] = 0.0;
+        return logits;
+    };
+    let Some(q) = parse_query(query) else {
+        logits[eos] = 0.0;
+        return logits;
+    };
+    if q.domain == "chat" {
+        if partial.len() >= CHAT_MAX_LEN {
+            logits[eos] = 0.0;
+            return logits;
+        }
+        // alphabet chars at weight 1; EOS (once non-empty) tuned so
+        // completion lengths are ~geometric with mean ≈ 6 tokens
+        for c in workload::CHAT_ALPHABET.bytes() {
+            logits[c as usize] = 0.0;
+        }
+        if !partial.is_empty() {
+            logits[eos] = (64.0f32 / 6.0).ln();
+        }
+        return logits;
+    }
+
+    if !target_continues(&q.answer, partial) {
+        logits[eos] = 0.0; // diverged: finish the (wrong) sample fast
+        return logits;
+    }
+    // Every step — each answer byte AND the final EOS — succeeds with
+    // probability p = λ^(1/(len+1)), so P(full sample verifies) = λ at
+    // temperature 1.0.
+    let steps = (q.answer.len() + 1) as f64;
+    let p = if q.lam > 0.0 { q.lam.powf(1.0 / steps) } else { 0.0 };
+    let correct = if partial.len() == q.answer.len() {
+        eos // answer complete: the success path is emitting EOS
+    } else {
+        q.answer.as_bytes()[partial.len()] as usize
+    };
+    logits[correct] = if p > 0.0 { (p as f32).ln() } else { NEG };
+    let wrong_logit = if p < 1.0 { ((1.0 - p) as f32).ln() } else { NEG };
+    // the corruption token; if the success token IS '#' (never true for
+    // ADD/REV answers), divert corruption to EOS instead of overwriting it
+    if correct != WRONG_BYTE as usize {
+        logits[WRONG_BYTE as usize] = wrong_logit;
+    } else {
+        logits[eos] = wrong_logit;
+    }
+    logits
+}
+
+/// Is `partial` still on the success path (a proper prefix of the answer,
+/// or the full answer awaiting its EOS)?
+fn target_continues(answer: &str, partial: &str) -> bool {
+    answer.as_bytes().starts_with(partial.as_bytes())
+}
+
+/// Deterministic pseudo-embedding for the encoder artifact (values in
+/// [−1, 1)); only used by callers that inspect hidden states directly.
+fn pseudo_embedding(text: &str, out_cols: usize) -> Vec<f32> {
+    let mut sm = SplitMix64::new(seed_for(text, 0xE6BED));
+    (0..out_cols)
+        .map(|_| ((sm.next_u64() >> 40) as f32 * (1.0 / (1u64 << 24) as f32)) * 2.0 - 1.0)
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prng::Pcg64;
+
+    fn backend() -> NativeBackend {
+        let mut b = NativeBackend::new(RuntimeConfig::default());
+        b.compile(&Artifact::ALL).unwrap();
+        b
+    }
+
+    fn probe_one(b: &NativeBackend, art: Artifact, text: &str, cols: usize) -> Vec<f32> {
+        let seq = b.cfg.max_seq;
+        let batch = b.cfg.batch;
+        let mut ids = tokenizer::encode(text, seq);
+        ids.resize(batch * seq, tokenizer::PAD_ID);
+        let li = vec![0i32; batch];
+        let out = b.run_tokens(art, &ids, &li, batch, cols).unwrap();
+        out[..cols].to_vec()
+    }
+
+    #[test]
+    fn probes_are_deterministic_and_correlated() {
+        let b = backend();
+        let qs = workload::gen_dataset("code", 200, 3);
+        let mut sum_err = 0.0;
+        for q in &qs {
+            let a = probe_one(&b, Artifact::ProbeCode, &q.text, 1)[0] as f64;
+            let a2 = probe_one(&b, Artifact::ProbeCode, &q.text, 1)[0] as f64;
+            assert_eq!(a, a2, "probe must be pure");
+            if q.lam == 0.0 {
+                // near-zero but never an exact atom (see lambda_hat docs)
+                assert!(a > 0.0 && a <= PROBE_NOISE / 2.0, "λ=0 probe out of band: {a}");
+            } else {
+                // possible queries also never report exactly 0 (lam/2 floor)
+                assert!(a > 0.0, "possible query clamped to 0: λ={}", q.lam);
+                assert!((a - q.lam).abs() <= PROBE_NOISE / 2.0 + 1e-6);
+            }
+            sum_err += (a - q.lam).abs();
+        }
+        assert!(sum_err / 200.0 < PROBE_NOISE, "mean error too large");
+    }
+
+    #[test]
+    fn chat_deltas_are_diminishing() {
+        let b = backend();
+        let row = probe_one(&b, Artifact::ProbeChat, "CHAT a b c", 8);
+        // Δ₁ is the mean reward; later marginals shrink toward 0
+        assert!(row[0].is_finite());
+        for w in row.windows(2).skip(1) {
+            assert!(w[1] <= w[0] + 1e-5, "marginals must diminish: {row:?}");
+        }
+        assert!(row[7] >= -1e-6, "marginal rewards are non-negative");
+    }
+
+    #[test]
+    fn preference_heads_bounded_and_pure() {
+        let b = backend();
+        for text in ["CHAT a b", "CHAT Z z 9", "ADD 1 2"] {
+            for art in [Artifact::ProbeRoute, Artifact::ProbeVas] {
+                let p = probe_one(&b, art, text, 1)[0];
+                assert!((0.0..=1.0).contains(&p), "{art:?} {text}: {p}");
+                assert_eq!(p, probe_one(&b, art, text, 1)[0]);
+            }
+        }
+    }
+
+    #[test]
+    fn reward_head_matches_ground_truth() {
+        let b = backend();
+        let r = probe_one(&b, Artifact::Reward, "CHAT a b = AB", 1)[0] as f64;
+        let q = parse_query("CHAT a b").unwrap();
+        let want = q.mu + 0.8 * workload::response_quality("AB");
+        assert!((r - want).abs() < 1e-6, "{r} vs {want}");
+    }
+
+    #[test]
+    fn decode_solves_easy_and_never_impossible() {
+        // end-to-end through the real generator: easy queries (λ = 0.92)
+        // verify most of the time, impossible ones (λ = 0) never do
+        let engine = crate::runtime::Engine::load_all(&RuntimeConfig::default()).unwrap();
+        let easy = "ADD 1"; // k = 1, no big values ⇒ λ = 0.92
+        let hard = "ADD 1 2 3 4 5 6 7 8 9 10"; // k = 10 > 8 ⇒ λ = 0
+        let jobs = crate::serving::generator::jobs_for_allocation(
+            &[easy, hard],
+            &[16, 16],
+        );
+        let mut rng = Pcg64::new(42);
+        let samples = crate::serving::generator::generate(
+            &engine,
+            &jobs,
+            &crate::serving::generator::GenConfig { max_new_tokens: 8, temperature: 1.0 },
+            &mut rng,
+        )
+        .unwrap();
+        let easy_ok = samples
+            .iter()
+            .filter(|s| s.query == 0 && s.text.trim() == "1")
+            .count();
+        let hard_ok = samples
+            .iter()
+            .filter(|s| s.query == 1 && s.text.trim() == "55")
+            .count();
+        // Binomial(16, 0.92): P(X < 8) < 1e-6 — seed-stable and far from
+        // the threshold
+        assert!(easy_ok >= 8, "easy λ=0.92 solved only {easy_ok}/16");
+        assert_eq!(hard_ok, 0, "λ = 0 queries must never verify");
+    }
+
+    #[test]
+    fn chat_decode_produces_diverse_candidates() {
+        let engine = crate::runtime::Engine::load_all(&RuntimeConfig::default()).unwrap();
+        let jobs = crate::serving::generator::jobs_for_allocation(&["CHAT a b"], &[8]);
+        let mut rng = Pcg64::new(7);
+        let samples = crate::serving::generator::generate(
+            &engine,
+            &jobs,
+            &crate::serving::generator::GenConfig::default(),
+            &mut rng,
+        )
+        .unwrap();
+        assert_eq!(samples.len(), 8);
+        let distinct: BTreeSet<&str> =
+            samples.iter().map(|s| s.text.as_str()).collect();
+        assert!(distinct.len() >= 3, "candidates not diverse: {distinct:?}");
+        for s in &samples {
+            assert!(!s.text.is_empty(), "empty chat completion");
+            assert!(s.text.len() <= CHAT_MAX_LEN);
+        }
+    }
+
+    #[test]
+    fn rerank_masked_argmax() {
+        let b = backend();
+        let scores = [0.1f32, 0.9, 0.5, 0.4, 0.2, 0.3, 0.0, 0.0];
+        let mask = [1.0f32, 0.0, 1.0, 1.0, 1.0, 1.0, 0.0, 0.0];
+        let (idx, val) = b.run_rerank(&scores, &mask, 2, 4).unwrap();
+        assert_eq!(idx, vec![2, 1]); // 0.9 is masked out in row 0
+        assert!((val[0] - 0.5).abs() < 1e-6);
+        assert!((val[1] - 0.3).abs() < 1e-6);
+    }
+
+    #[test]
+    fn uncompiled_artifact_errors() {
+        let mut b = NativeBackend::new(RuntimeConfig::default());
+        b.compile(&[Artifact::ProbeCode]).unwrap();
+        assert!(b.has(Artifact::ProbeCode));
+        assert!(!b.has(Artifact::Reward));
+        let err = b
+            .run_tokens(Artifact::Reward, &[0; 64 * 64], &[0; 64], 64, 1)
+            .unwrap_err();
+        assert!(err.to_string().contains("not loaded"));
+    }
+}

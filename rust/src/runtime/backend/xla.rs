@@ -1,0 +1,155 @@
+//! The PJRT/XLA backend (`xla-runtime` feature): load AOT HLO-text
+//! artifacts, compile once at startup, execute static-shape batches from
+//! the request path. This is the code that previously lived inline in
+//! [`crate::runtime`]; the layout contract with `python/compile/aot.py` is
+//! unchanged:
+//!
+//! * every artifact is a 1-output tuple (lowered with `return_tuple=True`),
+//! * inputs are `(ids i32[B,S], last_idx i32[B])` for model artifacts and
+//!   `(scores f32[B,K], mask f32[B,K])` for the rerank reduce,
+//! * B is static — the engine pads short batches and slices the outputs.
+//!
+//! The `xla` crate's handles are `Rc`-backed and therefore `!Send`: an
+//! [`XlaBackend`] is owned by exactly one worker thread (see the trait
+//! contract in [`super`]); PJRT's own Eigen pool parallelises the compute
+//! inside each call.
+
+use std::collections::BTreeMap;
+use std::path::PathBuf;
+
+use anyhow::{anyhow, bail, Result};
+
+use super::Backend;
+use crate::config::RuntimeConfig;
+use crate::runtime::Artifact;
+
+struct Loaded {
+    exe: xla::PjRtLoadedExecutable,
+}
+
+/// PJRT CPU-client backend over AOT-compiled HLO artifacts.
+pub struct XlaBackend {
+    client: xla::PjRtClient,
+    cfg: RuntimeConfig,
+    executables: BTreeMap<Artifact, Loaded>,
+}
+
+impl XlaBackend {
+    /// Create the PJRT CPU client. Artifacts compile in
+    /// [`Backend::compile`].
+    pub fn new(cfg: RuntimeConfig) -> Result<XlaBackend> {
+        let client =
+            xla::PjRtClient::cpu().map_err(|e| anyhow!("PjRtClient::cpu: {e:?}"))?;
+        Ok(XlaBackend { client, cfg, executables: BTreeMap::new() })
+    }
+
+    fn artifact_path(&self, art: Artifact) -> PathBuf {
+        self.cfg
+            .artifacts_dir
+            .join(format!("{}_{}.hlo.txt", art.stem(), self.cfg.kernel_mode.suffix()))
+    }
+
+    fn loaded(&self, art: Artifact) -> Result<&Loaded> {
+        self.executables
+            .get(&art)
+            .ok_or_else(|| anyhow!("artifact {:?} not loaded", art))
+    }
+}
+
+impl Backend for XlaBackend {
+    fn compile(&mut self, artifacts: &[Artifact]) -> Result<()> {
+        for &art in artifacts {
+            let path = self.artifact_path(art);
+            let proto = xla::HloModuleProto::from_text_file(
+                path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
+            )
+            .map_err(|e| anyhow!("parsing {}: {e:?}", path.display()))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self
+                .client
+                .compile(&comp)
+                .map_err(|e| anyhow!("compiling {}: {e:?}", path.display()))?;
+            self.executables.insert(art, Loaded { exe });
+        }
+        Ok(())
+    }
+
+    fn has(&self, art: Artifact) -> bool {
+        self.executables.contains_key(&art)
+    }
+
+    fn run_tokens(
+        &self,
+        art: Artifact,
+        ids: &[i32],
+        last_idx: &[i32],
+        batch: usize,
+        out_cols: usize,
+    ) -> Result<Vec<f32>> {
+        let seq = self.cfg.max_seq;
+        let ids_lit = xla::Literal::vec1(ids)
+            .reshape(&[batch as i64, seq as i64])
+            .map_err(|e| anyhow!("reshape ids: {e:?}"))?;
+        let mut inputs = vec![ids_lit];
+        if art.needs_last_idx() {
+            inputs.push(xla::Literal::vec1(last_idx));
+        }
+
+        let loaded = self.loaded(art)?;
+        let out = loaded
+            .exe
+            .execute::<xla::Literal>(&inputs)
+            .map_err(|e| anyhow!("execute {:?}: {e:?}", art))?[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("copy-out {:?}: {e:?}", art))?;
+        let tuple = out
+            .to_tuple1()
+            .map_err(|e| anyhow!("untuple {:?}: {e:?}", art))?;
+        let data = tuple
+            .to_vec::<f32>()
+            .map_err(|e| anyhow!("to_vec {:?}: {e:?}", art))?;
+        if data.len() != batch * out_cols {
+            bail!(
+                "{:?}: expected {}×{} = {} floats, got {}",
+                art,
+                batch,
+                out_cols,
+                batch * out_cols,
+                data.len()
+            );
+        }
+        Ok(data)
+    }
+
+    fn run_rerank(
+        &self,
+        scores: &[f32],
+        mask: &[f32],
+        batch: usize,
+        k: usize,
+    ) -> Result<(Vec<i32>, Vec<f32>)> {
+        let s_lit = xla::Literal::vec1(scores)
+            .reshape(&[batch as i64, k as i64])
+            .map_err(|e| anyhow!("reshape scores: {e:?}"))?;
+        let m_lit = xla::Literal::vec1(mask)
+            .reshape(&[batch as i64, k as i64])
+            .map_err(|e| anyhow!("reshape mask: {e:?}"))?;
+        let loaded = self.loaded(Artifact::Rerank)?;
+        let out = loaded
+            .exe
+            .execute::<xla::Literal>(&[s_lit, m_lit])
+            .map_err(|e| anyhow!("execute rerank: {e:?}"))?[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("copy-out rerank: {e:?}"))?;
+        let (idx_l, val_l) = out
+            .to_tuple2()
+            .map_err(|e| anyhow!("untuple rerank: {e:?}"))?;
+        let idx = idx_l.to_vec::<i32>().map_err(|e| anyhow!("idx to_vec: {e:?}"))?;
+        let val = val_l.to_vec::<f32>().map_err(|e| anyhow!("val to_vec: {e:?}"))?;
+        Ok((idx, val))
+    }
+
+    fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+}

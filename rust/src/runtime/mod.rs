@@ -1,28 +1,34 @@
-//! PJRT runtime: load AOT HLO-text artifacts, compile once, execute from the
-//! request path. Wraps the `xla` crate (xla_extension 0.5.1, CPU plugin).
+//! Model runtime: the [`Engine`] owns one execution [`backend::Backend`]
+//! and funnels every model call through it — probe/encoder/reward token
+//! batches, decode steps, the rerank reduce.
 //!
-//! Layout contract with `python/compile/aot.py`:
-//! * every artifact is a 1-output tuple (lowered with `return_tuple=True`),
-//! * inputs are `(ids i32[B,S], last_idx i32[B])` for model artifacts and
-//!   `(scores f32[B,K], mask f32[B,K])` for the rerank reduce,
-//! * B is static — [`Engine`] pads short batches and slices the outputs.
+//! Two backends exist (selected by `[runtime] backend`, default `native`):
 //!
-//! Executables are compiled once at startup and cached; per-call work is
-//! literal construction + execute + copy-out. The `xla` crate's handles are
-//! `!Send` (Rc internals), so an [`Engine`] is *owned by one thread*: the
-//! server gives it to its scheduler thread (actor style), experiment
-//! drivers run single-threaded, and PJRT's own Eigen pool parallelises the
-//! compute inside each call.
+//! * [`backend::native::NativeBackend`] — pure rust, deterministic, no
+//!   artifacts required; serves the synthetic task universe the paper's
+//!   evaluation uses. This is what tests, CI and artifact-less hosts run.
+//! * `backend::xla::XlaBackend` (`xla-runtime` cargo feature) — PJRT over
+//!   AOT-compiled HLO-text artifacts (xla_extension 0.5.1, CPU plugin),
+//!   the production path. Requires `make artifacts` and the xla_extension
+//!   shared library at build time.
+//!
+//! Shapes are static: the engine pads short batches to the configured
+//! batch size and slices backend outputs back down (the batch contract the
+//! AOT artifacts were lowered with; the native backend honours the same
+//! contract so token accounting is identical). Whatever the backend, an
+//! [`Engine`] is *owned by one thread*: xla handles are `!Send` (Rc
+//! internals), so the server gives each scheduler worker its own engine
+//! (actor style) and experiment drivers run single-threaded.
 
+pub mod backend;
 pub mod goldens;
 pub mod predictor;
 
-use std::collections::BTreeMap;
-use std::path::{Path, PathBuf};
+use std::path::Path;
 
-use anyhow::{anyhow, bail, Context, Result};
+use anyhow::{bail, Result};
 
-use crate::config::{KernelMode, RuntimeConfig};
+use crate::config::{BackendKind, KernelMode, RuntimeConfig};
 use crate::jsonio;
 
 /// Names of the model executables the serving stack may load.
@@ -77,15 +83,10 @@ impl Artifact {
     ];
 }
 
-struct Loaded {
-    exe: xla::PjRtLoadedExecutable,
-}
-
-/// The L3-side model runtime.
+/// The L3-side model runtime: padding/slicing over a [`backend::Backend`].
 pub struct Engine {
-    client: xla::PjRtClient,
+    backend: Box<dyn backend::Backend>,
     cfg: RuntimeConfig,
-    executables: BTreeMap<Artifact, Loaded>,
     pub manifest: jsonio::Json,
 }
 
@@ -104,26 +105,14 @@ impl F32Matrix {
 }
 
 impl Engine {
-    /// Create a CPU PJRT client and compile the requested artifacts.
+    /// Construct the configured backend and compile the requested
+    /// artifacts. The native backend needs no artifacts on disk; the xla
+    /// backend reads `MANIFEST.json` and the `*.hlo.txt` exports from
+    /// `cfg.artifacts_dir`.
     pub fn load(cfg: &RuntimeConfig, artifacts: &[Artifact]) -> Result<Engine> {
-        let client = xla::PjRtClient::cpu()
-            .map_err(|e| anyhow!("PjRtClient::cpu: {e:?}"))?;
-        let manifest = jsonio::read_file(&cfg.artifacts_dir.join("MANIFEST.json"))
-            .context("artifacts not built? run `make artifacts`")?;
-        let mut executables = BTreeMap::new();
-        for &art in artifacts {
-            let path = Self::artifact_path(cfg, art);
-            let proto = xla::HloModuleProto::from_text_file(
-                path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
-            )
-            .map_err(|e| anyhow!("parsing {}: {e:?}", path.display()))?;
-            let comp = xla::XlaComputation::from_proto(&proto);
-            let exe = client
-                .compile(&comp)
-                .map_err(|e| anyhow!("compiling {}: {e:?}", path.display()))?;
-            executables.insert(art, Loaded { exe });
-        }
-        Ok(Engine { client, cfg: cfg.clone(), executables, manifest })
+        let (mut be, manifest) = backend::create(cfg)?;
+        be.compile(artifacts)?;
+        Ok(Engine { backend: be, cfg: cfg.clone(), manifest })
     }
 
     /// Convenience: load every artifact.
@@ -131,13 +120,13 @@ impl Engine {
         Self::load(cfg, &Artifact::ALL)
     }
 
-    fn artifact_path(cfg: &RuntimeConfig, art: Artifact) -> PathBuf {
-        cfg.artifacts_dir
-            .join(format!("{}_{}.hlo.txt", art.stem(), cfg.kernel_mode.suffix()))
-    }
-
     pub fn kernel_mode(&self) -> KernelMode {
         self.cfg.kernel_mode
+    }
+
+    /// Which backend this engine dispatches to.
+    pub fn backend_kind(&self) -> BackendKind {
+        self.cfg.backend
     }
 
     pub fn batch(&self) -> usize {
@@ -157,13 +146,7 @@ impl Engine {
     }
 
     pub fn has(&self, art: Artifact) -> bool {
-        self.executables.contains_key(&art)
-    }
-
-    fn loaded(&self, art: Artifact) -> Result<&Loaded> {
-        self.executables
-            .get(&art)
-            .ok_or_else(|| anyhow!("artifact {:?} not loaded", art))
+        self.backend.has(art)
     }
 
     /// Run a `(ids[B,S] i32, last_idx[B] i32) → f32[...]` artifact on up to
@@ -201,31 +184,15 @@ impl Engine {
         li_p.extend_from_slice(last_idx);
         li_p.resize(batch, 0);
 
-        let ids_lit = xla::Literal::vec1(&ids_p)
-            .reshape(&[batch as i64, seq as i64])
-            .map_err(|e| anyhow!("reshape ids: {e:?}"))?;
-        let mut inputs = vec![ids_lit];
-        if art.needs_last_idx() {
-            inputs.push(xla::Literal::vec1(&li_p));
-        }
-
-        let loaded = self.loaded(art)?;
-        let out = loaded
-            .exe
-            .execute::<xla::Literal>(&inputs)
-            .map_err(|e| anyhow!("execute {:?}: {e:?}", art))?[0][0]
-            .to_literal_sync()
-            .map_err(|e| anyhow!("copy-out {:?}: {e:?}", art))?;
-        let tuple = out
-            .to_tuple1()
-            .map_err(|e| anyhow!("untuple {:?}: {e:?}", art))?;
-        let data = tuple
-            .to_vec::<f32>()
-            .map_err(|e| anyhow!("to_vec {:?}: {e:?}", art))?;
+        let data = self.backend.run_tokens(art, &ids_p, &li_p, batch, out_cols)?;
         if data.len() != batch * out_cols {
             bail!(
-                "{:?}: expected {}×{} = {} floats, got {}",
-                art, batch, out_cols, batch * out_cols, data.len()
+                "{:?}: backend returned {} floats, expected {}×{} = {}",
+                art,
+                data.len(),
+                batch,
+                out_cols,
+                batch * out_cols
             );
         }
         Ok(F32Matrix { data: data[..n * out_cols].to_vec(), rows: n, cols: out_cols })
@@ -248,35 +215,12 @@ impl Engine {
         s_p.resize(batch * k, 0.0);
         let mut m_p = mask.to_vec();
         m_p.resize(batch * k, 0.0);
-        let s_lit = xla::Literal::vec1(&s_p)
-            .reshape(&[batch as i64, k as i64])
-            .map_err(|e| anyhow!("reshape scores: {e:?}"))?;
-        let m_lit = xla::Literal::vec1(&m_p)
-            .reshape(&[batch as i64, k as i64])
-            .map_err(|e| anyhow!("reshape mask: {e:?}"))?;
-        let loaded = self.loaded(Artifact::Rerank)?;
-        let out = loaded
-            .exe
-            .execute::<xla::Literal>(&[s_lit, m_lit])
-            .map_err(|e| anyhow!("execute rerank: {e:?}"))?[0][0]
-            .to_literal_sync()
-            .map_err(|e| anyhow!("copy-out rerank: {e:?}"))?;
-        let (idx_l, val_l) = out
-            .to_tuple2()
-            .map_err(|e| anyhow!("untuple rerank: {e:?}"))?;
-        let idx = idx_l
-            .to_vec::<i32>()
-            .map_err(|e| anyhow!("idx to_vec: {e:?}"))?[..n]
-            .to_vec();
-        let val = val_l
-            .to_vec::<f32>()
-            .map_err(|e| anyhow!("val to_vec: {e:?}"))?[..n]
-            .to_vec();
-        Ok((idx, val))
+        let (idx, val) = self.backend.run_rerank(&s_p, &m_p, batch, k)?;
+        Ok((idx[..n].to_vec(), val[..n].to_vec()))
     }
 
     pub fn platform(&self) -> String {
-        self.client.platform_name()
+        self.backend.platform()
     }
 
     /// Directory the artifacts (and exported datasets) were loaded from.

@@ -337,7 +337,7 @@ impl Client {
             ("text", Json::Str(text.to_string())),
             ("domain", Json::Str(domain.to_string())),
         ]);
-        writeln!(self.writer, "{}", j.to_string())?;
+        writeln!(self.writer, "{j}")?;
         self.writer.flush()?;
         Ok(())
     }
@@ -357,7 +357,7 @@ impl Client {
             ("domain", Json::Str(domain.to_string())),
             ("procedure", Json::Str(procedure.to_string())),
         ]);
-        writeln!(self.writer, "{}", j.to_string())?;
+        writeln!(self.writer, "{j}")?;
         self.writer.flush()?;
         Ok(())
     }
@@ -379,7 +379,7 @@ impl Client {
         // build through Json::obj like every other write: the command
         // string must be escaped, not interpolated into raw JSON
         let j = Json::obj(vec![("cmd", Json::Str(cmd.to_string()))]);
-        writeln!(self.writer, "{}", j.to_string())?;
+        writeln!(self.writer, "{j}")?;
         self.writer.flush()?;
         self.read_response()
     }

@@ -68,6 +68,7 @@ impl AdaptiveBestOfK {
     /// response latencies and correct procedure stamps. A caller that
     /// already holds this batch's difficulty predictions passes them as
     /// `preheated` to skip the probe pass.
+    #[allow(clippy::too_many_arguments)]
     pub fn serve_from(
         &self,
         sched: &Scheduler,

@@ -4,8 +4,10 @@
 //!     → partition_epoch → per-(domain, procedure) sub-epochs
 //!     → DecodeProcedure::serve per sub-epoch, each composing the shared
 //!       stage helpers below:
-//!         predict  — one fused encode+probe PJRT call per chunk, fronted
-//!                    by a bounded LRU cache keyed by (domain, text)
+//!         predict  — one fused encode+probe backend call per chunk
+//!                    (PJRT executable or the native synthetic model —
+//!                    see [`crate::runtime::backend`]), fronted by a
+//!                    bounded LRU cache keyed by (domain, text)
 //!         allocate — online eq. 5 / offline bins / uniform / oracle
 //!         generate — bᵢ samples per query over the decode executable
 //!         select   — binary: synthetic verifier picks any passing sample;
@@ -454,6 +456,9 @@ impl Scheduler {
     /// Stage 4: pick the best sample per query. `t0` is when serving of this
     /// batch began — every response carries the real end-to-end latency.
     /// `kind` is the procedure serving this batch (stamped on responses).
+    // a pipeline stage legitimately takes one positional input per upstream
+    // stage; bundling them into a struct would just rename the arguments
+    #[allow(clippy::too_many_arguments)]
     pub fn select(
         &self,
         domain: &str,
@@ -505,6 +510,7 @@ impl Scheduler {
     /// Chat selection: score all candidates with the reward executable and
     /// pick per-query argmax via the rerank reduce. A query with zero scored
     /// candidates gets `ok: false` and reward 0.0 — never a sentinel score.
+    #[allow(clippy::too_many_arguments)]
     fn select_by_reward(
         &self,
         reqs: &[&Request],
@@ -561,7 +567,11 @@ impl Scheduler {
             let mrow = &mask[i * k_max..(i + 1) * k_max];
             let mut best: Option<(usize, f32)> = None;
             for j in 0..k_max {
-                if mrow[j] > 0.0 && best.map_or(true, |(_, v)| row[j] > v) {
+                let beats = match best {
+                    None => true,
+                    Some((_, v)) => row[j] > v,
+                };
+                if mrow[j] > 0.0 && beats {
                     best = Some((j, row[j]));
                 }
             }

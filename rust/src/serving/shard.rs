@@ -2,8 +2,10 @@
 //! its own (`!Send`) [`Engine`] — the actor pattern the single scheduler
 //! thread used, replicated — all draining one shared [`Batcher`]
 //! concurrently. Independent mixed-domain epochs therefore execute their
-//! PJRT calls in parallel; what stays shared is the [`SchedulerShared`]
-//! half (config, metrics, fitted offline/router policies, the prediction
+//! backend calls in parallel (each worker's engine carries its own
+//! [`crate::runtime::backend::Backend`], whichever kind `[runtime]
+//! backend` selects); what stays shared is the [`SchedulerShared`] half
+//! (config, metrics, fitted offline/router policies, the prediction
 //! cache), so per-domain calibration happens once per pool, not once per
 //! worker.
 //!

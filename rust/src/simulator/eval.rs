@@ -111,8 +111,8 @@ mod tests {
     #[test]
     fn binary_eval_more_budget_never_hurts() {
         let qs = gen_dataset("code", 100, 0);
-        let low = eval_binary_allocation(&qs, &vec![1; 100]);
-        let high = eval_binary_allocation(&qs, &vec![8; 100]);
+        let low = eval_binary_allocation(&qs, &[1; 100]);
+        let high = eval_binary_allocation(&qs, &[8; 100]);
         assert!(high >= low);
     }
 

@@ -1,9 +1,8 @@
 //! Concurrent-serving integration: response routing under duplicate client
 //! ids across (and within) connections, multi-consumer batcher draining,
-//! and prediction-cache behaviour over repeated epochs. Model-dependent
-//! tests skip gracefully without artifacts; the batcher test always runs.
+//! and prediction-cache behaviour over repeated epochs. Runs on the
+//! default native backend — no artifacts required (CI gates on this).
 
-use std::path::PathBuf;
 use std::sync::{Arc, Mutex};
 use std::time::Duration;
 
@@ -17,19 +16,6 @@ use thinkalloc::serving::scheduler::Scheduler;
 use thinkalloc::serving::Request;
 use thinkalloc::server::{Client, Server};
 use thinkalloc::workload;
-
-fn artifacts_dir() -> PathBuf {
-    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
-}
-
-macro_rules! skip_without_artifacts {
-    () => {
-        if !artifacts_dir().join("MANIFEST.json").exists() {
-            eprintln!("skipping: artifacts not built (run `make artifacts`)");
-            return;
-        }
-    };
-}
 
 /// Two drainer threads over one batcher: every submitted request is
 /// delivered to exactly one drainer — nothing lost, nothing duplicated.
@@ -88,9 +74,7 @@ fn batcher_two_drainers_no_loss_no_duplication() {
 /// a misrouted response carries the wrong procedure stamp.
 #[test]
 fn duplicate_client_ids_route_to_their_own_connection() {
-    skip_without_artifacts!();
     let mut cfg = Config::default();
-    cfg.runtime.artifacts_dir = artifacts_dir();
     cfg.allocator.policy = AllocPolicy::Online;
     cfg.allocator.budget_per_query = 2.0;
     cfg.allocator.b_max = 8;
@@ -148,11 +132,9 @@ fn duplicate_client_ids_route_to_their_own_connection() {
 /// over mixed domains; every client gets back exactly its own id set.
 #[test]
 fn multi_client_stress_each_client_gets_its_own_responses() {
-    skip_without_artifacts!();
     const CLIENTS: u64 = 4;
     const PER_CLIENT: u64 = 8;
     let mut cfg = Config::default();
-    cfg.runtime.artifacts_dir = artifacts_dir();
     cfg.allocator.policy = AllocPolicy::Online;
     cfg.allocator.budget_per_query = 2.0;
     cfg.allocator.b_max = 8;
@@ -214,9 +196,7 @@ fn multi_client_stress_each_client_gets_its_own_responses() {
 /// probe call for every query and reports identical predictions.
 #[test]
 fn predict_cache_hits_on_repeated_epoch() {
-    skip_without_artifacts!();
     let mut cfg = Config::default();
-    cfg.runtime.artifacts_dir = artifacts_dir();
     cfg.allocator.policy = AllocPolicy::Online;
     cfg.allocator.budget_per_query = 2.0;
     cfg.allocator.b_max = 8;

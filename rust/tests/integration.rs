@@ -1,11 +1,14 @@
-//! Integration tests over the real AOT artifacts (skipped gracefully when
-//! `make artifacts` has not run). These are the cross-language contract
-//! checks: tokenizer mirror, golden outputs, pallas/xla equivalence,
-//! predictor quality, dataset mirror.
+//! Integration tests over the real AOT artifacts on the **xla backend**
+//! (skipped gracefully when `make artifacts` has not run or when the crate
+//! is built without the `xla-runtime` feature). These are the
+//! cross-language contract checks: tokenizer mirror, golden outputs,
+//! pallas/xla equivalence, predictor quality, dataset mirror. The native
+//! backend's contracts live in tests/backend_parity.rs and the serving
+//! integration suites.
 
 use std::path::PathBuf;
 
-use thinkalloc::config::{KernelMode, RuntimeConfig};
+use thinkalloc::config::{BackendKind, KernelMode, RuntimeConfig};
 use thinkalloc::jsonio::Json;
 use thinkalloc::runtime::predictor::{Predictor, ProbeKind};
 use thinkalloc::runtime::{goldens, Artifact, Engine};
@@ -21,6 +24,7 @@ fn have_artifacts() -> bool {
 
 fn engine(mode: KernelMode) -> Engine {
     let cfg = RuntimeConfig {
+        backend: BackendKind::Xla,
         artifacts_dir: artifacts_dir(),
         kernel_mode: mode,
         ..Default::default()
@@ -28,8 +32,14 @@ fn engine(mode: KernelMode) -> Engine {
     Engine::load_all(&cfg).expect("engine load")
 }
 
+/// These are xla-artifact contract tests: they need both the compiled-in
+/// xla backend and the exported artifacts on disk.
 macro_rules! skip_without_artifacts {
     () => {
+        if !cfg!(feature = "xla-runtime") {
+            eprintln!("skipping: built without the `xla-runtime` feature");
+            return;
+        }
         if !have_artifacts() {
             eprintln!("skipping: artifacts not built (run `make artifacts`)");
             return;
@@ -149,10 +159,8 @@ fn decode_generates_wellformed_answers() {
     // very easy queries: the trained TinyLM should solve most with 4 tries
     let queries: Vec<String> = (0..8).map(|i| format!("ADD {} {}", i, i + 1)).collect();
     let texts: Vec<&str> = queries.iter().map(String::as_str).collect();
-    let jobs = thinkalloc::serving::generator::jobs_for_allocation(
-        &texts,
-        &vec![4; queries.len()],
-    );
+    let budgets = vec![4; queries.len()];
+    let jobs = thinkalloc::serving::generator::jobs_for_allocation(&texts, &budgets);
     let samples = thinkalloc::serving::generator::generate(
         &e,
         &jobs,

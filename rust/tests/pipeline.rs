@@ -1,7 +1,7 @@
 //! Full-pipeline integration: scheduler epochs and the TCP server, end to
-//! end over real artifacts (skipped when artifacts are missing).
+//! end on the default native backend (no artifacts needed; the xla path
+//! reuses the same contracts via tests/integration.rs).
 
-use std::path::PathBuf;
 use std::sync::Arc;
 
 use thinkalloc::config::{AllocPolicy, Config};
@@ -14,30 +14,12 @@ use thinkalloc::serving::scheduler::Scheduler;
 use thinkalloc::serving::Request;
 use thinkalloc::workload;
 
-fn artifacts_dir() -> PathBuf {
-    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
-}
-
-fn have_artifacts() -> bool {
-    artifacts_dir().join("MANIFEST.json").exists()
-}
-
 fn config(policy: AllocPolicy, budget: f64) -> Config {
     let mut cfg = Config::default();
-    cfg.runtime.artifacts_dir = artifacts_dir();
     cfg.allocator.policy = policy;
     cfg.allocator.budget_per_query = budget;
     cfg.allocator.b_max = 8;
     cfg
-}
-
-macro_rules! skip_without_artifacts {
-    () => {
-        if !have_artifacts() {
-            eprintln!("skipping: artifacts not built (run `make artifacts`)");
-            return;
-        }
-    };
 }
 
 fn reqs(domain: &str, n: usize, seed: u64) -> Vec<Request> {
@@ -50,7 +32,6 @@ fn reqs(domain: &str, n: usize, seed: u64) -> Vec<Request> {
 
 #[test]
 fn scheduler_epoch_code_online() {
-    skip_without_artifacts!();
     let cfg = config(AllocPolicy::Online, 3.0);
     let metrics = Arc::new(Registry::default());
     let engine = Engine::load_all(&cfg.runtime).unwrap();
@@ -86,7 +67,6 @@ fn scheduler_epoch_code_online() {
 
 #[test]
 fn scheduler_epoch_chat_reranks() {
-    skip_without_artifacts!();
     let cfg = config(AllocPolicy::Online, 2.0);
     let metrics = Arc::new(Registry::default());
     let engine = Engine::load_all(&cfg.runtime).unwrap();
@@ -106,7 +86,6 @@ fn scheduler_epoch_chat_reranks() {
 
 #[test]
 fn scheduler_serves_mixed_domain_epoch() {
-    skip_without_artifacts!();
     let cfg = config(AllocPolicy::Online, 2.0);
     let metrics = Arc::new(Registry::default());
     let engine = Engine::load_all(&cfg.runtime).unwrap();
@@ -137,7 +116,6 @@ fn scheduler_serves_mixed_domain_epoch() {
 
 #[test]
 fn scheduler_offline_policy_respects_budget_in_expectation() {
-    skip_without_artifacts!();
     let cfg = config(AllocPolicy::Offline, 3.0);
     let metrics = Arc::new(Registry::default());
     let engine = Engine::load_all(&cfg.runtime).unwrap();
@@ -154,7 +132,6 @@ fn scheduler_offline_policy_respects_budget_in_expectation() {
 
 #[test]
 fn server_roundtrip_over_tcp() {
-    skip_without_artifacts!();
     let mut cfg = config(AllocPolicy::Online, 3.0);
     cfg.server.addr = "127.0.0.1:0".into();
     cfg.server.batch_queries = 8;

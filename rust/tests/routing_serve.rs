@@ -4,9 +4,8 @@
 //! procedure. Asserts the realized strong fraction lands within ±0.05 of the
 //! configured target, that `serving.route.*` telemetry is populated, and
 //! that mixed-domain epochs are served without the old per-domain
-//! restriction. Skipped when artifacts are missing.
+//! restriction. Runs on the default native backend — no artifacts needed.
 
-use std::path::PathBuf;
 use std::sync::Arc;
 use std::time::Duration;
 
@@ -19,27 +18,12 @@ use thinkalloc::serving::scheduler::Scheduler;
 use thinkalloc::serving::{Request, Response};
 use thinkalloc::workload;
 
-fn artifacts_dir() -> PathBuf {
-    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
-}
-
-macro_rules! skip_without_artifacts {
-    () => {
-        if !artifacts_dir().join("MANIFEST.json").exists() {
-            eprintln!("skipping: artifacts not built (run `make artifacts`)");
-            return;
-        }
-    };
-}
-
 const N: usize = 600;
 const TARGET: f64 = 0.5;
 
 #[test]
 fn routed_mixed_stream_hits_target_fraction() {
-    skip_without_artifacts!();
     let mut cfg = Config::default();
-    cfg.runtime.artifacts_dir = artifacts_dir();
     cfg.allocator.policy = AllocPolicy::Online;
     cfg.allocator.budget_per_query = 2.0;
     cfg.allocator.b_max = 8;
@@ -131,9 +115,7 @@ fn routed_mixed_stream_hits_target_fraction() {
 
 #[test]
 fn per_request_procedure_override_wins() {
-    skip_without_artifacts!();
     let mut cfg = Config::default();
-    cfg.runtime.artifacts_dir = artifacts_dir();
     cfg.allocator.budget_per_query = 2.0;
     cfg.allocator.b_max = 8;
     // default is adaptive; individual requests opt into routing

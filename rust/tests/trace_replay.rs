@@ -3,9 +3,8 @@
 //! controller must not break: every request gets exactly one response,
 //! responses arrive in submission order per connection (workers = 1 drains
 //! FIFO epochs), and controller telemetry appears iff the controller is
-//! enabled. Skips gracefully without artifacts.
+//! enabled. Runs on the default native backend — no artifacts needed.
 
-use std::path::PathBuf;
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
@@ -14,19 +13,6 @@ use thinkalloc::jsonio::Json;
 use thinkalloc::metrics::Registry;
 use thinkalloc::server::{Client, Server};
 use thinkalloc::workload::trace::Trace;
-
-fn artifacts_dir() -> PathBuf {
-    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
-}
-
-macro_rules! skip_without_artifacts {
-    () => {
-        if !artifacts_dir().join("MANIFEST.json").exists() {
-            eprintln!("skipping: artifacts not built (run `make artifacts`)");
-            return;
-        }
-    };
-}
 
 /// A short saved-and-reloaded Poisson trace: exercising the on-disk format
 /// is part of the contract (offline analysis replays the same files).
@@ -79,7 +65,6 @@ fn replay(cfg: Config, trace: &Trace) -> (Vec<u64>, Json) {
 
 fn base_cfg() -> Config {
     let mut cfg = Config::default();
-    cfg.runtime.artifacts_dir = artifacts_dir();
     cfg.allocator.policy = AllocPolicy::Online;
     cfg.allocator.budget_per_query = 4.0;
     cfg.allocator.b_max = 8;
@@ -92,7 +77,6 @@ fn base_cfg() -> Config {
 
 #[test]
 fn trace_replay_fixed_budget_is_complete_and_ordered() {
-    skip_without_artifacts!();
     let trace = saved_trace(24, 0xF1ED);
     let cfg = base_cfg();
     cfg.validate().unwrap();
@@ -112,7 +96,6 @@ fn trace_replay_fixed_budget_is_complete_and_ordered() {
 
 #[test]
 fn trace_replay_with_controller_emits_telemetry_within_clamps() {
-    skip_without_artifacts!();
     let trace = saved_trace(24, 0xADA7);
     let mut cfg = base_cfg();
     cfg.controller.enabled = true;

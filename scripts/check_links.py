@@ -1,14 +1,21 @@
 #!/usr/bin/env python3
-"""Markdown link checker for the repo's documentation surface.
+"""Markdown link + anchor checker for the repo's documentation surface.
 
-Usage: python3 scripts/check_links.py README.md rust/DESIGN.md docs/PROTOCOL.md
+Usage: python3 scripts/check_links.py README.md rust/DESIGN.md docs/
+
+Arguments are markdown files or directories (a directory is expanded to
+every `*.md` under it, recursively — pointing CI at `docs/` keeps new
+documents covered without editing the workflow).
 
 Checks that every relative link target `[text](path)` in the given files
-resolves to an existing file or directory (anchors are stripped; http(s)
-and mailto links are skipped — CI must not depend on external sites).
-Exits non-zero listing every broken link.
+resolves to an existing file or directory, and that `#anchor` fragments —
+in-page or into another markdown file — match a real heading in the target
+document (GitHub slugification). http(s) and mailto links are skipped —
+CI must not depend on external sites. Exits non-zero listing every broken
+link.
 """
 
+import functools
 import re
 import sys
 from pathlib import Path
@@ -18,6 +25,42 @@ LINK_RE = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
 # inline code spans: link-shaped text inside `...` (e.g. `m[i](j)`) is code,
 # not a link — strip before matching so the hard CI gate can't false-fail
 CODE_SPAN_RE = re.compile(r"`[^`]*`")
+HEADING_RE = re.compile(r"^#{1,6}\s+(.*)$")
+
+
+def slugify(heading: str) -> str:
+    """GitHub-style anchor slug: inline code/formatting markers dropped,
+    lowercased, punctuation removed, spaces to hyphens."""
+    text = heading.strip().lower()
+    text = re.sub(r"[`*_]", "", text)
+    # drop a trailing "{#custom-id}" if ever used
+    text = re.sub(r"\{#[^}]*\}\s*$", "", text).strip()
+    text = re.sub(r"[^\w\- ]", "", text)
+    return text.replace(" ", "-")
+
+
+@functools.lru_cache(maxsize=None)
+def anchors_of(md_path: Path) -> set[str]:
+    """All heading anchors a markdown file exposes (with GitHub's -1, -2
+    suffixes for duplicate headings). Cached per file — a file with many
+    inbound anchored links is parsed once."""
+    slugs: set[str] = set()
+    counts: dict[str, int] = {}
+    in_code = False
+    for line in md_path.read_text(encoding="utf-8").splitlines():
+        if line.lstrip().startswith("```"):
+            in_code = not in_code
+            continue
+        if in_code:
+            continue
+        m = HEADING_RE.match(line)
+        if not m:
+            continue
+        slug = slugify(m.group(1))
+        n = counts.get(slug, 0)
+        counts[slug] = n + 1
+        slugs.add(slug if n == 0 else f"{slug}-{n}")
+    return slugs
 
 
 def check(md_path: Path) -> list[str]:
@@ -33,13 +76,28 @@ def check(md_path: Path) -> list[str]:
         for target in LINK_RE.findall(CODE_SPAN_RE.sub("`", line)):
             if target.startswith(("http://", "https://", "mailto:")):
                 continue
-            path_part = target.split("#", 1)[0]
-            if not path_part:  # pure in-page anchor
-                continue
-            resolved = (md_path.parent / path_part).resolve()
-            if not resolved.exists():
-                errors.append(f"{md_path}:{lineno}: broken link `{target}`")
+            path_part, _, anchor = target.partition("#")
+            if path_part:
+                resolved = (md_path.parent / path_part).resolve()
+                if not resolved.exists():
+                    errors.append(f"{md_path}:{lineno}: broken link `{target}`")
+                    continue
+            else:
+                resolved = md_path.resolve()  # pure in-page anchor
+            if anchor and resolved.suffix == ".md" and resolved.is_file():
+                if anchor not in anchors_of(resolved):
+                    errors.append(
+                        f"{md_path}:{lineno}: broken anchor `{target}` "
+                        f"(no heading `#{anchor}` in {resolved.name})"
+                    )
     return errors
+
+
+def expand(arg: str) -> list[Path]:
+    p = Path(arg)
+    if p.is_dir():
+        return sorted(p.rglob("*.md"))
+    return [p]
 
 
 def main() -> int:
@@ -47,16 +105,19 @@ def main() -> int:
         print(__doc__.strip())
         return 2
     all_errors = []
+    files: list[Path] = []
     for arg in sys.argv[1:]:
-        p = Path(arg)
-        if not p.exists():
+        expanded = expand(arg)
+        if not expanded or not all(p.exists() for p in expanded):
             all_errors.append(f"{arg}: file not found")
             continue
+        files.extend(expanded)
+    for p in files:
         all_errors.extend(check(p))
     if all_errors:
         print("\n".join(all_errors))
         return 1
-    print(f"checked {len(sys.argv) - 1} files: all relative links resolve")
+    print(f"checked {len(files)} files: all relative links and anchors resolve")
     return 0
 
 
