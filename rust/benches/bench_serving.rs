@@ -27,16 +27,18 @@ use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
-use harness::{bench, section};
-use thinkalloc::config::{AllocPolicy, Config};
+use harness::{bench, black_box, section};
+use thinkalloc::config::{AllocPolicy, Config, DecodeMode};
 use thinkalloc::jsonio::Json;
 use thinkalloc::metrics::Registry;
 use thinkalloc::prng::Pcg64;
 use thinkalloc::runtime::Engine;
 use thinkalloc::serving::batcher::Batcher;
+use thinkalloc::serving::generator::{sample_token, sample_token_into};
 use thinkalloc::serving::scheduler::{Scheduler, SchedulerShared};
 use thinkalloc::serving::shard::{EpochSink, ShardPool};
 use thinkalloc::serving::{Request, Response};
+use thinkalloc::tokenizer::VOCAB;
 use thinkalloc::workload;
 use thinkalloc::workload::trace::Trace;
 
@@ -250,6 +252,113 @@ fn main() {
             ]),
         ));
     }
+
+    // --- mixed-length decode: wave barrier vs continuous slot refill --------
+    // Same mixed-domain epoch (heterogeneous budgets, answer lengths from
+    // 1-token ADD sums to long REV strings to chat candidates) served under
+    // both decode modes at temperature 0, so the epoch *output* is
+    // bit-identical and the only difference is how many slot-steps the
+    // hardware paid for it.
+    section(&format!(
+        "decode engine: {} mixed queries, wave vs continuous (temp 0)",
+        scale.epoch_queries * 2
+    ));
+    let decode_reqs: Vec<Request> = workload::gen_mixed_dataset(
+        &["code", "math", "chat"],
+        scale.epoch_queries * 2,
+        0xDEC0,
+    )
+    .into_iter()
+    .enumerate()
+    .map(|(i, q)| Request::new(i as u64, q.text, q.domain))
+    .collect();
+    // trajectory keys track the *shipped* (continuous) mode only — folding
+    // the wave baseline's large waste in would drown a continuous-mode
+    // regression; the wave numbers stay visible under decode.wave
+    let mut decode_steps_total = 0u64;
+    let mut wasted_steps_total = 0u64;
+    let mut per_mode: Vec<(DecodeMode, u64, u64)> = Vec::new();
+    for mode in [DecodeMode::Wave, DecodeMode::Continuous] {
+        let mut cfg = pool_config();
+        cfg.runtime.decode_mode = mode;
+        cfg.server.temperature = 0.0;
+        let metrics = Arc::new(Registry::default());
+        let engine = Engine::load_all(&cfg.runtime).expect("engine");
+        let scheduler = Scheduler::new(engine, cfg, metrics.clone());
+        let mut rng = Pcg64::new(21);
+        let r = bench(
+            &format!("serve_epoch [decode {}]", mode.name()),
+            scale.epoch_iters,
+            || {
+                scheduler
+                    .serve_epoch(&decode_reqs, &mut rng, scheduler.effective_budget())
+                    .unwrap();
+            },
+        );
+        let steps = metrics.counter("serving.decode.steps").get();
+        let wasted = metrics.counter("serving.decode.wasted_steps").get();
+        let p95 = metrics.histogram("serving.epoch_us").percentile_us(0.95);
+        println!(
+            "  {}: {steps} live + {wasted} wasted slot-steps | occupancy {:.2} \
+             | epoch p95 {p95:.0}µs",
+            mode.name(),
+            metrics.gauge("serving.decode.occupancy").get(),
+        );
+        if mode == DecodeMode::Continuous {
+            decode_steps_total = steps;
+            wasted_steps_total = wasted;
+        }
+        per_mode.push((mode, steps, wasted));
+        summary.push((
+            format!("decode.{}", mode.name()),
+            Json::obj(vec![
+                ("steps", Json::Num(steps as f64)),
+                ("wasted_steps", Json::Num(wasted as f64)),
+                ("epoch_p95_us", Json::Num(p95)),
+                ("epoch_mean_us", Json::Num(r.mean_us)),
+            ]),
+        ));
+    }
+    if let [(_, ws, ww), (_, cs, cw)] = per_mode.as_slice() {
+        let wave_total = (ws + ww).max(1);
+        let cont_total = cs + cw;
+        println!(
+            "  total slot-work for the same epoch output: wave {wave_total} vs \
+             continuous {cont_total} ({:.1}% saved)",
+            100.0 * (1.0 - cont_total as f64 / wave_total as f64)
+        );
+    }
+    summary.push(("decode_steps_total".into(), Json::Num(decode_steps_total as f64)));
+    summary.push(("wasted_steps_total".into(), Json::Num(wasted_steps_total as f64)));
+
+    // --- sampler hot path: per-token allocation vs reusable scratch ---------
+    section("sampler: 10k tokens, fresh Vec vs scratch buffer");
+    let mut logits = vec![0.0f32; VOCAB];
+    logits[65] = 2.0;
+    logits[70] = 1.5;
+    let mut rng = Pcg64::new(11);
+    let r_alloc = bench("sample_token (allocating)", scale.epoch_iters.max(5), || {
+        for _ in 0..10_000 {
+            black_box(sample_token(&logits, 0.8, &mut rng));
+        }
+    });
+    let mut scratch = Vec::with_capacity(VOCAB);
+    let r_scratch = bench("sample_token_into (scratch)", scale.epoch_iters.max(5), || {
+        for _ in 0..10_000 {
+            black_box(sample_token_into(&logits, 0.8, &mut rng, &mut scratch));
+        }
+    });
+    println!(
+        "  scratch reuse: {:.2}× the allocating path",
+        r_alloc.mean_us / r_scratch.mean_us.max(1e-9)
+    );
+    summary.push((
+        "sampler".into(),
+        Json::obj(vec![
+            ("alloc_us_per_10k", Json::Num(r_alloc.mean_us)),
+            ("scratch_us_per_10k", Json::Num(r_scratch.mean_us)),
+        ]),
+    ));
 
     // --- sharded pool: workers=1 vs workers=4, mixed-domain workload --------
     section(&format!(

@@ -216,6 +216,73 @@ mod tests {
         AllocConstraints::new(total, b_max, 0)
     }
 
+    /// Naive O(n·B) reference: rescan every row's current PAV block per
+    /// allocation round instead of keeping a heap. Tie-breaking matches the
+    /// heap's `Block` ordering (equal gains → lowest row first), so the two
+    /// must produce *identical budget vectors*, not just equal objectives —
+    /// the property test below pins that, guarding the heap hot path
+    /// against drift.
+    fn solve_naive(deltas: &DeltaMatrix, cons: AllocConstraints) -> Allocation {
+        let n = deltas.n();
+        let mut budgets = vec![cons.min_budget.min(cons.b_max); n];
+        let floor_units: usize = budgets.iter().sum();
+        let mut remaining = cons.total_units.saturating_sub(floor_units);
+
+        let mut row_blocks: Vec<Vec<(f64, u32)>> = Vec::with_capacity(n);
+        let mut cursors = vec![(0usize, 0u32); n];
+        for (i, row) in deltas.rows.iter().enumerate() {
+            let blocks = pav_blocks(row, cons.b_max);
+            let mut need = budgets[i] as u32;
+            let (mut bi, mut used) = (0usize, 0u32);
+            while need > 0 && bi < blocks.len() {
+                let (_g, len) = blocks[bi];
+                let take = need.min(len - used);
+                used += take;
+                need -= take;
+                if used == len {
+                    bi += 1;
+                    used = 0;
+                }
+            }
+            cursors[i] = (bi, used);
+            row_blocks.push(blocks);
+        }
+
+        while remaining > 0 {
+            // full rescan: the O(n) inner loop the heap replaces
+            let mut best: Option<(usize, f64, u32)> = None;
+            for i in 0..n {
+                let (bi, used) = cursors[i];
+                if let Some(&(gain, len)) = row_blocks[i].get(bi) {
+                    if best.is_none_or(|(_, g, _)| gain > g) {
+                        best = Some((i, gain, len - used));
+                    }
+                }
+            }
+            let Some((i, gain, avail)) = best else { break };
+            if gain <= 0.0 {
+                break;
+            }
+            let take = (avail as usize).min(remaining) as u32;
+            budgets[i] += take as usize;
+            remaining -= take as usize;
+            let (bi, used) = cursors[i];
+            let new_used = used + take;
+            cursors[i] = if new_used == row_blocks[i][bi].1 {
+                (bi + 1, 0)
+            } else {
+                (bi, new_used)
+            };
+        }
+
+        let mut objective = 0.0;
+        for (i, &b) in budgets.iter().enumerate() {
+            objective += deltas.rows[i].iter().take(b).sum::<f64>();
+        }
+        let total_units = budgets.iter().sum();
+        Allocation { budgets, total_units, objective }
+    }
+
     #[test]
     fn pav_identity_on_monotone() {
         let b = pav_blocks(&[0.5, 0.25, 0.125], 8);
@@ -333,6 +400,47 @@ mod tests {
                 } else {
                     Err(format!("greedy {} vs dp {d} slack {slack}", g.objective))
                 }
+            },
+        );
+    }
+
+    #[test]
+    fn prop_heap_equals_naive_rescan_allocations() {
+        // the whole point of the heap: identical allocations to the O(n·B)
+        // marginal-gain rescan, on arbitrary (non-monotone, negative,
+        // floored) Δ matrices — budget-vector equality, not just objective
+        prop_check(
+            "heap budgets == naive rescan budgets",
+            PropConfig { cases: 64, max_size: 12 },
+            |rng, size| {
+                let n = size.max(1);
+                let b_max = 1 + rng.range_usize(1, 8);
+                let min_b = if rng.bernoulli(0.3) { 1.min(b_max) } else { 0 };
+                let rows: Vec<Vec<f64>> = (0..n)
+                    .map(|_| {
+                        (0..b_max)
+                            .map(|_| {
+                                if rng.bernoulli(0.15) {
+                                    0.0 // exact ties across rows
+                                } else {
+                                    rng.f64() - 0.25
+                                }
+                            })
+                            .collect()
+                    })
+                    .collect();
+                let m = DeltaMatrix::new(rows);
+                let total = rng.range_usize(0, n * b_max + 2);
+                let c = AllocConstraints::new(total, b_max, min_b);
+                let heap = solve(&m, c);
+                let naive = solve_naive(&m, c);
+                if heap.budgets != naive.budgets {
+                    return Err(format!(
+                        "budgets diverge: heap {:?} naive {:?}",
+                        heap.budgets, naive.budgets
+                    ));
+                }
+                crate::proputil::close(heap.objective, naive.objective, 1e-9, "objective")
             },
         );
     }

@@ -25,6 +25,20 @@ impl Predictions {
         }
     }
 
+    /// Scalar view of the predictions (λ̂, or Δ̂₁ for chat) used for offline
+    /// bin lookup and response reporting. Borrows for the λ̂ case — the
+    /// serving hot path must not deep-copy a vector per batch just to read
+    /// it under another name — and materialises only the first-column
+    /// gather for Δ̂ matrices.
+    pub fn scalars(&self) -> std::borrow::Cow<'_, [f64]> {
+        match self {
+            Predictions::Lambdas(l) => std::borrow::Cow::Borrowed(l),
+            Predictions::Deltas(d) => {
+                std::borrow::Cow::Owned(d.rows.iter().map(|r| r[0]).collect())
+            }
+        }
+    }
+
     pub fn to_deltas(&self, b_max: usize) -> DeltaMatrix {
         match self {
             Predictions::Lambdas(l) => DeltaMatrix::from_lambdas(l, b_max),
@@ -82,6 +96,20 @@ mod tests {
             3.0,
         );
         assert_eq!(a.budgets, b.budgets);
+    }
+
+    #[test]
+    fn scalar_view_borrows_lambdas_and_gathers_deltas() {
+        let lam = Predictions::Lambdas(vec![0.2, 0.7]);
+        match lam.scalars() {
+            std::borrow::Cow::Borrowed(s) => assert_eq!(s, [0.2, 0.7]),
+            std::borrow::Cow::Owned(_) => panic!("λ̂ scalar view must borrow"),
+        }
+        let del = Predictions::Deltas(DeltaMatrix::new(vec![
+            vec![0.5, 0.1],
+            vec![0.9, 0.3],
+        ]));
+        assert_eq!(del.scalars().as_ref(), [0.5, 0.9]);
     }
 
     #[test]

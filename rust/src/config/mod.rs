@@ -204,6 +204,46 @@ impl std::str::FromStr for BackendKind {
     }
 }
 
+/// How the serving generator schedules decode rows onto the static decode
+/// batch (see [`crate::serving::generator`]).
+///
+/// `Continuous` (the default) runs a slot-refill pool: a row that emits EOS
+/// is evicted and its slot refilled from the pending-job queue mid-flight,
+/// so finished rows are never stepped as padding. `Wave` is the historical
+/// barrier loop — jobs are packed into waves and every wave steps until its
+/// slowest member drains — kept as the bit-for-bit reference
+/// implementation. At temperature 0 the two modes produce identical
+/// samples; `serving.decode.wasted_steps` is the observable difference.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum DecodeMode {
+    /// Slot-refill continuous batching (default).
+    #[default]
+    Continuous,
+    /// Wave-barrier decoding: the historical reference loop.
+    Wave,
+}
+
+impl DecodeMode {
+    /// Stable config/CLI name.
+    pub fn name(self) -> &'static str {
+        match self {
+            DecodeMode::Continuous => "continuous",
+            DecodeMode::Wave => "wave",
+        }
+    }
+}
+
+impl std::str::FromStr for DecodeMode {
+    type Err = anyhow::Error;
+    fn from_str(s: &str) -> anyhow::Result<Self> {
+        Ok(match s {
+            "continuous" => DecodeMode::Continuous,
+            "wave" => DecodeMode::Wave,
+            other => anyhow::bail!("unknown decode_mode `{other}` (wave|continuous)"),
+        })
+    }
+}
+
 /// Which kernel implementation the loaded artifacts use.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum KernelMode {
@@ -292,6 +332,9 @@ pub struct RuntimeConfig {
     pub decode_batch: usize,
     pub max_seq: usize,
     pub vocab: usize,
+    /// Decode scheduling discipline: slot-refill continuous batching
+    /// (default) or the wave-barrier reference loop.
+    pub decode_mode: DecodeMode,
 }
 
 impl Default for RuntimeConfig {
@@ -304,6 +347,7 @@ impl Default for RuntimeConfig {
             decode_batch: 32,
             max_seq: 64,
             vocab: 320,
+            decode_mode: DecodeMode::Continuous,
         }
     }
 }
@@ -542,6 +586,7 @@ impl Config {
             }
             "runtime.batch" => self.runtime.batch = usize_of!(),
             "runtime.decode_batch" => self.runtime.decode_batch = usize_of!(),
+            "runtime.decode_mode" => self.runtime.decode_mode = str_of!().parse()?,
             "runtime.max_seq" => self.runtime.max_seq = usize_of!(),
             "runtime.vocab" => self.runtime.vocab = usize_of!(),
             "allocator.policy" => self.allocator.policy = str_of!().parse()?,
@@ -853,6 +898,26 @@ mod tests {
         assert_eq!(BackendKind::Native.name(), "native");
         assert_eq!(BackendKind::Xla.name(), "xla");
         assert_eq!("xla".parse::<BackendKind>().unwrap(), BackendKind::Xla);
+    }
+
+    #[test]
+    fn decode_mode_roundtrip_and_default() {
+        // default: continuous — the slot-refill engine is the serving path;
+        // wave stays available as the bit-for-bit reference
+        assert_eq!(Config::default().runtime.decode_mode, DecodeMode::Continuous);
+        let cfg = Config::from_toml_str("[runtime]\ndecode_mode = \"wave\"\n").unwrap();
+        assert_eq!(cfg.runtime.decode_mode, DecodeMode::Wave);
+        let cfg =
+            Config::from_toml_str("[runtime]\ndecode_mode = \"continuous\"\n").unwrap();
+        assert_eq!(cfg.runtime.decode_mode, DecodeMode::Continuous);
+        let err = Config::from_toml_str("[runtime]\ndecode_mode = \"burst\"\n")
+            .unwrap_err();
+        assert!(err.to_string().contains("decode_mode"));
+        assert_eq!(DecodeMode::Wave.name(), "wave");
+        assert_eq!(
+            "continuous".parse::<DecodeMode>().unwrap(),
+            DecodeMode::Continuous
+        );
     }
 
     #[test]

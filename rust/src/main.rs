@@ -38,6 +38,13 @@ fn cli() -> Cli {
             default: Some("adaptive"),
         },
         FlagSpec {
+            name: "decode-mode",
+            help: "decode scheduling: continuous (slot-refill pool) | wave \
+                   (barrier reference); empty = value from --config \
+                   (default continuous)",
+            default: Some(""),
+        },
+        FlagSpec {
             name: "strong-fraction",
             help: "routing: target fraction of strong decodes",
             default: Some("0.5"),
@@ -166,6 +173,11 @@ fn cmd_serve(args: &Args) -> Result<()> {
     cfg.allocator.b_max = args.usize_flag("b-max")?;
     cfg.route.procedure = args.str_flag("procedure")?.parse()?;
     cfg.route.strong_fraction = args.f64_flag("strong-fraction")?;
+    // empty = keep whatever --config (or the default, continuous) says
+    let decode_mode_flag = args.str_flag("decode-mode")?;
+    if !decode_mode_flag.is_empty() {
+        cfg.runtime.decode_mode = decode_mode_flag.parse()?;
+    }
     // empty = keep whatever --config (or the default) says — the flag must
     // not silently clobber a file-configured pool
     let workers_flag = args.str_flag("workers")?;
@@ -195,10 +207,11 @@ fn cmd_serve(args: &Args) -> Result<()> {
 
     let metrics = Arc::new(Registry::default());
     println!(
-        "thinkalloc serving on {} (backend {}, policy {:?}, B={}, procedure {}, \
-         workers {}, controller {})",
+        "thinkalloc serving on {} (backend {}, decode {}, policy {:?}, B={}, \
+         procedure {}, workers {}, controller {})",
         cfg.server.addr,
         cfg.runtime.backend.name(),
+        cfg.runtime.decode_mode.name(),
         cfg.allocator.policy,
         cfg.allocator.budget_per_query,
         cfg.route.procedure.name(),
@@ -369,9 +382,10 @@ fn cmd_info(args: &Args) -> Result<()> {
     println!("backend: {}", engine.backend_kind().name());
     println!("kernel mode: {:?}", engine.kernel_mode());
     println!(
-        "batch: {} decode_batch: {} seq: {} vocab: {}",
+        "batch: {} decode_batch: {} ({}) seq: {} vocab: {}",
         engine.batch(),
         engine.decode_batch(),
+        engine.decode_mode().name(),
         engine.max_seq(),
         engine.vocab()
     );

@@ -37,9 +37,23 @@
 //! * **Token accounting** — the cost model upstream (generator waves,
 //!   `serving.queue_wait_us`, controller feedback) assumes one
 //!   `run_tokens(DecodeStep, ..)` call per wave step at the full decode
-//!   batch. A backend must not batch across calls or short-circuit steps;
-//!   "cheap" and "expensive" backends differ in wall time per call, never
-//!   in call structure.
+//!   batch, and one [`Backend::decode_step_slots`] call per continuous-pool
+//!   step covering exactly the listed live slots. A backend must not batch
+//!   across calls or short-circuit steps; "cheap" and "expensive" backends
+//!   differ in wall time per call, never in call structure.
+//! * **Incremental decode slots** — the `decode_*` methods form a per-slot
+//!   state machine for the continuous-batching generator (slot ids in
+//!   `0..decode_batch`): [`Backend::decode_begin_row`] registers a prompt
+//!   row, [`Backend::decode_step_slots`] returns next-token logits for the
+//!   listed live slots, [`Backend::decode_push_token`] appends the token
+//!   the sampler chose, [`Backend::decode_evict_row`] frees the slot for
+//!   refill. Stepping a slot must be a pure function of the tokens begun +
+//!   pushed into it — bit-identical to re-encoding the same sequence
+//!   through `run_tokens(DecodeStep, ..)`, which is exactly what the
+//!   [`ReencodeSlots`] fallback (used by the xla backend, whose AOT
+//!   executables only exist at the full static batch) does. Slot state is
+//!   interior-mutable behind `&self` because the trait is `!Send` and an
+//!   engine is thread-owned; no synchronization is implied or provided.
 //! * **Send discipline** — the trait is deliberately **not** `Send`: the
 //!   xla handles are `Rc`-backed and thread-bound, so a [`Backend`] (and
 //!   the [`crate::runtime::Engine`] owning it) lives on the worker thread
@@ -101,9 +115,162 @@ pub trait Backend {
         k: usize,
     ) -> Result<(Vec<i32>, Vec<f32>)>;
 
+    /// Register a prompt row into decode slot `slot`.
+    ///
+    /// `ids` is one pre-encoded `[max_seq]` row (BOS + prompt + EOS + PAD).
+    /// The slot must be vacant (never begun, or evicted since) — beginning
+    /// an occupied slot is a caller bug and must error. Requires
+    /// [`Artifact::DecodeStep`] to be compiled.
+    fn decode_begin_row(&self, slot: usize, ids: &[i32]) -> Result<()>;
+
+    /// One decode step over the listed live slots: returns next-token
+    /// logits, `slots.len() × out_cols` floats row-major, where output row
+    /// `i` belongs to `slots[i]`.
+    ///
+    /// `slots` is strictly increasing and every listed slot is occupied.
+    /// The result for a slot must be a pure function of the tokens begun +
+    /// pushed into it — bit-identical to what `run_tokens(DecodeStep, ..)`
+    /// returns for the same re-encoded sequence, so wave and continuous
+    /// decoding agree token-for-token at temperature 0. Slots *not* listed
+    /// must not influence the output (that is the whole point: finished
+    /// rows stop paying for steps).
+    fn decode_step_slots(&self, slots: &[usize], out_cols: usize) -> Result<Vec<f32>>;
+
+    /// Append the sampled token to `slot`'s sequence (overwriting its EOS
+    /// and pushing EOS one position right, exactly like the wave loop's id
+    /// buffer mutation). Errors if the slot is vacant or the row is full.
+    fn decode_push_token(&self, slot: usize, token: i32) -> Result<()>;
+
+    /// Free `slot` for refill. Evicting a vacant slot is a no-op (the
+    /// generator evicts on finish and on early teardown without tracking).
+    fn decode_evict_row(&self, slot: usize) -> Result<()>;
+
     /// Human-readable device/platform description (e.g. `"native"` or the
     /// PJRT platform name).
     fn platform(&self) -> String;
+}
+
+/// Re-encode fallback for the incremental decode-slot API, for backends
+/// whose decode executable only exists at the full static batch (the AOT
+/// xla path — and any future backend that wants correctness before it
+/// invests in a true incremental path).
+///
+/// It keeps the per-slot id rows the caller began/pushed and implements
+/// [`Backend::decode_step_slots`] by assembling the padded
+/// `[decode_batch, max_seq]` batch (vacant and unlisted slots ride as PAD
+/// rows) and invoking the backend's full-batch decode through a closure,
+/// then gathering the listed slots' rows. Cost per step is therefore the
+/// full static batch — the fallback recovers the *semantics* of slot
+/// refill (and its queueing win: no wave barrier) but not the per-slot
+/// compute saving a native incremental path gives.
+///
+/// Interior-mutable (`RefCell`) because [`Backend`] decode methods take
+/// `&self`; the trait is `!Send`, so a backend (and this state with it) is
+/// owned by one worker thread.
+pub struct ReencodeSlots {
+    max_seq: usize,
+    /// Per-slot `(ids, cursor)`: `ids` is the padded row, `cursor` the EOS
+    /// position the next token overwrites (the wave loop's invariant).
+    rows: std::cell::RefCell<Vec<Option<(Vec<i32>, usize)>>>,
+}
+
+impl ReencodeSlots {
+    /// State for `decode_batch` slots of `max_seq`-wide rows.
+    pub fn new(decode_batch: usize, max_seq: usize) -> ReencodeSlots {
+        ReencodeSlots {
+            max_seq,
+            rows: std::cell::RefCell::new(vec![None; decode_batch]),
+        }
+    }
+
+    /// [`Backend::decode_begin_row`] semantics.
+    pub fn begin_row(&self, slot: usize, ids: &[i32]) -> Result<()> {
+        let mut rows = self.rows.borrow_mut();
+        let n = rows.len();
+        let r = rows
+            .get_mut(slot)
+            .ok_or_else(|| anyhow::anyhow!("decode slot {slot} out of range (pool {n})"))?;
+        anyhow::ensure!(r.is_none(), "decode slot {slot} already occupied");
+        anyhow::ensure!(
+            ids.len() == self.max_seq,
+            "decode row len {} != max_seq {}",
+            ids.len(),
+            self.max_seq
+        );
+        let cursor = crate::tokenizer::last_index(ids) as usize;
+        *r = Some((ids.to_vec(), cursor));
+        Ok(())
+    }
+
+    /// [`Backend::decode_push_token`] semantics.
+    pub fn push_token(&self, slot: usize, token: i32) -> Result<()> {
+        let mut rows = self.rows.borrow_mut();
+        let r = rows
+            .get_mut(slot)
+            .and_then(|r| r.as_mut())
+            .ok_or_else(|| anyhow::anyhow!("push into vacant decode slot {slot}"))?;
+        let (ids, cursor) = r;
+        anyhow::ensure!(*cursor + 1 < self.max_seq, "decode slot {slot} is full");
+        ids[*cursor] = token;
+        ids[*cursor + 1] = crate::tokenizer::EOS_ID;
+        *cursor += 1;
+        Ok(())
+    }
+
+    /// [`Backend::decode_evict_row`] semantics.
+    pub fn evict_row(&self, slot: usize) -> Result<()> {
+        let mut rows = self.rows.borrow_mut();
+        let n = rows.len();
+        let r = rows
+            .get_mut(slot)
+            .ok_or_else(|| anyhow::anyhow!("decode slot {slot} out of range (pool {n})"))?;
+        *r = None;
+        Ok(())
+    }
+
+    /// [`Backend::decode_step_slots`] semantics over a full-batch decode
+    /// call: `run(ids, last_idx, batch, out_cols)` must behave like
+    /// [`Backend::run_tokens`] on [`Artifact::DecodeStep`].
+    pub fn step<F>(&self, slots: &[usize], out_cols: usize, run: F) -> Result<Vec<f32>>
+    where
+        F: FnOnce(&[i32], &[i32], usize, usize) -> Result<Vec<f32>>,
+    {
+        let rows = self.rows.borrow();
+        let batch = rows.len();
+        let mut ids_p = vec![crate::tokenizer::PAD_ID; batch * self.max_seq];
+        let mut li_p = vec![0i32; batch];
+        for (s, row) in rows.iter().enumerate() {
+            if let Some((ids, cursor)) = row {
+                ids_p[s * self.max_seq..(s + 1) * self.max_seq].copy_from_slice(ids);
+                li_p[s] = cursor.saturating_sub(1) as i32;
+            }
+        }
+        let mut prev = None;
+        for &s in slots {
+            anyhow::ensure!(
+                prev.is_none_or(|p| p < s),
+                "decode slots must be strictly increasing"
+            );
+            anyhow::ensure!(
+                rows.get(s).is_some_and(|r| r.is_some()),
+                "stepping vacant decode slot {s}"
+            );
+            prev = Some(s);
+        }
+        drop(rows);
+        let full = run(&ids_p, &li_p, batch, out_cols)?;
+        anyhow::ensure!(
+            full.len() == batch * out_cols,
+            "decode step returned {} floats, expected {}×{out_cols}",
+            full.len(),
+            batch
+        );
+        let mut out = Vec::with_capacity(slots.len() * out_cols);
+        for &s in slots {
+            out.extend_from_slice(&full[s * out_cols..(s + 1) * out_cols]);
+        }
+        Ok(out)
+    }
 }
 
 /// Construct the backend selected by `cfg.backend`, together with its
@@ -184,6 +351,49 @@ mod tests {
                 );
             }
         }
+    }
+
+    #[test]
+    fn reencode_slots_state_machine_contracts() {
+        let s = ReencodeSlots::new(4, 64);
+        let row = crate::tokenizer::encode("ADD 1 = ", 64);
+        s.begin_row(1, &row).unwrap();
+        // occupied slot refuses a second begin
+        assert!(s.begin_row(1, &row).is_err());
+        // out-of-range slot
+        assert!(s.begin_row(4, &row).is_err());
+        // pushing into a vacant slot is an error; into a live one is not
+        assert!(s.push_token(0, 65).is_err());
+        s.push_token(1, b'1' as i32).unwrap();
+        // evict frees the slot for reuse; double-evict is a no-op
+        s.evict_row(1).unwrap();
+        s.evict_row(1).unwrap();
+        s.begin_row(1, &row).unwrap();
+        // step validates the slot list
+        let fail = s.step(&[1, 0], 4, |_, _, _, _| Ok(vec![0.0; 16]));
+        assert!(fail.is_err(), "unsorted slot list accepted");
+        let fail = s.step(&[2], 4, |_, _, _, _| Ok(vec![0.0; 16]));
+        assert!(fail.is_err(), "vacant slot stepped");
+    }
+
+    #[test]
+    fn reencode_slots_step_gathers_listed_rows() {
+        let s = ReencodeSlots::new(3, 64);
+        s.begin_row(0, &crate::tokenizer::encode("a", 64)).unwrap();
+        s.begin_row(2, &crate::tokenizer::encode("b", 64)).unwrap();
+        // fake full-batch decode: row r's logits are all r as f32
+        let out = s
+            .step(&[0, 2], 2, |ids, li, batch, cols| {
+                assert_eq!(batch, 3);
+                assert_eq!(ids.len(), 3 * 64);
+                assert_eq!(li.len(), 3);
+                // vacant slot 1 rides as PAD with a valid gather index
+                assert_eq!(li[1], 0);
+                assert!(ids[64..128].iter().all(|&i| i == crate::tokenizer::PAD_ID));
+                Ok((0..batch).flat_map(|r| vec![r as f32; cols]).collect())
+            })
+            .unwrap();
+        assert_eq!(out, vec![0.0, 0.0, 2.0, 2.0]);
     }
 
     #[test]

@@ -63,13 +63,23 @@ const CHAT_MAX_LEN: usize = 10;
 pub struct NativeBackend {
     cfg: RuntimeConfig,
     compiled: BTreeSet<Artifact>,
+    /// Incremental decode-slot state: the *decoded byte sequence* of each
+    /// live row (`"<query> = <partial>"`). The native decode head is a pure
+    /// function of that text, so keeping it materialized per slot makes a
+    /// continuous-pool step cost O(live rows) — no ids→text re-decode and
+    /// no padding rows — while staying bit-identical to the re-encode path
+    /// (`run_tokens` decodes the same bytes from the id row). Interior
+    /// mutability because the trait's decode methods take `&self`; the
+    /// backend is thread-owned per the `!Send` contract.
+    decode_slots: std::cell::RefCell<Vec<Option<Vec<u8>>>>,
 }
 
 impl NativeBackend {
     /// Create a backend for the given runtime shape (batch sizes, max_seq,
     /// vocab). No artifacts or external libraries are touched.
     pub fn new(cfg: RuntimeConfig) -> NativeBackend {
-        NativeBackend { cfg, compiled: BTreeSet::new() }
+        let slots = std::cell::RefCell::new(vec![None; cfg.decode_batch]);
+        NativeBackend { cfg, compiled: BTreeSet::new(), decode_slots: slots }
     }
 
     /// The synthesized manifest: what the xla path reads from
@@ -187,6 +197,77 @@ impl Backend for NativeBackend {
             val.push(best.1);
         }
         Ok((idx, val))
+    }
+
+    fn decode_begin_row(&self, slot: usize, ids: &[i32]) -> Result<()> {
+        self.ensure(Artifact::DecodeStep)?;
+        if ids.len() != self.cfg.max_seq {
+            bail!("native decode row len {} != max_seq {}", ids.len(), self.cfg.max_seq);
+        }
+        let mut slots = self.decode_slots.borrow_mut();
+        let n = slots.len();
+        let Some(s) = slots.get_mut(slot) else {
+            bail!("decode slot {slot} out of range (pool {n})");
+        };
+        if s.is_some() {
+            bail!("decode slot {slot} already occupied");
+        }
+        *s = Some(tokenizer::decode(ids).into_bytes());
+        Ok(())
+    }
+
+    fn decode_step_slots(&self, slots: &[usize], out_cols: usize) -> Result<Vec<f32>> {
+        self.ensure(Artifact::DecodeStep)?;
+        let state = self.decode_slots.borrow();
+        let mut out = Vec::with_capacity(slots.len() * out_cols);
+        let mut prev: Option<usize> = None;
+        for &s in slots {
+            if prev.is_some_and(|p| p >= s) {
+                bail!("decode slots must be strictly increasing");
+            }
+            prev = Some(s);
+            let Some(Some(bytes)) = state.get(s) else {
+                bail!("stepping vacant decode slot {s}");
+            };
+            // live rows always hold valid UTF-8 (prompts arrive as &str and
+            // every sampleable token is ASCII), so this borrows — O(len)
+            // scan, no allocation, and byte-for-byte what the re-encode
+            // path's tokenizer::decode would produce
+            let text = String::from_utf8_lossy(bytes);
+            let row = self.row_out(Artifact::DecodeStep, &text, out_cols)?;
+            if row.len() != out_cols {
+                bail!("native decode: produced {} cols, expected {out_cols}", row.len());
+            }
+            out.extend(row);
+        }
+        Ok(out)
+    }
+
+    fn decode_push_token(&self, slot: usize, token: i32) -> Result<()> {
+        let mut slots = self.decode_slots.borrow_mut();
+        let Some(Some(bytes)) = slots.get_mut(slot) else {
+            bail!("push into vacant decode slot {slot}");
+        };
+        // same capacity as the re-encode path: BOS + bytes + EOS ≤ max_seq
+        if bytes.len() + 2 >= self.cfg.max_seq {
+            bail!("decode slot {slot} is full");
+        }
+        // mirror tokenizer::decode: byte ids append, specials are dropped
+        // (EOS never reaches here — the sampler finishes the row instead)
+        if (0..256).contains(&token) {
+            bytes.push(token as u8);
+        }
+        Ok(())
+    }
+
+    fn decode_evict_row(&self, slot: usize) -> Result<()> {
+        let mut slots = self.decode_slots.borrow_mut();
+        let n = slots.len();
+        let Some(s) = slots.get_mut(slot) else {
+            bail!("decode slot {slot} out of range (pool {n})");
+        };
+        *s = None;
+        Ok(())
     }
 
     fn platform(&self) -> String {
@@ -587,6 +668,72 @@ mod tests {
         assert_eq!(idx, vec![2, 1]); // 0.9 is masked out in row 0
         assert!((val[0] - 0.5).abs() < 1e-6);
         assert!((val[1] - 0.3).abs() < 1e-6);
+    }
+
+    /// Re-encode one decode row through `run_tokens` (the wave path) and
+    /// return its logits — the reference the incremental API must match.
+    fn reencode_logits(b: &NativeBackend, text: &str) -> Vec<f32> {
+        let seq = b.cfg.max_seq;
+        let db = b.cfg.decode_batch;
+        let vocab = b.cfg.vocab;
+        let mut ids = tokenizer::encode(text, seq);
+        ids.resize(db * seq, tokenizer::PAD_ID);
+        let li = vec![0i32; db];
+        let out = b.run_tokens(Artifact::DecodeStep, &ids, &li, db, vocab).unwrap();
+        out[..vocab].to_vec()
+    }
+
+    #[test]
+    fn incremental_decode_matches_reencode_bit_for_bit() {
+        let b = backend();
+        let vocab = b.cfg.vocab;
+        // walk an easy binary row and a chat row through the slot API,
+        // greedy-following the binary answer; every step must equal the
+        // full-batch re-encode of the same partial sequence
+        b.decode_begin_row(0, &tokenizer::encode("ADD 1 2 = ", b.cfg.max_seq)).unwrap();
+        b.decode_begin_row(3, &tokenizer::encode("CHAT a b = ", b.cfg.max_seq)).unwrap();
+        let mut partial = String::new();
+        for _ in 0..3 {
+            let out = b.decode_step_slots(&[0, 3], vocab).unwrap();
+            assert_eq!(out.len(), 2 * vocab);
+            let want0 = reencode_logits(&b, &format!("ADD 1 2 = {partial}"));
+            assert_eq!(&out[..vocab], &want0[..], "binary row diverged at `{partial}`");
+            let want3 = reencode_logits(&b, "CHAT a b = ");
+            assert_eq!(&out[vocab..], &want3[..], "chat row diverged");
+            // greedy token of the binary row: next answer byte ("3", then EOS)
+            let tok = out[..vocab]
+                .iter()
+                .enumerate()
+                .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                .unwrap()
+                .0 as i32;
+            if tok == EOS_ID {
+                break;
+            }
+            b.decode_push_token(0, tok).unwrap();
+            partial.push(tok as u8 as char);
+        }
+        assert_eq!(partial, "3", "greedy walk of ADD 1 2 must spell the answer");
+        // eviction frees slots for reuse
+        b.decode_evict_row(0).unwrap();
+        b.decode_evict_row(3).unwrap();
+        b.decode_begin_row(0, &tokenizer::encode("REV ab = ", b.cfg.max_seq)).unwrap();
+        let out = b.decode_step_slots(&[0], vocab).unwrap();
+        assert_eq!(out, reencode_logits(&b, "REV ab = "));
+    }
+
+    #[test]
+    fn incremental_decode_slot_errors() {
+        let b = backend();
+        let row = tokenizer::encode("ADD 1 = ", b.cfg.max_seq);
+        assert!(b.decode_begin_row(b.cfg.decode_batch, &row).is_err());
+        b.decode_begin_row(2, &row).unwrap();
+        assert!(b.decode_begin_row(2, &row).is_err(), "double begin accepted");
+        assert!(b.decode_step_slots(&[1], b.cfg.vocab).is_err(), "vacant slot stepped");
+        assert!(b.decode_step_slots(&[2, 2], b.cfg.vocab).is_err(), "dup slots accepted");
+        assert!(b.decode_push_token(1, 65).is_err(), "push into vacant slot");
+        b.decode_evict_row(2).unwrap();
+        b.decode_evict_row(2).unwrap(); // idempotent
     }
 
     #[test]

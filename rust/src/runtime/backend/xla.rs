@@ -19,7 +19,7 @@ use std::path::PathBuf;
 
 use anyhow::{anyhow, bail, Result};
 
-use super::Backend;
+use super::{Backend, ReencodeSlots};
 use crate::config::RuntimeConfig;
 use crate::runtime::Artifact;
 
@@ -32,6 +32,14 @@ pub struct XlaBackend {
     client: xla::PjRtClient,
     cfg: RuntimeConfig,
     executables: BTreeMap<Artifact, Loaded>,
+    /// Incremental decode-slot state, served by full re-encode: the AOT
+    /// decode executable only exists at the static `[decode_batch,
+    /// max_seq]` shape, so each `decode_step_slots` call pays the full
+    /// batch (vacant slots ride as PAD rows). The continuous generator
+    /// still wins its queueing improvement — no wave barrier — and the
+    /// semantics match the native path bit-for-bit; re-lowering the decode
+    /// artifact with a KV cache is the future true-incremental path.
+    slots: ReencodeSlots,
 }
 
 impl XlaBackend {
@@ -40,7 +48,8 @@ impl XlaBackend {
     pub fn new(cfg: RuntimeConfig) -> Result<XlaBackend> {
         let client =
             xla::PjRtClient::cpu().map_err(|e| anyhow!("PjRtClient::cpu: {e:?}"))?;
-        Ok(XlaBackend { client, cfg, executables: BTreeMap::new() })
+        let slots = ReencodeSlots::new(cfg.decode_batch, cfg.max_seq);
+        Ok(XlaBackend { client, cfg, executables: BTreeMap::new(), slots })
     }
 
     fn artifact_path(&self, art: Artifact) -> PathBuf {
@@ -147,6 +156,27 @@ impl Backend for XlaBackend {
         let idx = idx_l.to_vec::<i32>().map_err(|e| anyhow!("idx to_vec: {e:?}"))?;
         let val = val_l.to_vec::<f32>().map_err(|e| anyhow!("val to_vec: {e:?}"))?;
         Ok((idx, val))
+    }
+
+    fn decode_begin_row(&self, slot: usize, ids: &[i32]) -> Result<()> {
+        if !self.has(Artifact::DecodeStep) {
+            bail!("artifact {:?} not loaded", Artifact::DecodeStep);
+        }
+        self.slots.begin_row(slot, ids)
+    }
+
+    fn decode_step_slots(&self, slots: &[usize], out_cols: usize) -> Result<Vec<f32>> {
+        self.slots.step(slots, out_cols, |ids, li, batch, cols| {
+            self.run_tokens(Artifact::DecodeStep, ids, li, batch, cols)
+        })
+    }
+
+    fn decode_push_token(&self, slot: usize, token: i32) -> Result<()> {
+        self.slots.push_token(slot, token)
+    }
+
+    fn decode_evict_row(&self, slot: usize) -> Result<()> {
+        self.slots.evict_row(slot)
     }
 
     fn platform(&self) -> String {

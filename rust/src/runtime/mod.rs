@@ -137,6 +137,11 @@ impl Engine {
         self.cfg.decode_batch
     }
 
+    /// Configured decode scheduling discipline (wave or continuous).
+    pub fn decode_mode(&self) -> crate::config::DecodeMode {
+        self.cfg.decode_mode
+    }
+
     pub fn max_seq(&self) -> usize {
         self.cfg.max_seq
     }
@@ -217,6 +222,54 @@ impl Engine {
         m_p.resize(batch * k, 0.0);
         let (idx, val) = self.backend.run_rerank(&s_p, &m_p, batch, k)?;
         Ok((idx[..n].to_vec(), val[..n].to_vec()))
+    }
+
+    // --- incremental decode-slot API (continuous batching) ----------------
+
+    /// Register a pre-encoded `[max_seq]` prompt row into decode slot
+    /// `slot` (see [`backend::Backend::decode_begin_row`]).
+    pub fn decode_begin_row(&self, slot: usize, ids: &[i32]) -> Result<()> {
+        if slot >= self.cfg.decode_batch {
+            bail!("decode slot {slot} out of range (pool {})", self.cfg.decode_batch);
+        }
+        if ids.len() != self.cfg.max_seq {
+            bail!("decode row len {} != max_seq {}", ids.len(), self.cfg.max_seq);
+        }
+        self.backend.decode_begin_row(slot, ids)
+    }
+
+    /// One decode step over the listed live slots; returns next-token
+    /// logits shaped `[slots.len(), vocab]`, row `i` for `slots[i]`
+    /// (see [`backend::Backend::decode_step_slots`]).
+    pub fn decode_step_slots(&self, slots: &[usize]) -> Result<F32Matrix> {
+        if slots.is_empty() {
+            bail!("decode step over an empty slot list");
+        }
+        if slots.iter().any(|&s| s >= self.cfg.decode_batch) {
+            bail!("decode slot out of range (pool {})", self.cfg.decode_batch);
+        }
+        let vocab = self.cfg.vocab;
+        let data = self.backend.decode_step_slots(slots, vocab)?;
+        if data.len() != slots.len() * vocab {
+            bail!(
+                "decode step returned {} floats, expected {}×{vocab}",
+                data.len(),
+                slots.len()
+            );
+        }
+        Ok(F32Matrix { data, rows: slots.len(), cols: vocab })
+    }
+
+    /// Append a sampled token to a live decode slot
+    /// (see [`backend::Backend::decode_push_token`]).
+    pub fn decode_push_token(&self, slot: usize, token: i32) -> Result<()> {
+        self.backend.decode_push_token(slot, token)
+    }
+
+    /// Free a decode slot for refill
+    /// (see [`backend::Backend::decode_evict_row`]).
+    pub fn decode_evict_row(&self, slot: usize) -> Result<()> {
+        self.backend.decode_evict_row(slot)
     }
 
     pub fn platform(&self) -> String {

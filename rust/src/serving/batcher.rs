@@ -49,6 +49,23 @@ pub fn partition_epoch(reqs: &[Request], default_kind: ProcedureKind) -> Vec<Sub
     subs
 }
 
+/// Admission order for the continuous decode pool: job indices stably
+/// sorted into `bucket`-byte prompt-length buckets (shorter buckets first).
+///
+/// Co-resident rows then have similar remaining token budgets, so slots
+/// turn over together and a long row admitted early cannot pin a slot while
+/// dozens of short rows queue behind the pool ("length-bucketed admission").
+/// The sort is stable and the bucket width coarse, so job order — the
+/// allocator's query order — is preserved within a bucket, and the ordering
+/// is deterministic for the slot-refill reproducibility contract
+/// ([`crate::serving::generator`]).
+pub fn length_bucketed_order(lens: &[usize], bucket: usize) -> Vec<usize> {
+    let bucket = bucket.max(1);
+    let mut idx: Vec<usize> = (0..lens.len()).collect();
+    idx.sort_by_key(|&i| lens[i] / bucket);
+    idx
+}
+
 pub struct Batcher {
     queue: Mutex<BatchState>,
     arrived: Condvar,
@@ -262,6 +279,21 @@ mod tests {
         let subs = partition_epoch(&rs, ProcedureKind::WeakStrongRoute);
         assert_eq!(subs.len(), 1);
         assert_eq!(subs[0].kind, ProcedureKind::WeakStrongRoute);
+    }
+
+    #[test]
+    fn length_buckets_are_stable_and_complete() {
+        // lens 0..3 land in bucket 0, 4..7 in bucket 1 (width 4)
+        let lens = [9, 1, 5, 2, 12, 6];
+        let order = length_bucketed_order(&lens, 4);
+        assert_eq!(order, vec![1, 3, 2, 5, 0, 4]);
+        // permutation: every index exactly once
+        let mut sorted = order.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, (0..lens.len()).collect::<Vec<_>>());
+        // bucket width 0 is treated as 1 (pure stable sort by length)
+        assert_eq!(length_bucketed_order(&[3, 1, 2], 0), vec![1, 2, 0]);
+        assert!(length_bucketed_order(&[], 8).is_empty());
     }
 
     #[test]

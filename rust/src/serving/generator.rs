@@ -1,18 +1,47 @@
 //! Batched autoregressive generation over the `decode_step` artifact.
 //!
-//! Cache-less decoding: every step re-encodes the full (short) sequence —
-//! at S=64 / d=128 a KV cache would save little, and static shapes keep the
-//! PJRT path simple. Jobs (query × sample) are packed into waves of the
-//! decode batch; a wave steps until every member has emitted EOS or hit
-//! `max_new_tokens`. Finished rows keep stepping as padding (their samples
-//! are already frozen) — the cost model is tokens = wave_steps × batch,
-//! which the batcher minimises by packing similar-length jobs.
+//! Two scheduling disciplines over the static `decode_batch`-slot pool
+//! (selected by `[runtime] decode_mode`, see [`crate::config::DecodeMode`]):
+//!
+//! * **Continuous** (default): a fixed pool of slots with mid-flight
+//!   refill. A row that emits EOS (or fills its budget) is evicted and its
+//!   slot immediately handed to the next pending job, so finished rows are
+//!   never stepped as padding — the backend steps exactly the live slots
+//!   each call (via the incremental per-slot decode API,
+//!   [`crate::runtime::backend::Backend::decode_step_slots`]). Jobs are
+//!   admitted in length-bucketed order
+//!   ([`super::batcher::length_bucketed_order`]) so co-resident rows carry
+//!   similar remaining budgets.
+//! * **Wave** (the historical reference): jobs are packed into waves of the
+//!   decode batch; a wave steps until every member has emitted EOS or hit
+//!   `max_new_tokens`, finished rows riding along as padding. Kept
+//!   bit-for-bit as it always was — the determinism baseline the
+//!   continuous engine is validated against.
+//!
+//! # Seed-stream discipline
+//!
+//! Wave mode consumes the caller's rng in pool-global draw order (row-major
+//! within a step), exactly as it historically did. Continuous mode cannot
+//! reproduce that order — rows start and finish mid-flight — so it derives
+//! one **per-job `Pcg64` stream from the job index** (plus a single base
+//! draw from the caller's rng). A job's sampled tokens therefore depend
+//! only on (base seed, job index, its own logits): admission order, pool
+//! width and refill timing are all unobservable in the output. At
+//! temperature 0 no stream is consumed at all and both modes emit
+//! identical samples — the parity contract `tests/decode_engine.rs` pins.
+//!
+//! Per-sample cost telemetry is returned as [`DecodeStats`] and exported by
+//! the scheduler as `serving.decode.{steps,wasted_steps,occupancy}`.
 
 use anyhow::Result;
 
+use crate::config::DecodeMode;
 use crate::prng::Pcg64;
 use crate::runtime::{Artifact, Engine};
 use crate::tokenizer::{self, EOS_ID, VOCAB};
+
+/// Bucket width (prompt bytes) for continuous-admission length bucketing.
+const LEN_BUCKET: usize = 8;
 
 /// One generation job: a prompt to complete.
 #[derive(Clone, Debug)]
@@ -40,10 +69,46 @@ impl Default for GenConfig {
     }
 }
 
-/// Sample from logits with temperature (greedy at t ≤ 0). Only the real
-/// vocabulary (ids < VOCAB) participates — the padded embedding rows are
-/// never emitted.
-pub fn sample_token(logits: &[f32], temperature: f64, rng: &mut Pcg64) -> i32 {
+/// Decode-step accounting for one `generate_with` call.
+///
+/// `steps` counts slot-steps spent on live rows, `wasted_steps` slot-steps
+/// spent stepping already-finished rows as padding (wave mode's barrier
+/// cost; structurally 0 under continuous refill — vacant slots are *not*
+/// counted, in either mode). `backend_calls` counts decode-step backend
+/// invocations.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct DecodeStats {
+    /// Slot-steps over live (unfinished) rows.
+    pub steps: u64,
+    /// Slot-steps over finished rows ridden as padding.
+    pub wasted_steps: u64,
+    /// Decode-step backend calls issued.
+    pub backend_calls: u64,
+}
+
+impl DecodeStats {
+    /// Mean fraction of the static decode batch doing live work per backend
+    /// call (1.0 = every stepped slot carried an unfinished row and the
+    /// pool was full).
+    pub fn occupancy(&self, decode_batch: usize) -> f64 {
+        if self.backend_calls == 0 || decode_batch == 0 {
+            return 0.0;
+        }
+        self.steps as f64 / (self.backend_calls * decode_batch as u64) as f64
+    }
+}
+
+/// Sample from logits with temperature (greedy at t ≤ 0), reusing `scratch`
+/// for the softmax weights so the per-token hot path allocates nothing.
+/// Only the real vocabulary (ids < VOCAB) participates — the padded
+/// embedding rows are never emitted. Draw-for-draw identical to the
+/// allocating [`sample_token`].
+pub fn sample_token_into(
+    logits: &[f32],
+    temperature: f64,
+    rng: &mut Pcg64,
+    scratch: &mut Vec<f64>,
+) -> i32 {
     debug_assert!(logits.len() >= VOCAB);
     if temperature <= 0.0 {
         let mut best = 0usize;
@@ -56,24 +121,64 @@ pub fn sample_token(logits: &[f32], temperature: f64, rng: &mut Pcg64) -> i32 {
     }
     let inv_t = 1.0 / temperature;
     let max = logits[..VOCAB].iter().cloned().fold(f32::MIN, f32::max) as f64;
-    let weights: Vec<f64> = logits[..VOCAB]
-        .iter()
-        .map(|&l| ((l as f64 - max) * inv_t).exp())
-        .collect();
-    rng.categorical(&weights) as i32
+    scratch.clear();
+    scratch.extend(
+        logits[..VOCAB]
+            .iter()
+            .map(|&l| ((l as f64 - max) * inv_t).exp()),
+    );
+    rng.categorical(scratch) as i32
 }
 
-/// Run all jobs to completion; returns samples in job order.
+/// Allocating convenience wrapper around [`sample_token_into`] (tests,
+/// one-off callers). The serving loops keep one scratch buffer per epoch.
+pub fn sample_token(logits: &[f32], temperature: f64, rng: &mut Pcg64) -> i32 {
+    let mut scratch = Vec::with_capacity(VOCAB);
+    sample_token_into(logits, temperature, rng, &mut scratch)
+}
+
+/// Run all jobs to completion in wave mode; returns samples in job order.
+///
+/// Kept as the bit-for-bit historical entry point (shared-rng draw order,
+/// wave barriers); the serving path goes through [`generate_with`], which
+/// defaults to the continuous engine.
 pub fn generate(
     engine: &Engine,
     jobs: &[Job],
     cfg: &GenConfig,
     rng: &mut Pcg64,
 ) -> Result<Vec<Sample>> {
+    Ok(generate_wave(engine, jobs, cfg, rng)?.0)
+}
+
+/// Run all jobs to completion under the selected decode mode; returns
+/// samples in job order plus the decode-step accounting.
+pub fn generate_with(
+    engine: &Engine,
+    jobs: &[Job],
+    cfg: &GenConfig,
+    rng: &mut Pcg64,
+    mode: DecodeMode,
+) -> Result<(Vec<Sample>, DecodeStats)> {
+    match mode {
+        DecodeMode::Wave => generate_wave(engine, jobs, cfg, rng),
+        DecodeMode::Continuous => generate_continuous(engine, jobs, cfg, rng),
+    }
+}
+
+/// The historical wave-barrier loop (see module docs).
+fn generate_wave(
+    engine: &Engine,
+    jobs: &[Job],
+    cfg: &GenConfig,
+    rng: &mut Pcg64,
+) -> Result<(Vec<Sample>, DecodeStats)> {
     let seq = engine.max_seq();
     let db = engine.decode_batch();
     let vocab = engine.vocab();
     let mut samples = Vec::with_capacity(jobs.len());
+    let mut stats = DecodeStats::default();
+    let mut scratch = Vec::with_capacity(VOCAB);
 
     for wave in jobs.chunks(db) {
         // per-row token buffers + cursors
@@ -93,6 +198,10 @@ pub fn generate(
             if done.iter().all(|&d| d) {
                 break;
             }
+            let live = done.iter().filter(|&&d| !d).count();
+            stats.steps += live as u64;
+            stats.wasted_steps += (wave.len() - live) as u64;
+            stats.backend_calls += 1;
             let last_idx: Vec<i32> = cursor
                 .iter()
                 .map(|&c| (c.saturating_sub(1)) as i32)
@@ -107,7 +216,8 @@ pub fn generate(
                 if *job_done {
                     continue;
                 }
-                let tok = sample_token(logits.row(r), cfg.temperature, rng);
+                let tok =
+                    sample_token_into(logits.row(r), cfg.temperature, rng, &mut scratch);
                 let c = cursor[r];
                 if tok == EOS_ID || c + 1 >= seq {
                     *job_done = true;
@@ -120,16 +230,168 @@ pub fn generate(
         }
 
         for (r, job) in wave.iter().enumerate() {
-            let text = tokenizer::decode(&ids[r * seq..(r + 1) * seq]);
-            let completion = text
-                .strip_prefix(&job.prompt)
-                .unwrap_or("")
-                .trim()
-                .to_string();
-            samples.push(Sample { query: job.query, text: completion });
+            samples.push(finish_sample(job, &ids[r * seq..(r + 1) * seq]));
         }
     }
-    Ok(samples)
+    Ok((samples, stats))
+}
+
+/// A live continuous-pool slot: the job it serves, its id-row mirror (for
+/// final text recovery), cursor, per-job rng stream and emitted-token count.
+struct Slot {
+    job: usize,
+    ids: Vec<i32>,
+    cursor: usize,
+    rng: Pcg64,
+    emitted: usize,
+}
+
+/// Derive job `j`'s sampling stream from the epoch's base draw — the same
+/// golden-ratio scramble the shard pool uses for worker seeds, so streams
+/// are disjoint across job indices.
+fn job_rng(seed_base: u64, job: usize) -> Pcg64 {
+    Pcg64::new(seed_base ^ (job as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15))
+}
+
+/// The continuous-batching slot-refill engine (see module docs).
+///
+/// Lifecycle per slot: *vacant* → `decode_begin_row` (admission, in
+/// length-bucketed job order) → stepped as a member of every
+/// `decode_step_slots` call while live → token pushed
+/// (`decode_push_token`) or finished (EOS / row full / budget spent) →
+/// `decode_evict_row` → *vacant*, refilled in the same iteration's
+/// admission pass so the next backend call already steps the replacement.
+fn generate_continuous(
+    engine: &Engine,
+    jobs: &[Job],
+    cfg: &GenConfig,
+    rng: &mut Pcg64,
+) -> Result<(Vec<Sample>, DecodeStats)> {
+    let result = continuous_pool(engine, jobs, cfg, rng);
+    if result.is_err() {
+        // The engine (and its backend slot state) outlives this epoch, so a
+        // mid-flight error must not strand occupied slots: the worker keeps
+        // serving after an epoch failure, and the next epoch's admission
+        // would hit "slot already occupied" forever. Best-effort evict the
+        // whole pool (evicting a vacant slot is a no-op) before
+        // propagating.
+        for s in 0..engine.decode_batch() {
+            let _ = engine.decode_evict_row(s);
+        }
+    }
+    result
+}
+
+/// The fallible pool loop behind [`generate_continuous`] (which owns the
+/// error-path slot teardown).
+fn continuous_pool(
+    engine: &Engine,
+    jobs: &[Job],
+    cfg: &GenConfig,
+    rng: &mut Pcg64,
+) -> Result<(Vec<Sample>, DecodeStats)> {
+    let seq = engine.max_seq();
+    let db = engine.decode_batch();
+    let mut stats = DecodeStats::default();
+    // one base draw per call keeps the caller's stream advancing uniformly
+    // whatever the job count; every per-job stream derives from it
+    let seed_base = rng.next_u64();
+    if jobs.is_empty() {
+        return Ok((Vec::new(), stats));
+    }
+    if cfg.max_new_tokens == 0 {
+        // zero-budget epochs never touch the backend (wave mode likewise
+        // runs zero steps and strips the prompt back to an empty sample)
+        let samples = jobs
+            .iter()
+            .map(|j| Sample { query: j.query, text: String::new() })
+            .collect();
+        return Ok((samples, stats));
+    }
+
+    let lens: Vec<usize> = jobs.iter().map(|j| j.prompt.len()).collect();
+    let admission = super::batcher::length_bucketed_order(&lens, LEN_BUCKET);
+    let mut pending = admission.into_iter();
+    let mut slots: Vec<Option<Slot>> = (0..db).map(|_| None).collect();
+    let mut out: Vec<Option<Sample>> = jobs.iter().map(|_| None).collect();
+    let mut scratch = Vec::with_capacity(VOCAB);
+    let mut active: Vec<usize> = Vec::with_capacity(db);
+    let mut live = 0usize;
+
+    loop {
+        // admission: refill every vacant slot before the next step, so a
+        // row finishing in step t never leaves its slot idle in step t+1
+        for (s, slot) in slots.iter_mut().enumerate() {
+            if slot.is_some() {
+                continue;
+            }
+            let Some(j) = pending.next() else { break };
+            let ids = tokenizer::encode(&jobs[j].prompt, seq);
+            let cursor = tokenizer::last_index(&ids) as usize;
+            engine.decode_begin_row(s, &ids)?;
+            *slot = Some(Slot {
+                job: j,
+                ids,
+                cursor,
+                rng: job_rng(seed_base, j),
+                emitted: 0,
+            });
+            live += 1;
+        }
+        if live == 0 {
+            break;
+        }
+
+        active.clear();
+        active.extend((0..db).filter(|&s| slots[s].is_some()));
+        let logits = engine.decode_step_slots(&active)?;
+        stats.backend_calls += 1;
+        stats.steps += active.len() as u64;
+
+        for (r, &s) in active.iter().enumerate() {
+            let slot = slots[s].as_mut().expect("active slots are occupied");
+            let tok = sample_token_into(
+                logits.row(r),
+                cfg.temperature,
+                &mut slot.rng,
+                &mut scratch,
+            );
+            slot.emitted += 1;
+            let c = slot.cursor;
+            let mut finished = tok == EOS_ID || c + 1 >= seq;
+            if !finished {
+                slot.ids[c] = tok;
+                slot.ids[c + 1] = EOS_ID;
+                slot.cursor = c + 1;
+                engine.decode_push_token(s, tok)?;
+                finished = slot.emitted >= cfg.max_new_tokens;
+            }
+            if finished {
+                let slot = slots[s].take().expect("present");
+                out[slot.job] = Some(finish_sample(&jobs[slot.job], &slot.ids));
+                engine.decode_evict_row(s)?;
+                live -= 1;
+            }
+        }
+    }
+
+    let samples: Vec<Sample> = out
+        .into_iter()
+        .map(|o| o.expect("every admitted job finishes"))
+        .collect();
+    Ok((samples, stats))
+}
+
+/// Recover the completion from a finished id row (identical in both modes:
+/// decode the row, strip the prompt, trim).
+fn finish_sample(job: &Job, ids: &[i32]) -> Sample {
+    let text = tokenizer::decode(ids);
+    let completion = text
+        .strip_prefix(&job.prompt)
+        .unwrap_or("")
+        .trim()
+        .to_string();
+    Sample { query: job.query, text: completion }
 }
 
 /// Expand an allocation into generation jobs: query i contributes bᵢ jobs
@@ -147,6 +409,7 @@ pub fn jobs_for_allocation(texts: &[&str], budgets: &[usize]) -> Vec<Job> {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::config::RuntimeConfig;
 
     #[test]
     fn sample_token_greedy() {
@@ -190,10 +453,143 @@ mod tests {
     }
 
     #[test]
+    fn scratch_sampler_is_draw_for_draw_identical() {
+        // the clone-free hot path must consume the rng identically and emit
+        // identical tokens — the wave mode bit-for-bit guarantee rests on it
+        let mut logits = vec![0.0f32; VOCAB];
+        logits[65] = 2.0;
+        logits[70] = 1.5;
+        logits[90] = 1.0;
+        let mut a = Pcg64::new(33);
+        let mut b = Pcg64::new(33);
+        let mut scratch = Vec::new();
+        for _ in 0..500 {
+            let alloc = sample_token(&logits, 0.8, &mut a);
+            let reuse = sample_token_into(&logits, 0.8, &mut b, &mut scratch);
+            assert_eq!(alloc, reuse);
+        }
+        assert_eq!(a.next_u64(), b.next_u64(), "rng streams diverged");
+    }
+
+    #[test]
     fn jobs_expand_budgets() {
         let jobs = jobs_for_allocation(&["A", "B"], &[2, 0]);
         assert_eq!(jobs.len(), 2);
         assert!(jobs.iter().all(|j| j.query == 0));
         assert_eq!(jobs[0].prompt, "A = ");
+    }
+
+    fn mixed_jobs() -> Vec<Job> {
+        // heterogeneous budgets and answer lengths: short/easy, long/hard
+        // and chat rows finish at very different steps
+        jobs_for_allocation(
+            &["ADD 1", "ADD 30 40", "REV abcdef", "CHAT a b c"],
+            &[4, 2, 3, 3],
+        )
+    }
+
+    #[test]
+    fn continuous_matches_wave_at_temperature_zero() {
+        let engine = Engine::load_all(&RuntimeConfig::default()).unwrap();
+        let jobs = mixed_jobs();
+        let cfg = GenConfig { max_new_tokens: 12, temperature: 0.0 };
+        let (wave, ws) = generate_with(
+            &engine, &jobs, &cfg, &mut Pcg64::new(5), DecodeMode::Wave,
+        )
+        .unwrap();
+        let (cont, cs) = generate_with(
+            &engine, &jobs, &cfg, &mut Pcg64::new(99), DecodeMode::Continuous,
+        )
+        .unwrap();
+        assert_eq!(wave.len(), cont.len());
+        for (w, c) in wave.iter().zip(&cont) {
+            assert_eq!(w.query, c.query);
+            assert_eq!(w.text, c.text, "greedy samples diverged across modes");
+        }
+        // at temperature 0 the live token trajectories are identical, so
+        // live steps agree; only the padding waste differs
+        assert_eq!(ws.steps, cs.steps);
+        assert_eq!(cs.wasted_steps, 0, "continuous mode stepped a finished row");
+        assert!(ws.wasted_steps > 0, "mixed-length wave should strand rows");
+    }
+
+    #[test]
+    fn continuous_output_is_invariant_to_pool_width() {
+        // per-job seed streams: the same jobs sampled at temperature 1.0
+        // through a 4-slot and a 32-slot pool (completely different refill
+        // schedules) must produce identical samples
+        let narrow = Engine::load_all(&RuntimeConfig {
+            decode_batch: 4,
+            ..Default::default()
+        })
+        .unwrap();
+        let wide = Engine::load_all(&RuntimeConfig::default()).unwrap();
+        let jobs = mixed_jobs();
+        let cfg = GenConfig { max_new_tokens: 10, temperature: 1.0 };
+        // identical caller rngs → identical base draws → identical streams
+        let (a, sa) = generate_with(
+            &narrow, &jobs, &cfg, &mut Pcg64::new(7), DecodeMode::Continuous,
+        )
+        .unwrap();
+        let (b, _) = generate_with(
+            &wide, &jobs, &cfg, &mut Pcg64::new(7), DecodeMode::Continuous,
+        )
+        .unwrap();
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.text, y.text, "pool width leaked into a sample");
+        }
+        assert_eq!(sa.wasted_steps, 0);
+        // the narrow pool must actually have refilled mid-flight
+        assert!(sa.backend_calls > 0 && jobs.len() > 4);
+    }
+
+    #[test]
+    fn continuous_handles_empty_and_zero_budget_inputs() {
+        let engine = Engine::load_all(&RuntimeConfig::default()).unwrap();
+        let cfg = GenConfig { max_new_tokens: 8, temperature: 0.0 };
+        let (samples, stats) = generate_with(
+            &engine, &[], &cfg, &mut Pcg64::new(1), DecodeMode::Continuous,
+        )
+        .unwrap();
+        assert!(samples.is_empty());
+        assert_eq!(stats, DecodeStats::default());
+        let jobs = jobs_for_allocation(&["ADD 1"], &[2]);
+        let zero = GenConfig { max_new_tokens: 0, temperature: 0.0 };
+        let (samples, stats) = generate_with(
+            &engine, &jobs, &zero, &mut Pcg64::new(1), DecodeMode::Continuous,
+        )
+        .unwrap();
+        assert_eq!(samples.len(), 2);
+        assert!(samples.iter().all(|s| s.text.is_empty()));
+        assert_eq!(stats.backend_calls, 0);
+    }
+
+    #[test]
+    fn continuous_evicts_its_slots_after_a_midflight_error() {
+        // the engine outlives the epoch on a shard worker: if one generate
+        // call fails mid-flight it must not strand occupied decode slots,
+        // or every later epoch on that worker dies at admission. Poison a
+        // slot (as a crashed previous epoch would), watch the next call
+        // fail, then verify the engine recovered for the one after.
+        let engine = Engine::load_all(&RuntimeConfig::default()).unwrap();
+        let row = tokenizer::encode("ADD 9 = ", engine.max_seq());
+        engine.decode_begin_row(0, &row).unwrap();
+        let jobs = jobs_for_allocation(&["ADD 1"], &[2]);
+        let cfg = GenConfig { max_new_tokens: 4, temperature: 0.0 };
+        let mut rng = Pcg64::new(3);
+        let err = generate_with(&engine, &jobs, &cfg, &mut rng, DecodeMode::Continuous);
+        assert!(err.is_err(), "admission into an occupied slot must fail");
+        let (samples, _) = generate_with(
+            &engine, &jobs, &cfg, &mut rng, DecodeMode::Continuous,
+        )
+        .expect("engine must be reusable after a failed epoch");
+        assert_eq!(samples.len(), 2);
+    }
+
+    #[test]
+    fn occupancy_reflects_live_fraction() {
+        let s = DecodeStats { steps: 48, wasted_steps: 16, backend_calls: 2 };
+        assert!((s.occupancy(32) - 0.75).abs() < 1e-12);
+        assert_eq!(DecodeStats::default().occupancy(32), 0.0);
     }
 }

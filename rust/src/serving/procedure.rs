@@ -77,7 +77,7 @@ impl AdaptiveBestOfK {
         budget_per_query: f64,
         t0: Instant,
         kind: ProcedureKind,
-        preheated: Option<(Predictions, Vec<f64>)>,
+        preheated: Option<Predictions>,
     ) -> Result<Vec<Response>> {
         if reqs.is_empty() {
             return Ok(Vec::new());
@@ -88,10 +88,12 @@ impl AdaptiveBestOfK {
             "sub-epochs are per-domain"
         );
         let texts: Vec<&str> = reqs.iter().map(|r| r.text.as_str()).collect();
-        let (preds, scalar_preds) = match preheated {
+        let preds = match preheated {
             Some(p) => p,
             None => sched.predict(&domain, &texts)?,
         };
+        // scalar view borrows for λ̂ batches — no per-epoch vector copy
+        let scalar_preds = preds.scalars();
         let budgets = sched.allocate(&domain, &preds, &scalar_preds, budget_per_query)?;
         let samples = sched.generate(&texts, &budgets, rng)?;
         sched.select(&domain, reqs, &texts, &budgets, &samples, &scalar_preds, t0, kind)
@@ -174,7 +176,7 @@ impl DecodeProcedure for WeakStrongRoute {
                     .iter()
                     .map(|&i| (1.0 - prefs[i]).clamp(0.0, 1.0))
                     .collect();
-                Some((Predictions::Lambdas(lams.clone()), lams))
+                Some(Predictions::Lambdas(lams))
             } else {
                 None
             };

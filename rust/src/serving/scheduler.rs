@@ -9,7 +9,11 @@
 //!                    see [`crate::runtime::backend`]), fronted by a
 //!                    bounded LRU cache keyed by (domain, text)
 //!         allocate — online eq. 5 / offline bins / uniform / oracle
-//!         generate — bᵢ samples per query over the decode executable
+//!         generate — bᵢ samples per query over the decode executable,
+//!                    scheduled by the continuous-batching slot-refill
+//!                    engine (or the wave-barrier reference, per
+//!                    `[runtime] decode_mode`); decode accounting lands in
+//!                    `serving.decode.{steps,wasted_steps,occupancy}`
 //!         select   — binary: synthetic verifier picks any passing sample;
 //!                    chat: reward executable scores candidates, rerank
 //!                    reduce selects
@@ -59,8 +63,10 @@ use crate::workload;
 
 /// One cached probe output: a scalar λ̂/preference for binary domains, a Δ̂
 /// row for chat. Predictions are pure functions of (domain, text), so a hit
-/// is bit-identical to re-running the probe.
-#[derive(Clone, Debug)]
+/// is bit-identical to re-running the probe. Stored behind an `Arc` so the
+/// cache hands out reference-counted handles — a hit never deep-copies a
+/// Δ̂ row, and an insert stores the same allocation it returns.
+#[derive(Debug)]
 enum CachedPred {
     Lambda(f64),
     Deltas(Vec<f64>),
@@ -80,12 +86,14 @@ pub struct SchedulerShared {
     /// `allocator.budget_per_query` bit-for-bit and ignores observations.
     pub controller: BudgetController,
     /// Offline policies are fitted lazily per domain on generated held-out
-    /// data the first time the domain is seen.
-    offline: std::sync::Mutex<std::collections::BTreeMap<String, OfflinePolicy>>,
-    /// Threshold routers are calibrated lazily per domain the same way.
-    routers: std::sync::Mutex<std::collections::BTreeMap<String, ThresholdRouter>>,
+    /// data the first time the domain is seen. `Arc`-held: lookups hand out
+    /// a refcount bump, not a table copy per sub-epoch.
+    offline: std::sync::Mutex<std::collections::BTreeMap<String, Arc<OfflinePolicy>>>,
+    /// Threshold routers are calibrated lazily per domain the same way
+    /// (also `Arc`-held for clone-free checkout).
+    routers: std::sync::Mutex<std::collections::BTreeMap<String, Arc<ThresholdRouter>>>,
     /// Bounded LRU over probe outputs, keyed by (domain, text).
-    predict_cache: std::sync::Mutex<LruCache<(String, String), CachedPred>>,
+    predict_cache: std::sync::Mutex<LruCache<(String, String), Arc<CachedPred>>>,
 }
 
 impl SchedulerShared {
@@ -265,13 +273,14 @@ impl Scheduler {
 
     // --- shared pipeline stages (used by the DecodeProcedure impls) ----------
 
-    /// Stage 1: difficulty prediction for a domain-homogeneous batch.
-    /// Returns the allocator-shaped predictions plus their scalar view
-    /// (λ̂ or Δ̂₁) used for offline bin lookup and response reporting.
+    /// Stage 1: difficulty prediction for a domain-homogeneous batch. The
+    /// scalar view (λ̂ or Δ̂₁) used for offline bin lookup and response
+    /// reporting is a borrow away via [`Predictions::scalars`] — this stage
+    /// no longer clones a vector per batch just to rename it.
     ///
     /// Fronted by the shared LRU prediction cache: repeat queries skip the
     /// probe call entirely; a partial hit probes only the missing texts.
-    pub fn predict(&self, domain: &str, texts: &[&str]) -> Result<(Predictions, Vec<f64>)> {
+    pub fn predict(&self, domain: &str, texts: &[&str]) -> Result<Predictions> {
         let t_pred = Instant::now();
         let preds = if self.shared.cfg.server.predict_cache_capacity == 0 {
             let predictor = Predictor::new(&self.engine);
@@ -279,21 +288,19 @@ impl Scheduler {
         } else {
             self.predict_cached(domain, texts)?
         };
-        let scalar_preds: Vec<f64> = match &preds {
-            Predictions::Lambdas(l) => l.clone(),
-            Predictions::Deltas(d) => d.rows.iter().map(|r| r[0]).collect(),
-        };
         self.shared
             .metrics
             .histogram("serving.predict_us")
             .record_ns(t_pred.elapsed().as_nanos() as u64);
-        Ok((preds, scalar_preds))
+        Ok(preds)
     }
 
     /// Cache-fronted prediction: look every text up, batch-probe only the
     /// misses, reassemble in request order and remember the fresh rows.
+    /// Hits and inserts traffic in `Arc` handles — no per-request deep copy
+    /// of cached rows.
     fn predict_cached(&self, domain: &str, texts: &[&str]) -> Result<Predictions> {
-        let mut rows: Vec<Option<CachedPred>> = Vec::with_capacity(texts.len());
+        let mut rows: Vec<Option<Arc<CachedPred>>> = Vec::with_capacity(texts.len());
         {
             let mut cache = self.shared.predict_cache.lock().unwrap();
             for t in texts {
@@ -316,13 +323,16 @@ impl Scheduler {
             let miss_texts: Vec<&str> = miss_idx.iter().map(|&i| texts[i]).collect();
             let predictor = Predictor::new(&self.engine);
             let fresh = predictor.predictions_for_domain(domain, &miss_texts)?;
-            let fresh_rows: Vec<CachedPred> = match fresh {
-                Predictions::Lambdas(ls) => {
-                    ls.into_iter().map(CachedPred::Lambda).collect()
-                }
-                Predictions::Deltas(d) => {
-                    d.rows.into_iter().map(CachedPred::Deltas).collect()
-                }
+            let fresh_rows: Vec<Arc<CachedPred>> = match fresh {
+                Predictions::Lambdas(ls) => ls
+                    .into_iter()
+                    .map(|l| Arc::new(CachedPred::Lambda(l)))
+                    .collect(),
+                Predictions::Deltas(d) => d
+                    .rows
+                    .into_iter()
+                    .map(|r| Arc::new(CachedPred::Deltas(r)))
+                    .collect(),
             };
             anyhow::ensure!(
                 fresh_rows.len() == miss_idx.len(),
@@ -332,9 +342,10 @@ impl Scheduler {
             );
             let mut cache = self.shared.predict_cache.lock().unwrap();
             for (&i, row) in miss_idx.iter().zip(fresh_rows) {
+                // same allocation in the cache and in this batch's view
                 cache.insert(
                     (domain.to_string(), texts[i].to_string()),
-                    row.clone(),
+                    Arc::clone(&row),
                 );
                 rows[i] = Some(row);
             }
@@ -344,12 +355,15 @@ impl Scheduler {
                 .set(cache.len() as f64);
         }
 
-        // reassemble: every row of a domain-homogeneous batch has one shape
+        // reassemble: every row of a domain-homogeneous batch has one shape.
+        // The chat arm copies each (b_max_chat-wide) Δ̂ row into the solver's
+        // dense matrix — a bounded gather the DeltaMatrix layout requires —
+        // while the scalar arm copies single f64s out of the Arcs.
         if domain == "chat" {
             let mut d_rows = Vec::with_capacity(rows.len());
             for r in rows {
-                match r.expect("filled above") {
-                    CachedPred::Deltas(d) => d_rows.push(d),
+                match &*r.expect("filled above") {
+                    CachedPred::Deltas(d) => d_rows.push(d.clone()),
                     CachedPred::Lambda(_) => {
                         anyhow::bail!("scalar prediction cached for chat domain")
                     }
@@ -359,8 +373,8 @@ impl Scheduler {
         } else {
             let mut lams = Vec::with_capacity(rows.len());
             for r in rows {
-                match r.expect("filled above") {
-                    CachedPred::Lambda(l) => lams.push(l),
+                match &*r.expect("filled above") {
+                    CachedPred::Lambda(l) => lams.push(*l),
                     CachedPred::Deltas(_) => {
                         anyhow::bail!("Δ row cached for scalar domain `{domain}`")
                     }
@@ -432,7 +446,10 @@ impl Scheduler {
         Ok(budgets)
     }
 
-    /// Stage 3: sample `budgets[i]` completions for each query.
+    /// Stage 3: sample `budgets[i]` completions for each query under the
+    /// configured `[runtime] decode_mode` (slot-refill continuous batching
+    /// by default, the wave-barrier reference on demand). Per-epoch decode
+    /// accounting lands in `serving.decode.{steps,wasted_steps,occupancy}`.
     pub fn generate(
         &self,
         texts: &[&str],
@@ -445,10 +462,21 @@ impl Scheduler {
             max_new_tokens: self.shared.cfg.server.max_new_tokens,
             temperature: self.shared.cfg.server.temperature,
         };
-        let samples = generator::generate(&self.engine, &jobs, &gen_cfg, rng)?;
-        self.shared
-            .metrics
-            .histogram("serving.generate_us")
+        let (samples, stats) = generator::generate_with(
+            &self.engine,
+            &jobs,
+            &gen_cfg,
+            rng,
+            self.shared.cfg.runtime.decode_mode,
+        )?;
+        let m = &self.shared.metrics;
+        m.counter("serving.decode.steps").add(stats.steps);
+        m.counter("serving.decode.wasted_steps").add(stats.wasted_steps);
+        // set unconditionally: a stage that issued no decode calls reports
+        // 0.0 rather than silently pinning a stale value on the gauge
+        m.gauge("serving.decode.occupancy")
+            .set(stats.occupancy(self.engine.decode_batch()));
+        m.histogram("serving.generate_us")
             .record_ns(t_gen.elapsed().as_nanos() as u64);
         Ok(samples)
     }
@@ -489,7 +517,8 @@ impl Scheduler {
                 out.push(Response {
                     id: r.id,
                     client_id: r.client_id,
-                    response: best[i].clone().unwrap_or_default(),
+                    // move the winning sample out of the scratch table
+                    response: best[i].take().unwrap_or_default(),
                     ok,
                     budget: budgets[i],
                     predicted: scalar_preds[i],
@@ -632,29 +661,31 @@ impl Scheduler {
     /// fitted) domains. The fit is deterministic (seeded workload, pure
     /// probes): two workers racing on the same cold domain produce identical
     /// routers and the loser's insert is a no-op.
-    pub fn router_for(&self, domain: &str) -> Result<ThresholdRouter> {
+    pub fn router_for(&self, domain: &str) -> Result<Arc<ThresholdRouter>> {
         if let Some(r) = self.shared.routers.lock().unwrap().get(domain) {
-            return Ok(r.clone());
+            return Ok(Arc::clone(r));
         }
         let rc = &self.shared.cfg.route;
         let held = workload::gen_dataset(domain, rc.heldout_n, rc.heldout_seed);
         let texts: Vec<&str> = held.iter().map(|q| q.text.as_str()).collect();
         let prefs = self.strong_preference(domain, &texts)?;
-        let router = ThresholdRouter::fit(&prefs, rc.strong_fraction);
+        let router = Arc::new(ThresholdRouter::fit(&prefs, rc.strong_fraction));
         self.shared
             .metrics
             .gauge(&format!("serving.route.threshold.{domain}"))
             .set(router.threshold);
         let mut cache = self.shared.routers.lock().unwrap();
         let r = cache.entry(domain.to_string()).or_insert(router);
-        Ok(r.clone())
+        Ok(Arc::clone(r))
     }
 
     /// Same locking discipline as [`Scheduler::router_for`]: check, fit
-    /// outside the lock (deterministic), insert-if-absent.
-    fn offline_policy(&self, domain: &str) -> Result<OfflinePolicy> {
+    /// outside the lock (deterministic), insert-if-absent. `Arc`-returned:
+    /// a per-sub-epoch checkout bumps a refcount instead of copying the
+    /// fitted bin table.
+    fn offline_policy(&self, domain: &str) -> Result<Arc<OfflinePolicy>> {
         if let Some(p) = self.shared.offline.lock().unwrap().get(domain) {
-            return Ok(p.clone());
+            return Ok(Arc::clone(p));
         }
         // fit on a fresh held-out workload using the live predictor
         let held = workload::gen_dataset(domain, 512, 0x0FF1CE);
@@ -663,16 +694,16 @@ impl Scheduler {
         let kind = ProbeKind::for_domain(domain)?;
         let scores = predictor.predict_scalar(kind, &texts)?;
         let a = &self.shared.cfg.allocator;
-        let policy = OfflinePolicy::fit(
+        let policy = Arc::new(OfflinePolicy::fit(
             &scores,
             &DeltaMatrix::from_lambdas(&scores, a.b_max),
             a.offline_bins,
             a.budget_per_query,
             crate::allocator::AllocConstraints::new(0, a.b_max, a.min_budget),
-        );
+        ));
         let mut cache = self.shared.offline.lock().unwrap();
         let p = cache.entry(domain.to_string()).or_insert(policy);
-        Ok(p.clone())
+        Ok(Arc::clone(p))
     }
 }
 
