@@ -138,6 +138,28 @@ impl BudgetController {
         self.state.lock().unwrap().epochs
     }
 
+    /// Smoothed relative pressure error ē (>0 ⇒ over target), or `None`
+    /// while disabled. This is the signal the server's admission control
+    /// consults: it summarizes how far serving is from its SLO target.
+    pub fn pressure(&self) -> Option<f64> {
+        if !self.cfg.enabled {
+            return None;
+        }
+        Some(self.state.lock().unwrap().ewma)
+    }
+
+    /// True when the control loop has exhausted its actuation: enabled,
+    /// pinned at the min-budget clamp, and still over target. At that point
+    /// shrinking the budget can buy no more latency — the front door has to
+    /// degrade or shed instead, so admission control escalates one stage.
+    pub fn saturated(&self) -> bool {
+        if !self.cfg.enabled {
+            return false;
+        }
+        let s = self.state.lock().unwrap();
+        s.budget <= self.cfg.min_budget + 1e-9 && s.ewma > 0.0
+    }
+
     /// Absorb one epoch's signals and move the effective budget. Returns
     /// `None` when disabled (no state is touched).
     pub fn observe(&self, obs: &EpochObservation) -> Option<Decision> {
@@ -222,6 +244,30 @@ mod tests {
             assert!(d.budget >= 1.0 && d.budget <= 16.0);
         }
         assert_eq!(c.effective_budget(), 1.0, "overload must hit the floor");
+    }
+
+    #[test]
+    fn saturation_means_pinned_at_floor_and_over_target() {
+        // disabled ⇒ no pressure signal, never saturated
+        let off = BudgetController::new(ControllerConfig::default(), 8.0, 24);
+        assert_eq!(off.pressure(), None);
+        assert!(!off.saturated());
+
+        let c = BudgetController::new(enabled_cfg(), 8.0, 24);
+        assert!(!c.saturated(), "fresh controller has actuation left");
+        // sustained overload: budget pins at min and error stays positive
+        for _ in 0..200 {
+            c.observe(&obs_wait_ms(5_000.0)).unwrap();
+        }
+        assert_eq!(c.effective_budget(), 1.0);
+        assert!(c.pressure().unwrap() > 0.0);
+        assert!(c.saturated(), "pinned at floor while over target");
+        // load vanishes: error turns negative and the budget lifts off the
+        // floor ⇒ saturation clears
+        for _ in 0..50 {
+            c.observe(&obs_wait_ms(0.0)).unwrap();
+        }
+        assert!(!c.saturated(), "recovery must clear saturation");
     }
 
     #[test]

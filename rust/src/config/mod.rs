@@ -494,6 +494,25 @@ pub struct ServerConfig {
     /// Bounded LRU over probe outputs keyed by (domain, text); repeated
     /// queries skip the predict PJRT call entirely. 0 disables the cache.
     pub predict_cache_capacity: usize,
+    /// Batcher queue bound: a submit beyond this depth is shed with an
+    /// `overloaded` error line instead of queued. 0 = unbounded (then
+    /// admission control cannot be enabled — it needs the depth as its
+    /// pressure denominator).
+    pub max_queue_depth: usize,
+    /// Concurrently accepted connections; further accepts are refused with
+    /// an `overloaded` line and closed. 0 = unlimited.
+    pub max_connections: usize,
+    /// Longest request line a reader accepts before failing the connection
+    /// with a structured error (a single unterminated line must not OOM the
+    /// reader thread).
+    pub max_line_bytes: usize,
+    /// Per-connection outbox capacity (lines). Shard workers enqueue
+    /// responses here; a dedicated writer thread drains to the socket, so a
+    /// slow client's TCP buffer can never block a worker.
+    pub outbox_depth: usize,
+    /// How long a response push may wait on a full outbox before the
+    /// connection is declared stalled and killed, milliseconds.
+    pub writer_stall_ms: u64,
 }
 
 impl Default for ServerConfig {
@@ -506,6 +525,45 @@ impl Default for ServerConfig {
             max_new_tokens: 24,
             temperature: 0.7,
             predict_cache_capacity: 4096,
+            max_queue_depth: 1024,
+            max_connections: 1024,
+            max_line_bytes: 65536,
+            outbox_depth: 128,
+            writer_stall_ms: 2000,
+        }
+    }
+}
+
+/// SLO-aware admission control (`[admission]` section): the serving front
+/// door's staged response to overload, driven by batcher queue pressure
+/// `q = depth / server.max_queue_depth` and escalated when the budget
+/// controller reports saturation (pinned at its min clamp while still over
+/// target — actuation exhausted). Stages: accept → degrade (force the weak
+/// `WeakStrongRoute` arm) → shed (`overloaded` + retry-after error line).
+/// Disabled by default — the front door then behaves bit-for-bit as before,
+/// except for the hard `max_queue_depth` backstop.
+#[derive(Clone, Debug)]
+pub struct AdmissionConfig {
+    pub enabled: bool,
+    /// Queue-pressure fraction at which new queries are degraded.
+    pub degrade_at: f64,
+    /// Queue-pressure fraction at which new queries are shed.
+    pub shed_at: f64,
+    /// Hysteresis band: a stage, once entered, is only left when pressure
+    /// falls this far below its entry threshold (prevents flapping).
+    pub hysteresis: f64,
+    /// Base retry hint in shed responses; scaled up with pressure.
+    pub retry_after_ms: u64,
+}
+
+impl Default for AdmissionConfig {
+    fn default() -> Self {
+        Self {
+            enabled: false,
+            degrade_at: 0.5,
+            shed_at: 0.9,
+            hysteresis: 0.1,
+            retry_after_ms: 100,
         }
     }
 }
@@ -533,6 +591,7 @@ pub struct Config {
     pub workload: WorkloadConfig,
     pub route: RouteConfig,
     pub controller: ControllerConfig,
+    pub admission: AdmissionConfig,
 }
 
 impl Config {
@@ -603,6 +662,13 @@ impl Config {
             "server.predict_cache_capacity" => {
                 self.server.predict_cache_capacity = usize_of!()
             }
+            "server.max_queue_depth" => self.server.max_queue_depth = usize_of!(),
+            "server.max_connections" => self.server.max_connections = usize_of!(),
+            "server.max_line_bytes" => self.server.max_line_bytes = usize_of!(),
+            "server.outbox_depth" => self.server.outbox_depth = usize_of!(),
+            "server.writer_stall_ms" => {
+                self.server.writer_stall_ms = f64_of!() as u64
+            }
             "workload.domain" => self.workload.domain = str_of!(),
             "workload.n_queries" => self.workload.n_queries = usize_of!(),
             "workload.seed" => self.workload.seed = f64_of!() as u64,
@@ -635,6 +701,18 @@ impl Config {
             "controller.max_budget" => self.controller.max_budget = f64_of!(),
             "controller.gain" => self.controller.gain = f64_of!(),
             "controller.ewma_window" => self.controller.ewma_window = usize_of!(),
+            "admission.enabled" => {
+                self.admission.enabled = match val {
+                    TomlValue::Bool(b) => *b,
+                    _ => return Err(invalid()),
+                }
+            }
+            "admission.degrade_at" => self.admission.degrade_at = f64_of!(),
+            "admission.shed_at" => self.admission.shed_at = f64_of!(),
+            "admission.hysteresis" => self.admission.hysteresis = f64_of!(),
+            "admission.retry_after_ms" => {
+                self.admission.retry_after_ms = f64_of!() as u64
+            }
             _ => return Ok(false),
         }
         Ok(true)
@@ -695,6 +773,44 @@ impl Config {
                 c.target_tokens_per_s > 0.0,
                 "controller.target_tokens_per_s must be positive for the \
                  tokens-per-s target"
+            );
+        }
+        // a request line must at least hold a small JSON object; far smaller
+        // caps are config typos that would reject every request
+        anyhow::ensure!(
+            self.server.max_line_bytes >= 1024,
+            "server.max_line_bytes = {} is below the 1 KiB floor",
+            self.server.max_line_bytes
+        );
+        anyhow::ensure!(
+            self.server.outbox_depth >= 1,
+            "server.outbox_depth must be ≥ 1"
+        );
+        anyhow::ensure!(
+            self.server.writer_stall_ms >= 1,
+            "server.writer_stall_ms must be ≥ 1"
+        );
+        let a = &self.admission;
+        anyhow::ensure!(
+            a.degrade_at > 0.0 && a.degrade_at <= a.shed_at && a.shed_at <= 1.0,
+            "admission thresholds need 0 < degrade_at ≤ shed_at ≤ 1 \
+             (got {} / {})",
+            a.degrade_at,
+            a.shed_at
+        );
+        anyhow::ensure!(
+            (0.0..1.0).contains(&a.hysteresis) && a.hysteresis < a.degrade_at,
+            "admission.hysteresis must be in [0, degrade_at)"
+        );
+        anyhow::ensure!(
+            a.retry_after_ms >= 1,
+            "admission.retry_after_ms must be ≥ 1"
+        );
+        if a.enabled {
+            anyhow::ensure!(
+                self.server.max_queue_depth > 0,
+                "admission control needs a bounded queue: set \
+                 server.max_queue_depth > 0"
             );
         }
         Ok(())
@@ -873,6 +989,66 @@ mod tests {
         )
         .unwrap_err();
         assert!(err.to_string().contains("target_tokens_per_s"));
+    }
+
+    #[test]
+    fn admission_and_front_door_roundtrip() {
+        let cfg = Config::from_toml_str(
+            "[server]\nmax_queue_depth = 32\nmax_connections = 8\n\
+             max_line_bytes = 2048\noutbox_depth = 16\nwriter_stall_ms = 500\n\
+             [admission]\nenabled = true\ndegrade_at = 0.25\nshed_at = 0.75\n\
+             hysteresis = 0.05\nretry_after_ms = 50\n",
+        )
+        .unwrap();
+        assert_eq!(cfg.server.max_queue_depth, 32);
+        assert_eq!(cfg.server.max_connections, 8);
+        assert_eq!(cfg.server.max_line_bytes, 2048);
+        assert_eq!(cfg.server.outbox_depth, 16);
+        assert_eq!(cfg.server.writer_stall_ms, 500);
+        assert!(cfg.admission.enabled);
+        assert!((cfg.admission.degrade_at - 0.25).abs() < 1e-12);
+        assert!((cfg.admission.shed_at - 0.75).abs() < 1e-12);
+        assert!((cfg.admission.hysteresis - 0.05).abs() < 1e-12);
+        assert_eq!(cfg.admission.retry_after_ms, 50);
+        // defaults: admission off (bit-for-bit inert front door), bounded
+        // queue backstop on
+        let d = Config::default();
+        assert!(!d.admission.enabled);
+        assert!(d.server.max_queue_depth > 0);
+        assert!(d.server.max_line_bytes >= 1024);
+    }
+
+    #[test]
+    fn validation_rejects_bad_admission_config() {
+        let err = Config::from_toml_str(
+            "[admission]\ndegrade_at = 0.9\nshed_at = 0.5\n",
+        )
+        .unwrap_err();
+        assert!(err.to_string().contains("degrade_at"));
+        let err = Config::from_toml_str("[admission]\nshed_at = 1.5\n").unwrap_err();
+        assert!(err.to_string().contains("shed_at"));
+        let err = Config::from_toml_str(
+            "[admission]\nhysteresis = 0.6\n",
+        )
+        .unwrap_err();
+        assert!(err.to_string().contains("hysteresis"));
+        let err = Config::from_toml_str(
+            "[admission]\nretry_after_ms = 0\n",
+        )
+        .unwrap_err();
+        assert!(err.to_string().contains("retry_after_ms"));
+        // enabling admission over an unbounded queue is meaningless: the
+        // pressure fraction would have no denominator
+        let err = Config::from_toml_str(
+            "[server]\nmax_queue_depth = 0\n[admission]\nenabled = true\n",
+        )
+        .unwrap_err();
+        assert!(err.to_string().contains("max_queue_depth"));
+        let err = Config::from_toml_str("[server]\nmax_line_bytes = 100\n")
+            .unwrap_err();
+        assert!(err.to_string().contains("max_line_bytes"));
+        let err = Config::from_toml_str("[server]\noutbox_depth = 0\n").unwrap_err();
+        assert!(err.to_string().contains("outbox_depth"));
     }
 
     #[test]

@@ -3,21 +3,52 @@
 //! Covers the full interchange surface with the python build step: artifact
 //! manifests, goldens, exported datasets, metrics dumps and the TCP serving
 //! protocol. Parser is a recursive-descent over bytes; serializer is
-//! allocation-light. Numbers parse to f64 (the only numeric type the
-//! interchange uses); escapes cover the JSON spec including \uXXXX (BMP and
+//! allocation-light. Escapes cover the JSON spec including \uXXXX (BMP and
 //! surrogate pairs).
+//!
+//! Numbers: integer literals without fraction or exponent parse to
+//! [`Json::Int`] and round-trip exactly over the full i64 range — an f64
+//! round-trip silently corrupts integers ≥ 2⁵³, which is how the serving
+//! protocol once mangled large client ids. Everything else (fractions,
+//! exponents, magnitudes beyond i64) parses to [`Json::Num`]. Equality is
+//! numeric across the two variants (`Int(1) == Num(1.0)`), so consumers
+//! that only care about the value never see the distinction; `as_i64` is
+//! the exactness-preserving accessor.
 
 use std::collections::BTreeMap;
 use std::fmt::Write as _;
 
-#[derive(Clone, Debug, PartialEq)]
+#[derive(Clone, Debug)]
 pub enum Json {
     Null,
     Bool(bool),
+    /// An integer literal, kept exact (f64 loses integers ≥ 2⁵³).
+    Int(i64),
     Num(f64),
     Str(String),
     Arr(Vec<Json>),
     Obj(BTreeMap<String, Json>),
+}
+
+/// Numeric equality bridges `Int` and `Num` (a serialized `Num(2.0)` parses
+/// back as `Int(2)`; round-trips must still compare equal). Everything else
+/// is structural.
+impl PartialEq for Json {
+    fn eq(&self, other: &Self) -> bool {
+        match (self, other) {
+            (Json::Null, Json::Null) => true,
+            (Json::Bool(a), Json::Bool(b)) => a == b,
+            (Json::Int(a), Json::Int(b)) => a == b,
+            (Json::Num(a), Json::Num(b)) => a == b,
+            (Json::Int(a), Json::Num(b)) | (Json::Num(b), Json::Int(a)) => {
+                *a as f64 == *b
+            }
+            (Json::Str(a), Json::Str(b)) => a == b,
+            (Json::Arr(a), Json::Arr(b)) => a == b,
+            (Json::Obj(a), Json::Obj(b)) => a == b,
+            _ => false,
+        }
+    }
 }
 
 #[derive(Debug, thiserror::Error)]
@@ -32,14 +63,28 @@ impl Json {
     pub fn as_f64(&self) -> Option<f64> {
         match self {
             Json::Num(x) => Some(*x),
+            Json::Int(i) => Some(*i as f64),
+            _ => None,
+        }
+    }
+
+    /// Exact integer accessor: `Some` only for a literal that was an
+    /// integer on the wire (no fraction, no exponent, fits i64). Use this
+    /// where exactness matters — `as_f64` on a large id silently rounds.
+    pub fn as_i64(&self) -> Option<i64> {
+        match self {
+            Json::Int(i) => Some(*i),
             _ => None,
         }
     }
 
     pub fn as_usize(&self) -> Option<usize> {
-        self.as_f64().and_then(|x| {
-            (x >= 0.0 && x.fract() == 0.0).then_some(x as usize)
-        })
+        match self {
+            Json::Int(i) => usize::try_from(*i).ok(),
+            _ => self.as_f64().and_then(|x| {
+                (x >= 0.0 && x.fract() == 0.0).then_some(x as usize)
+            }),
+        }
     }
 
     pub fn as_str(&self) -> Option<&str> {
@@ -114,6 +159,9 @@ impl Json {
             Json::Null => out.push_str("null"),
             Json::Bool(true) => out.push_str("true"),
             Json::Bool(false) => out.push_str("false"),
+            Json::Int(i) => {
+                let _ = write!(out, "{i}");
+            }
             Json::Num(x) => {
                 if x.is_finite() {
                     if x.fract() == 0.0 && x.abs() < 1e15 {
@@ -243,6 +291,7 @@ impl<'a> Parser<'a> {
 
     fn number(&mut self) -> Result<Json, JsonError> {
         let start = self.pos;
+        let mut integral = true;
         if self.peek() == Some(b'-') {
             self.pos += 1;
         }
@@ -250,12 +299,14 @@ impl<'a> Parser<'a> {
             self.pos += 1;
         }
         if self.peek() == Some(b'.') {
+            integral = false;
             self.pos += 1;
             while matches!(self.peek(), Some(c) if c.is_ascii_digit()) {
                 self.pos += 1;
             }
         }
         if matches!(self.peek(), Some(b'e' | b'E')) {
+            integral = false;
             self.pos += 1;
             if matches!(self.peek(), Some(b'+' | b'-')) {
                 self.pos += 1;
@@ -265,6 +316,13 @@ impl<'a> Parser<'a> {
             }
         }
         let s = std::str::from_utf8(&self.b[start..self.pos]).unwrap();
+        // integer literals stay exact; magnitudes beyond i64 fall back to
+        // the (lossy) f64 representation like any other JSON reader
+        if integral {
+            if let Ok(i) = s.parse::<i64>() {
+                return Ok(Json::Int(i));
+            }
+        }
         s.parse::<f64>()
             .map(Json::Num)
             .map_err(|_| self.err("invalid number"))
@@ -435,6 +493,39 @@ mod tests {
             ("flag", Json::Bool(false)),
         ]);
         assert_eq!(parse(&v.to_string()).unwrap(), v);
+    }
+
+    #[test]
+    fn integer_literals_stay_exact() {
+        // 2^60 + 1 is unrepresentable in f64; the old Num-only parser
+        // silently rounded it (the bug that corrupted large client ids).
+        let big = (1i64 << 60) + 1;
+        let v = parse(&big.to_string()).unwrap();
+        assert_eq!(v.as_i64(), Some(big));
+        assert_eq!(v.to_string(), big.to_string());
+        // negatives too, including i64::MIN
+        let v = parse(&i64::MIN.to_string()).unwrap();
+        assert_eq!(v.as_i64(), Some(i64::MIN));
+    }
+
+    #[test]
+    fn non_integral_literals_have_no_exact_accessor() {
+        assert_eq!(parse("1.0").unwrap().as_i64(), None);
+        assert_eq!(parse("1e3").unwrap().as_i64(), None);
+        // beyond i64 falls back to f64 (lossy, like any JSON reader)
+        let v = parse("18446744073709551616").unwrap();
+        assert_eq!(v.as_i64(), None);
+        assert_eq!(v.as_f64(), Some(1.8446744073709552e19));
+    }
+
+    #[test]
+    fn int_num_equality_is_numeric() {
+        assert_eq!(Json::Int(1), Json::Num(1.0));
+        assert_eq!(Json::Num(-3.0), Json::Int(-3));
+        assert_ne!(Json::Int(1), Json::Num(1.5));
+        assert_eq!(Json::Int(7).as_f64(), Some(7.0));
+        assert_eq!(Json::Int(7).as_usize(), Some(7));
+        assert_eq!(Json::Int(-7).as_usize(), None);
     }
 
     #[test]

@@ -56,6 +56,24 @@ fn cli() -> Cli {
             default: Some(""),
         },
         FlagSpec {
+            name: "max-queue-depth",
+            help: "bound on queued (batched-but-unserved) requests; 0 = \
+                   unbounded; empty = value from --config (default 1024)",
+            default: Some(""),
+        },
+        FlagSpec {
+            name: "max-connections",
+            help: "bound on concurrently accepted connections; 0 = \
+                   unbounded; empty = value from --config (default 1024)",
+            default: Some(""),
+        },
+        FlagSpec {
+            name: "admission",
+            help: "enable staged admission control (degrade → shed; \
+                   [admission] section)",
+            default: None,
+        },
+        FlagSpec {
             name: "controller",
             help: "enable the load-adaptive budget controller \
                    ([controller] section)",
@@ -186,6 +204,23 @@ fn cmd_serve(args: &Args) -> Result<()> {
             .parse()
             .map_err(|e| anyhow::anyhow!("--workers: {e}"))?;
     }
+    let depth_flag = args.str_flag("max-queue-depth")?;
+    if !depth_flag.is_empty() {
+        cfg.server.max_queue_depth = depth_flag
+            .parse()
+            .map_err(|e| anyhow::anyhow!("--max-queue-depth: {e}"))?;
+    }
+    let conns_flag = args.str_flag("max-connections")?;
+    if !conns_flag.is_empty() {
+        cfg.server.max_connections = conns_flag
+            .parse()
+            .map_err(|e| anyhow::anyhow!("--max-connections: {e}"))?;
+    }
+    // like --controller, the switch only ever enables: a config file with
+    // `admission.enabled = true` is not overridden by the flag's absence
+    if args.switch("admission") {
+        cfg.admission.enabled = true;
+    }
     // the switch only ever enables: a config file with `controller.enabled
     // = true` is not silently overridden by the flag's absence
     if args.switch("controller") {
@@ -208,7 +243,8 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let metrics = Arc::new(Registry::default());
     println!(
         "thinkalloc serving on {} (backend {}, decode {}, policy {:?}, B={}, \
-         procedure {}, workers {}, controller {})",
+         procedure {}, workers {}, controller {}, queue depth {}, \
+         connections {}, admission {})",
         cfg.server.addr,
         cfg.runtime.backend.name(),
         cfg.runtime.decode_mode.name(),
@@ -222,6 +258,24 @@ fn cmd_serve(args: &Args) -> Result<()> {
                 cfg.controller.min_budget,
                 cfg.controller.max_budget,
                 cfg.controller.target_queue_wait_ms
+            )
+        } else {
+            "off".to_string()
+        },
+        if cfg.server.max_queue_depth == 0 {
+            "unbounded".to_string()
+        } else {
+            cfg.server.max_queue_depth.to_string()
+        },
+        if cfg.server.max_connections == 0 {
+            "unbounded".to_string()
+        } else {
+            cfg.server.max_connections.to_string()
+        },
+        if cfg.admission.enabled {
+            format!(
+                "on (degrade {:.2}, shed {:.2})",
+                cfg.admission.degrade_at, cfg.admission.shed_at
             )
         } else {
             "off".to_string()

@@ -1,0 +1,177 @@
+//! SLO-aware admission control: the front door's staged overload response.
+//!
+//! The paper's routing argument (§3.3) is that when extra compute buys
+//! little quality, the query should take the cheap path. Overload is the
+//! server-wide version of that marginal-value call: once the admission
+//! queue backs up, serving a new query at full quality costs every queued
+//! query latency. The controller (`allocator::controller`) already shrinks
+//! the per-query budget under pressure; when even the minimum budget can't
+//! keep up — the loop is *saturated* — the only actuation left is at the
+//! front door. Stages, by queue pressure `q = depth / max_queue_depth`:
+//!
+//! * `q < degrade_at` — **accept**: serve exactly as configured.
+//! * `q ≥ degrade_at` — **degrade**: admit, but force the query onto the
+//!   weak `WeakStrongRoute` arm (one cheap sample instead of best-of-k).
+//! * `q ≥ shed_at` — **shed**: reject with a structured
+//!   `{"error":"overloaded","retry_after_ms":…}` line, the hint scaling
+//!   with how far past the shed threshold the queue is.
+//!
+//! Controller saturation escalates the pressure stage by one. Stage exits
+//! use a hysteresis band (leave only `hysteresis` below the entry
+//! threshold) so a queue hovering at a threshold doesn't flap between
+//! treatments. Disabled (the default), `decide` always accepts — the front
+//! door is bit-for-bit inert; only the bounded queue's `Submit::Full`
+//! backstop remains.
+
+use std::sync::atomic::{AtomicU8, Ordering};
+
+use crate::config::AdmissionConfig;
+
+/// What the front door does with one incoming query.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum AdmissionDecision {
+    /// Serve as requested.
+    Accept,
+    /// Admit but force the weak arm ([`crate::serving::Request::degraded`]).
+    Degrade,
+    /// Reject with `overloaded` + this retry hint.
+    Shed { retry_after_ms: u64 },
+}
+
+/// Stage machine over queue pressure; one instance per server, shared by
+/// every reader thread. State is a single `AtomicU8` (0 = accept, 1 =
+/// degrade, 2 = shed) — decisions race benignly under concurrent readers,
+/// the hysteresis band only needs a recent stage, not a serialized one.
+pub struct AdmissionController {
+    cfg: AdmissionConfig,
+    max_depth: usize,
+    stage: AtomicU8,
+}
+
+impl AdmissionController {
+    pub fn new(cfg: AdmissionConfig, max_depth: usize) -> Self {
+        Self { cfg, max_depth, stage: AtomicU8::new(0) }
+    }
+
+    pub fn enabled(&self) -> bool {
+        self.cfg.enabled
+    }
+
+    /// Decide the fate of one incoming query given the batcher's current
+    /// depth and whether the budget controller is saturated.
+    pub fn decide(&self, depth: usize, saturated: bool) -> AdmissionDecision {
+        if !self.cfg.enabled {
+            return AdmissionDecision::Accept;
+        }
+        let q = depth as f64 / self.max_depth.max(1) as f64;
+        let cur = self.stage.load(Ordering::Relaxed);
+        let h = self.cfg.hysteresis;
+        // a stage already entered holds until pressure drops h below its
+        // entry threshold
+        let mut stage = 0u8;
+        if q >= self.cfg.degrade_at - if cur >= 1 { h } else { 0.0 } {
+            stage = 1;
+        }
+        if q >= self.cfg.shed_at - if cur >= 2 { h } else { 0.0 } {
+            stage = 2;
+        }
+        if saturated {
+            // budget actuation is exhausted: escalate one stage
+            stage = (stage + 1).min(2);
+        }
+        self.stage.store(stage, Ordering::Relaxed);
+        match stage {
+            0 => AdmissionDecision::Accept,
+            1 => AdmissionDecision::Degrade,
+            _ => AdmissionDecision::Shed { retry_after_ms: self.retry_after_ms(depth) },
+        }
+    }
+
+    /// Retry hint for a shed (or queue-full) rejection: the configured base
+    /// scaled by how far past the shed threshold pressure is, capped at 4×.
+    /// Also used by the `Submit::Full` backstop when admission is disabled.
+    pub fn retry_after_ms(&self, depth: usize) -> u64 {
+        let q = if self.max_depth == 0 {
+            1.0
+        } else {
+            depth as f64 / self.max_depth as f64
+        };
+        let scale = (q / self.cfg.shed_at).clamp(1.0, 4.0);
+        ((self.cfg.retry_after_ms as f64) * scale).round() as u64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg(enabled: bool) -> AdmissionConfig {
+        AdmissionConfig {
+            enabled,
+            degrade_at: 0.5,
+            shed_at: 0.9,
+            hysteresis: 0.1,
+            retry_after_ms: 100,
+        }
+    }
+
+    #[test]
+    fn disabled_always_accepts() {
+        let a = AdmissionController::new(cfg(false), 10);
+        for depth in [0, 5, 9, 10, 100] {
+            assert_eq!(a.decide(depth, false), AdmissionDecision::Accept);
+            assert_eq!(a.decide(depth, true), AdmissionDecision::Accept);
+        }
+    }
+
+    #[test]
+    fn stages_follow_queue_pressure() {
+        let a = AdmissionController::new(cfg(true), 10);
+        assert_eq!(a.decide(0, false), AdmissionDecision::Accept);
+        assert_eq!(a.decide(4, false), AdmissionDecision::Accept);
+        assert_eq!(a.decide(5, false), AdmissionDecision::Degrade);
+        match a.decide(9, false) {
+            AdmissionDecision::Shed { retry_after_ms } => {
+                assert!(retry_after_ms >= 100, "hint below the base");
+            }
+            other => panic!("expected shed at q=0.9, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn hysteresis_holds_a_stage_until_pressure_clears() {
+        let a = AdmissionController::new(cfg(true), 100);
+        // enter shed at q = 0.9
+        assert!(matches!(a.decide(90, false), AdmissionDecision::Shed { .. }));
+        // hovering just below the entry threshold stays shedding (band 0.1)
+        assert!(matches!(a.decide(85, false), AdmissionDecision::Shed { .. }));
+        assert!(matches!(a.decide(80, false), AdmissionDecision::Shed { .. }));
+        // below entry − hysteresis the stage finally drops (to degrade)
+        assert_eq!(a.decide(79, false), AdmissionDecision::Degrade);
+        // same band on the degrade stage: holds at 0.45, clears at 0.39
+        assert_eq!(a.decide(45, false), AdmissionDecision::Degrade);
+        assert_eq!(a.decide(39, false), AdmissionDecision::Accept);
+        // once out, the un-shifted thresholds apply again
+        assert_eq!(a.decide(45, false), AdmissionDecision::Accept);
+    }
+
+    #[test]
+    fn controller_saturation_escalates_one_stage() {
+        let a = AdmissionController::new(cfg(true), 10);
+        // low pressure + saturated controller ⇒ degrade instead of accept
+        assert_eq!(a.decide(0, true), AdmissionDecision::Degrade);
+        // degrade-range pressure + saturation ⇒ shed
+        assert!(matches!(a.decide(5, true), AdmissionDecision::Shed { .. }));
+        // recovery: saturation cleared at low pressure accepts again, but
+        // only after pressure leaves the held stage's hysteresis band
+        assert_eq!(a.decide(0, false), AdmissionDecision::Accept);
+    }
+
+    #[test]
+    fn retry_hint_scales_with_pressure() {
+        let a = AdmissionController::new(cfg(true), 10);
+        assert_eq!(a.retry_after_ms(9), 100); // at the shed threshold: base
+        assert_eq!(a.retry_after_ms(18), 200); // 2× past it: doubled
+        assert_eq!(a.retry_after_ms(1000), 400); // capped at 4×
+    }
+}

@@ -9,21 +9,42 @@
 //!      "predicted": 0.91, "reward": 1.0, "latency_us": 1234,
 //!      "procedure": "adaptive"}
 //! Special requests: {"cmd": "metrics"} → metrics dump; {"cmd": "shutdown"}.
+//! Overload rejections are `{"error": "overloaded", "retry_after_ms": N}`
+//! lines (see docs/PROTOCOL.md for the full error-line inventory).
 //!
-//! One acceptor thread per listener; each connection gets a reader thread
-//! that feeds the shared [`Batcher`]; a [`ShardPool`] of `server.workers`
-//! scheduler threads (each owning its own `!Send` Engine) drains
-//! mixed-domain epochs concurrently and routes responses back over the
-//! originating connection's write half.
+//! One acceptor thread per listener; each connection gets a *reader* thread
+//! that feeds the shared [`Batcher`] and a *writer* thread that drains the
+//! connection's bounded [`Outbox`] to the socket. A [`ShardPool`] of
+//! `server.workers` scheduler threads (each owning its own `!Send` Engine)
+//! drains mixed-domain epochs concurrently; workers deliver responses into
+//! outboxes, never directly onto sockets, so a slow client's TCP buffer can
+//! stall at most its own connection (and only up to `writer_stall_ms`,
+//! after which the connection is killed).
+//!
+//! The front door is overload-safe: the batcher queue is bounded
+//! (`server.max_queue_depth`), concurrently accepted connections are capped
+//! (`server.max_connections`), request lines are length-capped
+//! (`server.max_line_bytes`), and — when `[admission]` is enabled — an
+//! [`AdmissionController`] degrades incoming queries onto the weak routing
+//! arm and then sheds them as queue pressure builds (escalated when the
+//! budget controller reports saturation). Graceful shutdown closes every
+//! live connection and joins both of its threads.
 //!
 //! Response routing is keyed by the server-allocated internal request id —
 //! never by the client-supplied id, which two connections (or pipelined
 //! duplicates on one connection) may legitimately reuse. The client id is
-//! echoed back verbatim as `"id"` in the response JSON.
+//! echoed back verbatim as `"id"` in the response JSON; ids are parsed
+//! exactly (non-negative integers < 2^63), never through a lossy f64.
+
+mod admission;
+mod outbox;
+
+pub use admission::{AdmissionController, AdmissionDecision};
+pub use outbox::{Outbox, PushError};
 
 use std::collections::BTreeMap;
 use std::io::{BufRead, BufReader, Write};
-use std::net::{TcpListener, TcpStream};
+use std::net::{Shutdown, TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
 use std::time::Duration;
@@ -33,21 +54,41 @@ use anyhow::Result;
 use crate::config::{Config, ProcedureKind};
 use crate::jsonio::{self, Json};
 use crate::metrics::Registry;
-use crate::serving::batcher::Batcher;
+use crate::serving::batcher::{Batcher, Submit};
 use crate::serving::scheduler::SchedulerShared;
 use crate::serving::shard::{EpochSink, ShardPool};
 use crate::serving::{Request, Response};
 
-type WriterMap = Arc<Mutex<BTreeMap<u64, Arc<Mutex<TcpStream>>>>>;
+/// One live connection: the write half (a socket clone with a send timeout)
+/// plus the bounded outbox its writer thread drains.
+struct Conn {
+    id: u64,
+    outbox: Outbox,
+    /// Write/shutdown half. `Shutdown::Both` on this clone also EOFs the
+    /// reader blocked on the original — that is how teardown unblocks it.
+    stream: TcpStream,
+}
+
+/// A connection's two threads, joined on reap or shutdown.
+struct ConnThreads {
+    reader: std::thread::JoinHandle<()>,
+    writer: std::thread::JoinHandle<()>,
+}
 
 pub struct Server {
     pub addr: String,
     cfg: Config,
     metrics: Arc<Registry>,
     batcher: Arc<Batcher>,
-    writers: WriterMap,
+    /// Pool-shared scheduler state; built at construction so the front door
+    /// can consult the budget controller's saturation signal.
+    shared: Arc<SchedulerShared>,
+    admission: AdmissionController,
+    conns: Mutex<BTreeMap<u64, Arc<Conn>>>,
+    threads: Mutex<Vec<ConnThreads>>,
     next_req: AtomicU64,
     shutdown: Arc<AtomicBool>,
+    writer_stall: Duration,
 }
 
 /// Map internal request id → connection id (the client id travels inside
@@ -119,19 +160,31 @@ impl EpochSink for ServerSink {
 
 impl Server {
     pub fn new(cfg: Config, metrics: Arc<Registry>) -> Arc<Server> {
-        let batcher = Arc::new(Batcher::new(
+        let batcher = Arc::new(Batcher::bounded(
             cfg.server.batch_queries,
             Duration::from_millis(cfg.server.max_wait_ms),
+            cfg.server.max_queue_depth,
         ));
+        // shared scheduler state is constructed here (it is cheap — engines
+        // are compiled per worker at pool spawn) so admission decisions can
+        // read the controller's saturation signal before run() is called
+        let shared = SchedulerShared::new(cfg.clone(), metrics.clone());
+        let admission =
+            AdmissionController::new(cfg.admission.clone(), cfg.server.max_queue_depth);
+        let writer_stall = Duration::from_millis(cfg.server.writer_stall_ms);
         let addr = cfg.server.addr.clone();
         Arc::new(Server {
             addr,
             cfg,
             metrics,
             batcher,
-            writers: Arc::new(Mutex::new(BTreeMap::new())),
+            shared,
+            admission,
+            conns: Mutex::new(BTreeMap::new()),
+            threads: Mutex::new(Vec::new()),
             next_req: AtomicU64::new(1),
             shutdown: Arc::new(AtomicBool::new(false)),
+            writer_stall,
         })
     }
 
@@ -147,7 +200,6 @@ impl Server {
         // scheduler shard pool: `server.workers` threads, each owning its
         // own Engine (xla handles are !Send), draining the shared batcher
         // concurrently; fitted policies + the prediction cache are shared
-        let shared = SchedulerShared::new(self.cfg.clone(), self.metrics.clone());
         let sink = Arc::new(ServerSink {
             server: self.clone(),
             routing: routing.clone(),
@@ -156,7 +208,7 @@ impl Server {
         let pool = ShardPool::spawn(
             self.cfg.server.workers,
             self.batcher.clone(),
-            shared,
+            self.shared.clone(),
             sink,
         );
 
@@ -165,8 +217,14 @@ impl Server {
         while !self.shutdown.load(Ordering::Acquire) {
             match listener.accept() {
                 Ok((stream, _)) => {
+                    self.reap_finished();
+                    let max = self.cfg.server.max_connections;
+                    if max > 0 && self.conns.lock().unwrap().len() >= max {
+                        self.refuse_connection(stream);
+                        continue;
+                    }
                     conn_id += 1;
-                    self.spawn_reader(conn_id, stream, routing.clone());
+                    self.spawn_conn(conn_id, stream, routing.clone());
                 }
                 Err(ref e) if e.kind() == std::io::ErrorKind::WouldBlock => {
                     std::thread::sleep(Duration::from_millis(5));
@@ -174,90 +232,241 @@ impl Server {
                 Err(e) => return Err(e.into()),
             }
         }
+        // orderly teardown: stop admitting, drain the workers, then close
+        // every live connection and join its reader+writer — no thread of
+        // this server outlives run()
         self.batcher.close();
         pool.join();
+        self.close_connections();
         Ok(())
     }
 
-    fn spawn_reader(self: &Arc<Self>, conn: u64, stream: TcpStream, routing: Arc<Routing>) {
+    /// Join connection threads that already exited (client went away) so a
+    /// long-lived server doesn't accumulate dead handles.
+    fn reap_finished(&self) {
+        let mut threads = self.threads.lock().unwrap();
+        let mut i = 0;
+        while i < threads.len() {
+            if threads[i].reader.is_finished() && threads[i].writer.is_finished() {
+                let t = threads.swap_remove(i);
+                let _ = t.reader.join();
+                let _ = t.writer.join();
+            } else {
+                i += 1;
+            }
+        }
+    }
+
+    /// Over the connection cap: tell the client why and hang up. The write
+    /// happens on the acceptor thread, so it gets the same stall bound as
+    /// any writer.
+    fn refuse_connection(&self, stream: TcpStream) {
+        self.metrics.counter("serving.conn.rejected").inc();
+        let retry = self.admission.retry_after_ms(self.batcher.depth());
+        let j = Json::obj(vec![
+            ("error", Json::Str("overloaded".into())),
+            ("retry_after_ms", Json::Int(retry as i64)),
+        ]);
+        let _ = stream.set_write_timeout(Some(self.writer_stall));
+        let mut s = &stream;
+        let _ = writeln!(s, "{j}");
+        let _ = s.flush();
+        let _ = stream.shutdown(Shutdown::Both);
+    }
+
+    fn spawn_conn(self: &Arc<Self>, conn_id: u64, stream: TcpStream, routing: Arc<Routing>) {
         stream.set_nonblocking(false).ok();
-        let write_half = Arc::new(Mutex::new(stream.try_clone().expect("clone stream")));
-        self.writers.lock().unwrap().insert(conn, write_half);
-        let this = self.clone();
-        std::thread::spawn(move || {
-            let reader = BufReader::new(stream);
-            for line in reader.lines() {
-                let Ok(line) = line else { break };
-                if line.trim().is_empty() {
-                    continue;
-                }
-                match jsonio::parse(&line) {
-                    Ok(v) => {
-                        if let Some(cmd) = v.get("cmd").and_then(Json::as_str) {
-                            this.handle_cmd(conn, cmd);
-                            continue;
-                        }
-                        // the internal id is the routing key: unique even
-                        // when clients reuse or omit their own ids
-                        let id = this.next_req.fetch_add(1, Ordering::Relaxed);
-                        let client_id = v
-                            .get("id")
-                            .and_then(Json::as_f64)
-                            .map(|x| x as u64)
-                            .unwrap_or(id);
-                        let procedure = match v.get("procedure").and_then(Json::as_str) {
-                            None => None,
-                            Some(s) => match s.parse::<ProcedureKind>() {
-                                Ok(k) => Some(k),
-                                Err(e) => {
-                                    // carry the id so pipelining clients that
-                                    // match responses by id aren't left hanging
-                                    let j = Json::obj(vec![
-                                        ("id", Json::Num(client_id as f64)),
-                                        ("error", Json::Str(e.to_string())),
-                                    ]);
-                                    this.write_line(conn, &j.to_string());
-                                    continue;
-                                }
-                            },
-                        };
-                        routing.map.lock().unwrap().insert(id, conn);
-                        let accepted = this.batcher.submit(Request {
-                            id,
-                            client_id,
-                            text: v
-                                .get("text")
-                                .and_then(Json::as_str)
-                                .unwrap_or("")
-                                .to_string(),
-                            domain: v
-                                .get("domain")
-                                .and_then(Json::as_str)
-                                .unwrap_or("code")
-                                .to_string(),
-                            // stamped by Batcher::submit
-                            arrived_us: 0,
-                            procedure,
-                        });
-                        if !accepted {
-                            // batcher already closed (shutdown raced the
-                            // submit): fail the request back instead of
-                            // leaving the client waiting forever
-                            routing.map.lock().unwrap().remove(&id);
-                            let j = Json::obj(vec![
-                                ("id", Json::Num(client_id as f64)),
-                                ("error", Json::Str("server shutting down".into())),
-                            ]);
-                            this.write_line(conn, &j.to_string());
-                        }
-                    }
-                    Err(e) => {
-                        this.write_error(conn, &e.to_string());
-                    }
+        let wstream = match stream.try_clone() {
+            Ok(s) => s,
+            Err(e) => {
+                eprintln!("conn {conn_id}: stream clone failed: {e}");
+                return;
+            }
+        };
+        // bound every blocking send: a stalled client errors the writer out
+        // instead of wedging it (and with it, shutdown's join)
+        let _ = wstream.set_write_timeout(Some(self.writer_stall));
+        let conn = Arc::new(Conn {
+            id: conn_id,
+            outbox: Outbox::new(self.cfg.server.outbox_depth),
+            stream: wstream,
+        });
+        self.conns.lock().unwrap().insert(conn_id, conn.clone());
+        self.metrics.counter("serving.conn.opened").inc();
+
+        // writer: the only thread that blocks on this socket
+        let wconn = conn.clone();
+        let writer = std::thread::spawn(move || {
+            while let Some(line) = wconn.outbox.pop() {
+                let mut s = &wconn.stream;
+                if writeln!(s, "{line}").and_then(|()| s.flush()).is_err() {
+                    // unwritable client: drop queued lines so producers
+                    // fail fast instead of stalling out one by one
+                    wconn.outbox.close_discard();
+                    break;
                 }
             }
-            this.writers.lock().unwrap().remove(&conn);
+            // EOFs the reader blocked on the other clone of this socket
+            let _ = wconn.stream.shutdown(Shutdown::Both);
         });
+
+        let this = self.clone();
+        let reader = std::thread::spawn(move || {
+            this.reader_loop(&conn, stream, &routing);
+            // teardown: responses for this connection's in-flight requests
+            // have nowhere to go — purge their routing entries (they used
+            // to leak until a response happened to arrive)
+            routing.map.lock().unwrap().retain(|_, c| *c != conn.id);
+            this.conns.lock().unwrap().remove(&conn.id);
+            conn.outbox.close();
+            this.metrics.counter("serving.conn.closed").inc();
+        });
+        self.threads.lock().unwrap().push(ConnThreads { reader, writer });
+    }
+
+    /// Close every live connection and join its threads (shutdown path).
+    /// Outboxes drain their queued lines first, so a shutdown response
+    /// enqueued moments ago still reaches its client.
+    fn close_connections(&self) {
+        let conns: Vec<Arc<Conn>> =
+            self.conns.lock().unwrap().values().cloned().collect();
+        for c in &conns {
+            c.outbox.close();
+        }
+        // take the handles out before joining: reader exit paths lock the
+        // maps this thread would otherwise hold
+        let threads = std::mem::take(&mut *self.threads.lock().unwrap());
+        for t in threads {
+            let _ = t.writer.join();
+            let _ = t.reader.join();
+        }
+    }
+
+    fn reader_loop(self: &Arc<Self>, conn: &Arc<Conn>, stream: TcpStream, routing: &Arc<Routing>) {
+        let cap = self.cfg.server.max_line_bytes;
+        let mut reader = BufReader::new(stream);
+        loop {
+            let line = match read_line_capped(&mut reader, cap) {
+                LineRead::Line(l) => l,
+                LineRead::Eof => break,
+                LineRead::TooLong => {
+                    // a single never-ending line must not OOM the reader:
+                    // fail the connection with a structured error
+                    self.metrics.counter("serving.conn.oversize_line").inc();
+                    self.write_error(conn.id, &format!("line exceeds {cap} bytes"));
+                    break;
+                }
+                LineRead::Err => break,
+            };
+            if line.trim().is_empty() {
+                continue;
+            }
+            match jsonio::parse(&line) {
+                Ok(v) => self.handle_request(conn, routing, &v),
+                Err(e) => self.write_error(conn.id, &e.to_string()),
+            }
+        }
+    }
+
+    fn handle_request(self: &Arc<Self>, conn: &Arc<Conn>, routing: &Arc<Routing>, v: &Json) {
+        if let Some(cmd) = v.get("cmd").and_then(Json::as_str) {
+            self.handle_cmd(conn.id, cmd);
+            return;
+        }
+        // the internal id is the routing key: unique even when clients
+        // reuse or omit their own ids
+        let id = self.next_req.fetch_add(1, Ordering::Relaxed);
+        // exact id parse: `as_f64 as u64` silently corrupted ids ≥ 2^53
+        // and wrapped negatives — reject anything but an exact integer
+        let client_id = match v.get("id") {
+            None => id,
+            Some(j) => match j.as_i64() {
+                Some(i) if i >= 0 => i as u64,
+                _ => {
+                    self.write_error(
+                        conn.id,
+                        "invalid id: must be a non-negative integer < 2^63",
+                    );
+                    return;
+                }
+            },
+        };
+        let procedure = match v.get("procedure").and_then(Json::as_str) {
+            None => None,
+            Some(s) => match s.parse::<ProcedureKind>() {
+                Ok(k) => Some(k),
+                Err(e) => {
+                    // carry the id so pipelining clients that match
+                    // responses by id aren't left hanging
+                    let j = Json::obj(vec![
+                        ("id", Json::Int(client_id as i64)),
+                        ("error", Json::Str(e.to_string())),
+                    ]);
+                    self.write_line(conn.id, &j.to_string());
+                    return;
+                }
+            },
+        };
+        // the front door's staged overload response: accept → degrade
+        // (force the weak arm) → shed with a retry hint
+        let decision = self
+            .admission
+            .decide(self.batcher.depth(), self.shared.controller.saturated());
+        let degraded = match decision {
+            AdmissionDecision::Accept => false,
+            AdmissionDecision::Degrade => true,
+            AdmissionDecision::Shed { retry_after_ms } => {
+                self.metrics.counter("serving.admission.shed").inc();
+                self.write_overloaded(conn.id, Some(client_id), retry_after_ms);
+                return;
+            }
+        };
+        routing.map.lock().unwrap().insert(id, conn.id);
+        let submitted = self.batcher.try_submit(Request {
+            id,
+            client_id,
+            text: v.get("text").and_then(Json::as_str).unwrap_or("").to_string(),
+            domain: v
+                .get("domain")
+                .and_then(Json::as_str)
+                .unwrap_or("code")
+                .to_string(),
+            // stamped by Batcher::try_submit
+            arrived_us: 0,
+            procedure,
+            degraded,
+        });
+        match submitted {
+            Submit::Accepted => {
+                // admission telemetry only exists when admission exists —
+                // disabled serving emits no new counters (parity contract)
+                if self.admission.enabled() {
+                    let stage = if degraded { "degraded" } else { "accepted" };
+                    self.metrics
+                        .counter(&format!("serving.admission.{stage}"))
+                        .inc();
+                }
+            }
+            Submit::Full => {
+                // bounded-queue backstop: sheds even with admission
+                // disabled — an unbounded queue is how the server used to
+                // fall over before the allocator could react
+                routing.map.lock().unwrap().remove(&id);
+                self.metrics.counter("serving.admission.shed").inc();
+                let retry = self.admission.retry_after_ms(self.batcher.depth());
+                self.write_overloaded(conn.id, Some(client_id), retry);
+            }
+            Submit::Closed => {
+                // batcher already closed (shutdown raced the submit): fail
+                // the request back instead of leaving the client waiting
+                routing.map.lock().unwrap().remove(&id);
+                let j = Json::obj(vec![
+                    ("id", Json::Int(client_id as i64)),
+                    ("error", Json::Str("server shutting down".into())),
+                ]);
+                self.write_line(conn.id, &j.to_string());
+            }
+        }
     }
 
     fn handle_cmd(&self, conn: u64, cmd: &str) {
@@ -282,7 +491,8 @@ impl Server {
         let conn = routing.map.lock().unwrap().remove(&resp.id);
         let Some(conn) = conn else { return };
         let json = Json::obj(vec![
-            ("id", Json::Num(resp.client_id as f64)),
+            // exact echo — client ids are integers, never f64-rounded
+            ("id", Json::Int(resp.client_id as i64)),
             ("response", Json::Str(resp.response)),
             ("ok", Json::Bool(resp.ok)),
             ("budget", Json::Num(resp.budget as f64)),
@@ -301,13 +511,94 @@ impl Server {
         self.write_line(conn, &j.to_string());
     }
 
-    fn write_line(&self, conn: u64, line: &str) {
-        let writer = self.writers.lock().unwrap().get(&conn).cloned();
-        if let Some(w) = writer {
-            let mut w = w.lock().unwrap();
-            let _ = writeln!(w, "{line}");
-            let _ = w.flush();
+    /// The shed/refusal line: `{"error":"overloaded","retry_after_ms":N}`,
+    /// with the client id when one is known.
+    fn write_overloaded(&self, conn: u64, client_id: Option<u64>, retry_after_ms: u64) {
+        let mut pairs = vec![
+            ("error", Json::Str("overloaded".into())),
+            ("retry_after_ms", Json::Int(retry_after_ms as i64)),
+        ];
+        if let Some(cid) = client_id {
+            pairs.push(("id", Json::Int(cid as i64)));
         }
+        self.write_line(conn, &Json::obj(pairs).to_string());
+    }
+
+    /// Enqueue a line on the connection's outbox. Never blocks longer than
+    /// the writer-stall bound: a connection whose outbox stays full past it
+    /// (writer wedged on an unreadable client) is killed, so shard workers
+    /// delivering responses stay live no matter what clients do.
+    fn write_line(&self, conn: u64, line: &str) {
+        let c = self.conns.lock().unwrap().get(&conn).cloned();
+        let Some(c) = c else { return };
+        match c.outbox.push(line.to_string(), self.writer_stall) {
+            Ok(()) => {}
+            Err(PushError::Stalled) => {
+                self.metrics.counter("serving.conn.stalled").inc();
+                c.outbox.close_discard();
+                let _ = c.stream.shutdown(Shutdown::Both);
+            }
+            // connection already gone: the line has no recipient
+            Err(PushError::Closed) => {}
+        }
+    }
+}
+
+/// Outcome of one capped line read.
+#[derive(Debug, PartialEq, Eq)]
+enum LineRead {
+    Line(String),
+    Eof,
+    TooLong,
+    Err,
+}
+
+/// Read one `\n`-terminated line of at most `cap` bytes (terminator
+/// excluded; a trailing `\r` is stripped). Unlike `BufRead::read_line`,
+/// a never-ending line cannot grow the buffer without bound — the read
+/// fails with `TooLong` as soon as the cap is crossed, having buffered at
+/// most `cap` bytes plus one fill.
+fn read_line_capped(r: &mut impl BufRead, cap: usize) -> LineRead {
+    let mut out: Vec<u8> = Vec::new();
+    loop {
+        let (found, take) = {
+            let buf = match r.fill_buf() {
+                Ok(b) => b,
+                Err(ref e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+                Err(_) => return LineRead::Err,
+            };
+            if buf.is_empty() {
+                // EOF: a non-empty unterminated tail still counts as a line
+                return if out.is_empty() { LineRead::Eof } else { finish_line(out) };
+            }
+            match buf.iter().position(|&b| b == b'\n') {
+                Some(i) => {
+                    out.extend_from_slice(&buf[..i]);
+                    (true, i + 1)
+                }
+                None => {
+                    out.extend_from_slice(buf);
+                    (false, buf.len())
+                }
+            }
+        };
+        r.consume(take);
+        if out.len() > cap {
+            return LineRead::TooLong;
+        }
+        if found {
+            return finish_line(out);
+        }
+    }
+}
+
+fn finish_line(mut out: Vec<u8>) -> LineRead {
+    if out.last() == Some(&b'\r') {
+        out.pop();
+    }
+    match String::from_utf8(out) {
+        Ok(s) => LineRead::Line(s),
+        Err(_) => LineRead::Err,
     }
 }
 
@@ -333,7 +624,7 @@ impl Client {
 
     pub fn request(&mut self, id: u64, text: &str, domain: &str) -> Result<()> {
         let j = Json::obj(vec![
-            ("id", Json::Num(id as f64)),
+            ("id", Json::Int(id as i64)),
             ("text", Json::Str(text.to_string())),
             ("domain", Json::Str(domain.to_string())),
         ]);
@@ -352,12 +643,20 @@ impl Client {
         procedure: &str,
     ) -> Result<()> {
         let j = Json::obj(vec![
-            ("id", Json::Num(id as f64)),
+            ("id", Json::Int(id as i64)),
             ("text", Json::Str(text.to_string())),
             ("domain", Json::Str(domain.to_string())),
             ("procedure", Json::Str(procedure.to_string())),
         ]);
         writeln!(self.writer, "{j}")?;
+        self.writer.flush()?;
+        Ok(())
+    }
+
+    /// Write a raw line verbatim (protocol tests: malformed ids, oversize
+    /// lines, non-JSON garbage).
+    pub fn write_raw(&mut self, line: &str) -> Result<()> {
+        writeln!(self.writer, "{line}")?;
         self.writer.flush()?;
         Ok(())
     }
@@ -382,5 +681,63 @@ impl Client {
         writeln!(self.writer, "{j}")?;
         self.writer.flush()?;
         self.read_response()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Cursor;
+
+    fn read_all(input: &[u8], cap: usize) -> Vec<LineRead> {
+        let mut r = BufReader::new(Cursor::new(input.to_vec()));
+        let mut out = Vec::new();
+        loop {
+            let l = read_line_capped(&mut r, cap);
+            let done = matches!(l, LineRead::Eof | LineRead::TooLong | LineRead::Err);
+            out.push(l);
+            if done {
+                return out;
+            }
+        }
+    }
+
+    #[test]
+    fn capped_reader_splits_lines_and_strips_crlf() {
+        let got = read_all(b"abc\r\ndef\n\nxyz", 64);
+        assert_eq!(
+            got,
+            vec![
+                LineRead::Line("abc".into()),
+                LineRead::Line("def".into()),
+                LineRead::Line(String::new()),
+                // unterminated tail at EOF still delivered
+                LineRead::Line("xyz".into()),
+                LineRead::Eof,
+            ]
+        );
+    }
+
+    #[test]
+    fn capped_reader_rejects_oversize_without_buffering_it() {
+        // 100 bytes, no newline, cap 10: must fail, not accumulate
+        let long = vec![b'a'; 100];
+        let got = read_all(&long, 10);
+        assert_eq!(got, vec![LineRead::TooLong]);
+        // exactly at the cap is fine
+        let mut ok = vec![b'b'; 10];
+        ok.push(b'\n');
+        let got = read_all(&ok, 10);
+        assert_eq!(got[0], LineRead::Line("b".repeat(10)));
+        // one past the cap is not
+        let mut over = vec![b'c'; 11];
+        over.push(b'\n');
+        assert_eq!(read_all(&over, 10), vec![LineRead::TooLong]);
+    }
+
+    #[test]
+    fn capped_reader_rejects_invalid_utf8() {
+        let got = read_all(&[0xff, 0xfe, b'\n'], 64);
+        assert_eq!(got, vec![LineRead::Err]);
     }
 }

@@ -1,0 +1,173 @@
+//! Per-connection bounded outbox: the seam that keeps shard workers off
+//! client sockets.
+//!
+//! A worker finishing an epoch must never block on a slow client's TCP
+//! buffer — that would stall every other query in the epoch (and, with one
+//! worker, the whole server). Instead each connection owns an [`Outbox`]: a
+//! bounded FIFO of wire lines. Workers `push` with a stall deadline; a
+//! dedicated writer thread `pop`s and does the only blocking socket writes.
+//! When the box stays full past the deadline the connection is declared
+//! stalled and killed — one slow client costs at most one stall timeout,
+//! once, instead of a wedged worker.
+
+use std::collections::VecDeque;
+use std::sync::{Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+/// Why a [`Outbox::push`] was refused.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PushError {
+    /// Full past the stall deadline: the consumer is not draining.
+    Stalled,
+    /// Closed — the connection is gone; drop the line.
+    Closed,
+}
+
+struct OutboxState {
+    items: VecDeque<String>,
+    closed: bool,
+}
+
+/// Bounded MPSC line queue (any thread may push; one writer thread pops).
+pub struct Outbox {
+    q: Mutex<OutboxState>,
+    not_empty: Condvar,
+    not_full: Condvar,
+    cap: usize,
+}
+
+impl Outbox {
+    pub fn new(cap: usize) -> Self {
+        Self {
+            q: Mutex::new(OutboxState { items: VecDeque::new(), closed: false }),
+            not_empty: Condvar::new(),
+            not_full: Condvar::new(),
+            cap: cap.max(1),
+        }
+    }
+
+    /// Enqueue a line, waiting at most `stall` for space. Never blocks
+    /// longer: a full box past the deadline returns [`PushError::Stalled`]
+    /// so the caller can kill the connection instead of wedging.
+    pub fn push(&self, line: String, stall: Duration) -> Result<(), PushError> {
+        let deadline = Instant::now() + stall;
+        let mut s = self.q.lock().unwrap();
+        loop {
+            if s.closed {
+                return Err(PushError::Closed);
+            }
+            if s.items.len() < self.cap {
+                s.items.push_back(line);
+                drop(s);
+                self.not_empty.notify_one();
+                return Ok(());
+            }
+            let now = Instant::now();
+            if now >= deadline {
+                return Err(PushError::Stalled);
+            }
+            let (guard, _) = self
+                .not_full
+                .wait_timeout(s, deadline - now)
+                .unwrap();
+            s = guard;
+        }
+    }
+
+    /// Dequeue the next line; blocks while empty. `None` once closed and
+    /// drained (close still delivers already-queued lines).
+    pub fn pop(&self) -> Option<String> {
+        let mut s = self.q.lock().unwrap();
+        loop {
+            if let Some(line) = s.items.pop_front() {
+                drop(s);
+                self.not_full.notify_all();
+                return Some(line);
+            }
+            if s.closed {
+                return None;
+            }
+            s = self.not_empty.wait(s).unwrap();
+        }
+    }
+
+    /// No more lines will be accepted; queued lines still drain. Wakes both
+    /// sides so blocked pushers fail fast and the writer can exit.
+    pub fn close(&self) {
+        self.q.lock().unwrap().closed = true;
+        self.not_empty.notify_all();
+        self.not_full.notify_all();
+    }
+
+    /// Close and drop queued lines — for a dead or stalled connection whose
+    /// socket no line will ever reach.
+    pub fn close_discard(&self) {
+        let mut s = self.q.lock().unwrap();
+        s.closed = true;
+        s.items.clear();
+        drop(s);
+        self.not_empty.notify_all();
+        self.not_full.notify_all();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+
+    #[test]
+    fn fifo_roundtrip_and_close_drains() {
+        let o = Outbox::new(4);
+        o.push("a".into(), Duration::from_millis(10)).unwrap();
+        o.push("b".into(), Duration::from_millis(10)).unwrap();
+        o.close();
+        assert_eq!(
+            o.push("c".into(), Duration::from_millis(10)),
+            Err(PushError::Closed)
+        );
+        // queued lines survive the close
+        assert_eq!(o.pop().as_deref(), Some("a"));
+        assert_eq!(o.pop().as_deref(), Some("b"));
+        assert_eq!(o.pop(), None);
+    }
+
+    #[test]
+    fn full_box_stalls_out_within_deadline() {
+        let o = Outbox::new(1);
+        o.push("a".into(), Duration::from_millis(10)).unwrap();
+        let t0 = Instant::now();
+        assert_eq!(
+            o.push("b".into(), Duration::from_millis(30)),
+            Err(PushError::Stalled)
+        );
+        let waited = t0.elapsed();
+        assert!(waited >= Duration::from_millis(25), "returned too early");
+        assert!(waited < Duration::from_secs(5), "deadline not honored");
+    }
+
+    #[test]
+    fn close_discard_wakes_a_blocked_pusher() {
+        let o = Arc::new(Outbox::new(1));
+        o.push("a".into(), Duration::from_millis(10)).unwrap();
+        let o2 = o.clone();
+        let pusher = std::thread::spawn(move || {
+            o2.push("b".into(), Duration::from_secs(30))
+        });
+        std::thread::sleep(Duration::from_millis(20));
+        o.close_discard();
+        // the pusher must fail immediately, not ride out its 30s deadline
+        assert_eq!(pusher.join().unwrap(), Err(PushError::Closed));
+        assert_eq!(o.pop(), None, "discarded lines must not drain");
+    }
+
+    #[test]
+    fn pop_blocks_until_a_line_arrives() {
+        let o = Arc::new(Outbox::new(4));
+        let o2 = o.clone();
+        let popper = std::thread::spawn(move || o2.pop());
+        std::thread::sleep(Duration::from_millis(10));
+        o.push("x".into(), Duration::from_millis(10)).unwrap();
+        assert_eq!(popper.join().unwrap().as_deref(), Some("x"));
+    }
+}

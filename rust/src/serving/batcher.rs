@@ -29,11 +29,16 @@ pub struct SubEpoch {
 
 /// Split a mixed epoch into sub-epochs, preserving arrival order within each
 /// and first-seen order across them. Requests without an explicit procedure
-/// fall back to `default_kind`.
+/// fall back to `default_kind`; requests the front door degraded under
+/// overload are forced onto `WeakStrongRoute` regardless of either.
 pub fn partition_epoch(reqs: &[Request], default_kind: ProcedureKind) -> Vec<SubEpoch> {
     let mut subs: Vec<SubEpoch> = Vec::new();
     for (i, r) in reqs.iter().enumerate() {
-        let kind = r.procedure.unwrap_or(default_kind);
+        let kind = if r.degraded {
+            ProcedureKind::WeakStrongRoute
+        } else {
+            r.procedure.unwrap_or(default_kind)
+        };
         match subs
             .iter_mut()
             .find(|s| s.kind == kind && s.domain == r.domain)
@@ -66,11 +71,25 @@ pub fn length_bucketed_order(lens: &[usize], bucket: usize) -> Vec<usize> {
     idx
 }
 
+/// Outcome of a [`Batcher::try_submit`].
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Submit {
+    /// Queued; will be served by some epoch.
+    Accepted,
+    /// Batcher closed — no drainer will ever serve this request.
+    Closed,
+    /// Bounded queue at capacity — the caller should shed the request.
+    Full,
+}
+
 pub struct Batcher {
     queue: Mutex<BatchState>,
     arrived: Condvar,
     pub batch_queries: usize,
     pub max_wait: Duration,
+    /// Queue-depth bound; `usize::MAX` = unbounded (the [`Batcher::new`]
+    /// default, for embedded/bench users that own their own admission).
+    max_depth: usize,
     /// Epoch of the batcher's µs clock (`arrived_us` stamps, queue-wait
     /// telemetry).
     start: Instant,
@@ -83,12 +102,21 @@ struct BatchState {
 
 impl Batcher {
     pub fn new(batch_queries: usize, max_wait: Duration) -> Self {
+        Self::bounded(batch_queries, max_wait, 0)
+    }
+
+    /// A batcher whose queue holds at most `max_depth` requests
+    /// (`0` ⇒ unbounded). The server uses this: a bounded queue is what
+    /// makes queue wait — and therefore the admission pressure signal —
+    /// meaningful under overload.
+    pub fn bounded(batch_queries: usize, max_wait: Duration, max_depth: usize) -> Self {
         assert!(batch_queries >= 1);
         Self {
             queue: Mutex::new(BatchState { items: VecDeque::new(), closed: false }),
             arrived: Condvar::new(),
             batch_queries,
             max_wait,
+            max_depth: if max_depth == 0 { usize::MAX } else { max_depth },
             start: Instant::now(),
         }
     }
@@ -100,23 +128,34 @@ impl Batcher {
     }
 
     /// Admit a request (non-blocking). Stamps `arrived_us` so queue wait is
-    /// observable downstream. Returns false (and drops the request) once the
-    /// batcher is closed — no drainer would ever serve it, so the caller
-    /// must error out instead of letting the client wait forever.
+    /// observable downstream. Returns [`Submit::Closed`] once the batcher is
+    /// closed and [`Submit::Full`] when a bounded queue is at capacity — in
+    /// both cases the request is dropped and the caller must fail it back to
+    /// the client instead of letting it wait forever.
     #[must_use = "a rejected request must be failed back to its client"]
-    pub fn submit(&self, mut req: Request) -> bool {
+    pub fn try_submit(&self, mut req: Request) -> Submit {
         let now = Instant::now();
         req.arrived_us = now.duration_since(self.start).as_micros() as u64;
         let mut q = self.queue.lock().unwrap();
         if q.closed {
-            return false;
+            return Submit::Closed;
+        }
+        if q.items.len() >= self.max_depth {
+            return Submit::Full;
         }
         q.items.push_back((req, now));
         drop(q);
         // notify_all, not notify_one: with several drainers a single token
         // can land on a consumer that is already mid-drain and be lost
         self.arrived.notify_all();
-        true
+        Submit::Accepted
+    }
+
+    /// Boolean convenience over [`Batcher::try_submit`] for unbounded
+    /// batchers, where `Full` cannot occur: true iff accepted.
+    #[must_use = "a rejected request must be failed back to its client"]
+    pub fn submit(&self, req: Request) -> bool {
+        matches!(self.try_submit(req), Submit::Accepted)
     }
 
     /// No more requests will arrive; wakes any waiting epoch cut.
@@ -271,6 +310,40 @@ mod tests {
         let mut all: Vec<usize> = subs.iter().flat_map(|s| s.indices.clone()).collect();
         all.sort();
         assert_eq!(all, vec![0, 1, 2, 3]);
+    }
+
+    #[test]
+    fn bounded_queue_rejects_when_full_until_drained() {
+        let b = Batcher::new(2, Duration::from_secs(10)); // unbounded default
+        for i in 0..100 {
+            assert_eq!(b.try_submit(req(i)), Submit::Accepted);
+        }
+
+        let b = Batcher::bounded(2, Duration::from_secs(10), 3);
+        for i in 0..3 {
+            assert_eq!(b.try_submit(req(i)), Submit::Accepted);
+        }
+        assert_eq!(b.try_submit(req(3)), Submit::Full);
+        assert_eq!(b.depth(), 3, "a shed request must not occupy the queue");
+        // draining an epoch frees capacity again
+        assert_eq!(b.next_epoch().unwrap().len(), 2);
+        assert_eq!(b.try_submit(req(4)), Submit::Accepted);
+        b.close();
+        assert_eq!(b.try_submit(req(5)), Submit::Closed);
+    }
+
+    #[test]
+    fn partition_forces_degraded_onto_weak_strong_route() {
+        let mut rs = vec![req(0), req(1), req(2)];
+        rs[1].degraded = true;
+        rs[2].procedure = Some(ProcedureKind::AdaptiveBestOfK);
+        rs[2].degraded = true; // degradation beats the explicit override
+        let subs = partition_epoch(&rs, ProcedureKind::AdaptiveBestOfK);
+        assert_eq!(subs.len(), 2);
+        assert_eq!(subs[0].kind, ProcedureKind::AdaptiveBestOfK);
+        assert_eq!(subs[0].indices, vec![0]);
+        assert_eq!(subs[1].kind, ProcedureKind::WeakStrongRoute);
+        assert_eq!(subs[1].indices, vec![1, 2]);
     }
 
     #[test]

@@ -32,6 +32,10 @@ pub struct Request {
     pub arrived_us: u64,
     /// Per-request decode-procedure override; None ⇒ the configured default.
     pub procedure: Option<ProcedureKind>,
+    /// Admission control forced this query onto the weak arm: it is served
+    /// via `WeakStrongRoute` with routing overridden to the weak model,
+    /// regardless of `procedure` or the configured default.
+    pub degraded: bool,
 }
 
 impl Request {
@@ -43,6 +47,7 @@ impl Request {
             domain: domain.into(),
             arrived_us: 0,
             procedure: None,
+            degraded: false,
         }
     }
 }

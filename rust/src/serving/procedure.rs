@@ -152,8 +152,19 @@ impl DecodeProcedure for WeakStrongRoute {
         );
         let texts: Vec<&str> = reqs.iter().map(|r| r.text.as_str()).collect();
         let prefs = sched.strong_preference(&domain, &texts)?;
-        let router = sched.router_for(&domain)?;
-        let mask = router.route(&prefs);
+        // Degraded queries (admission control under overload) are pinned to
+        // the weak arm — the router only decides for the rest. The preference
+        // probe still runs for them: it is the `predicted` the response
+        // reports, and on binary domains it preheats the strong arm's λ̂.
+        // When the whole sub-epoch is degraded, skip the router entirely so
+        // an overloaded server never pays first-use calibration.
+        let any_routed = reqs.iter().any(|r| !r.degraded);
+        let mask: Vec<bool> = if any_routed {
+            let m = sched.router_for(&domain)?.route(&prefs);
+            (0..reqs.len()).map(|i| m[i] && !reqs[i].degraded).collect()
+        } else {
+            vec![false; reqs.len()]
+        };
 
         let strong_idx: Vec<usize> =
             (0..reqs.len()).filter(|&i| mask[i]).collect();

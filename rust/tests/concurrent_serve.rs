@@ -192,6 +192,100 @@ fn multi_client_stress_each_client_gets_its_own_responses() {
     let _ = handle.join();
 }
 
+/// Client ids above 2^53 round-trip exactly. The old path parsed the id
+/// through f64 (`as_f64() as u64`), which silently corrupted large ids:
+/// 2^53 + 1 came back as 2^53. Ids are now parsed and echoed as exact
+/// integers.
+#[test]
+fn huge_integer_client_ids_echo_exactly() {
+    let mut cfg = Config::default();
+    cfg.allocator.policy = AllocPolicy::Online;
+    cfg.allocator.budget_per_query = 2.0;
+    cfg.allocator.b_max = 8;
+    cfg.server.addr = "127.0.0.1:0".into();
+    cfg.server.batch_queries = 2;
+    cfg.server.max_wait_ms = 10;
+    cfg.validate().unwrap();
+
+    let server = Server::new(cfg, Arc::new(Registry::default()));
+    let (tx, rx) = std::sync::mpsc::channel();
+    let srv = server.clone();
+    let handle = std::thread::spawn(move || srv.run(|a| tx.send(a).unwrap()));
+    let addr = rx.recv().unwrap();
+
+    let mut c = Client::connect(&addr).unwrap();
+    c.set_read_timeout(Some(Duration::from_secs(120))).unwrap();
+
+    // 2^53 + 1: the first integer an f64 cannot represent
+    let id_a: u64 = (1 << 53) + 1;
+    // well above 2^60: corrupted by hundreds under f64 rounding
+    let id_b: u64 = (1 << 60) + 12345;
+    c.request(id_a, "ADD 1 2", "code").unwrap();
+    c.request(id_b, "ADD 3 4", "code").unwrap();
+
+    let mut got = std::collections::BTreeSet::new();
+    for _ in 0..2 {
+        let resp = c.read_response().unwrap();
+        let id = resp.get("id").and_then(Json::as_i64).expect("exact id");
+        got.insert(id as u64);
+    }
+    assert_eq!(
+        got.into_iter().collect::<Vec<_>>(),
+        vec![id_a, id_b],
+        "ids must echo bit-exactly, not f64-rounded"
+    );
+
+    c.command("shutdown").unwrap();
+    let _ = handle.join();
+}
+
+/// Non-integral, negative, and ≥ 2^63 ids are rejected with a structured
+/// error line — not silently truncated or wrapped — and the connection
+/// stays usable afterwards.
+#[test]
+fn malformed_client_ids_are_rejected_not_corrupted() {
+    let mut cfg = Config::default();
+    cfg.allocator.policy = AllocPolicy::Online;
+    cfg.allocator.budget_per_query = 2.0;
+    cfg.allocator.b_max = 8;
+    cfg.server.addr = "127.0.0.1:0".into();
+    cfg.server.batch_queries = 1;
+    cfg.server.max_wait_ms = 5;
+    cfg.validate().unwrap();
+
+    let server = Server::new(cfg, Arc::new(Registry::default()));
+    let (tx, rx) = std::sync::mpsc::channel();
+    let srv = server.clone();
+    let handle = std::thread::spawn(move || srv.run(|a| tx.send(a).unwrap()));
+    let addr = rx.recv().unwrap();
+
+    let mut c = Client::connect(&addr).unwrap();
+    c.set_read_timeout(Some(Duration::from_secs(120))).unwrap();
+
+    // fractional, negative (used to wrap to a huge u64), and 2^63
+    // (outside the exact-integer range) must all draw an error line
+    for bad in [
+        r#"{"id": 1.5, "text": "ADD 1 2", "domain": "code"}"#,
+        r#"{"id": -3, "text": "ADD 1 2", "domain": "code"}"#,
+        r#"{"id": 9223372036854775808, "text": "ADD 1 2", "domain": "code"}"#,
+    ] {
+        c.write_raw(bad).unwrap();
+        let resp = c.read_response().unwrap();
+        let err = resp.get("error").and_then(Json::as_str).unwrap_or_else(|| {
+            panic!("expected an error line for {bad}, got {resp:?}")
+        });
+        assert!(err.contains("invalid id"), "unexpected error text: {err}");
+    }
+
+    // the connection survives rejected requests
+    c.request(42, "ADD 1 2", "code").unwrap();
+    let resp = c.read_response().unwrap();
+    assert_eq!(resp.get("id").and_then(Json::as_i64), Some(42));
+
+    c.command("shutdown").unwrap();
+    let _ = handle.join();
+}
+
 /// Repeating an epoch hits the prediction cache: the second pass skips the
 /// probe call for every query and reports identical predictions.
 #[test]

@@ -1,0 +1,339 @@
+//! Overload-safety integration: graceful shutdown with open connections,
+//! oversize-line rejection, slow-reader isolation, staged admission
+//! (degrade → shed) under a flooded batcher, the bit-for-bit parity
+//! contract at sub-saturation, and the bounded-queue backstop. Runs on the
+//! default native backend — no artifacts required (CI gates on this).
+
+use std::sync::mpsc;
+use std::sync::Arc;
+use std::time::Duration;
+
+use thinkalloc::config::{AllocPolicy, Config};
+use thinkalloc::jsonio::Json;
+use thinkalloc::metrics::Registry;
+use thinkalloc::server::{Client, Server};
+
+/// Base config: native backend, online policy, small budgets — fast on CI.
+fn base_cfg() -> Config {
+    let mut cfg = Config::default();
+    cfg.allocator.policy = AllocPolicy::Online;
+    cfg.allocator.budget_per_query = 2.0;
+    cfg.allocator.b_max = 8;
+    cfg.server.addr = "127.0.0.1:0".into();
+    cfg
+}
+
+fn start(cfg: Config) -> (String, std::thread::JoinHandle<anyhow::Result<()>>) {
+    let server = Server::new(cfg, Arc::new(Registry::default()));
+    let (tx, rx) = mpsc::channel();
+    let srv = server.clone();
+    let handle = std::thread::spawn(move || srv.run(|a| tx.send(a).unwrap()));
+    (rx.recv().unwrap(), handle)
+}
+
+/// Shutdown with idle connections still open must terminate: readers
+/// blocked on the socket used to wedge `run()` forever (they blocked in
+/// `lines()` with nothing to join them). Now every connection's socket is
+/// shut down, both its threads are joined, and every client sees EOF.
+#[test]
+fn shutdown_with_open_connections_joins_and_clients_get_eof() {
+    let mut cfg = base_cfg();
+    cfg.server.batch_queries = 2;
+    cfg.server.max_wait_ms = 10;
+    cfg.validate().unwrap();
+    let (addr, handle) = start(cfg);
+
+    // two idle connections that never send a byte — the pre-fix server
+    // leaked a blocked reader thread for each
+    let mut idle_a = Client::connect(&addr).unwrap();
+    let mut idle_b = Client::connect(&addr).unwrap();
+    idle_a.set_read_timeout(Some(Duration::from_secs(30))).unwrap();
+    idle_b.set_read_timeout(Some(Duration::from_secs(30))).unwrap();
+
+    // a working connection proves the server is live before shutdown
+    let mut active = Client::connect(&addr).unwrap();
+    active.set_read_timeout(Some(Duration::from_secs(120))).unwrap();
+    active.request(1, "ADD 1 2", "code").unwrap();
+    let resp = active.read_response().unwrap();
+    assert_eq!(resp.get("id").and_then(Json::as_i64), Some(1));
+
+    active.command("shutdown").unwrap();
+
+    // run() must return — it joins every reader and writer on the way out
+    handle
+        .join()
+        .expect("server thread panicked")
+        .expect("server run() errored");
+
+    // every client — idle or not — sees a clean EOF, not a hang
+    assert!(idle_a.read_response().is_err(), "idle client A expected EOF");
+    assert!(idle_b.read_response().is_err(), "idle client B expected EOF");
+    assert!(active.read_response().is_err(), "active client expected EOF");
+}
+
+/// A request line longer than `server.max_line_bytes` fails the connection
+/// with a structured error instead of growing the read buffer without
+/// bound; other connections are unaffected.
+#[test]
+fn oversize_line_fails_connection_with_structured_error() {
+    let mut cfg = base_cfg();
+    cfg.server.batch_queries = 1;
+    cfg.server.max_wait_ms = 5;
+    cfg.server.max_line_bytes = 1024; // the validation floor
+    cfg.validate().unwrap();
+    let (addr, handle) = start(cfg);
+
+    let mut abuser = Client::connect(&addr).unwrap();
+    abuser.set_read_timeout(Some(Duration::from_secs(120))).unwrap();
+    // 4 KiB of garbage on one line: 4x the cap
+    abuser.write_raw(&"x".repeat(4096)).unwrap();
+    let resp = abuser.read_response().unwrap();
+    let err = resp.get("error").and_then(Json::as_str).unwrap_or_default();
+    assert!(
+        err.contains("line exceeds 1024 bytes"),
+        "expected the oversize error line, got {resp:?}"
+    );
+    // the connection is then closed
+    assert!(abuser.read_response().is_err(), "abuser expected EOF");
+
+    // a well-behaved connection is served normally afterwards
+    let mut ok = Client::connect(&addr).unwrap();
+    ok.set_read_timeout(Some(Duration::from_secs(120))).unwrap();
+    ok.request(7, "ADD 2 3", "code").unwrap();
+    let resp = ok.read_response().unwrap();
+    assert_eq!(resp.get("id").and_then(Json::as_i64), Some(7));
+    assert_eq!(resp.get("ok").and_then(Json::as_bool), Some(true));
+
+    ok.command("shutdown").unwrap();
+    let _ = handle.join();
+}
+
+/// A connection that submits work but never reads its responses must not
+/// delay other connections: workers deliver into per-connection outboxes,
+/// never directly onto sockets, so the fast client's responses flow while
+/// the slow client's sit in its own queue.
+#[test]
+fn slow_reader_does_not_delay_other_connections() {
+    let mut cfg = base_cfg();
+    cfg.server.workers = 1; // one worker: any cross-connection stall shows
+    cfg.server.batch_queries = 4;
+    cfg.server.max_wait_ms = 10;
+    cfg.server.outbox_depth = 4;
+    cfg.server.writer_stall_ms = 200;
+    cfg.validate().unwrap();
+    let (addr, handle) = start(cfg);
+
+    // the slow client floods requests and never reads a single response
+    let mut slow = Client::connect(&addr).unwrap();
+    for i in 0..12 {
+        slow.request(i, "ADD 1 1", "code").unwrap();
+    }
+
+    // the fast client must get every one of its responses regardless
+    let mut fast = Client::connect(&addr).unwrap();
+    fast.set_read_timeout(Some(Duration::from_secs(120))).unwrap();
+    let mut got = std::collections::BTreeSet::new();
+    for i in 0..12 {
+        fast.request(100 + i, "ADD 2 2", "code").unwrap();
+    }
+    for _ in 0..12 {
+        let resp = fast.read_response().expect("fast client starved");
+        got.insert(resp.get("id").and_then(Json::as_i64).unwrap());
+    }
+    assert_eq!(got.len(), 12, "fast client missing responses");
+    assert!(got.iter().all(|id| (100..112).contains(id)));
+
+    fast.command("shutdown").unwrap();
+    drop(slow);
+    let _ = handle.join();
+}
+
+/// Flooding a bounded batcher with admission enabled walks the staged
+/// response deterministically: the first submissions are accepted, the
+/// next band is degraded onto the weak routing arm, everything past the
+/// shed threshold is rejected with `overloaded` + a retry hint — and the
+/// counters account for every query.
+#[test]
+fn admission_degrades_then_sheds_under_flood() {
+    let mut cfg = base_cfg();
+    cfg.server.workers = 1;
+    // epoch cuts only at 64 queries or 500 ms: the flood of 64 lands while
+    // the batcher is still accumulating, so queue depth climbs 0,1,2,…
+    // exactly one step per accepted request
+    cfg.server.batch_queries = 64;
+    cfg.server.max_wait_ms = 500;
+    cfg.server.max_queue_depth = 8;
+    cfg.admission.enabled = true;
+    cfg.admission.degrade_at = 0.25; // depth ≥ 2
+    cfg.admission.shed_at = 0.75; // depth ≥ 6
+    cfg.admission.hysteresis = 0.1;
+    cfg.admission.retry_after_ms = 100;
+    cfg.validate().unwrap();
+    let (addr, handle) = start(cfg);
+
+    let mut c = Client::connect(&addr).unwrap();
+    c.set_read_timeout(Some(Duration::from_secs(120))).unwrap();
+    // one write_raw call = one burst: all 64 lines are on the wire before
+    // the 500 ms epoch deadline can fire
+    let burst: String = (0..64)
+        .map(|i| format!(r#"{{"id": {i}, "text": "ADD 1 2", "domain": "code"}}"#))
+        .collect::<Vec<_>>()
+        .join("\n");
+    c.write_raw(&burst).unwrap();
+
+    // depth walk: 0,1 → accept (2); 2..5 → degrade (4); ≥6 → shed (58)
+    let mut accepted = 0u32;
+    let mut degraded = 0u32;
+    let mut shed = 0u32;
+    let mut seen = std::collections::BTreeSet::new();
+    for _ in 0..64 {
+        let resp = c.read_response().expect("one line per query");
+        let id = resp.get("id").and_then(Json::as_i64).expect("id on every line");
+        assert!(seen.insert(id), "id {id} answered twice");
+        if resp.get("error").is_some() {
+            assert_eq!(
+                resp.get("error").and_then(Json::as_str),
+                Some("overloaded"),
+                "unexpected error line: {resp:?}"
+            );
+            let retry = resp
+                .get("retry_after_ms")
+                .and_then(Json::as_i64)
+                .expect("shed lines carry a retry hint");
+            assert!(retry >= 100, "retry hint below the configured base");
+            shed += 1;
+        } else {
+            // degraded queries are stamped with the weak-arm procedure
+            match resp.get("procedure").and_then(Json::as_str) {
+                Some("route") => degraded += 1,
+                Some("adaptive") => accepted += 1,
+                other => panic!("unexpected procedure {other:?}"),
+            }
+        }
+    }
+    assert_eq!(seen.len(), 64, "every query answered exactly once");
+    assert_eq!((accepted, degraded, shed), (2, 4, 58));
+
+    // the admission counters agree with the wire
+    let metrics = c.command("metrics").unwrap();
+    let counter = |name: &str| metrics.get(name).and_then(Json::as_f64);
+    assert_eq!(counter("counter.serving.admission.accepted"), Some(2.0));
+    assert_eq!(counter("counter.serving.admission.degraded"), Some(4.0));
+    assert_eq!(counter("counter.serving.admission.shed"), Some(58.0));
+
+    c.command("shutdown").unwrap();
+    let _ = handle.join();
+}
+
+/// The parity contract: at sub-saturation load, enabling admission must
+/// not change a single bit of any response. Two closed-loop runs — one
+/// with admission off, one with it on — produce field-for-field identical
+/// responses (latency excluded: it measures wall time, not behavior).
+#[test]
+fn admission_disabled_is_bit_for_bit_inert_at_subsaturation() {
+    let run = |admission: bool| -> (Vec<Json>, Json) {
+        let mut cfg = base_cfg();
+        cfg.server.workers = 1; // single seeded worker ⇒ deterministic run
+        cfg.server.batch_queries = 1;
+        cfg.server.max_wait_ms = 5;
+        cfg.admission.enabled = admission;
+        cfg.validate().unwrap();
+        let (addr, handle) = start(cfg);
+        let mut c = Client::connect(&addr).unwrap();
+        c.set_read_timeout(Some(Duration::from_secs(120))).unwrap();
+        let mut out = Vec::new();
+        // closed loop: depth is ~0 at every admission decision
+        for i in 0..12 {
+            let text = format!("ADD {} {}", i, i + 1);
+            c.request(i, &text, if i % 2 == 0 { "code" } else { "math" })
+                .unwrap();
+            out.push(c.read_response().unwrap());
+        }
+        let metrics = c.command("metrics").unwrap();
+        c.command("shutdown").unwrap();
+        let _ = handle.join();
+        (out, metrics)
+    };
+
+    let (off, off_metrics) = run(false);
+    let (on, on_metrics) = run(true);
+    for (i, (a, b)) in off.iter().zip(&on).enumerate() {
+        for field in ["id", "response", "ok", "budget", "predicted", "reward", "procedure"] {
+            assert_eq!(
+                a.get(field),
+                b.get(field),
+                "response {i} field {field} diverged with admission on"
+            );
+        }
+    }
+    // enabled: all 12 accepted, nothing degraded or shed
+    assert_eq!(
+        on_metrics.get("counter.serving.admission.accepted").and_then(Json::as_f64),
+        Some(12.0)
+    );
+    assert!(on_metrics.get("counter.serving.admission.degraded").is_none());
+    assert!(on_metrics.get("counter.serving.admission.shed").is_none());
+    // disabled: the admission counters don't even exist
+    for k in [
+        "counter.serving.admission.accepted",
+        "counter.serving.admission.degraded",
+        "counter.serving.admission.shed",
+    ] {
+        assert!(off_metrics.get(k).is_none(), "{k} must not exist when disabled");
+    }
+}
+
+/// With admission disabled, the bounded queue is still a hard backstop:
+/// requests past `max_queue_depth` draw `overloaded` lines instead of
+/// growing the queue without bound (the pre-fix failure mode).
+#[test]
+fn queue_full_backstop_sheds_without_admission() {
+    let mut cfg = base_cfg();
+    cfg.server.workers = 1;
+    cfg.server.batch_queries = 64; // epoch cuts on the 500 ms deadline only
+    cfg.server.max_wait_ms = 500;
+    cfg.server.max_queue_depth = 4;
+    cfg.validate().unwrap();
+    assert!(!cfg.admission.enabled, "this test exercises the backstop only");
+    let (addr, handle) = start(cfg);
+
+    let mut c = Client::connect(&addr).unwrap();
+    c.set_read_timeout(Some(Duration::from_secs(120))).unwrap();
+    let burst: String = (0..16)
+        .map(|i| format!(r#"{{"id": {i}, "text": "ADD 1 2", "domain": "code"}}"#))
+        .collect::<Vec<_>>()
+        .join("\n");
+    c.write_raw(&burst).unwrap();
+
+    let mut served = 0u32;
+    let mut shed = 0u32;
+    let mut seen = std::collections::BTreeSet::new();
+    for _ in 0..16 {
+        let resp = c.read_response().unwrap();
+        let id = resp.get("id").and_then(Json::as_i64).expect("id on every line");
+        assert!(seen.insert(id), "id {id} answered twice");
+        if resp.get("error").is_some() {
+            assert_eq!(resp.get("error").and_then(Json::as_str), Some("overloaded"));
+            assert!(
+                resp.get("retry_after_ms").and_then(Json::as_i64).unwrap_or(0) > 0,
+                "backstop rejections still carry a retry hint"
+            );
+            shed += 1;
+        } else {
+            served += 1;
+        }
+    }
+    assert_eq!((served, shed), (4, 12), "queue bound is exactly max_queue_depth");
+
+    let metrics = c.command("metrics").unwrap();
+    assert_eq!(
+        metrics.get("counter.serving.admission.shed").and_then(Json::as_f64),
+        Some(12.0)
+    );
+    // no admission ⇒ no accepted/degraded counters, only the backstop's shed
+    assert!(metrics.get("counter.serving.admission.accepted").is_none());
+    assert!(metrics.get("counter.serving.admission.degraded").is_none());
+
+    c.command("shutdown").unwrap();
+    let _ = handle.join();
+}
