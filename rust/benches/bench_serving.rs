@@ -14,11 +14,17 @@
 //! The fixed run's queue wait diverges (open-loop overload); the controller
 //! trades per-query budget for queue wait and holds p95 near its target.
 //!
+//! Front-door sections close the file: admission under 3× overload, a
+//! connections≫workers stress run per I/O driver, and the many-socket
+//! section — 1k+ held connections served by the poll(2) event loop on ≤8
+//! I/O threads vs the 2-threads-per-connection reference.
+//!
 //! Runs on whatever backend the default config selects (native unless
 //! overridden), so it works on artifact-less hosts and doubles as the CI
 //! smoke bench: `--smoke` shrinks every section to a tiny trace, and
 //! `--json <path>` writes a machine-readable summary (uploaded as a CI
-//! artifact for run-over-run comparison).
+//! artifact and diffed against the committed baseline by
+//! `scripts/perf_compare.py`).
 
 #[path = "harness/mod.rs"]
 mod harness;
@@ -28,7 +34,7 @@ use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 use harness::{bench, black_box, section};
-use thinkalloc::config::{AllocPolicy, Config, DecodeMode};
+use thinkalloc::config::{AllocPolicy, Config, DecodeMode, IoMode};
 use thinkalloc::jsonio::Json;
 use thinkalloc::metrics::Registry;
 use thinkalloc::prng::Pcg64;
@@ -99,6 +105,39 @@ impl EpochSink for CountSink {
         self.fail(format!("worker {worker} failed to load engine: {err:#}"));
     }
 }
+
+/// The many-socket section holds >2k descriptors in one process (both ends
+/// of every connection); default soft nofile limits (often 1024) are below
+/// that, so raise the soft limit toward the hard limit first. Raw syscall —
+/// no new dependencies, same policy as the event loop's poll(2) FFI.
+#[cfg(any(target_os = "linux", target_os = "macos"))]
+fn raise_nofile_limit() {
+    #[repr(C)]
+    struct Rlimit {
+        cur: u64,
+        max: u64,
+    }
+    extern "C" {
+        fn getrlimit(resource: i32, rlim: *mut Rlimit) -> i32;
+        fn setrlimit(resource: i32, rlim: *const Rlimit) -> i32;
+    }
+    #[cfg(target_os = "linux")]
+    const RLIMIT_NOFILE: i32 = 7;
+    #[cfg(target_os = "macos")]
+    const RLIMIT_NOFILE: i32 = 8;
+    unsafe {
+        let mut r = Rlimit { cur: 0, max: 0 };
+        if getrlimit(RLIMIT_NOFILE, &mut r) == 0 && r.cur < r.max {
+            let want = Rlimit { cur: r.max.min(65_536), max: r.max };
+            // best effort: a refusal leaves the old limit, and the section
+            // will simply fail loudly if the host truly can't hold the fds
+            let _ = setrlimit(RLIMIT_NOFILE, &want);
+        }
+    }
+}
+
+#[cfg(not(any(target_os = "linux", target_os = "macos")))]
+fn raise_nofile_limit() {}
 
 fn pool_config() -> Config {
     let mut cfg = Config::default();
@@ -299,9 +338,14 @@ fn main() {
         let steps = metrics.counter("serving.decode.steps").get();
         let wasted = metrics.counter("serving.decode.wasted_steps").get();
         let p95 = metrics.histogram("serving.epoch_us").percentile_us(0.95);
+        // the steps counter accumulates over warmup + timed runs (the
+        // temp-0 epoch is deterministic, so steps-per-run is constant) —
+        // divide out the run count to rate it against the mean epoch time
+        let runs = (scale.epoch_iters / 10).max(1) + scale.epoch_iters;
+        let steps_per_s = (steps as f64 / runs as f64) / (r.mean_us / 1e6);
         println!(
             "  {}: {steps} live + {wasted} wasted slot-steps | occupancy {:.2} \
-             | epoch p95 {p95:.0}µs",
+             | epoch p95 {p95:.0}µs | {steps_per_s:.0} steps/s",
             mode.name(),
             metrics.gauge("serving.decode.occupancy").get(),
         );
@@ -317,6 +361,7 @@ fn main() {
                 ("wasted_steps", Json::Num(wasted as f64)),
                 ("epoch_p95_us", Json::Num(p95)),
                 ("epoch_mean_us", Json::Num(r.mean_us)),
+                ("steps_per_s", Json::Num(steps_per_s)),
             ]),
         ));
     }
@@ -599,65 +644,160 @@ fn main() {
         ]),
     ));
 
-    // --- front door stress: connections ≫ workers ---------------------------
-    // 24 concurrent connections against a 1-worker pool: the per-connection
-    // reader/writer threads and bounded outboxes must multiplex them without
-    // loss; wall time shows the front door adds no serialization of its own.
+    // --- front door stress: connections ≫ workers, per I/O driver -----------
+    // 24 concurrent connections against a 1-worker pool: the front door must
+    // multiplex them without loss, and wall time shows it adds no
+    // serialization of its own. Run once per driver — the event loop and the
+    // thread-per-connection reference serve the identical workload.
     let conns = 24usize;
     let per_conn = if smoke { 2u64 } else { 8 };
-    section(&format!(
-        "front door stress: {conns} connections × {per_conn} queries, 1 worker"
-    ));
-    let mut cfg = pool_config();
-    cfg.server.addr = "127.0.0.1:0".into();
-    cfg.server.workers = 1;
-    cfg.validate().expect("stress config");
-    let server = Server::new(cfg, Arc::new(Registry::default()));
-    let (tx, rx) = std::sync::mpsc::channel();
-    let srv = server.clone();
-    let srv_handle = std::thread::spawn(move || srv.run(|a| tx.send(a).unwrap()));
-    let addr = rx.recv().unwrap();
-    let t0 = Instant::now();
-    let clients: Vec<_> = (0..conns)
-        .map(|c| {
-            let addr = addr.clone();
-            std::thread::spawn(move || {
-                let mut cl = Client::connect(&addr).expect("connect");
-                cl.set_read_timeout(Some(Duration::from_secs(120))).unwrap();
-                for i in 0..per_conn {
-                    let id = c as u64 * 1000 + i;
-                    cl.request(id, "ADD 1 2", "code").expect("request");
-                    let resp = cl.read_response().expect("response");
-                    assert_eq!(resp.get("id").and_then(Json::as_i64), Some(id as i64));
-                }
+    for io_mode in [IoMode::Threads, IoMode::Event] {
+        section(&format!(
+            "front door stress: {conns} connections × {per_conn} queries, \
+             1 worker, io {}",
+            io_mode.name()
+        ));
+        let mut cfg = pool_config();
+        cfg.server.addr = "127.0.0.1:0".into();
+        cfg.server.workers = 1;
+        cfg.server.io_mode = io_mode;
+        cfg.server.io_threads = 2;
+        cfg.validate().expect("stress config");
+        let server = Server::new(cfg, Arc::new(Registry::default()));
+        let (tx, rx) = std::sync::mpsc::channel();
+        let srv = server.clone();
+        let srv_handle = std::thread::spawn(move || srv.run(|a| tx.send(a).unwrap()));
+        let addr = rx.recv().unwrap();
+        let t0 = Instant::now();
+        let clients: Vec<_> = (0..conns)
+            .map(|c| {
+                let addr = addr.clone();
+                std::thread::spawn(move || {
+                    let mut cl = Client::connect(&addr).expect("connect");
+                    cl.set_read_timeout(Some(Duration::from_secs(120))).unwrap();
+                    for i in 0..per_conn {
+                        let id = c as u64 * 1000 + i;
+                        cl.request(id, "ADD 1 2", "code").expect("request");
+                        let resp = cl.read_response().expect("response");
+                        assert_eq!(resp.get("id").and_then(Json::as_i64), Some(id as i64));
+                    }
+                })
             })
-        })
-        .collect();
-    for cl in clients {
-        cl.join().expect("stress client");
+            .collect();
+        for cl in clients {
+            cl.join().expect("stress client");
+        }
+        let dt = t0.elapsed();
+        let total = conns as u64 * per_conn;
+        let qps = total as f64 / dt.as_secs_f64();
+        println!(
+            "  {total} queries over {conns} connections: {:>8.1} ms total, \
+             {qps:>7.1} queries/s",
+            dt.as_secs_f64() * 1e3
+        );
+        {
+            let mut c = Client::connect(&addr).expect("shutdown client");
+            c.command("shutdown").expect("shutdown");
+        }
+        let _ = srv_handle.join();
+        summary.push((
+            format!("many_conn.{}", io_mode.name()),
+            Json::obj(vec![
+                ("connections", Json::Num(conns as f64)),
+                ("queries", Json::Num(total as f64)),
+                ("total_ms", Json::Num(dt.as_secs_f64() * 1e3)),
+                ("queries_per_s", Json::Num(qps)),
+            ]),
+        ));
     }
-    let dt = t0.elapsed();
-    let total = conns as u64 * per_conn;
-    let qps = total as f64 / dt.as_secs_f64();
-    println!(
-        "  {total} queries over {conns} connections: {:>8.1} ms total, \
-         {qps:>7.1} queries/s",
-        dt.as_secs_f64() * 1e3
-    );
-    {
-        let mut c = Client::connect(&addr).expect("shutdown client");
-        c.command("shutdown").expect("shutdown");
-    }
-    let _ = srv_handle.join();
-    summary.push((
-        "many_conn".into(),
-        Json::obj(vec![
-            ("connections", Json::Num(conns as f64)),
-            ("queries", Json::Num(total as f64)),
-            ("total_ms", Json::Num(dt.as_secs_f64() * 1e3)),
-            ("queries_per_s", Json::Num(qps)),
-        ]),
+
+    // --- many-socket front door: 1k+ held connections, threads vs event -----
+    // The event loop's reason to exist: hold a four-digit connection count
+    // on ≤8 I/O threads. Every socket connects, sends one query, and waits;
+    // the threads driver pays 2 OS threads per socket for the same work.
+    // Smoke shrinks the count so CI stays fast (the full run is the
+    // committed-BENCH evidence for the ≥1000-connection claim).
+    raise_nofile_limit();
+    let socks = if smoke { 64usize } else { 1024 };
+    section(&format!(
+        "many-socket front door: {socks} held connections × 1 query, \
+         threads vs event"
     ));
+    for io_mode in [IoMode::Threads, IoMode::Event] {
+        let mut cfg = pool_config();
+        cfg.server.addr = "127.0.0.1:0".into();
+        cfg.server.workers = 1;
+        cfg.server.io_mode = io_mode;
+        cfg.server.io_threads = 4;
+        cfg.server.max_connections = socks + 8;
+        cfg.validate().expect("many-socket config");
+        let server = Server::new(cfg, Arc::new(Registry::default()));
+        let (tx, rx) = std::sync::mpsc::channel();
+        let srv = server.clone();
+        let srv_handle = std::thread::spawn(move || srv.run(|a| tx.send(a).unwrap()));
+        let addr = rx.recv().unwrap();
+
+        let t0 = Instant::now();
+        let mut held: Vec<std::net::TcpStream> = Vec::with_capacity(socks);
+        for i in 0..socks {
+            // pace the connect storm so the listener backlog never overflows
+            if i % 64 == 63 {
+                std::thread::sleep(Duration::from_millis(2));
+            }
+            held.push(std::net::TcpStream::connect(&addr).expect("connect"));
+        }
+        let connect_ms = t0.elapsed().as_secs_f64() * 1e3;
+        {
+            use std::io::Write as _;
+            for (i, s) in held.iter_mut().enumerate() {
+                let j = Json::obj(vec![
+                    ("id", Json::Int(i as i64)),
+                    ("text", Json::Str("ADD 1 2".into())),
+                    ("domain", Json::Str("code".into())),
+                ]);
+                writeln!(s, "{j}").expect("request");
+            }
+        }
+        {
+            use std::io::BufRead as _;
+            for (i, s) in held.iter().enumerate() {
+                s.set_read_timeout(Some(Duration::from_secs(300))).unwrap();
+                let mut r = std::io::BufReader::new(s);
+                let mut line = String::new();
+                r.read_line(&mut line).expect("response");
+                let v = thinkalloc::jsonio::parse(line.trim()).expect("response json");
+                assert_eq!(
+                    v.get("id").and_then(Json::as_i64),
+                    Some(i as i64),
+                    "socket {i} got someone else's response under io {}",
+                    io_mode.name()
+                );
+            }
+        }
+        let dt = t0.elapsed();
+        let qps = socks as f64 / dt.as_secs_f64();
+        println!(
+            "  io {}: {socks} sockets connected in {connect_ms:.1} ms, all \
+             served in {:.1} ms ({qps:.0} queries/s)",
+            io_mode.name(),
+            dt.as_secs_f64() * 1e3
+        );
+        drop(held);
+        {
+            let mut c = Client::connect(&addr).expect("shutdown client");
+            c.command("shutdown").expect("shutdown");
+        }
+        let _ = srv_handle.join();
+        summary.push((
+            format!("many_socket.{}", io_mode.name()),
+            Json::obj(vec![
+                ("connections", Json::Num(socks as f64)),
+                ("connect_ms", Json::Num(connect_ms)),
+                ("total_ms", Json::Num(dt.as_secs_f64() * 1e3)),
+                ("queries_per_s", Json::Num(qps)),
+            ]),
+        ));
+    }
 
     if let Some(path) = json_path {
         let pairs: Vec<(&str, Json)> =

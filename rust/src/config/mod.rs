@@ -244,6 +244,44 @@ impl std::str::FromStr for DecodeMode {
     }
 }
 
+/// How the server front door drives connection I/O.
+///
+/// `Event` (the default) multiplexes every accepted socket through a small
+/// fixed pool of readiness-driven loop threads (`poll(2)` over nonblocking
+/// fds, a wakeup pipe for cross-thread rousing) — O(io_threads) threads
+/// total regardless of connection count. `Threads` is the historical
+/// 2-threads-per-connection reader/writer pair, kept as the bit-for-bit
+/// wire-behavior reference the same way wave decode backs continuous.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum IoMode {
+    /// Readiness-driven event loop (default): poll(2) multiplexing.
+    #[default]
+    Event,
+    /// Thread-per-connection reader/writer pairs: the historical reference.
+    Threads,
+}
+
+impl IoMode {
+    /// Stable config/CLI name.
+    pub fn name(self) -> &'static str {
+        match self {
+            IoMode::Event => "event",
+            IoMode::Threads => "threads",
+        }
+    }
+}
+
+impl std::str::FromStr for IoMode {
+    type Err = anyhow::Error;
+    fn from_str(s: &str) -> anyhow::Result<Self> {
+        Ok(match s {
+            "event" => IoMode::Event,
+            "threads" => IoMode::Threads,
+            other => anyhow::bail!("unknown io_mode `{other}` (event|threads)"),
+        })
+    }
+}
+
 /// Which kernel implementation the loaded artifacts use.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum KernelMode {
@@ -511,8 +549,16 @@ pub struct ServerConfig {
     /// slow client's TCP buffer can never block a worker.
     pub outbox_depth: usize,
     /// How long a response push may wait on a full outbox before the
-    /// connection is declared stalled and killed, milliseconds.
+    /// connection is declared stalled and killed, milliseconds. In event
+    /// mode the same bound applies to write-readiness: a connection whose
+    /// socket stays unwritable with output pending for this long is killed.
     pub writer_stall_ms: u64,
+    /// Connection I/O strategy: `event` (readiness loop, default) or
+    /// `threads` (2 threads per connection, the historical reference).
+    pub io_mode: IoMode,
+    /// Event-loop shard count (ignored in `threads` mode). Connections are
+    /// distributed round-robin across shards; shard 0 owns the listener.
+    pub io_threads: usize,
 }
 
 impl Default for ServerConfig {
@@ -530,6 +576,8 @@ impl Default for ServerConfig {
             max_line_bytes: 65536,
             outbox_depth: 128,
             writer_stall_ms: 2000,
+            io_mode: IoMode::Event,
+            io_threads: 1,
         }
     }
 }
@@ -666,6 +714,8 @@ impl Config {
             "server.max_connections" => self.server.max_connections = usize_of!(),
             "server.max_line_bytes" => self.server.max_line_bytes = usize_of!(),
             "server.outbox_depth" => self.server.outbox_depth = usize_of!(),
+            "server.io_mode" => self.server.io_mode = str_of!().parse()?,
+            "server.io_threads" => self.server.io_threads = usize_of!(),
             "server.writer_stall_ms" => {
                 self.server.writer_stall_ms = f64_of!() as u64
             }
@@ -789,6 +839,12 @@ impl Config {
         anyhow::ensure!(
             self.server.writer_stall_ms >= 1,
             "server.writer_stall_ms must be ≥ 1"
+        );
+        anyhow::ensure!(
+            (1..=8).contains(&self.server.io_threads),
+            "server.io_threads = {} must be in 1..=8 (a small fixed pool, \
+             not one thread per connection)",
+            self.server.io_threads
         );
         let a = &self.admission;
         anyhow::ensure!(
@@ -1094,6 +1150,34 @@ mod tests {
             "continuous".parse::<DecodeMode>().unwrap(),
             DecodeMode::Continuous
         );
+    }
+
+    #[test]
+    fn io_mode_roundtrip_default_and_bounds() {
+        // default: event — the readiness loop is the serving path; threads
+        // stays available as the bit-for-bit wire-behavior reference
+        assert_eq!(Config::default().server.io_mode, IoMode::Event);
+        assert_eq!(Config::default().server.io_threads, 1);
+        let cfg = Config::from_toml_str("[server]\nio_mode = \"threads\"\n").unwrap();
+        assert_eq!(cfg.server.io_mode, IoMode::Threads);
+        let cfg = Config::from_toml_str(
+            "[server]\nio_mode = \"event\"\nio_threads = 4\n",
+        )
+        .unwrap();
+        assert_eq!(cfg.server.io_mode, IoMode::Event);
+        assert_eq!(cfg.server.io_threads, 4);
+        let err = Config::from_toml_str("[server]\nio_mode = \"epoll\"\n")
+            .unwrap_err();
+        assert!(err.to_string().contains("io_mode"));
+        // the loop pool is small and fixed: 0 and >8 are both rejected
+        let err = Config::from_toml_str("[server]\nio_threads = 0\n").unwrap_err();
+        assert!(err.to_string().contains("io_threads"));
+        let err = Config::from_toml_str("[server]\nio_threads = 9\n").unwrap_err();
+        assert!(err.to_string().contains("io_threads"));
+        // names are stable wire/CLI identifiers
+        assert_eq!(IoMode::Event.name(), "event");
+        assert_eq!(IoMode::Threads.name(), "threads");
+        assert_eq!("threads".parse::<IoMode>().unwrap(), IoMode::Threads);
     }
 
     #[test]

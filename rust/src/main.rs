@@ -68,6 +68,19 @@ fn cli() -> Cli {
             default: Some(""),
         },
         FlagSpec {
+            name: "io-mode",
+            help: "connection I/O driver: event (poll readiness loop) | \
+                   threads (2 threads per connection, reference); empty = \
+                   value from --config (default event)",
+            default: Some(""),
+        },
+        FlagSpec {
+            name: "io-threads",
+            help: "event-loop shards (1..=8) multiplexing all connections; \
+                   empty = value from --config (default 1)",
+            default: Some(""),
+        },
+        FlagSpec {
             name: "admission",
             help: "enable staged admission control (degrade → shed; \
                    [admission] section)",
@@ -216,6 +229,18 @@ fn cmd_serve(args: &Args) -> Result<()> {
             .parse()
             .map_err(|e| anyhow::anyhow!("--max-connections: {e}"))?;
     }
+    let io_mode_flag = args.str_flag("io-mode")?;
+    if !io_mode_flag.is_empty() {
+        cfg.server.io_mode = io_mode_flag
+            .parse()
+            .map_err(|e| anyhow::anyhow!("--io-mode: {e}"))?;
+    }
+    let io_threads_flag = args.str_flag("io-threads")?;
+    if !io_threads_flag.is_empty() {
+        cfg.server.io_threads = io_threads_flag
+            .parse()
+            .map_err(|e| anyhow::anyhow!("--io-threads: {e}"))?;
+    }
     // like --controller, the switch only ever enables: a config file with
     // `admission.enabled = true` is not overridden by the flag's absence
     if args.switch("admission") {
@@ -243,7 +268,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let metrics = Arc::new(Registry::default());
     println!(
         "thinkalloc serving on {} (backend {}, decode {}, policy {:?}, B={}, \
-         procedure {}, workers {}, controller {}, queue depth {}, \
+         procedure {}, workers {}, io {}, controller {}, queue depth {}, \
          connections {}, admission {})",
         cfg.server.addr,
         cfg.runtime.backend.name(),
@@ -252,6 +277,11 @@ fn cmd_serve(args: &Args) -> Result<()> {
         cfg.allocator.budget_per_query,
         cfg.route.procedure.name(),
         cfg.server.workers,
+        match cfg.server.io_mode {
+            thinkalloc::config::IoMode::Event =>
+                format!("event x{}", cfg.server.io_threads),
+            thinkalloc::config::IoMode::Threads => "threads".to_string(),
+        },
         if cfg.controller.enabled {
             format!(
                 "on [{}, {}] target {}ms",

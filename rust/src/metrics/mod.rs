@@ -41,6 +41,26 @@ impl Gauge {
     pub fn get(&self) -> f64 {
         f64::from_bits(self.v.load(Ordering::Relaxed))
     }
+
+    /// Atomic read-modify-write increment (negative `d` decrements): a CAS
+    /// loop over the f64 bits, so concurrent adders never lose updates the
+    /// way racing `get`+`set` pairs would. Used for live-resource gauges
+    /// (e.g. `serving.conn.live`) written from many threads.
+    pub fn add(&self, d: f64) {
+        let mut cur = self.v.load(Ordering::Relaxed);
+        loop {
+            let next = (f64::from_bits(cur) + d).to_bits();
+            match self.v.compare_exchange_weak(
+                cur,
+                next,
+                Ordering::Relaxed,
+                Ordering::Relaxed,
+            ) {
+                Ok(_) => return,
+                Err(seen) => cur = seen,
+            }
+        }
+    }
 }
 
 /// Log-bucketed histogram for latencies in nanoseconds.
@@ -286,6 +306,27 @@ mod tests {
         assert!(s.p99_us <= s.max_us + 1.0);
         // p50 of uniform 10µs..10ms should land within its 2× bucket
         assert!(s.p50_us > 2_000.0 && s.p50_us < 9_000.0, "{s}");
+    }
+
+    #[test]
+    fn gauge_add_is_lossless_under_contention() {
+        let g = std::sync::Arc::new(Gauge::default());
+        let mut hs = Vec::new();
+        for _ in 0..4 {
+            let g = g.clone();
+            hs.push(std::thread::spawn(move || {
+                for _ in 0..1000 {
+                    g.add(1.0);
+                    g.add(-1.0);
+                    g.add(1.0);
+                }
+            }));
+        }
+        for h in hs {
+            h.join().unwrap();
+        }
+        // 4 threads × 1000 net +1 — a racing get+set would drop some
+        assert_eq!(g.get(), 4000.0);
     }
 
     #[test]

@@ -1,0 +1,545 @@
+//! Connection plumbing shared by both I/O drivers: capped line splitting
+//! (blocking and incremental forms), monotonic write-stall tracking, and
+//! the [`ConnectionDriver`] seam itself.
+//!
+//! Two line splitters exist on purpose. [`read_line_capped`] is the
+//! blocking, `BufRead`-pulling form the thread-per-connection driver uses —
+//! one call, one line. [`LineAccumulator`] is the push form the event loop
+//! needs: bytes arrive whenever the socket is readable, in whatever
+//! fragments the kernel hands over, and complete lines fall out as events.
+//! Both enforce the same contract — a line of at most `cap` bytes
+//! (terminator excluded, `\r` counted then stripped), valid UTF-8, with a
+//! hard stop instead of unbounded buffering — and the adversarial-bytes
+//! property suite pins them byte-for-byte against each other.
+
+use std::io::BufRead;
+use std::net::TcpListener;
+use std::time::{Duration, Instant};
+
+/// Driver seam between the protocol layer ([`super::Server`]) and the
+/// mechanics of moving bytes: `threads` (2 threads per connection, the
+/// historical bit-for-bit reference) and `event` (poll(2) readiness loop,
+/// the default) both implement this. The protocol layer never touches a
+/// socket directly — it hands wire lines to [`ConnectionDriver::deliver`]
+/// and receives parsed lines back through `Server::handle_line`.
+pub(crate) trait ConnectionDriver: Send + Sync {
+    /// Begin serving the bound listener: spawns the driver's I/O thread(s)
+    /// and returns immediately.
+    fn start(self: std::sync::Arc<Self>, listener: TcpListener) -> anyhow::Result<()>;
+
+    /// Enqueue one wire line for a connection (no trailing newline — the
+    /// driver frames it). Applies the writer-stall bound: a connection
+    /// whose outbox stays full past `server.writer_stall_ms` is killed, so
+    /// callers (shard workers delivering responses) never wedge. Lines for
+    /// unknown/closed connections are dropped.
+    fn deliver(&self, conn: u64, line: &str);
+
+    /// Tear down: drain queued output (bounded by the stall budget), close
+    /// every connection — which EOFs blocked clients — and join every
+    /// thread the driver spawned. After `stop` returns no driver thread is
+    /// live.
+    fn stop(&self);
+}
+
+/// Outcome of one capped [`read_line_capped`] call.
+#[derive(Debug, PartialEq, Eq)]
+pub(crate) enum LineRead {
+    Line(String),
+    Eof,
+    TooLong,
+    Err,
+}
+
+/// Read one `\n`-terminated line of at most `cap` bytes (terminator
+/// excluded; a trailing `\r` is stripped). Unlike `BufRead::read_line`,
+/// a never-ending line cannot grow the buffer without bound — the read
+/// fails with `TooLong` as soon as the cap is crossed, having buffered at
+/// most `cap` bytes plus one fill.
+pub(crate) fn read_line_capped(r: &mut impl BufRead, cap: usize) -> LineRead {
+    let mut out: Vec<u8> = Vec::new();
+    loop {
+        let (found, take) = {
+            let buf = match r.fill_buf() {
+                Ok(b) => b,
+                Err(ref e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+                Err(_) => return LineRead::Err,
+            };
+            if buf.is_empty() {
+                // EOF: a non-empty unterminated tail still counts as a line
+                return if out.is_empty() { LineRead::Eof } else { finish_line(out) };
+            }
+            match buf.iter().position(|&b| b == b'\n') {
+                Some(i) => {
+                    out.extend_from_slice(&buf[..i]);
+                    (true, i + 1)
+                }
+                None => {
+                    out.extend_from_slice(buf);
+                    (false, buf.len())
+                }
+            }
+        };
+        r.consume(take);
+        if out.len() > cap {
+            return LineRead::TooLong;
+        }
+        if found {
+            return finish_line(out);
+        }
+    }
+}
+
+fn finish_line(mut out: Vec<u8>) -> LineRead {
+    if out.last() == Some(&b'\r') {
+        out.pop();
+    }
+    match String::from_utf8(out) {
+        Ok(s) => LineRead::Line(s),
+        Err(_) => LineRead::Err,
+    }
+}
+
+/// An event emitted by [`LineAccumulator::feed`].
+#[derive(Debug, PartialEq, Eq)]
+pub(crate) enum LineEvent {
+    /// One complete line, `\n` removed and a trailing `\r` stripped.
+    Line(String),
+    /// The current line crossed `cap` bytes (with or without a terminator
+    /// in sight). Terminal: the accumulator emits nothing further.
+    TooLong,
+    /// A complete line failed UTF-8 validation. Terminal.
+    BadUtf8,
+}
+
+/// Incremental capped line splitter for readiness-driven reads: feed
+/// whatever the socket produced, get completed lines out. Buffers at most
+/// `cap` bytes of unterminated prefix — oversize input fails fast as
+/// [`LineEvent::TooLong`] without ever being stored. After a terminal
+/// event the accumulator is dead (mirroring the connection, which is about
+/// to be killed) and swallows all further input.
+pub(crate) struct LineAccumulator {
+    buf: Vec<u8>,
+    cap: usize,
+    dead: bool,
+}
+
+impl LineAccumulator {
+    pub(crate) fn new(cap: usize) -> Self {
+        Self { buf: Vec::new(), cap, dead: false }
+    }
+
+    /// Feed a fragment; invoke `on_event` for each completed line or error
+    /// in input order. `on_event` returning `false` stops processing (the
+    /// caller is tearing the connection down mid-batch).
+    pub(crate) fn feed(
+        &mut self,
+        mut bytes: &[u8],
+        mut on_event: impl FnMut(LineEvent) -> bool,
+    ) {
+        while !self.dead && !bytes.is_empty() {
+            match bytes.iter().position(|&b| b == b'\n') {
+                Some(i) => {
+                    let ev = self.complete(&bytes[..i]);
+                    bytes = &bytes[i + 1..];
+                    let terminal = !matches!(ev, LineEvent::Line(_));
+                    let keep_going = on_event(ev);
+                    if terminal {
+                        self.dead = true;
+                        self.buf = Vec::new();
+                    }
+                    if !keep_going {
+                        return;
+                    }
+                }
+                None => {
+                    // unterminated remainder: store it only if the line can
+                    // still fit — the buffer never holds more than `cap`
+                    if self.buf.len() + bytes.len() > self.cap {
+                        self.dead = true;
+                        self.buf = Vec::new();
+                        on_event(LineEvent::TooLong);
+                    } else {
+                        self.buf.extend_from_slice(bytes);
+                    }
+                    return;
+                }
+            }
+        }
+    }
+
+    /// EOF: a non-empty unterminated tail still counts as a line, exactly
+    /// like [`read_line_capped`]. `None` when nothing is pending.
+    pub(crate) fn finish(&mut self) -> Option<LineEvent> {
+        if self.dead || self.buf.is_empty() {
+            return None;
+        }
+        let tail = std::mem::take(&mut self.buf);
+        self.dead = true;
+        Some(match finish_line(tail) {
+            LineRead::Line(s) => LineEvent::Line(s),
+            _ => LineEvent::BadUtf8,
+        })
+    }
+
+    /// Bytes currently buffered (≤ cap by construction — the property
+    /// suite asserts this invariant on adversarial streams).
+    pub(crate) fn buffered(&self) -> usize {
+        self.buf.len()
+    }
+
+    /// True after a terminal event: all further input is swallowed.
+    pub(crate) fn is_dead(&self) -> bool {
+        self.dead
+    }
+
+    fn complete(&mut self, last: &[u8]) -> LineEvent {
+        let mut line = std::mem::take(&mut self.buf);
+        line.extend_from_slice(last);
+        // cap counts the bytes before the terminator — including a `\r`,
+        // which is only stripped afterwards (same order as the blocking
+        // reader, so the two paths reject identical inputs)
+        if line.len() > self.cap {
+            return LineEvent::TooLong;
+        }
+        match finish_line(line) {
+            LineRead::Line(s) => LineEvent::Line(s),
+            _ => LineEvent::BadUtf8,
+        }
+    }
+}
+
+/// Monotonic write-stall tracker: the event-loop analogue of the writer
+/// thread's `writer_stall_ms` bound. Pure `Instant` arithmetic — a
+/// wall-clock step (NTP, suspend) can neither fire a spurious kill nor
+/// mask a real one, and the unit tests below exercise it with synthetic
+/// instants, no sleeping.
+///
+/// Protocol: call [`StallTracker::blocked_at`] when a write would block
+/// with output still pending, [`StallTracker::progress`] whenever bytes
+/// move (or nothing is pending); [`StallTracker::stalled`] answers whether
+/// the connection has now been unwritable for longer than the budget.
+#[derive(Debug, Default)]
+pub(crate) struct StallTracker {
+    blocked_since: Option<Instant>,
+}
+
+impl StallTracker {
+    pub(crate) fn new() -> Self {
+        Self { blocked_since: None }
+    }
+
+    /// A write made progress (or there is nothing left to write).
+    pub(crate) fn progress(&mut self) {
+        self.blocked_since = None;
+    }
+
+    /// A write would block with output pending. Only the *first* blocked
+    /// observation starts the clock; repeats while already blocked keep
+    /// the original epoch so the stall window cannot be reset by polling.
+    pub(crate) fn blocked_at(&mut self, now: Instant) {
+        self.blocked_since.get_or_insert(now);
+    }
+
+    /// Has the connection been continuously blocked for ≥ `budget`?
+    pub(crate) fn stalled(&self, now: Instant, budget: Duration) -> bool {
+        match self.blocked_since {
+            Some(t0) => now.saturating_duration_since(t0) >= budget,
+            None => false,
+        }
+    }
+
+    /// When the stall budget runs out (None while unblocked) — the event
+    /// loop folds this into its poll timeout so a stalled connection is
+    /// killed on schedule, not on the next unrelated wakeup.
+    pub(crate) fn deadline(&self, budget: Duration) -> Option<Instant> {
+        self.blocked_since.map(|t0| t0 + budget)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::{BufReader, Cursor};
+
+    fn read_all(input: &[u8], cap: usize) -> Vec<LineRead> {
+        let mut r = BufReader::new(Cursor::new(input.to_vec()));
+        let mut out = Vec::new();
+        loop {
+            let l = read_line_capped(&mut r, cap);
+            let done = matches!(l, LineRead::Eof | LineRead::TooLong | LineRead::Err);
+            out.push(l);
+            if done {
+                return out;
+            }
+        }
+    }
+
+    #[test]
+    fn capped_reader_splits_lines_and_strips_crlf() {
+        let got = read_all(b"abc\r\ndef\n\nxyz", 64);
+        assert_eq!(
+            got,
+            vec![
+                LineRead::Line("abc".into()),
+                LineRead::Line("def".into()),
+                LineRead::Line(String::new()),
+                // unterminated tail at EOF still delivered
+                LineRead::Line("xyz".into()),
+                LineRead::Eof,
+            ]
+        );
+    }
+
+    #[test]
+    fn capped_reader_rejects_oversize_without_buffering_it() {
+        // 100 bytes, no newline, cap 10: must fail, not accumulate
+        let long = vec![b'a'; 100];
+        let got = read_all(&long, 10);
+        assert_eq!(got, vec![LineRead::TooLong]);
+        // exactly at the cap is fine
+        let mut ok = vec![b'b'; 10];
+        ok.push(b'\n');
+        let got = read_all(&ok, 10);
+        assert_eq!(got[0], LineRead::Line("b".repeat(10)));
+        // one past the cap is not
+        let mut over = vec![b'c'; 11];
+        over.push(b'\n');
+        assert_eq!(read_all(&over, 10), vec![LineRead::TooLong]);
+    }
+
+    #[test]
+    fn capped_reader_rejects_invalid_utf8() {
+        let got = read_all(&[0xff, 0xfe, b'\n'], 64);
+        assert_eq!(got, vec![LineRead::Err]);
+    }
+
+    fn feed_all(acc: &mut LineAccumulator, bytes: &[u8]) -> Vec<LineEvent> {
+        let mut evs = Vec::new();
+        acc.feed(bytes, |e| {
+            evs.push(e);
+            true
+        });
+        evs
+    }
+
+    #[test]
+    fn accumulator_reassembles_fragmented_lines() {
+        let mut acc = LineAccumulator::new(64);
+        assert!(feed_all(&mut acc, b"ab").is_empty());
+        assert!(feed_all(&mut acc, b"c\r").is_empty());
+        assert_eq!(
+            feed_all(&mut acc, b"\ndef\n\nx"),
+            vec![
+                LineEvent::Line("abc".into()),
+                LineEvent::Line("def".into()),
+                LineEvent::Line(String::new()),
+            ]
+        );
+        // EOF: the unterminated tail still counts as a line
+        assert_eq!(acc.finish(), Some(LineEvent::Line("x".into())));
+        assert_eq!(acc.finish(), None);
+    }
+
+    #[test]
+    fn accumulator_caps_without_buffering_and_goes_dead() {
+        let mut acc = LineAccumulator::new(10);
+        // 7 + 7 unterminated bytes cross the cap mid-stream: fail now, and
+        // never hold more than cap bytes
+        assert!(feed_all(&mut acc, b"aaaaaaa").is_empty());
+        assert!(acc.buffered() <= 10);
+        assert_eq!(feed_all(&mut acc, b"bbbbbbb"), vec![LineEvent::TooLong]);
+        assert_eq!(acc.buffered(), 0);
+        assert!(acc.is_dead());
+        // dead accumulators swallow everything, even valid lines
+        assert!(feed_all(&mut acc, b"ok\n").is_empty());
+        assert_eq!(acc.finish(), None);
+    }
+
+    #[test]
+    fn accumulator_matches_blocking_reader_on_cap_edge() {
+        // exactly cap bytes + newline: fine (CR counts toward the cap,
+        // stripped after the check — identical to read_line_capped)
+        let mut acc = LineAccumulator::new(10);
+        let mut input = vec![b'b'; 10];
+        input.push(b'\n');
+        assert_eq!(feed_all(&mut acc, &input), vec![LineEvent::Line("b".repeat(10))]);
+        // cap+1 terminated: rejected even though the terminator arrived
+        let mut acc = LineAccumulator::new(10);
+        let mut input = vec![b'c'; 11];
+        input.push(b'\n');
+        assert_eq!(feed_all(&mut acc, &input), vec![LineEvent::TooLong]);
+    }
+
+    #[test]
+    fn accumulator_rejects_invalid_utf8_as_terminal() {
+        let mut acc = LineAccumulator::new(64);
+        assert_eq!(
+            feed_all(&mut acc, &[b'o', b'k', b'\n', 0xff, 0xfe, b'\n', b'z', b'\n']),
+            vec![LineEvent::Line("ok".into()), LineEvent::BadUtf8]
+        );
+        assert!(acc.is_dead(), "bad utf8 must be terminal like LineRead::Err");
+    }
+
+    /// Adversarial byte-stream generator: printable runs, bare `\r`s,
+    /// CRLF, raw (frequently invalid-UTF-8) bytes, cap-crossing runs, and
+    /// multi-byte scalars that fragmentation will split mid-character.
+    fn gen_stream(rng: &mut crate::prng::Pcg64, size: usize) -> Vec<u8> {
+        let mut out = Vec::new();
+        for _ in 0..size {
+            match rng.range_usize(0, 8) {
+                0 => out.push(b'\n'),
+                1 => out.extend_from_slice(b"\r\n"),
+                2 => {
+                    for _ in 0..rng.range_usize(0, 12) {
+                        out.push(rng.range_u64(0x20, 0x7f) as u8);
+                    }
+                }
+                3 => {
+                    for _ in 0..rng.range_usize(1, 6) {
+                        out.push(rng.next_u64() as u8);
+                    }
+                }
+                4 => out.extend(std::iter::repeat(b'x').take(rng.range_usize(8, 40))),
+                5 => out.extend_from_slice("λ🦀é".as_bytes()),
+                6 => out.push(b'\r'),
+                _ => out.push(b'a'),
+            }
+        }
+        out
+    }
+
+    /// The two line splitters are the same function observed differently:
+    /// on any byte stream, any cap, any `BufRead` fill size, and any
+    /// fragmentation, the incremental accumulator must emit exactly the
+    /// events the blocking reader returns — same lines, same structured
+    /// terminal (`TooLong`/`BadUtf8`) at the same point — while never
+    /// buffering more than `cap` bytes.
+    #[test]
+    fn prop_line_splitters_agree_on_adversarial_bytes() {
+        use crate::proputil::{prop_check, PropConfig};
+        prop_check(
+            "line-splitters-agree",
+            PropConfig { cases: 96, max_size: 48 },
+            |rng, size| {
+                let stream = gen_stream(rng, size);
+                let cap = rng.range_usize(1, 32);
+                // small fill sizes force the blocking reader across many
+                // fill_buf boundaries, including mid-scalar ones
+                let chunk = rng.range_usize(1, 17);
+                let mut r =
+                    BufReader::with_capacity(chunk, Cursor::new(stream.clone()));
+                let mut blocking: Vec<LineEvent> = Vec::new();
+                loop {
+                    match read_line_capped(&mut r, cap) {
+                        LineRead::Line(s) => blocking.push(LineEvent::Line(s)),
+                        LineRead::Eof => break,
+                        LineRead::TooLong => {
+                            blocking.push(LineEvent::TooLong);
+                            break;
+                        }
+                        LineRead::Err => {
+                            blocking.push(LineEvent::BadUtf8);
+                            break;
+                        }
+                    }
+                }
+                let mut acc = LineAccumulator::new(cap);
+                let mut evs: Vec<LineEvent> = Vec::new();
+                let mut rest: &[u8] = &stream;
+                while !rest.is_empty() {
+                    let k = rng.range_usize(1, rest.len() + 1);
+                    let (frag, tail) = rest.split_at(k);
+                    acc.feed(frag, |e| {
+                        evs.push(e);
+                        true
+                    });
+                    if acc.buffered() > cap {
+                        return Err(format!(
+                            "buffered {} > cap {cap}",
+                            acc.buffered()
+                        ));
+                    }
+                    rest = tail;
+                }
+                if let Some(e) = acc.finish() {
+                    evs.push(e);
+                }
+                if blocking != evs {
+                    return Err(format!(
+                        "split disagreement (cap {cap}, fill {chunk}):\n  \
+                         blocking    {blocking:?}\n  incremental {evs:?}"
+                    ));
+                }
+                Ok(())
+            },
+        );
+    }
+
+    /// Terminal events are terminal on any input: once an adversarial
+    /// stream kills the accumulator, nothing — not even perfectly valid
+    /// lines — produces further events, and the buffer stays released.
+    #[test]
+    fn prop_dead_accumulator_swallows_everything() {
+        use crate::proputil::{prop_check, PropConfig};
+        prop_check(
+            "dead-accumulator-swallows",
+            PropConfig { cases: 48, max_size: 32 },
+            |rng, size| {
+                let cap = rng.range_usize(1, 16);
+                let mut acc = LineAccumulator::new(cap);
+                // guaranteed kill: a terminated line one past the cap
+                let mut poison = vec![b'p'; cap + 1];
+                poison.push(b'\n');
+                let mut got_terminal = false;
+                acc.feed(&poison, |e| {
+                    got_terminal = matches!(e, LineEvent::TooLong);
+                    true
+                });
+                if !got_terminal {
+                    return Err("poison line did not emit TooLong".into());
+                }
+                let stream = gen_stream(rng, size);
+                let mut leaked = Vec::new();
+                acc.feed(&stream, |e| {
+                    leaked.push(e);
+                    true
+                });
+                if !leaked.is_empty() {
+                    return Err(format!("dead accumulator emitted {leaked:?}"));
+                }
+                if acc.buffered() != 0 || acc.finish().is_some() {
+                    return Err("dead accumulator retained buffered bytes".into());
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn stall_tracker_is_clock_independent() {
+        // synthetic instants only — no sleeping, no wall clock: the stall
+        // decision is pure monotonic arithmetic on the instants handed in
+        let t0 = Instant::now();
+        let budget = Duration::from_millis(200);
+        let mut s = StallTracker::new();
+        assert!(!s.stalled(t0, budget), "never blocked → never stalled");
+        assert_eq!(s.deadline(budget), None);
+
+        s.blocked_at(t0);
+        assert!(!s.stalled(t0 + Duration::from_millis(199), budget));
+        assert!(s.stalled(t0 + Duration::from_millis(200), budget));
+        assert_eq!(s.deadline(budget), Some(t0 + budget));
+
+        // a later blocked_at must NOT reset the epoch — polling the same
+        // stuck connection repeatedly cannot push its deadline out
+        s.blocked_at(t0 + Duration::from_millis(150));
+        assert!(s.stalled(t0 + Duration::from_millis(200), budget));
+
+        // progress clears the window entirely
+        s.progress();
+        assert!(!s.stalled(t0 + Duration::from_secs(3600), budget));
+        s.blocked_at(t0 + Duration::from_secs(1));
+        assert!(!s.stalled(t0 + Duration::from_secs(1), budget));
+        assert!(s.stalled(t0 + Duration::from_secs(2), budget));
+    }
+}

@@ -1,0 +1,709 @@
+//! Readiness-driven I/O driver: every connection multiplexed over
+//! `poll(2)` by a small fixed pool of loop threads (`server.io_threads`,
+//! 1..=8) instead of 2 OS threads per client.
+//!
+//! Mechanics, per shard thread:
+//!
+//! - all sockets are nonblocking; each iteration rebuilds a `pollfd` set
+//!   (wakeup pipe, the listener on shard 0, every connection with its
+//!   current read/write interest) and sleeps in `poll` until something is
+//!   ready or the earliest deadline (write-stall, drain) expires;
+//! - reads pull bounded chunks into a [`LineAccumulator`]; completed lines
+//!   go straight to the protocol layer (`Server::handle_line`) on the loop
+//!   thread;
+//! - writes drain, in order: the loop-local pending queue (lines the
+//!   protocol layer emitted *from this thread* — error lines, cmd
+//!   replies, sheds), then the cross-thread [`Outbox`] that shard workers
+//!   deliver responses into, then the partially-written line buffer;
+//! - a wakeup pipe (the classic self-pipe trick) lets worker threads rouse
+//!   the loop after posting to an outbox, so responses never wait for the
+//!   poll timeout;
+//! - stall-kill maps to *write-readiness timeout*: a [`StallTracker`]
+//!   (monotonic `Instant` arithmetic) starts its window when a write would
+//!   block with output pending and kills the connection once it has been
+//!   continuously unwritable for `server.writer_stall_ms` — the same
+//!   budget the worker-side blocking `Outbox::push` enforces.
+//!
+//! Back-pressure: the loop never blocks on an outbox it drains itself.
+//! Protocol output generated on the loop thread goes to the unbounded
+//! loop-local queue instead, and the loop stops *reading* from a
+//! connection while that queue is non-empty — so a client flooding
+//! garbage lines gets its error replies (bit-for-bit like the threads
+//! driver) but can buffer at most one read burst of them.
+//!
+//! Raw `libc` via `extern "C"` — the crate takes no new dependencies; on
+//! non-unix targets the server falls back to the threads driver.
+
+#![cfg(unix)]
+
+use std::cell::Cell;
+use std::collections::{BTreeMap, VecDeque};
+use std::io::{Read, Write};
+use std::net::{Shutdown, TcpListener, TcpStream};
+use std::os::unix::io::AsRawFd;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use crate::metrics::{Counter, Gauge};
+
+use super::conn::{ConnectionDriver, LineAccumulator, LineEvent, StallTracker};
+use super::outbox::{Outbox, PushError, TryPop};
+use super::Server;
+
+/// Minimal poll(2)/pipe(2) surface, declared directly (`libc` the crate is
+/// not a dependency; libc the library is always linked on unix).
+mod sys {
+    use std::os::raw::{c_int, c_short, c_ulong, c_void};
+
+    #[repr(C)]
+    pub struct Pollfd {
+        pub fd: c_int,
+        pub events: c_short,
+        pub revents: c_short,
+    }
+
+    pub const POLLIN: c_short = 0x001;
+    pub const POLLOUT: c_short = 0x004;
+    pub const POLLERR: c_short = 0x008;
+    pub const POLLHUP: c_short = 0x010;
+    pub const POLLNVAL: c_short = 0x020;
+
+    pub const F_GETFL: c_int = 3;
+    pub const F_SETFL: c_int = 4;
+    #[cfg(target_os = "macos")]
+    pub const O_NONBLOCK: c_int = 0x0004;
+    #[cfg(not(target_os = "macos"))]
+    pub const O_NONBLOCK: c_int = 0o4000;
+
+    extern "C" {
+        pub fn poll(fds: *mut Pollfd, nfds: c_ulong, timeout: c_int) -> c_int;
+        pub fn pipe(fds: *mut c_int) -> c_int;
+        pub fn read(fd: c_int, buf: *mut c_void, count: usize) -> isize;
+        pub fn write(fd: c_int, buf: *const c_void, count: usize) -> isize;
+        pub fn close(fd: c_int) -> c_int;
+        pub fn fcntl(fd: c_int, cmd: c_int, arg: c_int) -> c_int;
+    }
+}
+
+/// Self-pipe wakeup: `wake` writes one byte (nonblocking — a full pipe
+/// already guarantees a pending wakeup), the loop drains on readability.
+struct WakePipe {
+    r: std::os::raw::c_int,
+    w: std::os::raw::c_int,
+}
+
+impl WakePipe {
+    fn new() -> anyhow::Result<WakePipe> {
+        let mut fds = [0 as std::os::raw::c_int; 2];
+        // SAFETY: fds is a valid 2-element buffer; pipe writes both slots
+        // on success and we check the return.
+        if unsafe { sys::pipe(fds.as_mut_ptr()) } != 0 {
+            anyhow::bail!("pipe(2) failed: {}", std::io::Error::last_os_error());
+        }
+        let p = WakePipe { r: fds[0], w: fds[1] };
+        for fd in [p.r, p.w] {
+            // SAFETY: fd is a live descriptor we own.
+            unsafe {
+                let fl = sys::fcntl(fd, sys::F_GETFL, 0);
+                sys::fcntl(fd, sys::F_SETFL, fl | sys::O_NONBLOCK);
+            }
+        }
+        Ok(p)
+    }
+
+    fn wake(&self) {
+        let b = [1u8];
+        // SAFETY: valid 1-byte buffer; EAGAIN (pipe full) is fine — a
+        // wakeup is already pending.
+        unsafe {
+            sys::write(self.w, b.as_ptr() as *const _, 1);
+        }
+    }
+
+    fn drain(&self) {
+        let mut buf = [0u8; 64];
+        // SAFETY: valid buffer; loop until the nonblocking read would
+        // block (or the pipe errors, which also ends the drain).
+        while unsafe { sys::read(self.r, buf.as_mut_ptr() as *mut _, buf.len()) } > 0 {}
+    }
+}
+
+impl Drop for WakePipe {
+    fn drop(&mut self) {
+        // SAFETY: closing descriptors this struct exclusively owns.
+        unsafe {
+            sys::close(self.r);
+            sys::close(self.w);
+        }
+    }
+}
+
+// SAFETY: the wrapped fds are plain integers; write/read on pipe ends are
+// thread-safe syscalls.
+unsafe impl Send for WakePipe {}
+unsafe impl Sync for WakePipe {}
+
+thread_local! {
+    /// Which event-loop shard (if any) the current thread runs. `deliver`
+    /// consults this to route loop-originated lines to the loop-local
+    /// queue instead of blocking on the outbox the same thread drains.
+    static LOOP_SHARD: Cell<Option<usize>> = const { Cell::new(None) };
+}
+
+/// Registry entry shared between `deliver` (any thread) and the owning
+/// loop thread.
+#[derive(Clone)]
+struct ConnEntry {
+    shard: usize,
+    outbox: Arc<Outbox>,
+    local: Arc<Mutex<VecDeque<String>>>,
+    /// Set by a worker-side stall-kill; the loop closes the socket on its
+    /// next iteration.
+    dead: Arc<AtomicBool>,
+}
+
+/// Per-shard mailbox: connections assigned by the acceptor + the wake pipe.
+struct ShardState {
+    wake: WakePipe,
+    inbox: Mutex<Vec<(u64, TcpStream)>>,
+}
+
+/// Loop-thread-owned connection state.
+struct EConn {
+    id: u64,
+    stream: TcpStream,
+    acc: LineAccumulator,
+    outbox: Arc<Outbox>,
+    local: Arc<Mutex<VecDeque<String>>>,
+    dead: Arc<AtomicBool>,
+    /// Partially-written wire line ([`EConn::wpos`] bytes already sent).
+    wbuf: Vec<u8>,
+    wpos: usize,
+    stall: StallTracker,
+    /// False once EOF / a terminal line event arrived: stop polling for
+    /// reads, finish flushing, close.
+    read_open: bool,
+}
+
+impl EConn {
+    fn wants_write(&self) -> bool {
+        self.wpos < self.wbuf.len()
+            || !self.local.lock().unwrap().is_empty()
+            || !self.outbox.is_empty()
+            || self.outbox.is_closed()
+    }
+}
+
+pub(crate) struct EventDriver {
+    server: Arc<Server>,
+    shards: Vec<ShardState>,
+    registry: Mutex<BTreeMap<u64, ConnEntry>>,
+    next_conn: AtomicU64,
+    stopping: AtomicBool,
+    threads: Mutex<Vec<JoinHandle<()>>>,
+    writer_stall: Duration,
+    live: Arc<Gauge>,
+    wakeups: Arc<Counter>,
+    read_events: Arc<Counter>,
+    write_events: Arc<Counter>,
+}
+
+impl EventDriver {
+    pub(crate) fn new(server: Arc<Server>) -> anyhow::Result<Self> {
+        let n = server.cfg.server.io_threads.clamp(1, 8);
+        let mut shards = Vec::with_capacity(n);
+        for _ in 0..n {
+            shards.push(ShardState { wake: WakePipe::new()?, inbox: Mutex::new(Vec::new()) });
+        }
+        let writer_stall = server.writer_stall;
+        let m = &server.metrics;
+        Ok(Self {
+            live: m.gauge("serving.conn.live"),
+            wakeups: m.counter("serving.io.wakeups"),
+            read_events: m.counter("serving.io.read_events"),
+            write_events: m.counter("serving.io.write_events"),
+            server,
+            shards,
+            registry: Mutex::new(BTreeMap::new()),
+            next_conn: AtomicU64::new(0),
+            stopping: AtomicBool::new(false),
+            threads: Mutex::new(Vec::new()),
+            writer_stall,
+        })
+    }
+
+    fn loop_run(&self, shard: usize, listener: Option<TcpListener>) {
+        LOOP_SHARD.with(|s| s.set(Some(shard)));
+        let mut conns: BTreeMap<u64, EConn> = BTreeMap::new();
+        let mut draining = false;
+        let mut drain_deadline: Option<Instant> = None;
+        // index-parallel to the pollfd array: which conn id each fd slot
+        // beyond the fixed ones belongs to
+        let mut fds: Vec<sys::Pollfd> = Vec::new();
+        let mut fd_conn: Vec<u64> = Vec::new();
+
+        loop {
+            // stop() requested: close outboxes (queued lines still drain —
+            // a shutdown reply enqueued moments ago must reach its client)
+            // and give the flush one stall budget to finish
+            if !draining && self.stopping.load(Ordering::Acquire) {
+                draining = true;
+                drain_deadline = Some(Instant::now() + self.writer_stall);
+                for c in conns.values() {
+                    c.outbox.close();
+                }
+            }
+
+            // adopt connections the acceptor assigned to this shard
+            let assigned: Vec<(u64, TcpStream)> =
+                self.shards[shard].inbox.lock().unwrap().drain(..).collect();
+            for (id, stream) in assigned {
+                if draining {
+                    self.registry.lock().unwrap().remove(&id);
+                    let _ = stream.shutdown(Shutdown::Both);
+                    continue;
+                }
+                self.adopt(&mut conns, id, stream);
+            }
+
+            // worker-side stall kills arrive as dead flags
+            let killed: Vec<u64> = conns
+                .iter()
+                .filter(|(_, c)| c.dead.load(Ordering::Acquire))
+                .map(|(id, _)| *id)
+                .collect();
+            for id in killed {
+                self.close_conn(&mut conns, id);
+            }
+
+            // opportunistic flush (newly delivered output should not wait
+            // for a POLLOUT round-trip), then closes for drained conns
+            let flushable: Vec<u64> = conns
+                .iter()
+                .filter(|(_, c)| c.wants_write())
+                .map(|(id, _)| *id)
+                .collect();
+            for id in flushable {
+                if let Some(c) = conns.get_mut(&id) {
+                    if flush_conn(c) {
+                        self.close_conn(&mut conns, id);
+                    }
+                }
+            }
+
+            let now = Instant::now();
+            // kill connections continuously unwritable past the budget —
+            // the event-loop form of the writer stall-kill
+            let stalled: Vec<u64> = conns
+                .iter()
+                .filter(|(_, c)| c.stall.stalled(now, self.writer_stall))
+                .map(|(id, _)| *id)
+                .collect();
+            for id in stalled {
+                self.server.metrics.counter("serving.conn.stalled").inc();
+                self.close_conn(&mut conns, id);
+            }
+            // a read-closed conn with nothing left to flush is done
+            let finished: Vec<u64> = conns
+                .iter()
+                .filter(|(_, c)| !c.read_open && !c.wants_write())
+                .map(|(id, _)| *id)
+                .collect();
+            for id in finished {
+                self.close_conn(&mut conns, id);
+            }
+
+            if draining {
+                let past = drain_deadline.is_some_and(|d| Instant::now() >= d);
+                if past {
+                    let ids: Vec<u64> = conns.keys().copied().collect();
+                    for id in ids {
+                        self.close_conn(&mut conns, id);
+                    }
+                }
+                if conns.is_empty() {
+                    break;
+                }
+            }
+
+            // build this iteration's interest set
+            fds.clear();
+            fd_conn.clear();
+            fds.push(sys::Pollfd {
+                fd: self.shards[shard].wake.r,
+                events: sys::POLLIN,
+                revents: 0,
+            });
+            let accept_open = listener.is_some()
+                && !draining
+                && !self.server.shutdown.load(Ordering::Acquire);
+            if let (true, Some(l)) = (accept_open, listener.as_ref()) {
+                fds.push(sys::Pollfd {
+                    fd: l.as_raw_fd(),
+                    events: sys::POLLIN,
+                    revents: 0,
+                });
+            }
+            let fixed = fds.len();
+            let mut next_deadline: Option<Instant> = drain_deadline;
+            for (id, c) in conns.iter() {
+                let mut ev: std::os::raw::c_short = 0;
+                // back-pressure: no reads while loop-generated output is
+                // still queued (its volume is client-controlled)
+                if c.read_open && !draining && c.local.lock().unwrap().is_empty() {
+                    ev |= sys::POLLIN;
+                }
+                if c.wants_write() {
+                    ev |= sys::POLLOUT;
+                }
+                if ev == 0 {
+                    continue;
+                }
+                if let Some(d) = c.stall.deadline(self.writer_stall) {
+                    next_deadline =
+                        Some(next_deadline.map_or(d, |cur: Instant| cur.min(d)));
+                }
+                fds.push(sys::Pollfd { fd: c.stream.as_raw_fd(), events: ev, revents: 0 });
+                fd_conn.push(*id);
+            }
+
+            let timeout_ms = match next_deadline {
+                None => 250,
+                Some(d) => d
+                    .saturating_duration_since(Instant::now())
+                    .as_millis()
+                    .min(250) as std::os::raw::c_int,
+            };
+            // SAFETY: fds is a live, correctly-sized Pollfd array for the
+            // duration of the call.
+            let n = unsafe {
+                sys::poll(fds.as_mut_ptr(), fds.len() as std::os::raw::c_ulong, timeout_ms)
+            };
+            if n < 0 {
+                let err = std::io::Error::last_os_error();
+                if err.kind() == std::io::ErrorKind::Interrupted {
+                    continue;
+                }
+                eprintln!("io shard {shard}: poll failed: {err}");
+                std::thread::sleep(Duration::from_millis(5));
+                continue;
+            }
+
+            if fds[0].revents != 0 {
+                self.wakeups.inc();
+                self.shards[shard].wake.drain();
+            }
+            if accept_open && fixed > 1 && fds[1].revents != 0 {
+                self.accept_burst(listener.as_ref().unwrap(), &mut conns);
+            }
+            for (slot, id) in fd_conn.iter().enumerate() {
+                let re = fds[fixed + slot].revents;
+                if re == 0 {
+                    continue;
+                }
+                let Some(c) = conns.get_mut(id) else { continue };
+                let err_bits = sys::POLLERR | sys::POLLHUP | sys::POLLNVAL;
+                if re & (sys::POLLIN | err_bits) != 0 && c.read_open {
+                    self.read_events.inc();
+                    self.read_burst(c);
+                } else if re & err_bits != 0 {
+                    // error/hangup with reads already closed: unwritable —
+                    // nothing pending can ever flush
+                    c.outbox.close_discard();
+                    c.local.lock().unwrap().clear();
+                    c.wbuf.clear();
+                    c.wpos = 0;
+                    c.read_open = false;
+                }
+                if re & sys::POLLOUT != 0 {
+                    self.write_events.inc();
+                    let done = {
+                        let c = conns.get_mut(id).unwrap();
+                        flush_conn(c)
+                    };
+                    if done {
+                        let id = *id;
+                        self.close_conn(&mut conns, id);
+                    }
+                }
+            }
+        }
+
+        // shard exit: everything should already be closed; be thorough
+        let ids: Vec<u64> = conns.keys().copied().collect();
+        for id in ids {
+            self.close_conn(&mut conns, id);
+        }
+        LOOP_SHARD.with(|s| s.set(None));
+    }
+
+    fn accept_burst(&self, listener: &TcpListener, conns: &mut BTreeMap<u64, EConn>) {
+        loop {
+            match listener.accept() {
+                Ok((stream, _)) => {
+                    let max = self.server.cfg.server.max_connections;
+                    if max > 0 && self.registry.lock().unwrap().len() >= max {
+                        self.refuse(stream);
+                        continue;
+                    }
+                    let id = self.next_conn.fetch_add(1, Ordering::Relaxed) + 1;
+                    let shard = (id as usize) % self.shards.len();
+                    let entry = ConnEntry {
+                        shard,
+                        outbox: Arc::new(Outbox::new(self.server.cfg.server.outbox_depth)),
+                        local: Arc::new(Mutex::new(VecDeque::new())),
+                        dead: Arc::new(AtomicBool::new(false)),
+                    };
+                    self.registry.lock().unwrap().insert(id, entry);
+                    if shard == 0 {
+                        self.adopt(conns, id, stream);
+                    } else {
+                        self.shards[shard].inbox.lock().unwrap().push((id, stream));
+                        self.shards[shard].wake.wake();
+                    }
+                }
+                Err(ref e) if e.kind() == std::io::ErrorKind::WouldBlock => return,
+                Err(e) => {
+                    eprintln!("accept failed: {e}");
+                    self.server.signal_shutdown();
+                    return;
+                }
+            }
+        }
+    }
+
+    /// Over the connection cap: one best-effort nonblocking write of the
+    /// refusal line, then hang up. The loop never blocks for a client that
+    /// was never admitted.
+    fn refuse(&self, stream: TcpStream) {
+        let line = self.server.refusal_line();
+        let _ = stream.set_nonblocking(true);
+        let mut s = &stream;
+        let _ = s.write_all(format!("{line}\n").as_bytes());
+        let _ = stream.shutdown(Shutdown::Both);
+    }
+
+    /// Take ownership of an assigned connection on this loop thread.
+    fn adopt(&self, conns: &mut BTreeMap<u64, EConn>, id: u64, stream: TcpStream) {
+        if stream.set_nonblocking(true).is_err() {
+            self.registry.lock().unwrap().remove(&id);
+            let _ = stream.shutdown(Shutdown::Both);
+            return;
+        }
+        let Some(entry) = self.registry.lock().unwrap().get(&id).cloned() else {
+            let _ = stream.shutdown(Shutdown::Both);
+            return;
+        };
+        conns.insert(
+            id,
+            EConn {
+                id,
+                stream,
+                acc: LineAccumulator::new(self.server.cfg.server.max_line_bytes),
+                outbox: entry.outbox,
+                local: entry.local,
+                dead: entry.dead,
+                wbuf: Vec::new(),
+                wpos: 0,
+                stall: StallTracker::new(),
+                read_open: true,
+            },
+        );
+        self.server.metrics.counter("serving.conn.opened").inc();
+        self.live.add(1.0);
+    }
+
+    /// Bounded read burst: up to 8 chunks per readiness event, so one
+    /// fire-hose client cannot starve its shard (level-triggered poll
+    /// re-reports leftover data next iteration).
+    fn read_burst(&self, c: &mut EConn) {
+        let mut buf = [0u8; 4096];
+        for _ in 0..8 {
+            match (&c.stream).read(&mut buf) {
+                Ok(0) => {
+                    // EOF: an unterminated tail still counts as a line
+                    if let Some(LineEvent::Line(l)) = c.acc.finish() {
+                        self.server.handle_line(c.id, &l);
+                    }
+                    self.conn_read_closed(c, true);
+                    return;
+                }
+                Ok(n) => {
+                    let server = &self.server;
+                    let id = c.id;
+                    let mut oversize = false;
+                    c.acc.feed(&buf[..n], |ev| match ev {
+                        LineEvent::Line(l) => {
+                            server.handle_line(id, &l);
+                            true
+                        }
+                        LineEvent::TooLong => {
+                            oversize = true;
+                            false
+                        }
+                        LineEvent::BadUtf8 => false,
+                    });
+                    if oversize {
+                        // structured error first, then close — matching
+                        // the blocking reader's wire behavior exactly
+                        self.server.on_oversize_line(c.id);
+                    }
+                    if c.acc.is_dead() {
+                        self.conn_read_closed(c, true);
+                        return;
+                    }
+                    // loop-generated replies pending: pause reading (the
+                    // interest set skips POLLIN until they flush)
+                    if !c.local.lock().unwrap().is_empty() {
+                        return;
+                    }
+                }
+                Err(ref e) if e.kind() == std::io::ErrorKind::WouldBlock => return,
+                Err(ref e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+                Err(_) => {
+                    self.conn_read_closed(c, false);
+                    return;
+                }
+            }
+        }
+    }
+
+    /// The read side is finished (EOF, protocol error, or socket error):
+    /// purge routing — in-flight responses have nowhere to go — and close
+    /// the outbox so it drains (`drain`) or discards, then let the flush
+    /// path finish and close the socket.
+    fn conn_read_closed(&self, c: &mut EConn, drain: bool) {
+        c.read_open = false;
+        self.server.conn_gone(c.id);
+        // deny new deliveries immediately (threads mode removes the conn
+        // from its map at reader exit for the same reason)
+        self.registry.lock().unwrap().remove(&c.id);
+        if drain {
+            c.outbox.close();
+        } else {
+            c.outbox.close_discard();
+        }
+    }
+
+    fn close_conn(&self, conns: &mut BTreeMap<u64, EConn>, id: u64) {
+        let Some(c) = conns.remove(&id) else { return };
+        self.registry.lock().unwrap().remove(&id);
+        c.outbox.close_discard();
+        let _ = c.stream.shutdown(Shutdown::Both);
+        self.server.conn_gone(id);
+        self.server.metrics.counter("serving.conn.closed").inc();
+        self.live.add(-1.0);
+    }
+}
+
+/// Drain pending output to the socket without blocking. Returns true when
+/// the connection is fully drained *and* its outbox is closed — i.e. it
+/// should be closed now.
+fn flush_conn(c: &mut EConn) -> bool {
+    loop {
+        if c.wpos == c.wbuf.len() {
+            c.wbuf.clear();
+            c.wpos = 0;
+            // loop-local lines first (error replies, cmd responses) —
+            // small, latency-sensitive, and gating read back-pressure
+            let next = c.local.lock().unwrap().pop_front();
+            match next {
+                Some(line) => {
+                    c.wbuf = line.into_bytes();
+                    c.wbuf.push(b'\n');
+                }
+                None => match c.outbox.try_pop() {
+                    TryPop::Line(line) => {
+                        c.wbuf = line.into_bytes();
+                        c.wbuf.push(b'\n');
+                    }
+                    TryPop::Empty => {
+                        c.stall.progress();
+                        return false;
+                    }
+                    TryPop::Done => {
+                        c.stall.progress();
+                        return true;
+                    }
+                },
+            }
+        }
+        match (&c.stream).write(&c.wbuf[c.wpos..]) {
+            Ok(0) => return true,
+            Ok(n) => {
+                c.wpos += n;
+                c.stall.progress();
+            }
+            Err(ref e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                c.stall.blocked_at(Instant::now());
+                return false;
+            }
+            Err(ref e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+            Err(_) => {
+                c.outbox.close_discard();
+                c.local.lock().unwrap().clear();
+                return true;
+            }
+        }
+    }
+}
+
+impl ConnectionDriver for EventDriver {
+    fn start(self: Arc<Self>, listener: TcpListener) -> anyhow::Result<()> {
+        listener.set_nonblocking(true)?;
+        let n = self.shards.len();
+        let mut listener = Some(listener);
+        let mut threads = Vec::with_capacity(n);
+        for shard in 0..n {
+            let driver = self.clone();
+            // shard 0 owns the listener; the others only serve assigned fds
+            let l = listener.take();
+            threads.push(std::thread::spawn(move || driver.loop_run(shard, l)));
+        }
+        *self.threads.lock().unwrap() = threads;
+        Ok(())
+    }
+
+    fn deliver(&self, conn: u64, line: &str) {
+        let entry = self.registry.lock().unwrap().get(&conn).cloned();
+        let Some(e) = entry else { return };
+        let on_loop = LOOP_SHARD.with(|s| s.get());
+        if let Some(cur) = on_loop {
+            // protocol output generated on a loop thread: the unbounded
+            // loop-local queue (this thread drains it — blocking on the
+            // bounded outbox here would be a self-deadlock; read-side
+            // back-pressure bounds the queue instead)
+            e.local.lock().unwrap().push_back(line.to_string());
+            if cur != e.shard {
+                self.shards[e.shard].wake.wake();
+            }
+            return;
+        }
+        // worker threads: the PR-6 contract — block at most writer_stall
+        // on a full outbox, then declare the connection stalled and kill
+        match e.outbox.push(line.to_string(), self.writer_stall) {
+            Ok(()) => self.shards[e.shard].wake.wake(),
+            Err(PushError::Stalled) => {
+                self.server.metrics.counter("serving.conn.stalled").inc();
+                e.outbox.close_discard();
+                e.dead.store(true, Ordering::Release);
+                self.shards[e.shard].wake.wake();
+            }
+            Err(PushError::Closed) => {}
+        }
+    }
+
+    fn stop(&self) {
+        self.stopping.store(true, Ordering::Release);
+        for s in &self.shards {
+            s.wake.wake();
+        }
+        let threads = std::mem::take(&mut *self.threads.lock().unwrap());
+        for t in threads {
+            let _ = t.join();
+        }
+        self.registry.lock().unwrap().clear();
+    }
+}

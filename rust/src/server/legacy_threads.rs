@@ -1,0 +1,233 @@
+//! Thread-per-connection I/O driver: the historical front door, kept as
+//! the bit-for-bit wire-behavior reference for the event loop (the same
+//! role wave decode plays for the continuous engine).
+//!
+//! One acceptor thread owns the listener; every accepted connection gets a
+//! *reader* thread (blocking capped line reads feeding the protocol layer)
+//! and a *writer* thread (draining the connection's bounded [`Outbox`] to
+//! the socket, the only thread that blocks on it). 2 threads per client is
+//! exactly why this driver is no longer the default — but its behavior is
+//! simple to reason about, so `[server] io_mode = "threads"` stays
+//! available and `tests/overload.rs` runs against both drivers.
+
+use std::collections::BTreeMap;
+use std::io::{BufReader, Write};
+use std::net::{Shutdown, TcpListener, TcpStream};
+use std::sync::atomic::Ordering;
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+use super::conn::{read_line_capped, ConnectionDriver, LineRead};
+use super::outbox::{Outbox, PushError};
+use super::Server;
+
+/// One live connection: the write half (a socket clone with a send
+/// timeout) plus the bounded outbox its writer thread drains.
+struct ThreadConn {
+    id: u64,
+    outbox: Outbox,
+    /// Write/shutdown half. `Shutdown::Both` on this clone also EOFs the
+    /// reader blocked on the original — that is how teardown unblocks it.
+    stream: TcpStream,
+}
+
+/// A connection's two threads, joined on reap or shutdown.
+struct ConnThreads {
+    reader: JoinHandle<()>,
+    writer: JoinHandle<()>,
+}
+
+pub(crate) struct ThreadsDriver {
+    server: Arc<Server>,
+    conns: Mutex<BTreeMap<u64, Arc<ThreadConn>>>,
+    threads: Mutex<Vec<ConnThreads>>,
+    acceptor: Mutex<Option<JoinHandle<()>>>,
+}
+
+impl ThreadsDriver {
+    pub(crate) fn new(server: Arc<Server>) -> Self {
+        Self {
+            server,
+            conns: Mutex::new(BTreeMap::new()),
+            threads: Mutex::new(Vec::new()),
+            acceptor: Mutex::new(None),
+        }
+    }
+
+    fn accept_loop(self: &Arc<Self>, listener: TcpListener) {
+        let mut conn_id = 0u64;
+        while !self.server.shutdown.load(Ordering::Acquire) {
+            match listener.accept() {
+                Ok((stream, _)) => {
+                    self.reap_finished();
+                    let max = self.server.cfg.server.max_connections;
+                    if max > 0 && self.conns.lock().unwrap().len() >= max {
+                        self.refuse_connection(stream);
+                        continue;
+                    }
+                    conn_id += 1;
+                    self.spawn_conn(conn_id, stream);
+                }
+                Err(ref e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                    std::thread::sleep(Duration::from_millis(5));
+                }
+                Err(e) => {
+                    // a fatal accept error ends serving: signal shutdown so
+                    // run() proceeds to the orderly teardown
+                    eprintln!("accept failed: {e}");
+                    self.server.signal_shutdown();
+                    return;
+                }
+            }
+        }
+    }
+
+    /// Join connection threads that already exited (client went away) so a
+    /// long-lived server doesn't accumulate dead handles.
+    fn reap_finished(&self) {
+        let mut threads = self.threads.lock().unwrap();
+        let mut i = 0;
+        while i < threads.len() {
+            if threads[i].reader.is_finished() && threads[i].writer.is_finished() {
+                let t = threads.swap_remove(i);
+                let _ = t.reader.join();
+                let _ = t.writer.join();
+            } else {
+                i += 1;
+            }
+        }
+    }
+
+    /// Over the connection cap: tell the client why and hang up. The write
+    /// happens on the acceptor thread, so it gets the same stall bound as
+    /// any writer.
+    fn refuse_connection(&self, stream: TcpStream) {
+        let line = self.server.refusal_line();
+        let _ = stream.set_write_timeout(Some(self.server.writer_stall));
+        let mut s = &stream;
+        let _ = writeln!(s, "{line}");
+        let _ = s.flush();
+        let _ = stream.shutdown(Shutdown::Both);
+    }
+
+    fn spawn_conn(self: &Arc<Self>, conn_id: u64, stream: TcpStream) {
+        stream.set_nonblocking(false).ok();
+        let wstream = match stream.try_clone() {
+            Ok(s) => s,
+            Err(e) => {
+                eprintln!("conn {conn_id}: stream clone failed: {e}");
+                return;
+            }
+        };
+        // bound every blocking send: a stalled client errors the writer out
+        // instead of wedging it (and with it, shutdown's join)
+        let _ = wstream.set_write_timeout(Some(self.server.writer_stall));
+        let conn = Arc::new(ThreadConn {
+            id: conn_id,
+            outbox: Outbox::new(self.server.cfg.server.outbox_depth),
+            stream: wstream,
+        });
+        self.conns.lock().unwrap().insert(conn_id, conn.clone());
+        self.server.metrics.counter("serving.conn.opened").inc();
+        self.server.metrics.gauge("serving.conn.live").add(1.0);
+
+        // writer: the only thread that blocks on this socket
+        let wconn = conn.clone();
+        let writer = std::thread::spawn(move || {
+            while let Some(line) = wconn.outbox.pop() {
+                let mut s = &wconn.stream;
+                if writeln!(s, "{line}").and_then(|()| s.flush()).is_err() {
+                    // unwritable client: drop queued lines so producers
+                    // fail fast instead of stalling out one by one
+                    wconn.outbox.close_discard();
+                    break;
+                }
+            }
+            // EOFs the reader blocked on the other clone of this socket
+            let _ = wconn.stream.shutdown(Shutdown::Both);
+        });
+
+        let driver = self.clone();
+        let reader = std::thread::spawn(move || {
+            driver.reader_loop(&conn, stream);
+            // teardown: responses for this connection's in-flight requests
+            // have nowhere to go — purge their routing entries (they used
+            // to leak until a response happened to arrive)
+            driver.server.conn_gone(conn.id);
+            driver.conns.lock().unwrap().remove(&conn.id);
+            conn.outbox.close();
+            driver.server.metrics.counter("serving.conn.closed").inc();
+            driver.server.metrics.gauge("serving.conn.live").add(-1.0);
+        });
+        self.threads.lock().unwrap().push(ConnThreads { reader, writer });
+    }
+
+    fn reader_loop(&self, conn: &Arc<ThreadConn>, stream: TcpStream) {
+        let cap = self.server.cfg.server.max_line_bytes;
+        let mut reader = BufReader::new(stream);
+        loop {
+            match read_line_capped(&mut reader, cap) {
+                LineRead::Line(l) => self.server.handle_line(conn.id, &l),
+                LineRead::Eof => break,
+                LineRead::TooLong => {
+                    // a single never-ending line must not OOM the reader:
+                    // fail the connection with a structured error
+                    self.server.on_oversize_line(conn.id);
+                    break;
+                }
+                LineRead::Err => break,
+            }
+        }
+    }
+}
+
+impl ConnectionDriver for ThreadsDriver {
+    fn start(self: Arc<Self>, listener: TcpListener) -> anyhow::Result<()> {
+        listener.set_nonblocking(true)?;
+        let driver = self.clone();
+        let h = std::thread::spawn(move || driver.accept_loop(listener));
+        *self.acceptor.lock().unwrap() = Some(h);
+        Ok(())
+    }
+
+    /// Enqueue a line on the connection's outbox. Never blocks longer than
+    /// the writer-stall bound: a connection whose outbox stays full past it
+    /// (writer wedged on an unreadable client) is killed, so shard workers
+    /// delivering responses stay live no matter what clients do.
+    fn deliver(&self, conn: u64, line: &str) {
+        let c = self.conns.lock().unwrap().get(&conn).cloned();
+        let Some(c) = c else { return };
+        match c.outbox.push(line.to_string(), self.server.writer_stall) {
+            Ok(()) => {}
+            Err(PushError::Stalled) => {
+                self.server.metrics.counter("serving.conn.stalled").inc();
+                c.outbox.close_discard();
+                let _ = c.stream.shutdown(Shutdown::Both);
+            }
+            // connection already gone: the line has no recipient
+            Err(PushError::Closed) => {}
+        }
+    }
+
+    /// Close every live connection and join its threads (shutdown path).
+    /// Outboxes drain their queued lines first, so a shutdown response
+    /// enqueued moments ago still reaches its client.
+    fn stop(&self) {
+        if let Some(h) = self.acceptor.lock().unwrap().take() {
+            let _ = h.join();
+        }
+        let conns: Vec<Arc<ThreadConn>> =
+            self.conns.lock().unwrap().values().cloned().collect();
+        for c in &conns {
+            c.outbox.close();
+        }
+        // take the handles out before joining: reader exit paths lock the
+        // maps this thread would otherwise hold
+        let threads = std::mem::take(&mut *self.threads.lock().unwrap());
+        for t in threads {
+            let _ = t.writer.join();
+            let _ = t.reader.join();
+        }
+    }
+}

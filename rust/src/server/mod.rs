@@ -12,14 +12,27 @@
 //! Overload rejections are `{"error": "overloaded", "retry_after_ms": N}`
 //! lines (see docs/PROTOCOL.md for the full error-line inventory).
 //!
-//! One acceptor thread per listener; each connection gets a *reader* thread
-//! that feeds the shared [`Batcher`] and a *writer* thread that drains the
-//! connection's bounded [`Outbox`] to the socket. A [`ShardPool`] of
-//! `server.workers` scheduler threads (each owning its own `!Send` Engine)
-//! drains mixed-domain epochs concurrently; workers deliver responses into
-//! outboxes, never directly onto sockets, so a slow client's TCP buffer can
-//! stall at most its own connection (and only up to `writer_stall_ms`,
-//! after which the connection is killed).
+//! This module is the *protocol* layer: request parsing and dispatch,
+//! admission, response routing, the wire format. Moving bytes is delegated
+//! to a `ConnectionDriver` (a crate-private seam in `conn`) chosen by
+//! `[server] io_mode`:
+//!
+//! - `event` (default, `event_loop::EventDriver`): every socket
+//!   multiplexed over `poll(2)` by `server.io_threads` loop threads
+//!   (1..=8) — O(1) threads regardless of connection count;
+//! - `threads` (`legacy_threads::ThreadsDriver`): the historical
+//!   reader+writer thread pair per connection, kept as the bit-for-bit
+//!   wire-behavior reference.
+//!
+//! Wire behavior is identical across drivers; `tests/overload.rs` runs
+//! against both. A [`ShardPool`] of `server.workers` scheduler threads
+//! (each owning its own `!Send` Engine) drains mixed-domain epochs
+//! concurrently; workers deliver responses through the driver into
+//! per-connection bounded [`Outbox`]es, never directly onto sockets, so a
+//! slow client can stall at most its own connection (and only up to
+//! `writer_stall_ms`, after which the connection is killed — by push
+//! timeout in threads mode, by monotonic write-readiness timeout in event
+//! mode).
 //!
 //! The front door is overload-safe: the batcher queue is bounded
 //! (`server.max_queue_depth`), concurrently accepted connections are capped
@@ -28,7 +41,7 @@
 //! [`AdmissionController`] degrades incoming queries onto the weak routing
 //! arm and then sheds them as queue pressure builds (escalated when the
 //! budget controller reports saturation). Graceful shutdown closes every
-//! live connection and joins both of its threads.
+//! live connection and joins every driver thread.
 //!
 //! Response routing is keyed by the server-allocated internal request id —
 //! never by the client-supplied id, which two connections (or pipelined
@@ -37,21 +50,24 @@
 //! exactly (non-negative integers < 2^63), never through a lossy f64.
 
 mod admission;
+mod conn;
+mod event_loop;
+mod legacy_threads;
 mod outbox;
 
 pub use admission::{AdmissionController, AdmissionDecision};
-pub use outbox::{Outbox, PushError};
+pub use outbox::{Outbox, PushError, TryPop};
 
 use std::collections::BTreeMap;
 use std::io::{BufRead, BufReader, Write};
-use std::net::{Shutdown, TcpListener, TcpStream};
+use std::net::{TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
-use std::sync::{Arc, Mutex};
+use std::sync::{Arc, Condvar, Mutex};
 use std::time::Duration;
 
 use anyhow::Result;
 
-use crate::config::{Config, ProcedureKind};
+use crate::config::{Config, IoMode, ProcedureKind};
 use crate::jsonio::{self, Json};
 use crate::metrics::Registry;
 use crate::serving::batcher::{Batcher, Submit};
@@ -59,21 +75,7 @@ use crate::serving::scheduler::SchedulerShared;
 use crate::serving::shard::{EpochSink, ShardPool};
 use crate::serving::{Request, Response};
 
-/// One live connection: the write half (a socket clone with a send timeout)
-/// plus the bounded outbox its writer thread drains.
-struct Conn {
-    id: u64,
-    outbox: Outbox,
-    /// Write/shutdown half. `Shutdown::Both` on this clone also EOFs the
-    /// reader blocked on the original — that is how teardown unblocks it.
-    stream: TcpStream,
-}
-
-/// A connection's two threads, joined on reap or shutdown.
-struct ConnThreads {
-    reader: std::thread::JoinHandle<()>,
-    writer: std::thread::JoinHandle<()>,
-}
+use conn::ConnectionDriver;
 
 pub struct Server {
     pub addr: String,
@@ -84,30 +86,31 @@ pub struct Server {
     /// can consult the budget controller's saturation signal.
     shared: Arc<SchedulerShared>,
     admission: AdmissionController,
-    conns: Mutex<BTreeMap<u64, Arc<Conn>>>,
-    threads: Mutex<Vec<ConnThreads>>,
+    /// Map internal request id → connection id (the client id travels
+    /// inside [`Response`] itself).
+    routing: Mutex<BTreeMap<u64, u64>>,
+    /// The active I/O driver; populated for the duration of [`Server::run`]
+    /// (and cleared after, breaking the Arc cycle driver ↔ server).
+    driver: Mutex<Option<Arc<dyn ConnectionDriver>>>,
     next_req: AtomicU64,
-    shutdown: Arc<AtomicBool>,
+    shutdown: AtomicBool,
+    /// Condvar pairing for [`Server::shutdown`]: `run` parks here instead
+    /// of spin-polling, and any shutdown source (cmd, fatal worker error,
+    /// fatal accept error) rouses it via [`Server::signal_shutdown`].
+    shutdown_sig: (Mutex<bool>, Condvar),
     writer_stall: Duration,
-}
-
-/// Map internal request id → connection id (the client id travels inside
-/// [`Response`] itself).
-struct Routing {
-    map: Mutex<BTreeMap<u64, u64>>,
 }
 
 /// Delivery half of the scheduler workers: routes responses to their
 /// originating connection, synthesizes error responses for failed epochs.
 struct ServerSink {
     server: Arc<Server>,
-    routing: Arc<Routing>,
     default_procedure: ProcedureKind,
 }
 
 impl EpochSink for ServerSink {
     fn on_response(&self, resp: Response) {
-        self.server.send_response(&self.routing, resp);
+        self.server.send_response(resp);
     }
 
     fn on_epoch_error(
@@ -121,26 +124,23 @@ impl EpochSink for ServerSink {
         // old path reported latency_us: 0 here)
         let latency_us = elapsed.as_micros() as u64;
         for r in epoch {
-            self.server.send_response(
-                &self.routing,
-                Response {
-                    id: r.id,
-                    client_id: r.client_id,
-                    response: format!("error: {err}"),
-                    ok: false,
-                    budget: 0,
-                    predicted: 0.0,
-                    reward: 0.0,
-                    latency_us,
-                    procedure: r.procedure.unwrap_or(self.default_procedure),
-                },
-            );
+            self.server.send_response(Response {
+                id: r.id,
+                client_id: r.client_id,
+                response: format!("error: {err}"),
+                ok: false,
+                budget: 0,
+                predicted: 0.0,
+                reward: 0.0,
+                latency_us,
+                procedure: r.procedure.unwrap_or(self.default_procedure),
+            });
         }
     }
 
     fn on_fatal(&self, worker: usize, err: &anyhow::Error) {
         eprintln!("worker {worker}: engine load failed: {err:#}");
-        self.server.shutdown.store(true, Ordering::Release);
+        self.server.signal_shutdown();
         self.server.batcher.close();
         // the failing worker may have been the only drainer: fail whatever
         // was already queued back to its clients instead of stranding it.
@@ -180,10 +180,11 @@ impl Server {
             batcher,
             shared,
             admission,
-            conns: Mutex::new(BTreeMap::new()),
-            threads: Mutex::new(Vec::new()),
+            routing: Mutex::new(BTreeMap::new()),
+            driver: Mutex::new(None),
             next_req: AtomicU64::new(1),
-            shutdown: Arc::new(AtomicBool::new(false)),
+            shutdown: AtomicBool::new(false),
+            shutdown_sig: (Mutex::new(false), Condvar::new()),
             writer_stall,
         })
     }
@@ -192,17 +193,13 @@ impl Server {
     /// through `on_ready` (port 0 supported for tests).
     pub fn run(self: &Arc<Self>, on_ready: impl FnOnce(String)) -> Result<()> {
         let listener = TcpListener::bind(&self.addr)?;
-        listener.set_nonblocking(true)?;
         on_ready(listener.local_addr()?.to_string());
-
-        let routing = Arc::new(Routing { map: Mutex::new(BTreeMap::new()) });
 
         // scheduler shard pool: `server.workers` threads, each owning its
         // own Engine (xla handles are !Send), draining the shared batcher
         // concurrently; fitted policies + the prediction cache are shared
         let sink = Arc::new(ServerSink {
             server: self.clone(),
-            routing: routing.clone(),
             default_procedure: self.cfg.route.procedure,
         });
         let pool = ShardPool::spawn(
@@ -212,165 +209,104 @@ impl Server {
             sink,
         );
 
-        // accept loop
-        let mut conn_id = 0u64;
-        while !self.shutdown.load(Ordering::Acquire) {
-            match listener.accept() {
-                Ok((stream, _)) => {
-                    self.reap_finished();
-                    let max = self.cfg.server.max_connections;
-                    if max > 0 && self.conns.lock().unwrap().len() >= max {
-                        self.refuse_connection(stream);
-                        continue;
-                    }
-                    conn_id += 1;
-                    self.spawn_conn(conn_id, stream, routing.clone());
-                }
-                Err(ref e) if e.kind() == std::io::ErrorKind::WouldBlock => {
-                    std::thread::sleep(Duration::from_millis(5));
-                }
-                Err(e) => return Err(e.into()),
-            }
-        }
-        // orderly teardown: stop admitting, drain the workers, then close
-        // every live connection and join its reader+writer — no thread of
-        // this server outlives run()
+        let driver = self.make_driver()?;
+        *self.driver.lock().unwrap() = Some(driver.clone());
+        driver.clone().start(listener)?;
+
+        // the protocol layer runs on driver + worker threads; this thread
+        // just waits for a shutdown source, then tears down in order:
+        // stop admitting work, drain the workers (late responses still
+        // flow through the driver), then drain + close every connection
+        // and join every I/O thread — no thread of this server outlives
+        // run()
+        self.wait_shutdown();
         self.batcher.close();
         pool.join();
-        self.close_connections();
+        driver.stop();
+        *self.driver.lock().unwrap() = None;
         Ok(())
     }
 
-    /// Join connection threads that already exited (client went away) so a
-    /// long-lived server doesn't accumulate dead handles.
-    fn reap_finished(&self) {
-        let mut threads = self.threads.lock().unwrap();
-        let mut i = 0;
-        while i < threads.len() {
-            if threads[i].reader.is_finished() && threads[i].writer.is_finished() {
-                let t = threads.swap_remove(i);
-                let _ = t.reader.join();
-                let _ = t.writer.join();
-            } else {
-                i += 1;
+    /// Instantiate the configured [`ConnectionDriver`]. Non-unix targets
+    /// have no poll(2): they fall back to the threads driver.
+    fn make_driver(self: &Arc<Self>) -> Result<Arc<dyn ConnectionDriver>> {
+        match self.cfg.server.io_mode {
+            IoMode::Threads => {
+                Ok(Arc::new(legacy_threads::ThreadsDriver::new(self.clone())))
+            }
+            #[cfg(unix)]
+            IoMode::Event => Ok(Arc::new(event_loop::EventDriver::new(self.clone())?)),
+            #[cfg(not(unix))]
+            IoMode::Event => {
+                eprintln!(
+                    "io_mode = \"event\" needs poll(2); falling back to \
+                     io_mode = \"threads\" on this platform"
+                );
+                Ok(Arc::new(legacy_threads::ThreadsDriver::new(self.clone())))
             }
         }
     }
 
-    /// Over the connection cap: tell the client why and hang up. The write
-    /// happens on the acceptor thread, so it gets the same stall bound as
-    /// any writer.
-    fn refuse_connection(&self, stream: TcpStream) {
+    /// Mark the server as shutting down and rouse [`Server::run`].
+    fn signal_shutdown(&self) {
+        self.shutdown.store(true, Ordering::Release);
+        *self.shutdown_sig.0.lock().unwrap() = true;
+        self.shutdown_sig.1.notify_all();
+    }
+
+    fn wait_shutdown(&self) {
+        let mut stopped = self.shutdown_sig.0.lock().unwrap();
+        while !*stopped {
+            stopped = self.shutdown_sig.1.wait(stopped).unwrap();
+        }
+    }
+
+    /// One complete wire line from a connection: parse and dispatch. Called
+    /// by whichever driver thread read it; everything downstream (admission,
+    /// submit, response lines) is non-blocking except the bounded-by-stall
+    /// outbox push inside [`Server::write_line`].
+    fn handle_line(self: &Arc<Self>, conn: u64, line: &str) {
+        if line.trim().is_empty() {
+            return;
+        }
+        match jsonio::parse(line) {
+            Ok(v) => self.handle_request(conn, &v),
+            Err(e) => self.write_error(conn, &e.to_string()),
+        }
+    }
+
+    /// A connection's read side ended with an oversize line: count it and
+    /// send the structured error (the driver closes the connection after
+    /// the error line flushes).
+    fn on_oversize_line(&self, conn: u64) {
+        let cap = self.cfg.server.max_line_bytes;
+        self.metrics.counter("serving.conn.oversize_line").inc();
+        self.write_error(conn, &format!("line exceeds {cap} bytes"));
+    }
+
+    /// A connection is gone: purge routing entries for its in-flight
+    /// requests — their responses have nowhere to go (they used to leak
+    /// until a response happened to arrive). Idempotent.
+    fn conn_gone(&self, conn: u64) {
+        self.routing.lock().unwrap().retain(|_, c| *c != conn);
+    }
+
+    /// The `{"error":"overloaded","retry_after_ms":N}` line used when a
+    /// connection is refused at accept time (shared by both drivers, which
+    /// differ only in how they write it without blocking).
+    fn refusal_line(&self) -> String {
         self.metrics.counter("serving.conn.rejected").inc();
         let retry = self.admission.retry_after_ms(self.batcher.depth());
-        let j = Json::obj(vec![
+        Json::obj(vec![
             ("error", Json::Str("overloaded".into())),
             ("retry_after_ms", Json::Int(retry as i64)),
-        ]);
-        let _ = stream.set_write_timeout(Some(self.writer_stall));
-        let mut s = &stream;
-        let _ = writeln!(s, "{j}");
-        let _ = s.flush();
-        let _ = stream.shutdown(Shutdown::Both);
+        ])
+        .to_string()
     }
 
-    fn spawn_conn(self: &Arc<Self>, conn_id: u64, stream: TcpStream, routing: Arc<Routing>) {
-        stream.set_nonblocking(false).ok();
-        let wstream = match stream.try_clone() {
-            Ok(s) => s,
-            Err(e) => {
-                eprintln!("conn {conn_id}: stream clone failed: {e}");
-                return;
-            }
-        };
-        // bound every blocking send: a stalled client errors the writer out
-        // instead of wedging it (and with it, shutdown's join)
-        let _ = wstream.set_write_timeout(Some(self.writer_stall));
-        let conn = Arc::new(Conn {
-            id: conn_id,
-            outbox: Outbox::new(self.cfg.server.outbox_depth),
-            stream: wstream,
-        });
-        self.conns.lock().unwrap().insert(conn_id, conn.clone());
-        self.metrics.counter("serving.conn.opened").inc();
-
-        // writer: the only thread that blocks on this socket
-        let wconn = conn.clone();
-        let writer = std::thread::spawn(move || {
-            while let Some(line) = wconn.outbox.pop() {
-                let mut s = &wconn.stream;
-                if writeln!(s, "{line}").and_then(|()| s.flush()).is_err() {
-                    // unwritable client: drop queued lines so producers
-                    // fail fast instead of stalling out one by one
-                    wconn.outbox.close_discard();
-                    break;
-                }
-            }
-            // EOFs the reader blocked on the other clone of this socket
-            let _ = wconn.stream.shutdown(Shutdown::Both);
-        });
-
-        let this = self.clone();
-        let reader = std::thread::spawn(move || {
-            this.reader_loop(&conn, stream, &routing);
-            // teardown: responses for this connection's in-flight requests
-            // have nowhere to go — purge their routing entries (they used
-            // to leak until a response happened to arrive)
-            routing.map.lock().unwrap().retain(|_, c| *c != conn.id);
-            this.conns.lock().unwrap().remove(&conn.id);
-            conn.outbox.close();
-            this.metrics.counter("serving.conn.closed").inc();
-        });
-        self.threads.lock().unwrap().push(ConnThreads { reader, writer });
-    }
-
-    /// Close every live connection and join its threads (shutdown path).
-    /// Outboxes drain their queued lines first, so a shutdown response
-    /// enqueued moments ago still reaches its client.
-    fn close_connections(&self) {
-        let conns: Vec<Arc<Conn>> =
-            self.conns.lock().unwrap().values().cloned().collect();
-        for c in &conns {
-            c.outbox.close();
-        }
-        // take the handles out before joining: reader exit paths lock the
-        // maps this thread would otherwise hold
-        let threads = std::mem::take(&mut *self.threads.lock().unwrap());
-        for t in threads {
-            let _ = t.writer.join();
-            let _ = t.reader.join();
-        }
-    }
-
-    fn reader_loop(self: &Arc<Self>, conn: &Arc<Conn>, stream: TcpStream, routing: &Arc<Routing>) {
-        let cap = self.cfg.server.max_line_bytes;
-        let mut reader = BufReader::new(stream);
-        loop {
-            let line = match read_line_capped(&mut reader, cap) {
-                LineRead::Line(l) => l,
-                LineRead::Eof => break,
-                LineRead::TooLong => {
-                    // a single never-ending line must not OOM the reader:
-                    // fail the connection with a structured error
-                    self.metrics.counter("serving.conn.oversize_line").inc();
-                    self.write_error(conn.id, &format!("line exceeds {cap} bytes"));
-                    break;
-                }
-                LineRead::Err => break,
-            };
-            if line.trim().is_empty() {
-                continue;
-            }
-            match jsonio::parse(&line) {
-                Ok(v) => self.handle_request(conn, routing, &v),
-                Err(e) => self.write_error(conn.id, &e.to_string()),
-            }
-        }
-    }
-
-    fn handle_request(self: &Arc<Self>, conn: &Arc<Conn>, routing: &Arc<Routing>, v: &Json) {
+    fn handle_request(self: &Arc<Self>, conn: u64, v: &Json) {
         if let Some(cmd) = v.get("cmd").and_then(Json::as_str) {
-            self.handle_cmd(conn.id, cmd);
+            self.handle_cmd(conn, cmd);
             return;
         }
         // the internal id is the routing key: unique even when clients
@@ -384,7 +320,7 @@ impl Server {
                 Some(i) if i >= 0 => i as u64,
                 _ => {
                     self.write_error(
-                        conn.id,
+                        conn,
                         "invalid id: must be a non-negative integer < 2^63",
                     );
                     return;
@@ -402,7 +338,7 @@ impl Server {
                         ("id", Json::Int(client_id as i64)),
                         ("error", Json::Str(e.to_string())),
                     ]);
-                    self.write_line(conn.id, &j.to_string());
+                    self.write_line(conn, &j.to_string());
                     return;
                 }
             },
@@ -417,11 +353,11 @@ impl Server {
             AdmissionDecision::Degrade => true,
             AdmissionDecision::Shed { retry_after_ms } => {
                 self.metrics.counter("serving.admission.shed").inc();
-                self.write_overloaded(conn.id, Some(client_id), retry_after_ms);
+                self.write_overloaded(conn, Some(client_id), retry_after_ms);
                 return;
             }
         };
-        routing.map.lock().unwrap().insert(id, conn.id);
+        self.routing.lock().unwrap().insert(id, conn);
         let submitted = self.batcher.try_submit(Request {
             id,
             client_id,
@@ -451,20 +387,20 @@ impl Server {
                 // bounded-queue backstop: sheds even with admission
                 // disabled — an unbounded queue is how the server used to
                 // fall over before the allocator could react
-                routing.map.lock().unwrap().remove(&id);
+                self.routing.lock().unwrap().remove(&id);
                 self.metrics.counter("serving.admission.shed").inc();
                 let retry = self.admission.retry_after_ms(self.batcher.depth());
-                self.write_overloaded(conn.id, Some(client_id), retry);
+                self.write_overloaded(conn, Some(client_id), retry);
             }
             Submit::Closed => {
                 // batcher already closed (shutdown raced the submit): fail
                 // the request back instead of leaving the client waiting
-                routing.map.lock().unwrap().remove(&id);
+                self.routing.lock().unwrap().remove(&id);
                 let j = Json::obj(vec![
                     ("id", Json::Int(client_id as i64)),
                     ("error", Json::Str("server shutting down".into())),
                 ]);
-                self.write_line(conn.id, &j.to_string());
+                self.write_line(conn, &j.to_string());
             }
         }
     }
@@ -477,7 +413,7 @@ impl Server {
             }
             "shutdown" => {
                 self.write_line(conn, "{\"ok\":true}");
-                self.shutdown.store(true, Ordering::Release);
+                self.signal_shutdown();
                 self.batcher.close();
             }
             other => {
@@ -486,9 +422,9 @@ impl Server {
         }
     }
 
-    fn send_response(&self, routing: &Routing, resp: Response) {
+    fn send_response(&self, resp: Response) {
         // route by the internal id; echo the client's id on the wire
-        let conn = routing.map.lock().unwrap().remove(&resp.id);
+        let conn = self.routing.lock().unwrap().remove(&resp.id);
         let Some(conn) = conn else { return };
         let json = Json::obj(vec![
             // exact echo — client ids are integers, never f64-rounded
@@ -524,81 +460,14 @@ impl Server {
         self.write_line(conn, &Json::obj(pairs).to_string());
     }
 
-    /// Enqueue a line on the connection's outbox. Never blocks longer than
-    /// the writer-stall bound: a connection whose outbox stays full past it
-    /// (writer wedged on an unreadable client) is killed, so shard workers
-    /// delivering responses stay live no matter what clients do.
+    /// Hand a wire line to the active driver for delivery. Applies the
+    /// writer-stall contract (see [`ConnectionDriver::deliver`]): shard
+    /// workers stay live no matter what clients do.
     fn write_line(&self, conn: u64, line: &str) {
-        let c = self.conns.lock().unwrap().get(&conn).cloned();
-        let Some(c) = c else { return };
-        match c.outbox.push(line.to_string(), self.writer_stall) {
-            Ok(()) => {}
-            Err(PushError::Stalled) => {
-                self.metrics.counter("serving.conn.stalled").inc();
-                c.outbox.close_discard();
-                let _ = c.stream.shutdown(Shutdown::Both);
-            }
-            // connection already gone: the line has no recipient
-            Err(PushError::Closed) => {}
+        let d = self.driver.lock().unwrap().clone();
+        if let Some(d) = d {
+            d.deliver(conn, line);
         }
-    }
-}
-
-/// Outcome of one capped line read.
-#[derive(Debug, PartialEq, Eq)]
-enum LineRead {
-    Line(String),
-    Eof,
-    TooLong,
-    Err,
-}
-
-/// Read one `\n`-terminated line of at most `cap` bytes (terminator
-/// excluded; a trailing `\r` is stripped). Unlike `BufRead::read_line`,
-/// a never-ending line cannot grow the buffer without bound — the read
-/// fails with `TooLong` as soon as the cap is crossed, having buffered at
-/// most `cap` bytes plus one fill.
-fn read_line_capped(r: &mut impl BufRead, cap: usize) -> LineRead {
-    let mut out: Vec<u8> = Vec::new();
-    loop {
-        let (found, take) = {
-            let buf = match r.fill_buf() {
-                Ok(b) => b,
-                Err(ref e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
-                Err(_) => return LineRead::Err,
-            };
-            if buf.is_empty() {
-                // EOF: a non-empty unterminated tail still counts as a line
-                return if out.is_empty() { LineRead::Eof } else { finish_line(out) };
-            }
-            match buf.iter().position(|&b| b == b'\n') {
-                Some(i) => {
-                    out.extend_from_slice(&buf[..i]);
-                    (true, i + 1)
-                }
-                None => {
-                    out.extend_from_slice(buf);
-                    (false, buf.len())
-                }
-            }
-        };
-        r.consume(take);
-        if out.len() > cap {
-            return LineRead::TooLong;
-        }
-        if found {
-            return finish_line(out);
-        }
-    }
-}
-
-fn finish_line(mut out: Vec<u8>) -> LineRead {
-    if out.last() == Some(&b'\r') {
-        out.pop();
-    }
-    match String::from_utf8(out) {
-        Ok(s) => LineRead::Line(s),
-        Err(_) => LineRead::Err,
     }
 }
 
@@ -681,63 +550,5 @@ impl Client {
         writeln!(self.writer, "{j}")?;
         self.writer.flush()?;
         self.read_response()
-    }
-}
-
-#[cfg(test)]
-mod tests {
-    use super::*;
-    use std::io::Cursor;
-
-    fn read_all(input: &[u8], cap: usize) -> Vec<LineRead> {
-        let mut r = BufReader::new(Cursor::new(input.to_vec()));
-        let mut out = Vec::new();
-        loop {
-            let l = read_line_capped(&mut r, cap);
-            let done = matches!(l, LineRead::Eof | LineRead::TooLong | LineRead::Err);
-            out.push(l);
-            if done {
-                return out;
-            }
-        }
-    }
-
-    #[test]
-    fn capped_reader_splits_lines_and_strips_crlf() {
-        let got = read_all(b"abc\r\ndef\n\nxyz", 64);
-        assert_eq!(
-            got,
-            vec![
-                LineRead::Line("abc".into()),
-                LineRead::Line("def".into()),
-                LineRead::Line(String::new()),
-                // unterminated tail at EOF still delivered
-                LineRead::Line("xyz".into()),
-                LineRead::Eof,
-            ]
-        );
-    }
-
-    #[test]
-    fn capped_reader_rejects_oversize_without_buffering_it() {
-        // 100 bytes, no newline, cap 10: must fail, not accumulate
-        let long = vec![b'a'; 100];
-        let got = read_all(&long, 10);
-        assert_eq!(got, vec![LineRead::TooLong]);
-        // exactly at the cap is fine
-        let mut ok = vec![b'b'; 10];
-        ok.push(b'\n');
-        let got = read_all(&ok, 10);
-        assert_eq!(got[0], LineRead::Line("b".repeat(10)));
-        // one past the cap is not
-        let mut over = vec![b'c'; 11];
-        over.push(b'\n');
-        assert_eq!(read_all(&over, 10), vec![LineRead::TooLong]);
-    }
-
-    #[test]
-    fn capped_reader_rejects_invalid_utf8() {
-        let got = read_all(&[0xff, 0xfe, b'\n'], 64);
-        assert_eq!(got, vec![LineRead::Err]);
     }
 }

@@ -14,6 +14,17 @@ use std::collections::VecDeque;
 use std::sync::{Condvar, Mutex};
 use std::time::{Duration, Instant};
 
+/// Result of a non-blocking [`Outbox::try_pop`].
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum TryPop {
+    /// A queued line.
+    Line(String),
+    /// Nothing queued right now; the box is still open.
+    Empty,
+    /// Closed and drained: no line will ever arrive again.
+    Done,
+}
+
 /// Why a [`Outbox::push`] was refused.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum PushError {
@@ -91,6 +102,36 @@ impl Outbox {
         }
     }
 
+    /// Non-blocking dequeue for event-loop consumers: never parks the
+    /// caller. [`TryPop::Empty`] means "poll again after the next wakeup";
+    /// [`TryPop::Done`] means closed *and* drained (close still delivers
+    /// already-queued lines, matching the blocking [`Outbox::pop`]).
+    pub fn try_pop(&self) -> TryPop {
+        let mut s = self.q.lock().unwrap();
+        match s.items.pop_front() {
+            Some(line) => {
+                drop(s);
+                self.not_full.notify_all();
+                TryPop::Line(line)
+            }
+            None if s.closed => TryPop::Done,
+            None => TryPop::Empty,
+        }
+    }
+
+    /// True once [`Outbox::close`] or [`Outbox::close_discard`] has run.
+    /// Queued lines may still be draining; pair with [`Outbox::is_empty`]
+    /// to detect fully-drained.
+    pub fn is_closed(&self) -> bool {
+        self.q.lock().unwrap().closed
+    }
+
+    /// True when nothing is queued (racy by nature — advisory only, e.g.
+    /// for deciding whether a socket still needs write-readiness interest).
+    pub fn is_empty(&self) -> bool {
+        self.q.lock().unwrap().items.is_empty()
+    }
+
     /// No more lines will be accepted; queued lines still drain. Wakes both
     /// sides so blocked pushers fail fast and the writer can exit.
     pub fn close(&self) {
@@ -159,6 +200,37 @@ mod tests {
         // the pusher must fail immediately, not ride out its 30s deadline
         assert_eq!(pusher.join().unwrap(), Err(PushError::Closed));
         assert_eq!(o.pop(), None, "discarded lines must not drain");
+    }
+
+    #[test]
+    fn try_pop_never_blocks_and_distinguishes_empty_from_done() {
+        let o = Outbox::new(2);
+        assert_eq!(o.try_pop(), TryPop::Empty);
+        o.push("a".into(), Duration::from_millis(10)).unwrap();
+        assert!(!o.is_empty());
+        assert_eq!(o.try_pop(), TryPop::Line("a".into()));
+        assert_eq!(o.try_pop(), TryPop::Empty);
+        o.push("b".into(), Duration::from_millis(10)).unwrap();
+        o.close();
+        assert!(o.is_closed());
+        // close still delivers queued lines, exactly like blocking pop
+        assert_eq!(o.try_pop(), TryPop::Line("b".into()));
+        assert_eq!(o.try_pop(), TryPop::Done);
+    }
+
+    #[test]
+    fn try_pop_frees_space_for_a_blocked_pusher() {
+        let o = Arc::new(Outbox::new(1));
+        o.push("a".into(), Duration::from_millis(10)).unwrap();
+        let o2 = o.clone();
+        let pusher = std::thread::spawn(move || {
+            o2.push("b".into(), Duration::from_secs(30))
+        });
+        std::thread::sleep(Duration::from_millis(20));
+        assert_eq!(o.try_pop(), TryPop::Line("a".into()));
+        // the non-blocking drain must notify not_full like pop() does
+        assert_eq!(pusher.join().unwrap(), Ok(()));
+        assert_eq!(o.try_pop(), TryPop::Line("b".into()));
     }
 
     #[test]

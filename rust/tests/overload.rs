@@ -3,23 +3,34 @@
 //! (degrade → shed) under a flooded batcher, the bit-for-bit parity
 //! contract at sub-saturation, and the bounded-queue backstop. Runs on the
 //! default native backend — no artifacts required (CI gates on this).
+//!
+//! The whole suite is the regression harness for the I/O drivers: CI runs
+//! it twice, once per `io_mode`, via `THINKALLOC_IO_MODE=threads|event`
+//! (default: the config default, `event`). The front-door invariants must
+//! hold identically under both drivers.
 
 use std::sync::mpsc;
 use std::sync::Arc;
 use std::time::Duration;
 
-use thinkalloc::config::{AllocPolicy, Config};
+use thinkalloc::config::{AllocPolicy, Config, IoMode};
 use thinkalloc::jsonio::Json;
 use thinkalloc::metrics::Registry;
 use thinkalloc::server::{Client, Server};
 
 /// Base config: native backend, online policy, small budgets — fast on CI.
+/// `THINKALLOC_IO_MODE` (the CI matrix axis) overrides the I/O driver.
 fn base_cfg() -> Config {
     let mut cfg = Config::default();
     cfg.allocator.policy = AllocPolicy::Online;
     cfg.allocator.budget_per_query = 2.0;
     cfg.allocator.b_max = 8;
     cfg.server.addr = "127.0.0.1:0".into();
+    if let Ok(m) = std::env::var("THINKALLOC_IO_MODE") {
+        if !m.is_empty() {
+            cfg.server.io_mode = m.parse().expect("THINKALLOC_IO_MODE: event|threads");
+        }
+    }
     cfg
 }
 
@@ -280,6 +291,116 @@ fn admission_disabled_is_bit_for_bit_inert_at_subsaturation() {
         "counter.serving.admission.shed",
     ] {
         assert!(off_metrics.get(k).is_none(), "{k} must not exist when disabled");
+    }
+}
+
+/// The io-mode parity contract: the event loop and the thread-per-
+/// connection driver speak byte-identical wire protocol. A deterministic
+/// single-worker run under each driver must produce field-for-field
+/// identical responses (latency excluded: wall time, not behavior) —
+/// including error lines for malformed input.
+#[test]
+fn io_modes_serve_identical_wire_responses() {
+    let run = |mode: IoMode| -> Vec<Json> {
+        let mut cfg = base_cfg();
+        cfg.server.io_mode = mode; // pin explicitly: this test IS the matrix
+        cfg.server.workers = 1; // single seeded worker ⇒ deterministic run
+        cfg.server.batch_queries = 1;
+        cfg.server.max_wait_ms = 5;
+        cfg.validate().unwrap();
+        let (addr, handle) = start(cfg);
+        let mut c = Client::connect(&addr).unwrap();
+        c.set_read_timeout(Some(Duration::from_secs(120))).unwrap();
+        let mut out = Vec::new();
+        for i in 0..8 {
+            let text = format!("ADD {} {}", i, i + 1);
+            c.request(i, &text, if i % 2 == 0 { "code" } else { "math" })
+                .unwrap();
+            out.push(c.read_response().unwrap());
+        }
+        // error paths must match too: bad id, bad procedure, unknown cmd,
+        // non-JSON garbage
+        for raw in [
+            r#"{"id": -3, "text": "ADD 1 1", "domain": "code"}"#,
+            r#"{"id": 1, "text": "ADD 1 1", "procedure": "warp"}"#,
+            r#"{"cmd": "dance"}"#,
+            "not json at all",
+        ] {
+            c.write_raw(raw).unwrap();
+            out.push(c.read_response().unwrap());
+        }
+        c.command("shutdown").unwrap();
+        let _ = handle.join();
+        out
+    };
+
+    let threads = run(IoMode::Threads);
+    let event = run(IoMode::Event);
+    assert_eq!(threads.len(), event.len());
+    for (i, (a, b)) in threads.iter().zip(&event).enumerate() {
+        for field in [
+            "id", "response", "ok", "budget", "predicted", "reward", "procedure",
+            "error", "retry_after_ms",
+        ] {
+            assert_eq!(
+                a.get(field),
+                b.get(field),
+                "response {i} field {field} diverged between io modes"
+            );
+        }
+    }
+}
+
+/// The event loop's reason to exist: many concurrent connections on O(1)
+/// threads. A batch of idle connections plus one active one — the live
+/// gauge counts them, requests are served among the idle crowd, and the
+/// loop telemetry (wakeups/read/write events) shows up in the dump.
+#[test]
+fn event_loop_holds_many_idle_connections() {
+    let mut cfg = base_cfg();
+    cfg.server.io_mode = IoMode::Event;
+    cfg.server.io_threads = 2;
+    cfg.server.batch_queries = 1;
+    cfg.server.max_wait_ms = 5;
+    cfg.validate().unwrap();
+    let (addr, handle) = start(cfg);
+
+    let idle: Vec<Client> = (0..48)
+        .map(|_| Client::connect(&addr).unwrap())
+        .collect();
+    for c in &idle {
+        c.set_read_timeout(Some(Duration::from_secs(30))).unwrap();
+    }
+
+    let mut active = Client::connect(&addr).unwrap();
+    active.set_read_timeout(Some(Duration::from_secs(120))).unwrap();
+    active.request(9, "ADD 3 4", "code").unwrap();
+    let resp = active.read_response().unwrap();
+    assert_eq!(resp.get("id").and_then(Json::as_i64), Some(9));
+
+    let metrics = active.command("metrics").unwrap();
+    let live = metrics
+        .get("gauge.serving.conn.live")
+        .and_then(Json::as_f64)
+        .expect("live-connection gauge must exist in event mode");
+    // 48 idle + 1 active, allowing for accept/registration in flight
+    assert!(live >= 40.0 && live <= 49.0, "unexpected live gauge {live}");
+    for k in [
+        "counter.serving.io.wakeups",
+        "counter.serving.io.read_events",
+        "counter.serving.io.write_events",
+    ] {
+        assert!(
+            metrics.get(k).and_then(Json::as_f64).unwrap_or(0.0) > 0.0,
+            "{k} must be live in event mode"
+        );
+    }
+
+    active.command("shutdown").unwrap();
+    handle.join().unwrap().unwrap();
+    // every idle connection gets a clean EOF on shutdown
+    for mut c in idle {
+        assert!(c.read_response().is_err(), "idle client expected EOF");
     }
 }
 

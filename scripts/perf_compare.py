@@ -1,0 +1,86 @@
+#!/usr/bin/env python3
+"""Compare two bench_serving --json summaries and fail on regressions.
+
+Usage: perf_compare.py BASELINE.json CANDIDATE.json [--tolerance 0.15]
+
+Gated metrics (the serving hot path's load-bearing numbers):
+  higher is better: decode steps/s, epoch & pool & front-door queries/s
+  lower is better:  p95 queue wait (controller on, and under saturation)
+
+A candidate worse than baseline by more than the tolerance on any present
+metric exits nonzero and says which. Metrics missing from either file are
+skipped with a note — bench sections come and go, and a perf gate must not
+turn into a schema gate. Values <= 0 are skipped for the same reason
+(smoke runs can legitimately produce empty histograms).
+"""
+
+import argparse
+import json
+import sys
+
+# (top-level key in the bench summary, field inside it, direction)
+METRICS = [
+    ("decode.continuous", "steps_per_s", "higher"),
+    ("epoch.online", "queries_per_s", "higher"),
+    ("pool.workers_4", "queries_per_s", "higher"),
+    ("many_conn.event", "queries_per_s", "higher"),
+    ("many_socket.event", "queries_per_s", "higher"),
+    ("controller.on", "queue_wait_p95_us", "lower"),
+    ("saturation", "queue_wait_p95_us", "lower"),
+]
+
+
+def load(path):
+    with open(path) as f:
+        return json.load(f)
+
+
+def pick(doc, top, field):
+    sec = doc.get(top)
+    if not isinstance(sec, dict):
+        return None
+    v = sec.get(field)
+    return v if isinstance(v, (int, float)) else None
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("baseline")
+    ap.add_argument("candidate")
+    ap.add_argument("--tolerance", type=float, default=0.15,
+                    help="allowed fractional regression (default 0.15)")
+    args = ap.parse_args()
+
+    base = load(args.baseline)
+    cand = load(args.candidate)
+    tol = args.tolerance
+
+    regressions = []
+    for top, field, direction in METRICS:
+        name = f"{top}.{field}"
+        b, c = pick(base, top, field), pick(cand, top, field)
+        if b is None or c is None or b <= 0 or c <= 0:
+            print(f"  skip {name}: baseline={b} candidate={c}")
+            continue
+        # signed fractional regression: positive = candidate is worse
+        if direction == "higher":
+            reg = (b - c) / b
+        else:
+            reg = (c - b) / b
+        verdict = "REGRESSION" if reg > tol else "ok"
+        print(f"  {verdict:>10} {name}: baseline {b:.1f} -> candidate {c:.1f} "
+              f"({reg:+.1%} regression, tolerance {tol:.0%})")
+        if reg > tol:
+            regressions.append((name, reg))
+
+    if regressions:
+        worst = max(regressions, key=lambda r: r[1])
+        print(f"\nFAIL: {len(regressions)} metric(s) regressed beyond "
+              f"{tol:.0%}; worst is {worst[0]} at {worst[1]:+.1%}")
+        return 1
+    print("\nOK: no gated metric regressed beyond tolerance")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
