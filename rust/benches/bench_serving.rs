@@ -5,8 +5,9 @@
 //!
 //! Second half: the sharded scheduler pool on a mixed-domain workload —
 //! workers=1 vs workers=4 draining one shared batcher (engine compile time
-//! excluded via the `on_worker_ready` hook), plus a prediction-cache
-//! cold/warm pass.
+//! excluded via the `on_worker_ready` hook), a prediction-cache cold/warm
+//! pass, and a multi-turn session pass driving the serving prefix cache
+//! cold vs warm (hit rate, saved prefill, per-warm-turn slot-steps).
 //!
 //! Final section: the load-adaptive budget controller under overload — a
 //! Poisson trace offered at ~2× the measured sustainable rate, replayed
@@ -65,6 +66,13 @@ impl Scale {
             Scale { epoch_queries: 32, epoch_iters: 6, pool_queries: 256, trace_len: 192 }
         }
     }
+}
+
+/// Empirical p95 over a sample of wall times (ms).
+fn p95_ms(samples: &[f64]) -> f64 {
+    let mut v = samples.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    v[((v.len() - 1) as f64 * 0.95).round() as usize]
 }
 
 /// Counting sink for pool benches: tracks ready workers and responses.
@@ -479,6 +487,120 @@ fn main() {
             ),
         ]),
     ));
+
+    // --- multi-turn sessions: serving prefix cache, cold vs warm ------------
+    // Turn t+1 extends turn t's transcript, so a warm admission can seed its
+    // decode slot from the cached prefix instead of re-encoding it. Cold
+    // (cache off) and warm (cache on) serve the identical trace at temp 0,
+    // where outputs are bit-identical (pinned by tests/prefix_cache.rs), so
+    // the entire difference is admission prefill work. Slot-step accounting
+    // uses the warm run's prefill counter for *both* sides: the admission
+    // sets are identical and the counter is recorded before the lookup.
+    let n_sessions = if smoke { 4 } else { 16 };
+    let (n_turns, wpt) = (base.session.turns, base.session.words_per_turn);
+    section(&format!(
+        "sessions: {n_sessions} sessions × {n_turns} turns, prefix cache off vs on"
+    ));
+    let sess = workload::sessions::gen_sessions(n_sessions, n_turns, wpt, base.session.seed);
+    let turn_reqs: Vec<Vec<Request>> = (0..n_turns)
+        .map(|t| {
+            sess.iter()
+                .enumerate()
+                .map(|(s, ss)| {
+                    let mut r =
+                        Request::new((t * 1000 + s) as u64, ss.turns[t].clone(), "chat");
+                    r.session = Some(ss.id);
+                    r
+                })
+                .collect()
+        })
+        .collect();
+    #[derive(Clone, Default)]
+    struct TurnStats {
+        ms: Vec<f64>,
+        prefill: u64,
+        saved: u64,
+        steps: u64,
+    }
+    let mut session_runs: Vec<(Vec<TurnStats>, u64, u64)> = Vec::new();
+    for cache in [false, true] {
+        let mut per_turn = vec![TurnStats::default(); n_turns];
+        let (mut hits, mut misses) = (0u64, 0u64);
+        for _ in 0..scale.epoch_iters {
+            // fresh scheduler every iteration so each iteration's turn 1 is
+            // genuinely cold and per-turn latencies stay comparable
+            let mut cfg = pool_config();
+            cfg.allocator.policy = AllocPolicy::Uniform;
+            cfg.allocator.b_max = 4;
+            cfg.server.temperature = 0.0;
+            // single-char chat answers: a short decode keeps the section
+            // about admission work, which is what the cache changes
+            cfg.server.max_new_tokens = 8;
+            cfg.prefix_cache.enabled = cache;
+            cfg.validate().expect("session config");
+            let metrics = Arc::new(Registry::default());
+            let engine = Engine::load_all(&cfg.runtime).expect("engine");
+            let scheduler = Scheduler::new(engine, cfg, metrics.clone());
+            let mut rng = Pcg64::new(0x5E55);
+            for (t, reqs) in turn_reqs.iter().enumerate() {
+                let p0 = metrics.counter("serving.prefix.prefill_steps").get();
+                let s0 = metrics.counter("serving.prefix.saved_steps").get();
+                let d0 = metrics.counter("serving.decode.steps").get();
+                let t0 = Instant::now();
+                black_box(
+                    scheduler
+                        .serve_epoch(reqs, &mut rng, scheduler.effective_budget())
+                        .unwrap(),
+                );
+                per_turn[t].ms.push(t0.elapsed().as_secs_f64() * 1e3);
+                per_turn[t].prefill +=
+                    metrics.counter("serving.prefix.prefill_steps").get() - p0;
+                per_turn[t].saved += metrics.counter("serving.prefix.saved_steps").get() - s0;
+                per_turn[t].steps += metrics.counter("serving.decode.steps").get() - d0;
+            }
+            hits += metrics.counter("serving.prefix.hit").get();
+            misses += metrics.counter("serving.prefix.miss").get();
+        }
+        session_runs.push((per_turn, hits, misses));
+    }
+    if let [(cold, _, _), (warm, hits, misses)] = session_runs.as_slice() {
+        // warm turns are 2..: per-turn slot-steps = prefill (minus what the
+        // cache saved) plus live decode steps, for the same served bytes
+        let cold_slot: u64 = (1..n_turns).map(|t| warm[t].prefill + cold[t].steps).sum();
+        let warm_slot: u64 = (1..n_turns)
+            .map(|t| warm[t].prefill - warm[t].saved + warm[t].steps)
+            .sum();
+        let reduction = 100.0 * (1.0 - warm_slot as f64 / cold_slot.max(1) as f64);
+        let hit_rate = *hits as f64 / (*hits + *misses).max(1) as f64;
+        let flat = |r: &[TurnStats]| -> Vec<f64> {
+            r.iter().skip(1).flat_map(|t| t.ms.iter().copied()).collect()
+        };
+        let (cold_p95, warm_p95) = (p95_ms(&flat(cold)), p95_ms(&flat(warm)));
+        let saved: u64 = warm.iter().map(|t| t.saved).sum();
+        println!(
+            "  hit rate {:.0}% | per-warm-turn slot-steps {warm_slot} vs cold \
+             {cold_slot} ({reduction:.1}% saved) | warm-turn p95 {warm_p95:.2} ms \
+             vs cold {cold_p95:.2} ms",
+            100.0 * hit_rate
+        );
+        summary.push((
+            "sessions.cold".into(),
+            Json::obj(vec![
+                ("warm_turn_p95_ms", Json::Num(cold_p95)),
+                ("warm_turn_slot_steps", Json::Num(cold_slot as f64)),
+            ]),
+        ));
+        summary.push((
+            "sessions.warm".into(),
+            Json::obj(vec![
+                ("hit_rate", Json::Num(hit_rate)),
+                ("saved_steps", Json::Num(saved as f64)),
+                ("warm_turn_p95_ms", Json::Num(warm_p95)),
+                ("warm_turn_slot_steps", Json::Num(warm_slot as f64)),
+                ("reduction_pct", Json::Num(reduction)),
+            ]),
+        ));
+    }
 
     // --- budget controller under 2× overload: fixed vs adaptive budget ------
     // Calibrate the sustainable rate with a closed-loop pool run under the

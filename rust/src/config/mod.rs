@@ -616,6 +616,46 @@ impl Default for AdmissionConfig {
     }
 }
 
+/// Decode prefix cache (`[prefix_cache]` section): prefix-state reuse at
+/// continuous-mode slot admission (see `serving::prefix_cache`). Disabled
+/// by default — serving is then bit-for-bit the pre-cache code path and
+/// exports no `serving.prefix.*` metrics.
+#[derive(Clone, Debug)]
+pub struct PrefixCacheConfig {
+    pub enabled: bool,
+    /// Resident-byte cap (snapshot cost accounting); LRU-evicted past it.
+    pub max_bytes: usize,
+    /// Entry-count cap; LRU-evicted past it.
+    pub max_entries: usize,
+}
+
+impl Default for PrefixCacheConfig {
+    fn default() -> Self {
+        Self { enabled: false, max_bytes: 1 << 20, max_entries: 4096 }
+    }
+}
+
+/// Multi-turn session workload (`[session]` section): parameters for
+/// `workload::sessions::gen_sessions`, the scripted-conversation traffic
+/// the prefix cache is measured against (bench_serving `sessions` section,
+/// `tests/sessions_serve.rs`).
+#[derive(Clone, Debug)]
+pub struct SessionConfig {
+    /// Turns per conversation.
+    pub turns: usize,
+    /// Concurrent scripted conversations.
+    pub n_sessions: usize,
+    /// Words appended to the transcript per turn after the first.
+    pub words_per_turn: usize,
+    pub seed: u64,
+}
+
+impl Default for SessionConfig {
+    fn default() -> Self {
+        Self { turns: 3, n_sessions: 8, words_per_turn: 2, seed: 0x5E55 }
+    }
+}
+
 #[derive(Clone, Debug)]
 pub struct WorkloadConfig {
     pub domain: String,
@@ -640,6 +680,8 @@ pub struct Config {
     pub route: RouteConfig,
     pub controller: ControllerConfig,
     pub admission: AdmissionConfig,
+    pub prefix_cache: PrefixCacheConfig,
+    pub session: SessionConfig,
 }
 
 impl Config {
@@ -763,6 +805,18 @@ impl Config {
             "admission.retry_after_ms" => {
                 self.admission.retry_after_ms = f64_of!() as u64
             }
+            "prefix_cache.enabled" => {
+                self.prefix_cache.enabled = match val {
+                    TomlValue::Bool(b) => *b,
+                    _ => return Err(invalid()),
+                }
+            }
+            "prefix_cache.max_bytes" => self.prefix_cache.max_bytes = usize_of!(),
+            "prefix_cache.max_entries" => self.prefix_cache.max_entries = usize_of!(),
+            "session.turns" => self.session.turns = usize_of!(),
+            "session.n_sessions" => self.session.n_sessions = usize_of!(),
+            "session.words_per_turn" => self.session.words_per_turn = usize_of!(),
+            "session.seed" => self.session.seed = f64_of!() as u64,
             _ => return Ok(false),
         }
         Ok(true)
@@ -869,6 +923,33 @@ impl Config {
                  server.max_queue_depth > 0"
             );
         }
+        if self.prefix_cache.enabled {
+            anyhow::ensure!(
+                self.prefix_cache.max_bytes >= 1
+                    && self.prefix_cache.max_entries >= 1,
+                "an enabled prefix cache needs max_bytes ≥ 1 and \
+                 max_entries ≥ 1 (got {} / {}); disable it instead of \
+                 zeroing its caps",
+                self.prefix_cache.max_bytes,
+                self.prefix_cache.max_entries
+            );
+        }
+        let s = &self.session;
+        anyhow::ensure!(
+            s.turns >= 1 && s.n_sessions >= 1 && s.words_per_turn >= 1,
+            "session turns/n_sessions/words_per_turn must all be ≥ 1"
+        );
+        // the final transcript plus the " = " completion marker must fit a
+        // decode row, or every late turn would be truncated to nonsense
+        let longest =
+            crate::workload::sessions::max_transcript_len(s.turns, s.words_per_turn);
+        anyhow::ensure!(
+            longest + 3 <= self.runtime.max_seq.saturating_sub(2),
+            "[session] transcripts can reach {longest} bytes; with the \
+             ' = ' marker that exceeds runtime.max_seq = {} — fewer turns, \
+             fewer words_per_turn, or a longer row",
+            self.runtime.max_seq
+        );
         Ok(())
     }
 }
@@ -1105,6 +1186,55 @@ mod tests {
         assert!(err.to_string().contains("max_line_bytes"));
         let err = Config::from_toml_str("[server]\noutbox_depth = 0\n").unwrap_err();
         assert!(err.to_string().contains("outbox_depth"));
+    }
+
+    #[test]
+    fn prefix_cache_and_session_roundtrip() {
+        let cfg = Config::from_toml_str(
+            "[prefix_cache]\nenabled = true\nmax_bytes = 4096\n\
+             max_entries = 16\n\
+             [session]\nturns = 4\nn_sessions = 6\nwords_per_turn = 3\n\
+             seed = 99\n",
+        )
+        .unwrap();
+        assert!(cfg.prefix_cache.enabled);
+        assert_eq!(cfg.prefix_cache.max_bytes, 4096);
+        assert_eq!(cfg.prefix_cache.max_entries, 16);
+        assert_eq!(cfg.session.turns, 4);
+        assert_eq!(cfg.session.n_sessions, 6);
+        assert_eq!(cfg.session.words_per_turn, 3);
+        assert_eq!(cfg.session.seed, 99);
+        // defaults: cache off (bit-for-bit inert serving path), session
+        // workload well-formed for the default max_seq
+        let d = Config::default();
+        assert!(!d.prefix_cache.enabled);
+        assert!(d.prefix_cache.max_bytes >= 1 && d.prefix_cache.max_entries >= 1);
+        d.validate().unwrap();
+    }
+
+    #[test]
+    fn validation_rejects_bad_prefix_cache_and_session_config() {
+        // zeroed caps on an enabled cache are a typo, not a configuration
+        let err = Config::from_toml_str(
+            "[prefix_cache]\nenabled = true\nmax_bytes = 0\n",
+        )
+        .unwrap_err();
+        assert!(err.to_string().contains("max_bytes"), "{err}");
+        let err = Config::from_toml_str(
+            "[prefix_cache]\nenabled = true\nmax_entries = 0\n",
+        )
+        .unwrap_err();
+        assert!(err.to_string().contains("max_entries"), "{err}");
+        // disabled cache with zero caps is fine — the caps are unused
+        Config::from_toml_str("[prefix_cache]\nmax_bytes = 0\n").unwrap();
+        let err = Config::from_toml_str("[session]\nturns = 0\n").unwrap_err();
+        assert!(err.to_string().contains("turns"), "{err}");
+        // a transcript that cannot fit the decode row fails up front
+        let err = Config::from_toml_str(
+            "[session]\nturns = 16\nwords_per_turn = 8\n",
+        )
+        .unwrap_err();
+        assert!(err.to_string().contains("max_seq"), "{err}");
     }
 
     #[test]

@@ -87,6 +87,24 @@ fn cli() -> Cli {
             default: None,
         },
         FlagSpec {
+            name: "prefix-cache",
+            help: "enable the decode prefix cache (LCP reuse of prompt \
+                   prefixes at slot admission; [prefix_cache] section)",
+            default: None,
+        },
+        FlagSpec {
+            name: "prefix-cache-bytes",
+            help: "prefix cache resident-byte cap; empty = value from \
+                   --config (default 1048576)",
+            default: Some(""),
+        },
+        FlagSpec {
+            name: "prefix-cache-entries",
+            help: "prefix cache entry cap; empty = value from --config \
+                   (default 4096)",
+            default: Some(""),
+        },
+        FlagSpec {
             name: "controller",
             help: "enable the load-adaptive budget controller \
                    ([controller] section)",
@@ -251,6 +269,22 @@ fn cmd_serve(args: &Args) -> Result<()> {
     if args.switch("controller") {
         cfg.controller.enabled = true;
     }
+    // same discipline for the prefix cache switch and its cap overrides
+    if args.switch("prefix-cache") {
+        cfg.prefix_cache.enabled = true;
+    }
+    let pc_bytes = args.str_flag("prefix-cache-bytes")?;
+    if !pc_bytes.is_empty() {
+        cfg.prefix_cache.max_bytes = pc_bytes
+            .parse()
+            .map_err(|e| anyhow::anyhow!("--prefix-cache-bytes: {e}"))?;
+    }
+    let pc_entries = args.str_flag("prefix-cache-entries")?;
+    if !pc_entries.is_empty() {
+        cfg.prefix_cache.max_entries = pc_entries
+            .parse()
+            .map_err(|e| anyhow::anyhow!("--prefix-cache-entries: {e}"))?;
+    }
     let target_flag = args.str_flag("controller-target-ms")?;
     if !target_flag.is_empty() {
         cfg.controller.target_queue_wait_ms = target_flag
@@ -269,7 +303,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
     println!(
         "thinkalloc serving on {} (backend {}, decode {}, policy {:?}, B={}, \
          procedure {}, workers {}, io {}, controller {}, queue depth {}, \
-         connections {}, admission {})",
+         connections {}, admission {}, prefix cache {})",
         cfg.server.addr,
         cfg.runtime.backend.name(),
         cfg.runtime.decode_mode.name(),
@@ -306,6 +340,14 @@ fn cmd_serve(args: &Args) -> Result<()> {
             format!(
                 "on (degrade {:.2}, shed {:.2})",
                 cfg.admission.degrade_at, cfg.admission.shed_at
+            )
+        } else {
+            "off".to_string()
+        },
+        if cfg.prefix_cache.enabled {
+            format!(
+                "on ({} B, {} entries)",
+                cfg.prefix_cache.max_bytes, cfg.prefix_cache.max_entries
             )
         } else {
             "off".to_string()

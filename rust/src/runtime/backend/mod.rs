@@ -54,6 +54,18 @@
 //!   executables only exist at the full static batch) does. Slot state is
 //!   interior-mutable behind `&self` because the trait is `!Send` and an
 //!   engine is thread-owned; no synchronization is implied or provided.
+//! * **Prefix snapshot / restore** — [`Backend::decode_snapshot_row`]
+//!   captures a prefix of a live slot's sequence as an immutable
+//!   [`DecodeSnapshot`] value, and [`Backend::decode_begin_row_from`]
+//!   admits a new row whose leading tokens equal a snapshot, seeding the
+//!   slot from the snapshot instead of re-encoding the shared prefix. A
+//!   restored slot must be **bit-identical** to one begun cold with the
+//!   same `ids` — the prefix cache built on this seam
+//!   ([`crate::serving::prefix_cache`]) is a pure work-saving layer, never
+//!   an output-changing one. The default `decode_begin_row_from` falls back
+//!   to a full cold [`Backend::decode_begin_row`], which satisfies the
+//!   contract with zero savings; `decode_snapshot_row` has no meaningful
+//!   default and errors.
 //! * **Send discipline** — the trait is deliberately **not** `Send`: the
 //!   xla handles are `Rc`-backed and thread-bound, so a [`Backend`] (and
 //!   the [`crate::runtime::Engine`] owning it) lives on the worker thread
@@ -73,6 +85,50 @@ use anyhow::Result;
 use super::Artifact;
 use crate::config::{BackendKind, RuntimeConfig};
 use crate::jsonio::Json;
+
+/// An immutable snapshot of the leading `tokens.len()` tokens of a decode
+/// row, in both representations the backends keep: the token ids
+/// themselves and their decoded byte form.
+///
+/// Invariants (established by [`Backend::decode_snapshot_row`], relied on
+/// by [`Backend::decode_begin_row_from`]):
+///
+/// * `tokens[0]` is BOS and every later token is a plain byte id
+///   (`0..256`) — a snapshot never reaches EOS, so `bytes` is exactly
+///   `tokens[1..]` reinterpreted as bytes
+///   (`bytes.len() == tokens.len() - 1`).
+/// * The value is **semi-transparent**: a holder may truncate it at any
+///   token boundary (`tokens[..l]` with `bytes[..l-1]`) and the result is
+///   again a valid snapshot. The prefix cache uses this to serve
+///   longest-common-prefix hits from a longer cached transcript.
+/// * It is a plain value — it never aliases live slot state, so a snapshot
+///   taken from a slot stays valid after that slot is pushed to, evicted,
+///   or reused (backend purity makes replaying it bit-exact forever).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct DecodeSnapshot {
+    /// The prefix token ids: BOS followed by byte tokens.
+    pub tokens: Vec<i32>,
+    /// The same prefix as decoded bytes (`tokens[1..]` as `u8`s).
+    pub bytes: Vec<u8>,
+}
+
+impl DecodeSnapshot {
+    /// Truncate to the leading `len` tokens (no-op if already shorter).
+    /// `len` must be ≥ 1 — a snapshot always retains BOS.
+    pub fn truncated(&self, len: usize) -> DecodeSnapshot {
+        let len = len.clamp(1, self.tokens.len());
+        DecodeSnapshot {
+            tokens: self.tokens[..len].to_vec(),
+            bytes: self.bytes[..len - 1].to_vec(),
+        }
+    }
+
+    /// Heap footprint used for cache byte accounting: decoded bytes plus
+    /// 4 bytes per token id.
+    pub fn cost_bytes(&self) -> usize {
+        self.bytes.len() + 4 * self.tokens.len()
+    }
+}
 
 /// A model-execution backend: compiles artifacts once at startup, then
 /// executes padded static-shape batches from the request path.
@@ -144,6 +200,44 @@ pub trait Backend {
     /// Free `slot` for refill. Evicting a vacant slot is a no-op (the
     /// generator evicts on finish and on early teardown without tracking).
     fn decode_evict_row(&self, slot: usize) -> Result<()>;
+
+    /// Capture the first `prefix_tokens` tokens of live slot `slot` as an
+    /// immutable [`DecodeSnapshot`] (see its invariants). `prefix_tokens`
+    /// must be ≥ 1 (BOS included) and must not extend past the slot's
+    /// current sequence into EOS/PAD territory — in practice the generator
+    /// snapshots the prompt prefix right after beginning a row, so the
+    /// bound is the row's prompt cursor. O(prefix) work, no backend calls.
+    ///
+    /// The default implementation errors: a backend without real
+    /// snapshot support simply cannot feed the prefix cache (the cache
+    /// layer treats that as a miss-only backend, not a failure mode worth
+    /// masking).
+    fn decode_snapshot_row(&self, slot: usize, prefix_tokens: usize) -> Result<DecodeSnapshot> {
+        let _ = (slot, prefix_tokens);
+        anyhow::bail!("this backend does not support decode prefix snapshots")
+    }
+
+    /// [`Backend::decode_begin_row`] with a warm start: register `ids`
+    /// into vacant `slot`, seeding the leading `snap.tokens.len()` tokens
+    /// from `snap` instead of re-encoding them. The caller guarantees
+    /// `ids[..snap.tokens.len()] == snap.tokens` — implementations must
+    /// verify (it is one `memcmp` against O(prefix) re-encode work, and a
+    /// violated contract here would silently corrupt output instead of
+    /// erroring).
+    ///
+    /// A slot begun through this method must be bit-identical to one begun
+    /// cold via [`Backend::decode_begin_row`] with the same `ids` — the
+    /// default implementation *is* that cold begin (correct for every
+    /// backend, saves nothing).
+    fn decode_begin_row_from(
+        &self,
+        slot: usize,
+        ids: &[i32],
+        snap: &DecodeSnapshot,
+    ) -> Result<()> {
+        let _ = snap;
+        self.decode_begin_row(slot, ids)
+    }
 
     /// Human-readable device/platform description (e.g. `"native"` or the
     /// PJRT platform name).
@@ -217,6 +311,32 @@ impl ReencodeSlots {
         Ok(())
     }
 
+    /// [`Backend::decode_snapshot_row`] semantics over the stored id rows:
+    /// the snapshot is sliced straight out of the slot's padded row, with
+    /// bytes reconstructed from the byte-token ids.
+    pub fn snapshot_row(&self, slot: usize, prefix_tokens: usize) -> Result<DecodeSnapshot> {
+        let rows = self.rows.borrow();
+        let (ids, cursor) = rows
+            .get(slot)
+            .and_then(|r| r.as_ref())
+            .ok_or_else(|| anyhow::anyhow!("snapshot of vacant decode slot {slot}"))?;
+        anyhow::ensure!(
+            prefix_tokens >= 1 && prefix_tokens <= *cursor,
+            "snapshot prefix {prefix_tokens} outside slot {slot}'s sequence \
+             (cursor {cursor})"
+        );
+        snapshot_from_ids(&ids[..prefix_tokens])
+    }
+
+    /// [`Backend::decode_begin_row_from`] semantics: verify the snapshot
+    /// really is a prefix of `ids`, then fall back to a full re-encode
+    /// begin — this backend has no per-slot state worth seeding, so the
+    /// fallback is the whole implementation (correct, saves nothing).
+    pub fn begin_row_from(&self, slot: usize, ids: &[i32], snap: &DecodeSnapshot) -> Result<()> {
+        verify_snapshot_prefix(ids, snap)?;
+        self.begin_row(slot, ids)
+    }
+
     /// [`Backend::decode_evict_row`] semantics.
     pub fn evict_row(&self, slot: usize) -> Result<()> {
         let mut rows = self.rows.borrow_mut();
@@ -271,6 +391,42 @@ impl ReencodeSlots {
         }
         Ok(out)
     }
+}
+
+/// Build a [`DecodeSnapshot`] from a prefix of an encoded id row: `ids[0]`
+/// must be BOS and every later id a plain byte token (`0..256`) — i.e. the
+/// prefix stops short of EOS. Shared by both backends' snapshot paths.
+pub(crate) fn snapshot_from_ids(ids: &[i32]) -> Result<DecodeSnapshot> {
+    anyhow::ensure!(
+        ids.first() == Some(&crate::tokenizer::BOS_ID),
+        "decode snapshot prefix must start at BOS"
+    );
+    let mut bytes = Vec::with_capacity(ids.len().saturating_sub(1));
+    for &t in &ids[1..] {
+        anyhow::ensure!(
+            (0..256).contains(&t),
+            "decode snapshot prefix crosses a non-byte token ({t})"
+        );
+        bytes.push(t as u8);
+    }
+    Ok(DecodeSnapshot { tokens: ids.to_vec(), bytes })
+}
+
+/// Check the [`Backend::decode_begin_row_from`] caller contract: `snap`
+/// must be a non-empty, in-bounds token prefix of `ids`.
+pub(crate) fn verify_snapshot_prefix(ids: &[i32], snap: &DecodeSnapshot) -> Result<()> {
+    let l = snap.tokens.len();
+    anyhow::ensure!(l >= 1, "empty decode snapshot");
+    anyhow::ensure!(
+        l <= ids.len() && ids[..l] == snap.tokens[..],
+        "decode snapshot is not a prefix of the row being begun"
+    );
+    anyhow::ensure!(
+        snap.bytes.len() == l - 1,
+        "decode snapshot bytes/tokens length mismatch ({} vs {l})",
+        snap.bytes.len()
+    );
+    Ok(())
 }
 
 /// Construct the backend selected by `cfg.backend`, together with its
@@ -394,6 +550,44 @@ mod tests {
             })
             .unwrap();
         assert_eq!(out, vec![0.0, 0.0, 2.0, 2.0]);
+    }
+
+    #[test]
+    fn reencode_slots_snapshot_and_restore_roundtrip() {
+        let s = ReencodeSlots::new(2, 64);
+        let row = crate::tokenizer::encode("CHAT a b = ", 64);
+        let cursor = crate::tokenizer::last_index(&row) as usize;
+        s.begin_row(0, &row).unwrap();
+        // full-prompt snapshot: BOS + every prompt byte
+        let snap = s.snapshot_row(0, cursor).unwrap();
+        assert_eq!(snap.tokens.len(), cursor);
+        assert_eq!(snap.bytes, b"CHAT a b = ");
+        assert_eq!(snap.bytes.len(), snap.tokens.len() - 1);
+        // truncation keeps the invariants
+        let t = snap.truncated(9);
+        assert_eq!(t.tokens, row[..9].to_vec());
+        assert_eq!(t.bytes, b"CHAT a b");
+        // snapshot of a vacant slot / out-of-sequence prefix are errors
+        assert!(s.snapshot_row(1, 1).is_err());
+        assert!(s.snapshot_row(0, cursor + 1).is_err());
+        assert!(s.snapshot_row(0, 0).is_err());
+        // restore into a fresh slot verifies the prefix contract
+        let longer = crate::tokenizer::encode("CHAT a b c = ", 64);
+        s.begin_row_from(1, &longer, &t).unwrap();
+        s.evict_row(1).unwrap();
+        // a non-prefix snapshot is rejected, not silently re-encoded
+        let bad = s.snapshot_row(0, cursor).unwrap();
+        assert!(s.begin_row_from(1, &longer, &bad).is_err());
+    }
+
+    #[test]
+    fn snapshot_from_ids_rejects_non_byte_prefixes() {
+        let row = crate::tokenizer::encode("ab", 64);
+        // [BOS, 'a', 'b', EOS, PAD...]: crossing EOS must fail
+        assert!(snapshot_from_ids(&row[..3]).is_ok());
+        assert!(snapshot_from_ids(&row[..4]).is_err());
+        // missing BOS must fail
+        assert!(snapshot_from_ids(&row[1..3]).is_err());
     }
 
     #[test]

@@ -270,6 +270,71 @@ impl Backend for NativeBackend {
         Ok(())
     }
 
+    fn decode_snapshot_row(
+        &self,
+        slot: usize,
+        prefix_tokens: usize,
+    ) -> Result<super::DecodeSnapshot> {
+        let slots = self.decode_slots.borrow();
+        let Some(Some(bytes)) = slots.get(slot) else {
+            bail!("snapshot of vacant decode slot {slot}");
+        };
+        // the slot state holds decoded bytes; token position t maps to byte
+        // t − 1 (BOS contributes no byte), so a prefix of `prefix_tokens`
+        // tokens is BOS + the first `prefix_tokens − 1` bytes
+        if prefix_tokens < 1 || prefix_tokens > bytes.len() + 1 {
+            bail!(
+                "snapshot prefix {prefix_tokens} outside slot {slot}'s \
+                 sequence ({} tokens)",
+                bytes.len() + 1
+            );
+        }
+        let prefix = &bytes[..prefix_tokens - 1];
+        let mut tokens = Vec::with_capacity(prefix_tokens);
+        tokens.push(tokenizer::BOS_ID);
+        tokens.extend(prefix.iter().map(|&b| b as i32));
+        Ok(super::DecodeSnapshot { tokens, bytes: prefix.to_vec() })
+    }
+
+    fn decode_begin_row_from(
+        &self,
+        slot: usize,
+        ids: &[i32],
+        snap: &super::DecodeSnapshot,
+    ) -> Result<()> {
+        self.ensure(Artifact::DecodeStep)?;
+        if ids.len() != self.cfg.max_seq {
+            bail!("native decode row len {} != max_seq {}", ids.len(), self.cfg.max_seq);
+        }
+        // one memcmp against O(prefix) re-encode: a cache layer handing us
+        // a snapshot that is not a prefix of this row must error loudly,
+        // never silently corrupt the slot's text
+        super::verify_snapshot_prefix(ids, snap)?;
+        let mut slots = self.decode_slots.borrow_mut();
+        let n = slots.len();
+        let Some(s) = slots.get_mut(slot) else {
+            bail!("decode slot {slot} out of range (pool {n})");
+        };
+        if s.is_some() {
+            bail!("decode slot {slot} already occupied");
+        }
+        // warm start: clone the snapshot's decoded bytes, then append only
+        // the suffix tokens — mirroring tokenizer::decode byte-for-byte
+        // (byte ids append, EOS stops the row, specials are dropped), so a
+        // restored slot is bit-identical to a cold decode_begin_row
+        let mut bytes = snap.bytes.clone();
+        for &t in &ids[snap.tokens.len()..] {
+            if t == EOS_ID {
+                break;
+            }
+            if (0..256).contains(&t) {
+                bytes.push(t as u8);
+            }
+        }
+        *s = Some(bytes);
+        Ok(())
+    }
+
     fn platform(&self) -> String {
         "native".to_string()
     }
@@ -720,6 +785,50 @@ mod tests {
         b.decode_begin_row(0, &tokenizer::encode("REV ab = ", b.cfg.max_seq)).unwrap();
         let out = b.decode_step_slots(&[0], vocab).unwrap();
         assert_eq!(out, reencode_logits(&b, "REV ab = "));
+    }
+
+    #[test]
+    fn snapshot_restore_is_bit_identical_to_cold_begin() {
+        let b = backend();
+        let vocab = b.cfg.vocab;
+        let seq = b.cfg.max_seq;
+        // turn 1 of a session: begin cold, snapshot its full prompt prefix
+        let turn1 = tokenizer::encode("CHAT a b = ", seq);
+        let cursor = tokenizer::last_index(&turn1) as usize; // BOS + prompt bytes
+        b.decode_begin_row(0, &turn1).unwrap();
+        let snap = b.decode_snapshot_row(0, cursor).unwrap();
+        assert_eq!(snap.bytes, b"CHAT a b = ");
+        assert_eq!(snap.tokens.len(), cursor);
+        // turn 2 extends the transcript: warm-begin from the truncated
+        // snapshot must leave the slot bit-identical to a cold begin
+        let turn2 = tokenizer::encode("CHAT a b c = ", seq);
+        let lcp = snap.truncated(9); // "CHAT a b" — common prefix of both turns
+        b.decode_begin_row_from(1, &turn2, &lcp).unwrap();
+        b.decode_begin_row(2, &turn2).unwrap();
+        let out = b.decode_step_slots(&[1, 2], vocab).unwrap();
+        assert_eq!(&out[..vocab], &out[vocab..], "warm slot diverged from cold");
+        assert_eq!(&out[..vocab], &reencode_logits(&b, "CHAT a b c = ")[..]);
+        // both slots must also step identically after pushed tokens
+        b.decode_push_token(1, b'X' as i32).unwrap();
+        b.decode_push_token(2, b'X' as i32).unwrap();
+        let out = b.decode_step_slots(&[1, 2], vocab).unwrap();
+        assert_eq!(&out[..vocab], &out[vocab..], "warm slot diverged after push");
+        // error paths: vacant slot, out-of-range prefix, non-prefix snapshot
+        assert!(b.decode_snapshot_row(3, 1).is_err(), "vacant slot snapshotted");
+        assert!(b.decode_snapshot_row(0, 0).is_err(), "empty prefix accepted");
+        assert!(
+            b.decode_snapshot_row(0, cursor + 1).is_err(),
+            "prefix past the sequence accepted"
+        );
+        let full = b.decode_snapshot_row(0, cursor).unwrap();
+        assert!(
+            b.decode_begin_row_from(3, &turn2, &full).is_err(),
+            "non-prefix snapshot accepted ('CHAT a b = ' vs 'CHAT a b c = ')"
+        );
+        assert!(
+            b.decode_begin_row_from(1, &turn2, &lcp).is_err(),
+            "warm begin into occupied slot accepted"
+        );
     }
 
     #[test]

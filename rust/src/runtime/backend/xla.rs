@@ -179,6 +179,28 @@ impl Backend for XlaBackend {
         self.slots.evict_row(slot)
     }
 
+    fn decode_snapshot_row(
+        &self,
+        slot: usize,
+        prefix_tokens: usize,
+    ) -> Result<super::DecodeSnapshot> {
+        self.slots.snapshot_row(slot, prefix_tokens)
+    }
+
+    fn decode_begin_row_from(
+        &self,
+        slot: usize,
+        ids: &[i32],
+        snap: &super::DecodeSnapshot,
+    ) -> Result<()> {
+        if !self.has(Artifact::DecodeStep) {
+            bail!("artifact {:?} not loaded", Artifact::DecodeStep);
+        }
+        // re-encode fallback: validates the snapshot then begins cold, so
+        // cache hits stay correct here even though they save nothing
+        self.slots.begin_row_from(slot, ids, snap)
+    }
+
     fn platform(&self) -> String {
         self.client.platform_name()
     }

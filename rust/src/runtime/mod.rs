@@ -272,6 +272,37 @@ impl Engine {
         self.backend.decode_evict_row(slot)
     }
 
+    /// Capture the first `prefix_tokens` tokens of a live decode slot as a
+    /// reusable prefix snapshot
+    /// (see [`backend::Backend::decode_snapshot_row`]).
+    pub fn decode_snapshot_row(
+        &self,
+        slot: usize,
+        prefix_tokens: usize,
+    ) -> Result<backend::DecodeSnapshot> {
+        if slot >= self.cfg.decode_batch {
+            bail!("decode slot {slot} out of range (pool {})", self.cfg.decode_batch);
+        }
+        self.backend.decode_snapshot_row(slot, prefix_tokens)
+    }
+
+    /// Begin a decode row warm, seeding slot state from a cached prefix
+    /// snapshot (see [`backend::Backend::decode_begin_row_from`]).
+    pub fn decode_begin_row_from(
+        &self,
+        slot: usize,
+        ids: &[i32],
+        snap: &backend::DecodeSnapshot,
+    ) -> Result<()> {
+        if slot >= self.cfg.decode_batch {
+            bail!("decode slot {slot} out of range (pool {})", self.cfg.decode_batch);
+        }
+        if ids.len() != self.cfg.max_seq {
+            bail!("decode row len {} != max_seq {}", ids.len(), self.cfg.max_seq);
+        }
+        self.backend.decode_begin_row_from(slot, ids, snap)
+    }
+
     pub fn platform(&self) -> String {
         self.backend.platform()
     }

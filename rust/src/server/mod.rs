@@ -327,6 +327,22 @@ impl Server {
                 }
             },
         };
+        // optional multi-turn session tag: same exact-integer discipline as
+        // the client id. Correlation/telemetry only — prefix reuse is
+        // content-addressed, never keyed by this value (see PROTOCOL.md)
+        let session = match v.get("session") {
+            None => None,
+            Some(j) => match j.as_i64() {
+                Some(i) if i >= 0 => Some(i as u64),
+                _ => {
+                    self.write_error(
+                        conn,
+                        "invalid session: must be a non-negative integer < 2^63",
+                    );
+                    return;
+                }
+            },
+        };
         let procedure = match v.get("procedure").and_then(Json::as_str) {
             None => None,
             Some(s) => match s.parse::<ProcedureKind>() {
@@ -371,6 +387,7 @@ impl Server {
             arrived_us: 0,
             procedure,
             degraded,
+            session,
         });
         match submitted {
             Submit::Accepted => {
@@ -516,6 +533,26 @@ impl Client {
             ("text", Json::Str(text.to_string())),
             ("domain", Json::Str(domain.to_string())),
             ("procedure", Json::Str(procedure.to_string())),
+        ]);
+        writeln!(self.writer, "{j}")?;
+        self.writer.flush()?;
+        Ok(())
+    }
+
+    /// Like [`Client::request`] but tagging the query with a multi-turn
+    /// session id (correlation/telemetry only — see PROTOCOL.md).
+    pub fn request_with_session(
+        &mut self,
+        id: u64,
+        text: &str,
+        domain: &str,
+        session: u64,
+    ) -> Result<()> {
+        let j = Json::obj(vec![
+            ("id", Json::Int(id as i64)),
+            ("text", Json::Str(text.to_string())),
+            ("domain", Json::Str(domain.to_string())),
+            ("session", Json::Int(session as i64)),
         ]);
         writeln!(self.writer, "{j}")?;
         self.writer.flush()?;

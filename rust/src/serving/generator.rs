@@ -33,8 +33,11 @@
 //! Per-sample cost telemetry is returned as [`DecodeStats`] and exported by
 //! the scheduler as `serving.decode.{steps,wasted_steps,occupancy}`.
 
+use std::sync::Mutex;
+
 use anyhow::Result;
 
+use super::prefix_cache::{PrefixCache, PrefixStats};
 use crate::config::DecodeMode;
 use crate::prng::Pcg64;
 use crate::runtime::{Artifact, Engine};
@@ -160,9 +163,38 @@ pub fn generate_with(
     rng: &mut Pcg64,
     mode: DecodeMode,
 ) -> Result<(Vec<Sample>, DecodeStats)> {
+    generate_with_cache(engine, jobs, cfg, rng, mode, None)
+        .map(|(samples, stats, _)| (samples, stats))
+}
+
+/// [`generate_with`] plus an optional prefix cache consulted at slot
+/// admission: a hit seeds the slot warm via `decode_begin_row_from`, and
+/// every admitted prompt prefix is (re-)inserted so later turns of the same
+/// conversation find it.
+///
+/// The cache is **output-invariant by construction**: it changes how slot
+/// state is materialized (restore vs re-encode), never which tokens are
+/// sampled. Admission order is untouched and the cache path draws nothing
+/// from any rng, so per-job seed streams — which depend only on (base seed,
+/// job index, own logits) — are bit-identical cache-on vs cache-off at any
+/// temperature (`tests/prefix_cache.rs` pins this).
+///
+/// Wave mode re-encodes full batches through `run_tokens` and never touches
+/// the slot API; it ignores the cache and reports zero prefix traffic.
+pub fn generate_with_cache(
+    engine: &Engine,
+    jobs: &[Job],
+    cfg: &GenConfig,
+    rng: &mut Pcg64,
+    mode: DecodeMode,
+    cache: Option<&Mutex<PrefixCache>>,
+) -> Result<(Vec<Sample>, DecodeStats, PrefixStats)> {
     match mode {
-        DecodeMode::Wave => generate_wave(engine, jobs, cfg, rng),
-        DecodeMode::Continuous => generate_continuous(engine, jobs, cfg, rng),
+        DecodeMode::Wave => generate_wave(engine, jobs, cfg, rng)
+            .map(|(samples, stats)| (samples, stats, PrefixStats::default())),
+        DecodeMode::Continuous => {
+            generate_continuous(engine, jobs, cfg, rng, cache)
+        }
     }
 }
 
@@ -266,8 +298,9 @@ fn generate_continuous(
     jobs: &[Job],
     cfg: &GenConfig,
     rng: &mut Pcg64,
-) -> Result<(Vec<Sample>, DecodeStats)> {
-    let result = continuous_pool(engine, jobs, cfg, rng);
+    cache: Option<&Mutex<PrefixCache>>,
+) -> Result<(Vec<Sample>, DecodeStats, PrefixStats)> {
+    let result = continuous_pool(engine, jobs, cfg, rng, cache);
     if result.is_err() {
         // The engine (and its backend slot state) outlives this epoch, so a
         // mid-flight error must not strand occupied slots: the worker keeps
@@ -289,15 +322,17 @@ fn continuous_pool(
     jobs: &[Job],
     cfg: &GenConfig,
     rng: &mut Pcg64,
-) -> Result<(Vec<Sample>, DecodeStats)> {
+    cache: Option<&Mutex<PrefixCache>>,
+) -> Result<(Vec<Sample>, DecodeStats, PrefixStats)> {
     let seq = engine.max_seq();
     let db = engine.decode_batch();
     let mut stats = DecodeStats::default();
+    let mut pstats = PrefixStats::default();
     // one base draw per call keeps the caller's stream advancing uniformly
     // whatever the job count; every per-job stream derives from it
     let seed_base = rng.next_u64();
     if jobs.is_empty() {
-        return Ok((Vec::new(), stats));
+        return Ok((Vec::new(), stats, pstats));
     }
     if cfg.max_new_tokens == 0 {
         // zero-budget epochs never touch the backend (wave mode likewise
@@ -306,7 +341,7 @@ fn continuous_pool(
             .iter()
             .map(|j| Sample { query: j.query, text: String::new() })
             .collect();
-        return Ok((samples, stats));
+        return Ok((samples, stats, pstats));
     }
 
     let lens: Vec<usize> = jobs.iter().map(|j| j.prompt.len()).collect();
@@ -328,7 +363,30 @@ fn continuous_pool(
             let Some(j) = pending.next() else { break };
             let ids = tokenizer::encode(&jobs[j].prompt, seq);
             let cursor = tokenizer::last_index(&ids) as usize;
-            engine.decode_begin_row(s, &ids)?;
+            // prompt prefix = BOS + prompt bytes = ids[..cursor]; the cache
+            // path adds no rng draws and never reorders admission, so
+            // sampled streams are untouched (see generate_with_cache docs)
+            pstats.prefill_steps += cursor as u64;
+            match cache.map(|c| {
+                c.lock().expect("prefix cache lock").lookup(&ids[..cursor])
+            }) {
+                Some(Some(snap)) => {
+                    engine.decode_begin_row_from(s, &ids, &snap)?;
+                    pstats.hits += 1;
+                    pstats.saved_steps += snap.tokens.len() as u64;
+                }
+                Some(None) => {
+                    engine.decode_begin_row(s, &ids)?;
+                    pstats.misses += 1;
+                }
+                None => engine.decode_begin_row(s, &ids)?,
+            }
+            if let Some(c) = cache {
+                // (re-)insert the full prompt prefix so later turns extend
+                // it; re-inserting an existing key just refreshes recency
+                let snap = engine.decode_snapshot_row(s, cursor)?;
+                c.lock().expect("prefix cache lock").insert(snap);
+            }
             *slot = Some(Slot {
                 job: j,
                 ids,
@@ -379,7 +437,14 @@ fn continuous_pool(
         .into_iter()
         .map(|o| o.expect("every admitted job finishes"))
         .collect();
-    Ok((samples, stats))
+    if let Some(c) = cache {
+        // cache-level readings for telemetry (cumulative / point-in-time,
+        // unlike the per-pass counters above)
+        let c = c.lock().expect("prefix cache lock");
+        pstats.evictions = c.evictions();
+        pstats.bytes = c.bytes() as u64;
+    }
+    Ok((samples, stats, pstats))
 }
 
 /// Recover the completion from a finished id row (identical in both modes:
@@ -584,6 +649,43 @@ mod tests {
         )
         .expect("engine must be reusable after a failed epoch");
         assert_eq!(samples.len(), 2);
+    }
+
+    #[test]
+    fn cache_on_is_bit_identical_and_saves_prefill() {
+        // two turns of a session: turn 2's prompt extends turn 1's
+        // transcript, so its admission should hit the cached prefix — with
+        // sampled output identical to the cache-off run at temperature 1
+        let engine = Engine::load_all(&RuntimeConfig::default()).unwrap();
+        let turn1 = jobs_for_allocation(&["CHAT a b"], &[3]);
+        let turn2 = jobs_for_allocation(&["CHAT a b c d"], &[3]);
+        let cfg = GenConfig { max_new_tokens: 8, temperature: 1.0 };
+        let run = |cache: Option<&Mutex<PrefixCache>>| {
+            let mut rng = Pcg64::new(0xCAFE);
+            let mut texts = Vec::new();
+            let mut acc = PrefixStats::default();
+            for jobs in [&turn1, &turn2] {
+                let (s, _, ps) = generate_with_cache(
+                    &engine, jobs, &cfg, &mut rng, DecodeMode::Continuous,
+                    cache,
+                )
+                .unwrap();
+                texts.extend(s.into_iter().map(|s| s.text));
+                acc.accumulate(&ps);
+            }
+            (texts, acc)
+        };
+        let (cold, off) = run(None);
+        assert_eq!(off.hits + off.misses, 0, "cache-off counted traffic");
+        let cache = Mutex::new(PrefixCache::new(1 << 20, 64));
+        let (warm, on) = run(Some(&cache));
+        assert_eq!(cold, warm, "prefix cache changed sampled output");
+        assert!(on.hits > 0, "turn 2 never hit the cached transcript");
+        assert!(on.saved_steps > 0 && on.bytes > 0);
+        assert_eq!(
+            on.prefill_steps, off.prefill_steps,
+            "prefill accounting must not depend on the cache"
+        );
     }
 
     #[test]

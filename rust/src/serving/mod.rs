@@ -9,6 +9,7 @@
 pub mod batcher;
 pub mod cache;
 pub mod generator;
+pub mod prefix_cache;
 pub mod procedure;
 pub mod scheduler;
 pub mod shard;
@@ -36,6 +37,10 @@ pub struct Request {
     /// via `WeakStrongRoute` with routing overridden to the weak model,
     /// regardless of `procedure` or the configured default.
     pub degraded: bool,
+    /// Client-supplied session tag for multi-turn conversations. Pure
+    /// correlation/telemetry metadata: prefix reuse is content-addressed
+    /// (see [`prefix_cache`]), never keyed by this id.
+    pub session: Option<u64>,
 }
 
 impl Request {
@@ -48,6 +53,7 @@ impl Request {
             arrived_us: 0,
             procedure: None,
             degraded: false,
+            session: None,
         }
     }
 }

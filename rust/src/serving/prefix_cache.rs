@@ -1,0 +1,450 @@
+//! Byte-bounded longest-common-prefix cache over decode prompt tokens.
+//!
+//! Multi-turn chat traffic re-sends a growing transcript every turn; the
+//! decode engine re-encodes that prefix from scratch each time. This cache
+//! stores [`DecodeSnapshot`]s keyed by their token sequence and, given a new
+//! prompt's token prefix, returns the cached snapshot with the longest
+//! common prefix — truncated to the match boundary so the engine can seed
+//! the slot warm via `decode_begin_row_from` and pay only for the suffix.
+//!
+//! **Lookup is LCP, not exact-match.** Session prompts end in `" = "`, so
+//! turn *t*'s prompt is never a byte-prefix of turn *t+1*'s — the shared
+//! content is the transcript *before* the separator. A `BTreeMap` keyed by
+//! token sequence makes max-LCP lookup O(log n + LCP): the best match is
+//! always the query's in-order predecessor or successor (any other entry
+//! shares no longer prefix with the query than one of those two — keys
+//! between two sequences in sort order share at least their common prefix).
+//! Ties go to the predecessor, deterministically.
+//!
+//! **Bounds and eviction.** The cache is bounded both by entries and by
+//! accounted bytes ([`DecodeSnapshot::cost_bytes`]); inserting past either
+//! cap evicts least-recently-used entries (monotone-tick recency, the
+//! [`super::cache::LruCache`] idiom). A snapshot that could never fit is
+//! refused outright. Capacity 0 on either axis means "always empty".
+//!
+//! Not internally synchronized — the owner wraps it in a `Mutex` (see
+//! [`super::scheduler::SchedulerShared`]), locked only around admission,
+//! never across a decode step.
+
+use std::collections::BTreeMap;
+use std::ops::Bound;
+
+use crate::runtime::backend::DecodeSnapshot;
+
+/// Minimum common-prefix length (in tokens) for a lookup to count as a
+/// hit. One shared token is just BOS — every key shares it, and restoring
+/// it saves nothing over a cold begin.
+pub const MIN_HIT_TOKENS: usize = 2;
+
+/// Counters describing one generation pass's cache traffic, exported as
+/// `serving.prefix.*` telemetry by the scheduler.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct PrefixStats {
+    /// Admissions seeded warm from a cached prefix.
+    pub hits: u64,
+    /// Admissions that began cold (no usable prefix cached).
+    pub misses: u64,
+    /// Prefix tokens restored from cache instead of re-encoded.
+    pub saved_steps: u64,
+    /// Prompt tokens encoded at admission (cold or warm); the denominator
+    /// for `saved_steps`.
+    pub prefill_steps: u64,
+    /// Cumulative evictions in the cache that served this pass.
+    pub evictions: u64,
+    /// Bytes resident in the cache after the pass.
+    pub bytes: u64,
+}
+
+impl PrefixStats {
+    pub fn accumulate(&mut self, other: &PrefixStats) {
+        self.hits += other.hits;
+        self.misses += other.misses;
+        self.saved_steps += other.saved_steps;
+        self.prefill_steps += other.prefill_steps;
+        // evictions/bytes are cache-level readings, not per-pass deltas
+        self.evictions = self.evictions.max(other.evictions);
+        self.bytes = other.bytes;
+    }
+}
+
+pub struct PrefixCache {
+    max_bytes: usize,
+    max_entries: usize,
+    /// token sequence → (snapshot, recency tick)
+    entries: BTreeMap<Vec<i32>, (DecodeSnapshot, u64)>,
+    /// recency tick → token sequence (inverse of `entries`' ticks)
+    order: BTreeMap<u64, Vec<i32>>,
+    tick: u64,
+    bytes: usize,
+    evictions: u64,
+}
+
+/// Length of the longest common prefix of two token sequences.
+fn lcp_len(a: &[i32], b: &[i32]) -> usize {
+    a.iter().zip(b).take_while(|(x, y)| x == y).count()
+}
+
+impl PrefixCache {
+    pub fn new(max_bytes: usize, max_entries: usize) -> Self {
+        Self {
+            max_bytes,
+            max_entries,
+            entries: BTreeMap::new(),
+            order: BTreeMap::new(),
+            tick: 0,
+            bytes: 0,
+            evictions: 0,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    /// Accounted bytes currently resident.
+    pub fn bytes(&self) -> usize {
+        self.bytes
+    }
+
+    /// Cumulative evictions since construction.
+    pub fn evictions(&self) -> u64 {
+        self.evictions
+    }
+
+    fn next_tick(&mut self) -> u64 {
+        self.tick += 1;
+        self.tick
+    }
+
+    /// Return the cached snapshot sharing the longest common prefix with
+    /// `query`, truncated to the match boundary, refreshing that entry's
+    /// recency. Misses when no entry shares at least [`MIN_HIT_TOKENS`].
+    pub fn lookup(&mut self, query: &[i32]) -> Option<DecodeSnapshot> {
+        let best = {
+            let pred = self
+                .entries
+                .range::<[i32], _>((Bound::Unbounded, Bound::Included(query)))
+                .next_back();
+            let succ = self
+                .entries
+                .range::<[i32], _>((Bound::Included(query), Bound::Unbounded))
+                .next();
+            match (pred, succ) {
+                (None, None) => None,
+                (Some((k, _)), None) | (None, Some((k, _))) => {
+                    Some((k.clone(), lcp_len(k, query)))
+                }
+                (Some((pk, _)), Some((sk, _))) => {
+                    let (pl, sl) = (lcp_len(pk, query), lcp_len(sk, query));
+                    // tie → predecessor, so lookups are deterministic
+                    if pl >= sl {
+                        Some((pk.clone(), pl))
+                    } else {
+                        Some((sk.clone(), sl))
+                    }
+                }
+            }
+        };
+        let (key, l) = best?;
+        if l < MIN_HIT_TOKENS {
+            return None;
+        }
+        let tick = self.next_tick();
+        let (snap, at) = self.entries.get_mut(&key).expect("chosen key present");
+        self.order.remove(at);
+        *at = tick;
+        let out = snap.truncated(l);
+        self.order.insert(tick, key);
+        Some(out)
+    }
+
+    /// Insert (or refresh) a snapshot keyed by its token sequence, evicting
+    /// least-recently-used entries while over either cap. A snapshot whose
+    /// cost exceeds `max_bytes` outright is refused.
+    pub fn insert(&mut self, snap: DecodeSnapshot) {
+        let cost = snap.cost_bytes();
+        if self.max_entries == 0 || cost > self.max_bytes {
+            return;
+        }
+        let tick = self.next_tick();
+        let key = snap.tokens.clone();
+        if let Some((old, old_tick)) = self.entries.insert(key.clone(), (snap, tick)) {
+            self.order.remove(&old_tick);
+            self.bytes -= old.cost_bytes();
+        }
+        self.order.insert(tick, key);
+        self.bytes += cost;
+        while self.bytes > self.max_bytes || self.entries.len() > self.max_entries {
+            // stalest tick first; the fresh insert fits under max_bytes by
+            // the refusal check, so it is never its own victim
+            let (&stale, _) = self.order.iter().next().expect("order tracks entries");
+            let victim = self.order.remove(&stale).expect("present");
+            let (gone, _) = self.entries.remove(&victim).expect("entries track order");
+            self.bytes -= gone.cost_bytes();
+            self.evictions += 1;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prng::Pcg64;
+    use crate::proputil::{prop_check, PropConfig};
+    use crate::tokenizer::BOS_ID;
+
+    fn snap_of(text: &[u8]) -> DecodeSnapshot {
+        let mut tokens = vec![BOS_ID];
+        tokens.extend(text.iter().map(|&b| b as i32));
+        DecodeSnapshot { tokens, bytes: text.to_vec() }
+    }
+
+    fn key_of(text: &[u8]) -> Vec<i32> {
+        snap_of(text).tokens
+    }
+
+    #[test]
+    fn lcp_lookup_truncates_to_match_boundary() {
+        let mut c = PrefixCache::new(1 << 20, 64);
+        c.insert(snap_of(b"CHAT a b = "));
+        // turn 2's prompt shares "CHAT a b " but diverges at '=' vs 'c'
+        let got = c.lookup(&key_of(b"CHAT a b c = ")).expect("prefix hit");
+        assert_eq!(got.bytes, b"CHAT a b ", "not truncated to the LCP");
+        assert_eq!(got.tokens.len(), 10); // BOS + 9 shared bytes
+        // exact key matches whole
+        let got = c.lookup(&key_of(b"CHAT a b = ")).expect("exact hit");
+        assert_eq!(got.bytes, b"CHAT a b = ");
+        // nothing shared beyond BOS ⇒ miss
+        assert!(c.lookup(&key_of(b"ADD 1 2 = ")).is_none());
+    }
+
+    #[test]
+    fn caps_refuse_and_evict() {
+        // max_bytes below any snapshot cost ⇒ refused, cache stays empty
+        let mut c = PrefixCache::new(8, 64);
+        c.insert(snap_of(b"CHAT a b = "));
+        assert!(c.is_empty());
+        assert_eq!(c.bytes(), 0);
+        // entry cap 2 ⇒ third insert evicts the stalest
+        let mut c = PrefixCache::new(1 << 20, 2);
+        c.insert(snap_of(b"CHAT a = "));
+        c.insert(snap_of(b"CHAT b = "));
+        assert!(c.lookup(&key_of(b"CHAT a = ")).is_some()); // refresh "a"
+        c.insert(snap_of(b"CHAT c = "));
+        assert_eq!(c.len(), 2);
+        assert_eq!(c.evictions(), 1);
+        let survivor = c.lookup(&key_of(b"CHAT b x")).expect("adjacent entry");
+        assert_ne!(survivor.bytes, b"CHAT b ", "LRU entry survived eviction");
+        // capacity 0 on either axis never stores
+        let mut c = PrefixCache::new(0, 64);
+        c.insert(snap_of(b"CHAT a = "));
+        assert!(c.is_empty());
+        let mut c = PrefixCache::new(1 << 20, 0);
+        c.insert(snap_of(b"CHAT a = "));
+        assert!(c.is_empty());
+    }
+
+    // ----- property suite: PrefixCache vs a naive Vec-scan reference -----
+
+    /// Naive reference: unordered Vec of (key, snapshot, tick), linear
+    /// scans everywhere, same tie rule (predecessor on equal LCP).
+    struct RefModel {
+        max_bytes: usize,
+        max_entries: usize,
+        entries: Vec<(Vec<i32>, DecodeSnapshot, u64)>,
+        tick: u64,
+        evictions: u64,
+    }
+
+    impl RefModel {
+        fn new(max_bytes: usize, max_entries: usize) -> Self {
+            Self { max_bytes, max_entries, entries: Vec::new(), tick: 0, evictions: 0 }
+        }
+
+        fn bytes(&self) -> usize {
+            self.entries.iter().map(|(_, s, _)| s.cost_bytes()).sum()
+        }
+
+        fn lookup(&mut self, query: &[i32]) -> Option<DecodeSnapshot> {
+            // predecessor = max key <= query; successor = min key >= query
+            let pred = self
+                .entries
+                .iter()
+                .filter(|(k, _, _)| k.as_slice() <= query)
+                .max_by(|a, b| a.0.cmp(&b.0))
+                .map(|(k, _, _)| k.clone());
+            let succ = self
+                .entries
+                .iter()
+                .filter(|(k, _, _)| k.as_slice() >= query)
+                .min_by(|a, b| a.0.cmp(&b.0))
+                .map(|(k, _, _)| k.clone());
+            let best = match (pred, succ) {
+                (None, None) => return None,
+                (Some(k), None) | (None, Some(k)) => k,
+                (Some(pk), Some(sk)) => {
+                    if lcp_len(&pk, query) >= lcp_len(&sk, query) {
+                        pk
+                    } else {
+                        sk
+                    }
+                }
+            };
+            let l = lcp_len(&best, query);
+            if l < MIN_HIT_TOKENS {
+                return None;
+            }
+            self.tick += 1;
+            let e = self.entries.iter_mut().find(|(k, _, _)| *k == best).unwrap();
+            e.2 = self.tick;
+            Some(e.1.truncated(l))
+        }
+
+        fn insert(&mut self, snap: DecodeSnapshot) {
+            if self.max_entries == 0 || snap.cost_bytes() > self.max_bytes {
+                return;
+            }
+            self.tick += 1;
+            let tick = self.tick;
+            self.entries.retain(|(k, _, _)| *k != snap.tokens);
+            self.entries.push((snap.tokens.clone(), snap, tick));
+            while self.bytes() > self.max_bytes || self.entries.len() > self.max_entries
+            {
+                let stale = self
+                    .entries
+                    .iter()
+                    .enumerate()
+                    .min_by_key(|(_, (_, _, t))| *t)
+                    .map(|(i, _)| i)
+                    .unwrap();
+                self.entries.remove(stale);
+                self.evictions += 1;
+            }
+        }
+    }
+
+    /// Random token prefix over a 3-byte alphabet so prefixes collide often.
+    fn gen_key(rng: &mut Pcg64, size: usize) -> Vec<i32> {
+        let len = rng.range_usize(0, size.min(12) + 1);
+        let mut k = vec![BOS_ID];
+        k.extend((0..len).map(|_| b'a' as i32 + rng.range_u64(0, 3) as i32));
+        k
+    }
+
+    fn snap_from_key(key: &[i32]) -> DecodeSnapshot {
+        DecodeSnapshot {
+            tokens: key.to_vec(),
+            bytes: key[1..].iter().map(|&t| t as u8).collect(),
+        }
+    }
+
+    #[test]
+    fn cache_matches_vec_scan_reference() {
+        prop_check(
+            "prefix-cache-vs-reference",
+            PropConfig { cases: 96, max_size: 48 },
+            |rng, size| {
+                let max_bytes = rng.range_usize(1, 4 * size.max(4) * 16);
+                let max_entries = rng.range_usize(0, size.max(2));
+                let mut cache = PrefixCache::new(max_bytes, max_entries);
+                let mut model = RefModel::new(max_bytes, max_entries);
+                for op in 0..2 * size {
+                    let key = gen_key(rng, size);
+                    if rng.bernoulli(0.5) {
+                        cache.insert(snap_from_key(&key));
+                        model.insert(snap_from_key(&key));
+                    } else {
+                        let got = cache.lookup(&key);
+                        let want = model.lookup(&key);
+                        if got != want {
+                            return Err(format!(
+                                "op {op}: lookup({key:?}) = {got:?}, reference \
+                                 says {want:?}"
+                            ));
+                        }
+                    }
+                    // capacity invariant after EVERY op
+                    if cache.bytes() > max_bytes {
+                        return Err(format!(
+                            "op {op}: bytes {} > cap {max_bytes}",
+                            cache.bytes()
+                        ));
+                    }
+                    if cache.len() > max_entries {
+                        return Err(format!(
+                            "op {op}: {} entries > cap {max_entries}",
+                            cache.len()
+                        ));
+                    }
+                    // byte-accounting exactness + entry-set and LRU
+                    // (eviction-count) agreement with the reference
+                    let resident: usize = cache
+                        .entries
+                        .values()
+                        .map(|(s, _)| s.cost_bytes())
+                        .sum();
+                    if cache.bytes() != resident || cache.bytes() != model.bytes() {
+                        return Err(format!(
+                            "op {op}: accounted {} vs resident {resident} vs \
+                             reference {}",
+                            cache.bytes(),
+                            model.bytes()
+                        ));
+                    }
+                    if cache.evictions() != model.evictions {
+                        return Err(format!(
+                            "op {op}: {} evictions vs reference {} — LRU order \
+                             diverged",
+                            cache.evictions(),
+                            model.evictions
+                        ));
+                    }
+                    let keys: Vec<_> = cache.entries.keys().cloned().collect();
+                    let mut want: Vec<_> =
+                        model.entries.iter().map(|(k, _, _)| k.clone()).collect();
+                    want.sort();
+                    if keys != want {
+                        return Err(format!("op {op}: entry sets diverged"));
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn adjacency_theorem_no_third_entry_beats_neighbors() {
+        // the O(log n) lookup inspects only pred and succ; check against a
+        // full scan that no other entry ever shares a longer prefix
+        prop_check(
+            "prefix-cache-adjacency",
+            PropConfig { cases: 64, max_size: 32 },
+            |rng, size| {
+                let mut cache = PrefixCache::new(1 << 20, 1 << 12);
+                let keys: Vec<_> = (0..size).map(|_| gen_key(rng, size)).collect();
+                for k in &keys {
+                    cache.insert(snap_from_key(k));
+                }
+                let q = gen_key(rng, size);
+                let best_scan =
+                    cache.entries.keys().map(|k| lcp_len(k, &q)).max().unwrap_or(0);
+                let got = cache.lookup(&q);
+                let got_len = got.as_ref().map_or(0, |s| s.tokens.len());
+                if best_scan >= MIN_HIT_TOKENS && got_len != best_scan {
+                    return Err(format!(
+                        "lookup found LCP {got_len}, full scan found {best_scan} \
+                         for {q:?}"
+                    ));
+                }
+                if best_scan < MIN_HIT_TOKENS && got.is_some() {
+                    return Err(format!("hit below MIN_HIT_TOKENS for {q:?}"));
+                }
+                Ok(())
+            },
+        );
+    }
+}

@@ -45,6 +45,7 @@ use anyhow::Result;
 use super::batcher::partition_epoch;
 use super::cache::LruCache;
 use super::generator::{self, GenConfig};
+use super::prefix_cache::PrefixCache;
 use super::procedure::{AdaptiveBestOfK, DecodeProcedure, WeakStrongRoute};
 use super::{Request, Response};
 use crate::allocator::controller::{BudgetController, EpochObservation};
@@ -94,6 +95,11 @@ pub struct SchedulerShared {
     routers: std::sync::Mutex<std::collections::BTreeMap<String, Arc<ThresholdRouter>>>,
     /// Bounded LRU over probe outputs, keyed by (domain, text).
     predict_cache: std::sync::Mutex<LruCache<(String, String), Arc<CachedPred>>>,
+    /// Pool-shared decode prefix cache (`None` while `[prefix_cache]
+    /// enabled = false` — the generate stage then runs the exact
+    /// pre-cache code path and exports no `serving.prefix.*` metrics).
+    /// Locked only around slot admission, never across a decode step.
+    pub prefix_cache: Option<std::sync::Mutex<PrefixCache>>,
 }
 
 impl SchedulerShared {
@@ -112,6 +118,12 @@ impl SchedulerShared {
             cfg.allocator.budget_per_query,
             cfg.server.max_new_tokens,
         );
+        let prefix_cache = cfg.prefix_cache.enabled.then(|| {
+            std::sync::Mutex::new(PrefixCache::new(
+                cfg.prefix_cache.max_bytes,
+                cfg.prefix_cache.max_entries,
+            ))
+        });
         Arc::new(Self {
             cfg,
             metrics,
@@ -119,6 +131,7 @@ impl SchedulerShared {
             offline: Default::default(),
             routers: Default::default(),
             predict_cache: std::sync::Mutex::new(LruCache::new(cache_cap)),
+            prefix_cache,
         })
     }
 
@@ -462,16 +475,27 @@ impl Scheduler {
             max_new_tokens: self.shared.cfg.server.max_new_tokens,
             temperature: self.shared.cfg.server.temperature,
         };
-        let (samples, stats) = generator::generate_with(
+        let (samples, stats, pstats) = generator::generate_with_cache(
             &self.engine,
             &jobs,
             &gen_cfg,
             rng,
             self.shared.cfg.runtime.decode_mode,
+            self.shared.prefix_cache.as_ref(),
         )?;
         let m = &self.shared.metrics;
         m.counter("serving.decode.steps").add(stats.steps);
         m.counter("serving.decode.wasted_steps").add(stats.wasted_steps);
+        if self.shared.prefix_cache.is_some() {
+            // gated on the cache: disabled serving must export exactly the
+            // pre-cache metric set (the cache-off parity contract)
+            m.counter("serving.prefix.hit").add(pstats.hits);
+            m.counter("serving.prefix.miss").add(pstats.misses);
+            m.counter("serving.prefix.saved_steps").add(pstats.saved_steps);
+            m.counter("serving.prefix.prefill_steps").add(pstats.prefill_steps);
+            m.gauge("serving.prefix.evict").set(pstats.evictions as f64);
+            m.gauge("serving.prefix.bytes").set(pstats.bytes as f64);
+        }
         // set unconditionally: a stage that issued no decode calls reports
         // 0.0 rather than silently pinning a stale value on the gauge
         m.gauge("serving.decode.occupancy")

@@ -8,6 +8,7 @@
 //! outcomes) and the deterministic response-quality feature the reward head
 //! was trained on.
 
+pub mod sessions;
 pub mod trace;
 
 use crate::prng::Pcg64;

@@ -1,0 +1,124 @@
+//! Multi-turn chat-session workload: pre-scripted conversations whose turn
+//! *t+1* prompt extends turn *t*'s transcript, the traffic shape the
+//! serving prefix cache exists for.
+//!
+//! Sessions are **pre-scripted** — every turn's text is fixed at generation
+//! time, independent of what the model answers. That is what makes the
+//! cold-vs-warm bench and the parity tests exact: a cache-off replay of the
+//! same session trace sends byte-identical prompts in byte-identical order,
+//! so any output difference is the cache's fault. (Real chat would splice
+//! responses into the transcript; for measuring prefix reuse only the
+//! client side of the transcript matters.)
+//!
+//! A turn's serving prompt is `"<transcript> = "` (the corpus completion
+//! format, appended by `jobs_for_allocation`), so consecutive turn prompts
+//! are *not* byte-prefixes of each other — the shared content is the
+//! transcript before the `" = "` separator. The prefix cache's
+//! longest-common-prefix lookup is designed around exactly this shape.
+
+use super::CHAT_ALPHABET;
+use crate::prng::Pcg64;
+
+/// One scripted conversation.
+#[derive(Clone, Debug)]
+pub struct Session {
+    /// Stable session tag, carried on the wire as the request `session`
+    /// field (correlation/telemetry only — reuse is content-addressed).
+    pub id: u64,
+    /// Turn `t`'s full transcript; `turns[t + 1]` extends `turns[t]` by
+    /// `words_per_turn` more words.
+    pub turns: Vec<String>,
+}
+
+/// Generate `n_sessions` scripted sessions of `turns` turns each.
+///
+/// Turn 1 is a standard chat query (`"CHAT a b"`-style, 2–4 single-char
+/// words from [`CHAT_ALPHABET`]); each later turn appends `words_per_turn`
+/// more words. Deterministic in `seed`. Callers must keep the final
+/// transcript within the decode row (`config::validate` enforces the bound
+/// for the configured `[session]` section).
+pub fn gen_sessions(
+    n_sessions: usize,
+    turns: usize,
+    words_per_turn: usize,
+    seed: u64,
+) -> Vec<Session> {
+    let alphabet: Vec<char> = CHAT_ALPHABET.chars().collect();
+    let mut rng = Pcg64::new(seed);
+    let mut out = Vec::with_capacity(n_sessions);
+    for id in 0..n_sessions {
+        let m = rng.range_usize(2, 5);
+        let mut transcript = format!(
+            "CHAT {}",
+            (0..m)
+                .map(|_| alphabet[rng.range_usize(0, 64)].to_string())
+                .collect::<Vec<_>>()
+                .join(" ")
+        );
+        let mut session = Session { id: id as u64, turns: Vec::with_capacity(turns) };
+        session.turns.push(transcript.clone());
+        for _ in 1..turns {
+            for _ in 0..words_per_turn {
+                transcript.push(' ');
+                transcript.push(alphabet[rng.range_usize(0, 64)]);
+            }
+            session.turns.push(transcript.clone());
+        }
+        out.push(session);
+    }
+    out
+}
+
+/// The longest transcript `gen_sessions` can emit for these parameters
+/// (turn-1 maximum of 4 words plus the appended turns), in bytes — what
+/// `config::validate` checks against the decode row budget.
+pub fn max_transcript_len(turns: usize, words_per_turn: usize) -> usize {
+    // "CHAT" + 4 × " <c>" + (turns − 1) × words_per_turn × " <c>"
+    4 + 2 * 4 + turns.saturating_sub(1) * words_per_turn * 2
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn turns_extend_the_transcript() {
+        let sessions = gen_sessions(8, 3, 2, 0x5E55);
+        assert_eq!(sessions.len(), 8);
+        for s in &sessions {
+            assert_eq!(s.turns.len(), 3);
+            assert!(s.turns[0].starts_with("CHAT "));
+            for w in s.turns.windows(2) {
+                assert!(
+                    w[1].starts_with(&w[0]),
+                    "turn does not extend its predecessor: {w:?}"
+                );
+                assert_eq!(w[1].len(), w[0].len() + 4, "2 words = 4 bytes");
+            }
+        }
+        // deterministic in the seed, distinct across seeds
+        assert_eq!(
+            sessions.iter().map(|s| s.turns.clone()).collect::<Vec<_>>(),
+            gen_sessions(8, 3, 2, 0x5E55)
+                .iter()
+                .map(|s| s.turns.clone())
+                .collect::<Vec<_>>()
+        );
+        assert_ne!(
+            sessions[0].turns,
+            gen_sessions(8, 3, 2, 0x0DD5)[0].turns
+        );
+    }
+
+    #[test]
+    fn transcripts_stay_under_the_declared_bound() {
+        for (turns, wpt) in [(1, 1), (3, 2), (5, 4)] {
+            let bound = max_transcript_len(turns, wpt);
+            for s in gen_sessions(16, turns, wpt, 7) {
+                for t in &s.turns {
+                    assert!(t.len() <= bound, "{} > {bound}: {t:?}", t.len());
+                }
+            }
+        }
+    }
+}

@@ -9,21 +9,26 @@
 //!   slot-work;
 //! * **slot-refill determinism** — a continuous-mode pool at `workers = 1`
 //!   and `workers = 2` produces identical per-request outcomes at
-//!   temperature 0 (per-job seed streams make refill timing unobservable).
+//!   temperature 0 (per-job seed streams make refill timing unobservable);
+//! * **mid-epoch failure teardown** — a backend error during admission with
+//!   refills still pending must leave every decode slot vacant, including
+//!   slots the failing epoch itself populated.
 
 use std::collections::BTreeMap;
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex};
 use std::time::Duration;
 
-use thinkalloc::config::{AllocPolicy, Config, DecodeMode};
+use thinkalloc::config::{AllocPolicy, Config, DecodeMode, RuntimeConfig};
 use thinkalloc::metrics::Registry;
 use thinkalloc::prng::Pcg64;
 use thinkalloc::runtime::Engine;
 use thinkalloc::serving::batcher::Batcher;
+use thinkalloc::serving::generator::{self, GenConfig};
 use thinkalloc::serving::scheduler::{Scheduler, SchedulerShared};
 use thinkalloc::serving::shard::{EpochSink, ShardPool};
 use thinkalloc::serving::{Request, Response};
+use thinkalloc::tokenizer;
 use thinkalloc::workload;
 
 fn decode_config(mode: DecodeMode, temperature: f64) -> Config {
@@ -179,6 +184,49 @@ fn slot_refill_is_deterministic_across_pool_widths() {
     for (id, a) in &one {
         assert_eq!(a, &two[id], "request {id} diverged between workers=1 and 2");
     }
+}
+
+#[test]
+fn midepoch_error_with_pending_refills_tears_down_all_slots() {
+    // a backend error partway through admission — after the epoch already
+    // seated some rows, with more jobs still waiting for refill — must not
+    // strand ANY occupied slot: neither the poisoned one nor the rows the
+    // failing epoch itself began moments earlier
+    let rt = RuntimeConfig { decode_batch: 2, ..RuntimeConfig::default() };
+    let engine = Engine::load_all(&rt).unwrap();
+    let row = tokenizer::encode("ADD 5 = ", engine.max_seq());
+    // poison slot 1 as a crashed previous epoch would; the next epoch
+    // admits job 0 into slot 0, then dies admitting job 1 into slot 1
+    // with jobs 2 and 3 still pending refill
+    engine.decode_begin_row(1, &row).unwrap();
+    let jobs = generator::jobs_for_allocation(&["ADD 1", "ADD 2"], &[2, 2]);
+    let cfg = GenConfig { max_new_tokens: 4, temperature: 0.0 };
+    let mut rng = Pcg64::new(9);
+    let err = generator::generate_with(&engine, &jobs, &cfg, &mut rng, DecodeMode::Continuous);
+    assert!(err.is_err(), "admission into a poisoned slot must fail");
+
+    // teardown proof: every slot must accept a fresh begin (vacancy), not
+    // just the slots that were never touched
+    for s in 0..2 {
+        engine
+            .decode_begin_row(s, &row)
+            .unwrap_or_else(|e| panic!("slot {s} still occupied after teardown: {e}"));
+        engine.decode_evict_row(s).unwrap();
+    }
+
+    // and the engine serves the same jobs correctly afterwards: compare
+    // against a pristine engine at temperature 0 (greedy, rng-free)
+    let (got, _) =
+        generator::generate_with(&engine, &jobs, &cfg, &mut rng, DecodeMode::Continuous)
+            .expect("engine must be reusable after a failed epoch");
+    let fresh = Engine::load_all(&rt).unwrap();
+    let (want, _) =
+        generator::generate_with(&fresh, &jobs, &cfg, &mut rng, DecodeMode::Continuous).unwrap();
+    assert_eq!(got.len(), 4);
+    let texts = |v: &[generator::Sample]| {
+        v.iter().map(|s| (s.query, s.text.clone())).collect::<Vec<_>>()
+    };
+    assert_eq!(texts(&got), texts(&want), "post-recovery outputs diverged");
 }
 
 #[test]

@@ -1,0 +1,247 @@
+//! Cold-vs-warm parity for the serving prefix cache: enabling the cache
+//! must never change a single served byte, at any temperature, in either
+//! decode mode, at any pool width — it may only change how much prefill
+//! work the engine performs. Pinned here:
+//!
+//! * **bit parity, single worker** — a multi-turn session trace served
+//!   with the cache on produces field-identical responses to the cache-off
+//!   run, across `decode_mode = wave | continuous` and temperature 0 and 1
+//!   (per-job seed streams mean the cache adds zero rng draws);
+//! * **bit parity, pool** — the same trace through a `ShardPool` at
+//!   `workers = 1 | 2`, temperature 0 (multi-worker epoch assignment is
+//!   racy, so stochastic multi-worker runs are not comparable for reasons
+//!   unrelated to the cache);
+//! * **eviction under pressure** — a byte-starved cache that constantly
+//!   evicts (and re-fills evicted prefixes on later turns) still serves
+//!   bit-identical responses, while reporting nonzero evictions.
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+use thinkalloc::config::{AllocPolicy, Config, DecodeMode};
+use thinkalloc::metrics::Registry;
+use thinkalloc::prng::Pcg64;
+use thinkalloc::runtime::Engine;
+use thinkalloc::serving::batcher::Batcher;
+use thinkalloc::serving::scheduler::{Scheduler, SchedulerShared};
+use thinkalloc::serving::shard::{EpochSink, ShardPool};
+use thinkalloc::serving::{Request, Response};
+use thinkalloc::workload::sessions;
+
+fn cache_config(mode: DecodeMode, temperature: f64, cache: bool) -> Config {
+    let mut cfg = Config::default(); // native backend
+    cfg.runtime.decode_mode = mode;
+    cfg.allocator.policy = AllocPolicy::Online;
+    cfg.allocator.budget_per_query = 2.0;
+    cfg.allocator.b_max = 8;
+    cfg.server.batch_queries = 16;
+    cfg.server.temperature = temperature;
+    cfg.prefix_cache.enabled = cache;
+    cfg.validate().unwrap();
+    cfg
+}
+
+/// One request batch per session turn: turn `t + 1`'s prompts extend turn
+/// `t`'s transcripts, the shape that produces warm prefix hits.
+fn session_turns() -> Vec<Vec<Request>> {
+    let sessions = sessions::gen_sessions(4, 3, 2, 0x5E55);
+    (0..3)
+        .map(|t| {
+            sessions
+                .iter()
+                .enumerate()
+                .map(|(s, sess)| {
+                    let mut r =
+                        Request::new((t * 100 + s) as u64, sess.turns[t].clone(), "chat");
+                    r.session = Some(sess.id);
+                    r
+                })
+                .collect()
+        })
+        .collect()
+}
+
+/// Everything a response says except wall-clock latency.
+fn fingerprint(r: &Response) -> (u64, String, bool, usize, u64, u32, String) {
+    (
+        r.id,
+        r.response.clone(),
+        r.ok,
+        r.budget,
+        r.predicted.to_bits(),
+        r.reward.to_bits(),
+        format!("{:?}", r.procedure),
+    )
+}
+
+/// Serve each turn as its own epoch on one scheduler (the cache lives in
+/// `SchedulerShared`, so it persists across epochs exactly as it does on a
+/// long-lived shard worker).
+fn serve_turns(
+    cfg: Config,
+    turns: &[Vec<Request>],
+) -> (Vec<Vec<(u64, String, bool, usize, u64, u32, String)>>, Arc<Registry>) {
+    let metrics = Arc::new(Registry::default());
+    let engine = Engine::load_all(&cfg.runtime).unwrap();
+    let scheduler = Scheduler::new(engine, cfg, metrics.clone());
+    let mut rng = Pcg64::new(0x5E7E);
+    let out = turns
+        .iter()
+        .map(|reqs| {
+            scheduler
+                .serve_epoch(reqs, &mut rng, scheduler.effective_budget())
+                .unwrap()
+                .iter()
+                .map(fingerprint)
+                .collect()
+        })
+        .collect();
+    (out, metrics)
+}
+
+#[test]
+fn warm_serving_is_bit_identical_across_modes_and_temperatures() {
+    let turns = session_turns();
+    for mode in [DecodeMode::Continuous, DecodeMode::Wave] {
+        for temp in [0.0, 1.0] {
+            let (cold, cm) = serve_turns(cache_config(mode, temp, false), &turns);
+            let (warm, wm) = serve_turns(cache_config(mode, temp, true), &turns);
+            assert_eq!(
+                cold, warm,
+                "cache-on diverged from cache-off at mode={mode:?} temp={temp}"
+            );
+            // cache off ⇒ the scheduler records no prefix activity at all
+            assert_eq!(cm.counter("serving.prefix.hit").get(), 0);
+            match mode {
+                // non-vacuous: the warm run actually reused prefixes
+                DecodeMode::Continuous => assert!(
+                    wm.counter("serving.prefix.hit").get() > 0,
+                    "no prefix hits at temp={temp} — parity is vacuous"
+                ),
+                // wave mode re-encodes full batches and never touches the
+                // slot API; the cache must stay inert there
+                DecodeMode::Wave => assert_eq!(
+                    wm.counter("serving.prefix.hit").get()
+                        + wm.counter("serving.prefix.miss").get(),
+                    0,
+                    "wave mode must not consult the prefix cache"
+                ),
+            }
+        }
+    }
+}
+
+#[test]
+fn eviction_under_pressure_keeps_bit_parity() {
+    // a cache barely big enough for one snapshot: every insert evicts the
+    // previous resident, and prefixes evicted on turn t get re-filled on
+    // turn t+1 — served bytes must not care
+    let turns = session_turns();
+    let (cold, _) = serve_turns(
+        cache_config(DecodeMode::Continuous, 1.0, false),
+        &turns,
+    );
+    let mut cfg = cache_config(DecodeMode::Continuous, 1.0, true);
+    cfg.prefix_cache.max_bytes = 150;
+    let (warm, wm) = serve_turns(cfg, &turns);
+    assert_eq!(cold, warm, "eviction pressure changed served output");
+    assert!(
+        wm.gauge("serving.prefix.evict").get() > 0.0,
+        "cache never evicted — pressure case is vacuous"
+    );
+}
+
+// ---- pool parity: same trace through ShardPool at workers = 1 and 2 ----
+
+struct CollectSink {
+    ready: AtomicUsize,
+    out: Mutex<BTreeMap<u64, (u64, String, bool, usize, u64, u32, String)>>,
+    failure: Mutex<Option<String>>,
+}
+
+impl EpochSink for CollectSink {
+    fn on_worker_ready(&self, _worker: usize) {
+        self.ready.fetch_add(1, Ordering::SeqCst);
+    }
+
+    fn on_response(&self, resp: Response) {
+        let prev = self.out.lock().unwrap().insert(resp.id, fingerprint(&resp));
+        assert!(prev.is_none(), "duplicate response");
+    }
+
+    fn on_epoch_error(&self, _epoch: &[Request], err: &anyhow::Error, _el: Duration) {
+        self.failure
+            .lock()
+            .unwrap()
+            .get_or_insert_with(|| format!("epoch failed: {err:#}"));
+    }
+
+    fn on_fatal(&self, worker: usize, err: &anyhow::Error) {
+        self.failure
+            .lock()
+            .unwrap()
+            .get_or_insert_with(|| format!("worker {worker} failed: {err:#}"));
+    }
+}
+
+fn run_pool(
+    workers: usize,
+    turns: &[Vec<Request>],
+    mut cfg: Config,
+) -> BTreeMap<u64, (u64, String, bool, usize, u64, u32, String)> {
+    // one turn per epoch so warm turns can hit prefixes cached by cold ones
+    cfg.server.batch_queries = turns[0].len();
+    cfg.server.workers = workers;
+    cfg.validate().unwrap();
+    let n: usize = turns.iter().map(Vec::len).sum();
+    let batcher = Arc::new(Batcher::new(
+        cfg.server.batch_queries,
+        Duration::from_millis(cfg.server.max_wait_ms),
+    ));
+    for reqs in turns {
+        for r in reqs {
+            assert!(batcher.submit(r.clone()));
+        }
+    }
+    batcher.close();
+    let shared = SchedulerShared::new(cfg, Arc::new(Registry::default()));
+    let sink = Arc::new(CollectSink {
+        ready: AtomicUsize::new(0),
+        out: Mutex::new(BTreeMap::new()),
+        failure: Mutex::new(None),
+    });
+    let pool = ShardPool::spawn(workers, batcher, shared, sink.clone());
+    pool.join();
+    if let Some(msg) = sink.failure.lock().unwrap().as_ref() {
+        panic!("{msg}");
+    }
+    let out = std::mem::take(&mut *sink.out.lock().unwrap());
+    assert_eq!(out.len(), n, "lost responses");
+    out
+}
+
+#[test]
+fn pool_parity_at_temperature_zero_across_widths() {
+    // temperature 0: worker identity and epoch interleaving are already
+    // unobservable (pinned by decode_engine.rs), so any divergence here is
+    // the cache's — compare all four (cache × width) runs pairwise
+    let turns = session_turns();
+    let base = run_pool(1, &turns, cache_config(DecodeMode::Continuous, 0.0, false));
+    for workers in [1, 2] {
+        for cache in [false, true] {
+            let got = run_pool(
+                workers,
+                &turns,
+                cache_config(DecodeMode::Continuous, 0.0, cache),
+            );
+            for (id, want) in &base {
+                assert_eq!(
+                    &got[id], want,
+                    "request {id} diverged at workers={workers} cache={cache}"
+                );
+            }
+        }
+    }
+}

@@ -1,0 +1,125 @@
+//! Multi-turn chat sessions over TCP, end to end: a scripted 3-turn
+//! session drives the serving prefix cache through the real front door
+//! (both io_modes), checking
+//!
+//! * per-turn responses come back in order with the right client ids;
+//! * `serving.prefix.hit` is 0 after turn 1 (cold) and grows on every
+//!   warm turn — turn *t+1*'s prompt extends turn *t*'s transcript, so
+//!   each warm admission finds the previous turn's cached prefix;
+//! * realized rewards (and response bytes) bit-match a cache-off replay
+//!   of the same trace on a fresh server — the cache changes prefill
+//!   work, never served output;
+//! * a cache-off server exposes no `serving.prefix.*` metrics at all.
+//!
+//! One session, one request per turn: every chat prompt shares the
+//! `"CHAT "` boilerplate, so any two same-epoch admissions would produce
+//! a (legitimate) cross-query hit and make the turn-1 "cold" assertion
+//! meaningless. Serving turn-by-turn keeps the cold/warm boundary exact.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use thinkalloc::config::{AllocPolicy, Config, IoMode};
+use thinkalloc::jsonio::Json;
+use thinkalloc::metrics::Registry;
+use thinkalloc::server::{Client, Server};
+use thinkalloc::workload::sessions;
+
+fn session_config(io: IoMode, cache: bool) -> Config {
+    let mut cfg = Config::default(); // native backend
+    // exactly one job per query: budget 1 under the uniform policy, so a
+    // turn's epoch performs a single admission and the hit/miss counters
+    // map one-to-one onto turns
+    cfg.allocator.policy = AllocPolicy::Uniform;
+    cfg.allocator.budget_per_query = 1.0;
+    cfg.allocator.b_max = 1;
+    cfg.server.addr = "127.0.0.1:0".into();
+    cfg.server.batch_queries = 1;
+    cfg.server.max_wait_ms = 20;
+    cfg.server.workers = 1;
+    cfg.server.io_mode = io;
+    cfg.prefix_cache.enabled = cache;
+    cfg.validate().unwrap();
+    cfg
+}
+
+fn spawn_server(cfg: Config) -> (String, std::thread::JoinHandle<()>) {
+    let server = Server::new(cfg, Arc::new(Registry::default()));
+    let (tx, rx) = std::sync::mpsc::channel();
+    let srv = server.clone();
+    let handle =
+        std::thread::spawn(move || srv.run(|a| tx.send(a).unwrap()).unwrap());
+    (rx.recv().unwrap(), handle)
+}
+
+fn counter(metrics: &Json, name: &str) -> Option<f64> {
+    metrics.get(&format!("counter.{name}")).and_then(Json::as_f64)
+}
+
+/// Drive the 3-turn session; returns per-turn (response text, reward) and
+/// the `serving.prefix.hit` reading taken after each turn (None when the
+/// server never created the counter).
+fn drive_session(
+    addr: &str,
+    turns: &[String],
+    session_id: u64,
+) -> (Vec<(String, f64)>, Vec<Option<f64>>) {
+    let mut c = Client::connect(addr).unwrap();
+    c.set_read_timeout(Some(Duration::from_secs(120))).unwrap();
+    let mut served = Vec::new();
+    let mut hits = Vec::new();
+    for (t, text) in turns.iter().enumerate() {
+        c.request_with_session(t as u64, text, "chat", session_id).unwrap();
+        let resp = c.read_response().expect("turn response");
+        // in-order delivery: each turn's reply echoes that turn's id
+        assert_eq!(
+            resp.get("id").and_then(Json::as_i64),
+            Some(t as i64),
+            "turn {t} response out of order"
+        );
+        assert_eq!(resp.get("ok").and_then(Json::as_bool), Some(true));
+        served.push((
+            resp.get("response").and_then(Json::as_str).unwrap().to_string(),
+            resp.get("reward").and_then(Json::as_f64).unwrap(),
+        ));
+        let metrics = c.command("metrics").unwrap();
+        hits.push(counter(&metrics, "serving.prefix.hit"));
+    }
+    c.command("shutdown").unwrap();
+    (served, hits)
+}
+
+#[test]
+fn three_turn_session_hits_cache_and_matches_cold_replay() {
+    let session = &sessions::gen_sessions(1, 3, 2, 0x5E55)[0];
+    for io in [IoMode::Event, IoMode::Threads] {
+        // warm: prefix cache on
+        let (addr, handle) = spawn_server(session_config(io, true));
+        let (warm, hits) = drive_session(&addr, &session.turns, session.id);
+        let _ = handle.join();
+
+        assert_eq!(
+            hits[0],
+            Some(0.0),
+            "turn 1 is cold — nothing can hit an empty cache ({io:?})"
+        );
+        let (h2, h3) = (hits[1].unwrap(), hits[2].unwrap());
+        assert!(h2 > 0.0, "turn 2 must hit turn 1's cached prefix ({io:?})");
+        assert!(h3 > h2, "turn 3 must hit turn 2's cached prefix ({io:?})");
+
+        // cold replay: same trace, fresh server, cache off
+        let (addr, handle) = spawn_server(session_config(io, false));
+        let (cold, off_hits) = drive_session(&addr, &session.turns, session.id);
+        let _ = handle.join();
+
+        // cache-off servers never create serving.prefix.* metrics
+        assert!(
+            off_hits.iter().all(Option::is_none),
+            "cache-off server leaked prefix metrics ({io:?})"
+        );
+        // realized rewards (and the served bytes themselves) bit-match:
+        // same worker seed, same epoch trace, and the cache draws nothing
+        // from the sampler's rng stream
+        assert_eq!(warm, cold, "warm serving diverged from cold replay ({io:?})");
+    }
+}

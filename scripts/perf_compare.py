@@ -12,6 +12,12 @@ metric exits nonzero and says which. Metrics missing from either file are
 skipped with a note — bench sections come and go, and a perf gate must not
 turn into a schema gate. Values <= 0 are skipped for the same reason
 (smoke runs can legitimately produce empty histograms).
+
+With --hard-metrics, only the HARD subset (decode steps/s and the two p95
+queue waits — the numbers the serving claims actually rest on) can fail
+the run; everything else is compared and printed as advisory. That is the
+CI mode: noisy shared runners make the throughput-style metrics flap, but
+a real decode or queue-wait regression should block the merge.
 """
 
 import argparse
@@ -25,9 +31,17 @@ METRICS = [
     ("pool.workers_4", "queries_per_s", "higher"),
     ("many_conn.event", "queries_per_s", "higher"),
     ("many_socket.event", "queries_per_s", "higher"),
+    ("sessions.warm", "warm_turn_slot_steps", "lower"),
     ("controller.on", "queue_wait_p95_us", "lower"),
     ("saturation", "queue_wait_p95_us", "lower"),
 ]
+
+# the metrics that hard-gate CI under --hard-metrics (see module docstring)
+HARD = {
+    "decode.continuous.steps_per_s",
+    "controller.on.queue_wait_p95_us",
+    "saturation.queue_wait_p95_us",
+}
 
 
 def load(path):
@@ -49,6 +63,9 @@ def main():
     ap.add_argument("candidate")
     ap.add_argument("--tolerance", type=float, default=0.15,
                     help="allowed fractional regression (default 0.15)")
+    ap.add_argument("--hard-metrics", action="store_true",
+                    help="only the HARD metric subset can fail the run; "
+                         "the rest are compared as advisory")
     args = ap.parse_args()
 
     base = load(args.baseline)
@@ -58,6 +75,7 @@ def main():
     regressions = []
     for top, field, direction in METRICS:
         name = f"{top}.{field}"
+        gating = not args.hard_metrics or name in HARD
         b, c = pick(base, top, field), pick(cand, top, field)
         if b is None or c is None or b <= 0 or c <= 0:
             print(f"  skip {name}: baseline={b} candidate={c}")
@@ -67,10 +85,13 @@ def main():
             reg = (b - c) / b
         else:
             reg = (c - b) / b
-        verdict = "REGRESSION" if reg > tol else "ok"
+        if reg > tol:
+            verdict = "REGRESSION" if gating else "advisory-regression"
+        else:
+            verdict = "ok"
         print(f"  {verdict:>10} {name}: baseline {b:.1f} -> candidate {c:.1f} "
               f"({reg:+.1%} regression, tolerance {tol:.0%})")
-        if reg > tol:
+        if reg > tol and gating:
             regressions.append((name, reg))
 
     if regressions:
