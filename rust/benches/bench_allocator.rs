@@ -31,7 +31,9 @@ fn main() {
     }
 
     section("online eq.5 solve (λ̂ → budgets)");
-    for (n, b, b_max) in [(64usize, 8.0, 16usize), (64, 8.0, 100), (1024, 8.0, 100), (8192, 16.0, 128)] {
+    for (n, b, b_max) in
+        [(64usize, 8.0, 16usize), (64, 8.0, 100), (1024, 8.0, 100), (8192, 16.0, 128)]
+    {
         let l = lambdas(n, 2);
         let preds = Predictions::Lambdas(l);
         let alloc = OnlineAllocator::new(b_max, 0);

@@ -15,10 +15,17 @@
 //! The fixed run's queue wait diverges (open-loop overload); the controller
 //! trades per-query budget for queue wait and holds p95 near its target.
 //!
-//! Front-door sections close the file: admission under 3× overload, a
+//! Front-door sections: admission under 3× overload, a
 //! connections≫workers stress run per I/O driver, and the many-socket
 //! section — 1k+ held connections served by the poll(2) event loop on ≤8
 //! I/O threads vs the 2-threads-per-connection reference.
+//!
+//! The fleet tier closes the file: per-decision placement-policy cost, a
+//! 3-replica consistent-hash replay through the fleet front door (the
+//! placement histogram prices the overhead the fleet adds per request),
+//! and a timed replica-loss recovery run — one of three replica
+//! *processes* SIGKILLed with a burst in flight, sample = kill → last
+//! response, zero requests lost.
 //!
 //! Runs on whatever backend the default config selects (native unless
 //! overridden), so it works on artifact-less hosts and doubles as the CI
@@ -35,7 +42,11 @@ use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 use harness::{bench, black_box, section};
-use thinkalloc::config::{AllocPolicy, Config, DecodeMode, IoMode};
+use thinkalloc::config::{AllocPolicy, Config, DecodeMode, IoMode, PlacementKind, ReplicaArm};
+use thinkalloc::fleet::placement::{
+    ConsistentHash, DifficultyAware, LeastLoaded, PlacementPolicy, ReplicaView,
+};
+use thinkalloc::fleet::FleetServer;
 use thinkalloc::jsonio::Json;
 use thinkalloc::metrics::Registry;
 use thinkalloc::prng::Pcg64;
@@ -234,6 +245,46 @@ fn run_pool(workers: usize, reqs: &[Request], cfg: Config) -> Duration {
         "pool lost or duplicated responses"
     );
     dt
+}
+
+/// Spawn one `thinkalloc serve` child on port 0 and parse the readiness
+/// banner off its stdout — the same protocol the fleet's spawn path and
+/// `tests/fleet_serve.rs` use. The recovery section needs real processes:
+/// a SIGKILL must sever the socket, not unwind a thread.
+fn spawn_replica_child() -> (std::process::Child, String) {
+    use std::io::BufRead as _;
+    let mut child = std::process::Command::new(env!("CARGO_BIN_EXE_thinkalloc"))
+        .args(["serve", "--addr=127.0.0.1:0", "--workers=1"])
+        .stdin(std::process::Stdio::null())
+        .stdout(std::process::Stdio::piped())
+        .stderr(std::process::Stdio::inherit())
+        .spawn()
+        .expect("spawn replica");
+    let stdout = child.stdout.take().unwrap();
+    let mut reader = std::io::BufReader::new(stdout);
+    let mut line = String::new();
+    let addr = loop {
+        line.clear();
+        assert!(
+            reader.read_line(&mut line).unwrap() > 0,
+            "replica exited before announcing its address"
+        );
+        if let Some(rest) = line.trim_end().strip_prefix("listening on ") {
+            break rest.trim().to_string();
+        }
+    };
+    // keep draining stdout so the child never blocks on a full pipe
+    std::thread::spawn(move || {
+        let mut sink = String::new();
+        loop {
+            sink.clear();
+            match reader.read_line(&mut sink) {
+                Ok(0) | Err(_) => break,
+                Ok(_) => {}
+            }
+        }
+    });
+    (child, addr)
 }
 
 fn main() {
@@ -920,6 +971,217 @@ fn main() {
             ]),
         ));
     }
+
+    // --- fleet placement policies: per-decision cost ------------------------
+    // The policies alone, no sockets: a 6-replica heterogeneous pool view
+    // and a mixed-domain key stream. Difficulty-aware pays the λ̂ probe per
+    // decision; the hash policies should stay in the single-digit-µs range.
+    section("fleet placement policies: per-decision cost, 6-replica pool");
+    let decisions = if smoke { 256 } else { 2048 };
+    let arms6 = [
+        ReplicaArm::Weak,
+        ReplicaArm::Weak,
+        ReplicaArm::Both,
+        ReplicaArm::Both,
+        ReplicaArm::Strong,
+        ReplicaArm::Strong,
+    ];
+    let pool_views: Vec<ReplicaView> = arms6
+        .iter()
+        .enumerate()
+        .map(|(i, arm)| ReplicaView {
+            healthy: true,
+            arm: *arm,
+            queue_depth: i * 3,
+            queue_wait_p95_us: i as f64 * 250.0,
+            inflight: (6 - i) % 4,
+        })
+        .collect();
+    let place_queries = workload::gen_mixed_dataset(&["code", "math"], 64, 0xFACE);
+    let fleet_base = Config::default();
+    let mut policies: Vec<Box<dyn PlacementPolicy>> = vec![
+        Box::new(ConsistentHash::new(pool_views.len(), fleet_base.fleet.vnodes)),
+        Box::new(LeastLoaded),
+        Box::new(DifficultyAware::new(
+            Engine::load_all(&fleet_base.runtime).expect("engine"),
+            fleet_base.route.clone(),
+        )),
+    ];
+    for policy in &mut policies {
+        // warm pass: difficulty-aware calibrates its per-domain router on
+        // first sight of a domain — a one-off cost, not per-decision
+        for q in &place_queries {
+            black_box(policy.place(&q.domain, &q.text, &pool_views).expect("placement"));
+        }
+        let t0 = Instant::now();
+        for i in 0..decisions {
+            let q = &place_queries[i % place_queries.len()];
+            black_box(policy.place(&q.domain, &q.text, &pool_views).expect("placement"));
+        }
+        let per_us = t0.elapsed().as_secs_f64() * 1e6 / decisions as f64;
+        println!("  {:<17} {per_us:>8.2} µs/decision", policy.name());
+        summary.push((
+            format!("fleet.policy.{}", policy.name().replace('-', "_")),
+            Json::obj(vec![("placement_us", Json::Num(per_us))]),
+        ));
+    }
+
+    // --- fleet front door: 3 replicas, consistent hash ----------------------
+    // A burst drains through one fleet connection, so wire parsing,
+    // placement, forwarding, and response rewriting all sit on the measured
+    // path. The placement histogram's p50 is the per-request overhead the
+    // fleet adds on top of a bare replica (p50, not mean: a single
+    // scheduler hiccup in a smoke-sized sample would swamp a µs-scale
+    // mean) — hard-gated in CI against the committed baseline.
+    let fleet_n = scale.trace_len;
+    section(&format!(
+        "fleet front door: {fleet_n} mixed queries over 3 replicas, \
+         consistent hash"
+    ));
+    let start_replica = |cfg: Config| {
+        let server = Server::new(cfg, Arc::new(Registry::default()));
+        let (tx, rx) = std::sync::mpsc::channel();
+        let h = std::thread::spawn(move || server.run(move |a| tx.send(a).unwrap()));
+        let addr: String = rx.recv().unwrap();
+        (addr, h)
+    };
+    let mut replica_handles = Vec::new();
+    let mut replica_addrs = Vec::new();
+    for _ in 0..3 {
+        let mut cfg = pool_config();
+        cfg.server.addr = "127.0.0.1:0".into();
+        cfg.server.workers = 1;
+        cfg.validate().expect("replica config");
+        let (a, h) = start_replica(cfg);
+        replica_addrs.push(a);
+        replica_handles.push(h);
+    }
+    let mut fcfg = pool_config();
+    fcfg.fleet.addr = "127.0.0.1:0".into();
+    fcfg.fleet.addrs = replica_addrs;
+    fcfg.fleet.placement = PlacementKind::ConsistentHash;
+    fcfg.fleet.budget_per_query = 2.0;
+    fcfg.validate().expect("fleet config");
+    let fleet_metrics = Arc::new(Registry::default());
+    let fleet = FleetServer::new(fcfg, fleet_metrics.clone()).expect("fleet");
+    let (ftx, frx) = std::sync::mpsc::channel();
+    let fleet_h = std::thread::spawn(move || fleet.run(move |a| ftx.send(a).unwrap()));
+    let fleet_addr: String = frx.recv().unwrap();
+
+    let fleet_reqs = workload::gen_mixed_dataset(&["code", "math", "chat"], fleet_n, 0xF1E7);
+    let mut client = Client::connect(&fleet_addr).expect("fleet connect");
+    client.set_read_timeout(Some(Duration::from_secs(300))).unwrap();
+    let t0 = Instant::now();
+    for (i, q) in fleet_reqs.iter().enumerate() {
+        client.request(i as u64, &q.text, &q.domain).expect("fleet request");
+    }
+    for _ in 0..fleet_n {
+        let resp = client.read_response().expect("fleet response");
+        assert!(resp.get("error").is_none(), "fleet errored: {resp}");
+    }
+    let dt = t0.elapsed();
+    let fleet_qps = fleet_n as f64 / dt.as_secs_f64();
+    let place_p50 = fleet_metrics.histogram("fleet.placement_us").percentile_us(0.5);
+    println!(
+        "  {fleet_n} queries over 3 replicas: {:>8.1} ms total, \
+         {fleet_qps:>7.1} queries/s | placement p50 {place_p50:.1}µs/req",
+        dt.as_secs_f64() * 1e3
+    );
+    {
+        let mut c = Client::connect(&fleet_addr).expect("fleet shutdown client");
+        c.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+        let _ = c.command("shutdown");
+    }
+    fleet_h.join().expect("fleet thread").expect("fleet run");
+    for h in replica_handles {
+        // fleet shutdown broadcasts to the replicas; they join cleanly
+        h.join().expect("replica thread").expect("replica run");
+    }
+    summary.push((
+        "fleet.replay".into(),
+        Json::obj(vec![
+            ("queries", Json::Num(fleet_n as f64)),
+            ("total_ms", Json::Num(dt.as_secs_f64() * 1e3)),
+            ("queries_per_s", Json::Num(fleet_qps)),
+        ]),
+    ));
+    summary.push((
+        "fleet.placement".into(),
+        Json::obj(vec![("overhead_us_per_req", Json::Num(place_p50))]),
+    ));
+
+    // --- fleet recovery: SIGKILL one of three replica processes -------------
+    // Real child processes — replica death is a process death, as in
+    // tests/fleet_serve.rs, but here it is *timed*: a burst is placed
+    // across the pool, one replica is SIGKILLed with the burst in flight,
+    // and the sample is kill → last response. The window covers death
+    // detection (reader EOF), quarantine, re-placement of the displaced
+    // requests, and their reprocessing on the survivors. A lost request
+    // would hang the 120 s read and fail the section loudly.
+    let recovery_iters = if smoke { 2 } else { 4 };
+    let recovery_n = if smoke { 24 } else { 48 };
+    section(&format!(
+        "fleet recovery: {recovery_iters} runs × {recovery_n} queries, one \
+         replica SIGKILLed in flight"
+    ));
+    let mut recovery_samples = Vec::new();
+    for _ in 0..recovery_iters {
+        let mut children = Vec::new();
+        let mut addrs = Vec::new();
+        for _ in 0..3 {
+            let (c, a) = spawn_replica_child();
+            children.push(c);
+            addrs.push(a);
+        }
+        let mut cfg = Config::default();
+        cfg.fleet.addr = "127.0.0.1:0".into();
+        cfg.fleet.addrs = addrs;
+        cfg.fleet.placement = PlacementKind::ConsistentHash;
+        cfg.fleet.heartbeat_ms = 50;
+        cfg.fleet.quarantine_after = 2;
+        cfg.fleet.readmit_after = 2;
+        cfg.fleet.retry_max = 4;
+        cfg.validate().expect("recovery fleet config");
+        let fleet = FleetServer::new(cfg, Arc::new(Registry::default())).expect("fleet");
+        let (tx, rx) = std::sync::mpsc::channel();
+        let fleet_h = std::thread::spawn(move || fleet.run(move |a| tx.send(a).unwrap()));
+        let fleet_addr: String = rx.recv().unwrap();
+
+        let reqs = workload::gen_mixed_dataset(&["code", "math"], recovery_n, 0x0DD);
+        let mut client = Client::connect(&fleet_addr).expect("connect");
+        client.set_read_timeout(Some(Duration::from_secs(120))).unwrap();
+        for (i, q) in reqs.iter().enumerate() {
+            client.request(i as u64, &q.text, &q.domain).expect("request");
+        }
+        // let the burst spread across the pool before pulling a replica
+        std::thread::sleep(Duration::from_millis(30));
+        children[1].kill().expect("SIGKILL replica");
+        let t_kill = Instant::now();
+        for _ in 0..recovery_n {
+            let resp = client.read_response().expect("fleet lost a request");
+            assert!(resp.get("error").is_none(), "request failed: {resp}");
+        }
+        recovery_samples.push(t_kill.elapsed().as_secs_f64() * 1e3);
+        let _ = client.command("shutdown");
+        fleet_h.join().expect("fleet thread").expect("fleet run");
+        for mut c in children {
+            let _ = c.kill();
+            let _ = c.wait();
+        }
+    }
+    let recovery_p95 = p95_ms(&recovery_samples);
+    println!(
+        "  kill → all answered: p95 {recovery_p95:.1} ms over \
+         {recovery_iters} runs, 0 lost"
+    );
+    summary.push((
+        "fleet.recovery".into(),
+        Json::obj(vec![
+            ("recovery_p95_ms", Json::Num(recovery_p95)),
+            ("lost", Json::Num(0.0)),
+            ("runs", Json::Num(recovery_iters as f64)),
+        ]),
+    ));
 
     if let Some(path) = json_path {
         let pairs: Vec<(&str, Json)> =

@@ -196,10 +196,28 @@ impl BudgetController {
     }
 }
 
+/// Split a fleet-level average per-query budget across replicas,
+/// proportionally to `weights`, preserving the fleet-wide mean.
+///
+/// Replica `i` gets `total · n · wᵢ / Σw`, so the arithmetic mean over
+/// replicas is exactly `total` for *any* positive weights: a heterogeneous
+/// fleet can bias compute toward strong-arm replicas without inflating the
+/// aggregate spend the paper's curves are plotted against. Equal weights
+/// degenerate to every replica running at `total` — bit-for-bit the
+/// single-process configuration.
+pub fn split_budget(total: f64, weights: &[f64]) -> Vec<f64> {
+    let sum: f64 = weights.iter().sum();
+    if weights.is_empty() || sum <= 0.0 {
+        return vec![];
+    }
+    let n = weights.len() as f64;
+    weights.iter().map(|w| total * n * w / sum).collect()
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::proputil::{prop_check, PropConfig};
+    use crate::proputil::{close, prop_check, PropConfig};
 
     fn enabled_cfg() -> ControllerConfig {
         ControllerConfig {
@@ -415,6 +433,46 @@ mod tests {
                     ));
                 }
                 Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn split_budget_equal_weights_is_identity() {
+        let b = split_budget(8.0, &[1.0, 1.0, 1.0]);
+        assert_eq!(b.len(), 3);
+        for x in &b {
+            assert!((x - 8.0).abs() < 1e-12, "equal weights must not move B");
+        }
+        assert!(split_budget(8.0, &[]).is_empty());
+    }
+
+    #[test]
+    fn split_budget_is_proportional() {
+        let b = split_budget(6.0, &[1.0, 2.0, 3.0]);
+        assert!((b[1] / b[0] - 2.0).abs() < 1e-12);
+        assert!((b[2] / b[0] - 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn prop_split_budget_preserves_the_fleet_mean() {
+        prop_check(
+            "split-budget mean",
+            PropConfig { cases: 64, max_size: 16 },
+            |rng, size| {
+                let n = 1 + size;
+                let total = 0.5 + rng.f64() * 31.5;
+                let weights: Vec<f64> =
+                    (0..n).map(|_| 0.01 + rng.f64() * 10.0).collect();
+                let split = split_budget(total, &weights);
+                if split.len() != n {
+                    return Err(format!("{} budgets for {n} replicas", split.len()));
+                }
+                if let Some(bad) = split.iter().find(|b| **b <= 0.0) {
+                    return Err(format!("non-positive replica budget {bad}"));
+                }
+                let mean = split.iter().sum::<f64>() / n as f64;
+                close(mean, total, 1e-9, "fleet mean budget")
             },
         );
     }

@@ -356,6 +356,85 @@ impl std::str::FromStr for ProcedureKind {
     }
 }
 
+/// Which decode arms a replica serves in a heterogeneous fleet
+/// (`server.replica_arm`). `Both` (the default) is bit-for-bit the
+/// single-process server. `Weak` pins every query to the cheap routing arm
+/// (one weak sample); `Strong` pins every query to the full adaptive
+/// best-of-k decode. The fleet's difficulty-aware placement sends hard
+/// queries to `Strong` replicas and easy ones to `Weak` replicas, lifting
+/// the paper's per-query routing decision to the process level.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum ReplicaArm {
+    #[default]
+    Both,
+    Weak,
+    Strong,
+}
+
+impl ReplicaArm {
+    /// Stable config/CLI/wire name.
+    pub fn name(self) -> &'static str {
+        match self {
+            ReplicaArm::Both => "both",
+            ReplicaArm::Weak => "weak",
+            ReplicaArm::Strong => "strong",
+        }
+    }
+}
+
+impl std::str::FromStr for ReplicaArm {
+    type Err = anyhow::Error;
+    fn from_str(s: &str) -> anyhow::Result<Self> {
+        Ok(match s {
+            "both" => ReplicaArm::Both,
+            "weak" => ReplicaArm::Weak,
+            "strong" => ReplicaArm::Strong,
+            other => anyhow::bail!("unknown replica arm `{other}` (both|weak|strong)"),
+        })
+    }
+}
+
+/// Query → replica placement policy of the fleet router (`fleet.placement`).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum PlacementKind {
+    /// Vnode-ring consistent hash over the query text: deterministic,
+    /// stable under replica quarantine/readmission.
+    #[default]
+    ConsistentHash,
+    /// Pick the healthy replica with the smallest reported load
+    /// (heartbeat `stats`: queue depth, then queue-wait p95).
+    LeastLoaded,
+    /// λ̂-threshold placement (PR-1 router calibration): hard queries go to
+    /// strong-arm replicas, easy ones to weak-arm replicas.
+    DifficultyAware,
+}
+
+impl PlacementKind {
+    /// Stable config/CLI name.
+    pub fn name(self) -> &'static str {
+        match self {
+            PlacementKind::ConsistentHash => "consistent-hash",
+            PlacementKind::LeastLoaded => "least-loaded",
+            PlacementKind::DifficultyAware => "difficulty-aware",
+        }
+    }
+}
+
+impl std::str::FromStr for PlacementKind {
+    type Err = anyhow::Error;
+    fn from_str(s: &str) -> anyhow::Result<Self> {
+        Ok(match s {
+            "consistent-hash" => PlacementKind::ConsistentHash,
+            "least-loaded" => PlacementKind::LeastLoaded,
+            "difficulty-aware" => PlacementKind::DifficultyAware,
+            other => anyhow::bail!(
+                "unknown placement policy `{other}` \
+                 (consistent-hash|least-loaded|difficulty-aware)"
+            ),
+        })
+    }
+}
+
 #[derive(Clone, Debug)]
 pub struct RuntimeConfig {
     /// Execution backend the engine dispatches model calls to.
@@ -559,6 +638,11 @@ pub struct ServerConfig {
     /// Event-loop shard count (ignored in `threads` mode). Connections are
     /// distributed round-robin across shards; shard 0 owns the listener.
     pub io_threads: usize,
+    /// Which decode arms this process serves (fleet replica mode). `Both`
+    /// (the default) is bit-for-bit the standalone server; `Weak`/`Strong`
+    /// pin every query to one arm so a heterogeneous fleet can place by
+    /// predicted difficulty. See [`ReplicaArm`].
+    pub replica_arm: ReplicaArm,
 }
 
 impl Default for ServerConfig {
@@ -578,7 +662,99 @@ impl Default for ServerConfig {
             writer_stall_ms: 2000,
             io_mode: IoMode::Event,
             io_threads: 1,
+            replica_arm: ReplicaArm::Both,
         }
+    }
+}
+
+/// Fleet router tier (`[fleet]` section, `thinkalloc fleet serve`): a front
+/// door that places queries across N replica server processes over the
+/// PROTOCOL.md wire, with heartbeat health checks, bounded retry, and
+/// replica-loss recovery. See `src/fleet/` and DESIGN.md.
+#[derive(Clone, Debug)]
+pub struct FleetConfig {
+    /// Address the fleet router listens on.
+    pub addr: String,
+    /// Replica count when the fleet spawns its own child processes
+    /// (ignored when `addrs` is non-empty).
+    pub replicas: usize,
+    /// Pre-started replica addresses; empty = spawn `replicas` children.
+    pub addrs: Vec<String>,
+    /// Per-replica decode arm (placement metadata + spawn flag). Empty =
+    /// every replica serves `both`; otherwise one entry per replica.
+    pub arms: Vec<ReplicaArm>,
+    /// Per-replica budget-split weights (see
+    /// [`crate::allocator::controller::split_budget`]). Empty = equal.
+    pub weights: Vec<f64>,
+    pub placement: PlacementKind,
+    /// Fleet-level average per-query budget B; split across spawned
+    /// replicas proportionally to `weights`, preserving the mean.
+    pub budget_per_query: f64,
+    /// Heartbeat period: each replica answers a `stats` command this often.
+    pub heartbeat_ms: u64,
+    /// Consecutive missed heartbeats before a replica is quarantined.
+    pub quarantine_after: u32,
+    /// Consecutive recovered heartbeats before a quarantined replica is
+    /// readmitted.
+    pub readmit_after: u32,
+    /// Attempts per query (first placement + retries) before the client
+    /// gets an error line.
+    pub retry_max: u32,
+    /// Base retry backoff; doubles per attempt.
+    pub retry_backoff_ms: u64,
+    /// Per-attempt deadline: an unanswered placement is retried (or failed)
+    /// after this long.
+    pub request_timeout_ms: u64,
+    /// Virtual nodes per replica on the consistent-hash ring.
+    pub vnodes: usize,
+    /// Binary to spawn replicas from; empty = the current executable.
+    pub spawn_binary: String,
+    /// Optional TOML config file forwarded to spawned replicas (`--config`).
+    pub spawn_config: String,
+}
+
+impl Default for FleetConfig {
+    fn default() -> Self {
+        Self {
+            addr: "127.0.0.1:7081".into(),
+            replicas: 3,
+            addrs: vec![],
+            arms: vec![],
+            weights: vec![],
+            placement: PlacementKind::ConsistentHash,
+            budget_per_query: 8.0,
+            heartbeat_ms: 200,
+            quarantine_after: 2,
+            readmit_after: 2,
+            retry_max: 3,
+            retry_backoff_ms: 50,
+            request_timeout_ms: 10_000,
+            vnodes: 64,
+            spawn_binary: String::new(),
+            spawn_config: String::new(),
+        }
+    }
+}
+
+impl FleetConfig {
+    /// Replica count actually in play: pre-started addresses win over the
+    /// spawn count.
+    pub fn n_replicas(&self) -> usize {
+        if self.addrs.is_empty() {
+            self.replicas
+        } else {
+            self.addrs.len()
+        }
+    }
+
+    /// Per-replica arm: configured entry, or `Both` when `arms` is empty.
+    pub fn arm(&self, replica: usize) -> ReplicaArm {
+        self.arms.get(replica).copied().unwrap_or(ReplicaArm::Both)
+    }
+
+    /// Per-replica budget-split weight (1.0 when `weights` is empty).
+    pub fn weight(&self, replica: usize) -> f64 {
+        self.weights.get(replica).copied().unwrap_or(1.0)
     }
 }
 
@@ -682,6 +858,7 @@ pub struct Config {
     pub admission: AdmissionConfig,
     pub prefix_cache: PrefixCacheConfig,
     pub session: SessionConfig,
+    pub fleet: FleetConfig,
 }
 
 impl Config {
@@ -758,6 +935,7 @@ impl Config {
             "server.outbox_depth" => self.server.outbox_depth = usize_of!(),
             "server.io_mode" => self.server.io_mode = str_of!().parse()?,
             "server.io_threads" => self.server.io_threads = usize_of!(),
+            "server.replica_arm" => self.server.replica_arm = str_of!().parse()?,
             "server.writer_stall_ms" => {
                 self.server.writer_stall_ms = f64_of!() as u64
             }
@@ -817,6 +995,61 @@ impl Config {
             "session.n_sessions" => self.session.n_sessions = usize_of!(),
             "session.words_per_turn" => self.session.words_per_turn = usize_of!(),
             "session.seed" => self.session.seed = f64_of!() as u64,
+            "fleet.addr" => self.fleet.addr = str_of!(),
+            "fleet.replicas" => self.fleet.replicas = usize_of!(),
+            "fleet.addrs" => {
+                let arr = match val {
+                    TomlValue::Arr(xs) => xs,
+                    _ => return Err(invalid()),
+                };
+                self.fleet.addrs = arr
+                    .iter()
+                    .map(|x| match x {
+                        TomlValue::Str(s) => Ok(s.clone()),
+                        _ => Err(invalid()),
+                    })
+                    .collect::<anyhow::Result<_>>()?;
+            }
+            "fleet.arms" => {
+                let arr = match val {
+                    TomlValue::Arr(xs) => xs,
+                    _ => return Err(invalid()),
+                };
+                self.fleet.arms = arr
+                    .iter()
+                    .map(|x| match x {
+                        TomlValue::Str(s) => s.parse(),
+                        _ => Err(invalid()),
+                    })
+                    .collect::<anyhow::Result<_>>()?;
+            }
+            "fleet.weights" => {
+                let arr = match val {
+                    TomlValue::Arr(xs) => xs,
+                    _ => return Err(invalid()),
+                };
+                self.fleet.weights = arr
+                    .iter()
+                    .map(|x| x.as_f64().ok_or_else(invalid))
+                    .collect::<anyhow::Result<_>>()?;
+            }
+            "fleet.placement" => self.fleet.placement = str_of!().parse()?,
+            "fleet.budget_per_query" => self.fleet.budget_per_query = f64_of!(),
+            "fleet.heartbeat_ms" => self.fleet.heartbeat_ms = f64_of!() as u64,
+            "fleet.quarantine_after" => {
+                self.fleet.quarantine_after = usize_of!() as u32
+            }
+            "fleet.readmit_after" => self.fleet.readmit_after = usize_of!() as u32,
+            "fleet.retry_max" => self.fleet.retry_max = usize_of!() as u32,
+            "fleet.retry_backoff_ms" => {
+                self.fleet.retry_backoff_ms = f64_of!() as u64
+            }
+            "fleet.request_timeout_ms" => {
+                self.fleet.request_timeout_ms = f64_of!() as u64
+            }
+            "fleet.vnodes" => self.fleet.vnodes = usize_of!(),
+            "fleet.spawn_binary" => self.fleet.spawn_binary = str_of!(),
+            "fleet.spawn_config" => self.fleet.spawn_config = str_of!(),
             _ => return Ok(false),
         }
         Ok(true)
@@ -950,6 +1183,47 @@ impl Config {
              fewer words_per_turn, or a longer row",
             self.runtime.max_seq
         );
+        let f = &self.fleet;
+        let n = f.n_replicas();
+        anyhow::ensure!(n >= 1, "fleet needs at least one replica");
+        anyhow::ensure!(
+            n <= 64,
+            "fleet.replicas = {n} is absurd (each replica is a full server \
+             process)"
+        );
+        anyhow::ensure!(
+            f.arms.is_empty() || f.arms.len() == n,
+            "fleet.arms has {} entries for {n} replicas (empty = all both)",
+            f.arms.len()
+        );
+        anyhow::ensure!(
+            f.weights.is_empty() || f.weights.len() == n,
+            "fleet.weights has {} entries for {n} replicas (empty = equal)",
+            f.weights.len()
+        );
+        anyhow::ensure!(
+            f.weights.iter().all(|w| *w > 0.0),
+            "fleet.weights must all be positive"
+        );
+        anyhow::ensure!(
+            f.budget_per_query > 0.0,
+            "fleet.budget_per_query must be positive"
+        );
+        anyhow::ensure!(f.heartbeat_ms >= 1, "fleet.heartbeat_ms must be ≥ 1");
+        anyhow::ensure!(
+            f.quarantine_after >= 1 && f.readmit_after >= 1,
+            "fleet.quarantine_after and fleet.readmit_after must be ≥ 1"
+        );
+        anyhow::ensure!(f.retry_max >= 1, "fleet.retry_max must be ≥ 1");
+        anyhow::ensure!(
+            f.retry_backoff_ms >= 1,
+            "fleet.retry_backoff_ms must be ≥ 1"
+        );
+        anyhow::ensure!(
+            f.request_timeout_ms >= 1,
+            "fleet.request_timeout_ms must be ≥ 1"
+        );
+        anyhow::ensure!(f.vnodes >= 1, "fleet.vnodes must be ≥ 1");
         Ok(())
     }
 }
@@ -1317,5 +1591,102 @@ mod tests {
         )
         .unwrap_err();
         assert!(err.to_string().contains("min_budget"));
+    }
+
+    #[test]
+    fn replica_arm_roundtrip_and_default() {
+        // default: both — bit-for-bit the standalone server
+        assert_eq!(Config::default().server.replica_arm, ReplicaArm::Both);
+        let cfg =
+            Config::from_toml_str("[server]\nreplica_arm = \"weak\"\n").unwrap();
+        assert_eq!(cfg.server.replica_arm, ReplicaArm::Weak);
+        let cfg =
+            Config::from_toml_str("[server]\nreplica_arm = \"strong\"\n").unwrap();
+        assert_eq!(cfg.server.replica_arm, ReplicaArm::Strong);
+        let err = Config::from_toml_str("[server]\nreplica_arm = \"medium\"\n")
+            .unwrap_err();
+        assert!(err.to_string().contains("replica arm"));
+        // names are stable wire/CLI identifiers
+        assert_eq!(ReplicaArm::Both.name(), "both");
+        assert_eq!("strong".parse::<ReplicaArm>().unwrap(), ReplicaArm::Strong);
+    }
+
+    #[test]
+    fn fleet_section_roundtrip() {
+        let cfg = Config::from_toml_str(
+            "[fleet]\naddr = \"127.0.0.1:9001\"\nreplicas = 4\n\
+             arms = [\"weak\", \"weak\", \"strong\", \"both\"]\n\
+             weights = [1.0, 1.0, 2.0, 1]\n\
+             placement = \"difficulty-aware\"\nbudget_per_query = 6.0\n\
+             heartbeat_ms = 100\nquarantine_after = 3\nreadmit_after = 2\n\
+             retry_max = 5\nretry_backoff_ms = 25\nrequest_timeout_ms = 2000\n\
+             vnodes = 16\n",
+        )
+        .unwrap();
+        assert_eq!(cfg.fleet.addr, "127.0.0.1:9001");
+        assert_eq!(cfg.fleet.n_replicas(), 4);
+        assert_eq!(cfg.fleet.arm(0), ReplicaArm::Weak);
+        assert_eq!(cfg.fleet.arm(2), ReplicaArm::Strong);
+        assert_eq!(cfg.fleet.arm(3), ReplicaArm::Both);
+        assert!((cfg.fleet.weight(2) - 2.0).abs() < 1e-12);
+        assert_eq!(cfg.fleet.placement, PlacementKind::DifficultyAware);
+        assert!((cfg.fleet.budget_per_query - 6.0).abs() < 1e-12);
+        assert_eq!(cfg.fleet.heartbeat_ms, 100);
+        assert_eq!(cfg.fleet.quarantine_after, 3);
+        assert_eq!(cfg.fleet.readmit_after, 2);
+        assert_eq!(cfg.fleet.retry_max, 5);
+        assert_eq!(cfg.fleet.retry_backoff_ms, 25);
+        assert_eq!(cfg.fleet.request_timeout_ms, 2000);
+        assert_eq!(cfg.fleet.vnodes, 16);
+        // pre-started addresses win over the spawn count
+        let cfg = Config::from_toml_str(
+            "[fleet]\nreplicas = 5\naddrs = [\"127.0.0.1:1\", \"127.0.0.1:2\"]\n",
+        )
+        .unwrap();
+        assert_eq!(cfg.fleet.n_replicas(), 2);
+        assert_eq!(cfg.fleet.addrs[1], "127.0.0.1:2");
+        // defaults: spawn 3 identical replicas, consistent-hash placement
+        let d = Config::default();
+        assert_eq!(d.fleet.n_replicas(), 3);
+        assert_eq!(d.fleet.placement, PlacementKind::ConsistentHash);
+        assert_eq!(d.fleet.arm(1), ReplicaArm::Both);
+        assert!((d.fleet.weight(0) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn validation_rejects_bad_fleet_config() {
+        let err = Config::from_toml_str("[fleet]\nreplicas = 0\n").unwrap_err();
+        assert!(err.to_string().contains("replica"));
+        // arity mismatches are config typos, not padding opportunities
+        let err = Config::from_toml_str(
+            "[fleet]\nreplicas = 3\narms = [\"weak\"]\n",
+        )
+        .unwrap_err();
+        assert!(err.to_string().contains("arms"));
+        let err = Config::from_toml_str(
+            "[fleet]\nreplicas = 2\nweights = [1.0, 1.0, 1.0]\n",
+        )
+        .unwrap_err();
+        assert!(err.to_string().contains("weights"));
+        let err = Config::from_toml_str(
+            "[fleet]\nreplicas = 2\nweights = [1.0, -1.0]\n",
+        )
+        .unwrap_err();
+        assert!(err.to_string().contains("positive"));
+        let err = Config::from_toml_str("[fleet]\nretry_max = 0\n").unwrap_err();
+        assert!(err.to_string().contains("retry_max"));
+        let err = Config::from_toml_str("[fleet]\nvnodes = 0\n").unwrap_err();
+        assert!(err.to_string().contains("vnodes"));
+        let err = Config::from_toml_str("[fleet]\nheartbeat_ms = 0\n").unwrap_err();
+        assert!(err.to_string().contains("heartbeat_ms"));
+        let err =
+            Config::from_toml_str("[fleet]\nplacement = \"random\"\n").unwrap_err();
+        assert!(err.to_string().contains("placement"));
+        // placement names are stable CLI identifiers
+        assert_eq!(PlacementKind::DifficultyAware.name(), "difficulty-aware");
+        assert_eq!(
+            "least-loaded".parse::<PlacementKind>().unwrap(),
+            PlacementKind::LeastLoaded
+        );
     }
 }

@@ -1,0 +1,40 @@
+//! Fleet tier: a router process fronting N replica server pools over the
+//! docs/PROTOCOL.md wire — the paper's input-adaptive allocation lifted
+//! across the *process* boundary (ROADMAP item 3).
+//!
+//! A single server already decides per query how hard to think (budget
+//! allocation, weak/strong routing). A fleet adds one more allocation axis:
+//! *which process* thinks. The [`router::FleetServer`] front door places
+//! each query on one of N replicas — spawned child processes or pre-started
+//! addresses — through a pluggable [`placement::PlacementPolicy`]:
+//!
+//! - `consistent-hash`: vnode-ring hash of the query text; deterministic
+//!   and stable under replica quarantine/readmission.
+//! - `least-loaded`: smallest reported load, fed by each replica's
+//!   heartbeat `stats` response (queue depth, queue-wait p95).
+//! - `difficulty-aware`: the PR-1 λ̂-threshold router calibration, applied
+//!   at placement time — hard queries go to strong-arm replicas (full
+//!   adaptive best-of-k), easy ones to weak-arm replicas (one cheap
+//!   sample). Replica arms are pinned per process via
+//!   `server.replica_arm`.
+//!
+//! Replicas are health-checked by heartbeat ([`stats::ReplicaStats`] over
+//! the `stats` protocol verb): consecutive misses quarantine a replica,
+//! consecutive recoveries readmit it. A replica that dies mid-run has its
+//! in-flight queries re-placed onto survivors; replica errors and timeouts
+//! are retried with bounded exponential backoff before the client sees an
+//! error line. Fleet telemetry lands under `fleet.*`.
+//!
+//! Wire compatibility is the design constraint: a replica is an *unmodified*
+//! `thinkalloc serve` process (plus the `stats` verb and the `replica_arm`
+//! pin), and the fleet front door speaks the same one-JSON-object-per-line
+//! protocol to its own clients — a client cannot tell a fleet from a single
+//! server except through the `fleet.*` metrics namespace.
+
+pub mod placement;
+pub mod replica;
+pub mod router;
+pub mod stats;
+
+pub use router::FleetServer;
+pub use stats::ReplicaStats;

@@ -1,0 +1,390 @@
+//! Query → replica placement policies for the fleet router.
+//!
+//! A policy sees only [`ReplicaView`]s — health plus the last heartbeat's
+//! load snapshot — and returns a replica index. Policies are a deliberate
+//! seam ("Learning Adaptive LLM Decoding" motivates keeping placement
+//! learnable rather than hard-coded): the dispatch loop owns the policy
+//! behind the [`PlacementPolicy`] trait and nothing downstream knows which
+//! one is running.
+//!
+//! Determinism contracts (pinned by the unit tests below and
+//! `tests/fleet_serve.rs`):
+//!
+//! - `consistent-hash` is a pure function of the query text and the healthy
+//!   set, and *stable under readmission*: a quarantined replica's keys move
+//!   to ring successors, everyone else's keys stay put, and readmission
+//!   restores the original mapping exactly.
+//! - `difficulty-aware` reuses the PR-1 calibration
+//!   ([`crate::serving::scheduler::calibrate_router`]) verbatim, so the
+//!   fleet-level strong fraction tracks the in-process router's.
+
+use std::collections::BTreeMap;
+
+use anyhow::Result;
+
+use crate::config::{ReplicaArm, RouteConfig};
+use crate::router::ThresholdRouter;
+use crate::runtime::Engine;
+use crate::serving::scheduler::{calibrate_router, strong_preference};
+
+/// What a placement policy may see about one replica at decision time.
+#[derive(Clone, Debug)]
+pub struct ReplicaView {
+    pub healthy: bool,
+    /// Which decode arms the replica serves (`fleet.arms` entry).
+    pub arm: ReplicaArm,
+    /// Batcher depth from the last heartbeat `stats` response.
+    pub queue_depth: usize,
+    /// Queue-wait p95 (µs) from the last heartbeat `stats` response.
+    pub queue_wait_p95_us: f64,
+    /// Queries this fleet has placed on the replica and not yet seen
+    /// answered — fresher than the heartbeat snapshot.
+    pub inflight: usize,
+}
+
+/// A placement decision: the chosen replica, plus (difficulty-aware only)
+/// the arm the λ̂ threshold asked for — recorded even when the fleet has to
+/// fall back to a different-arm replica, so `fleet.placed.{strong,weak}`
+/// counts decisions, not availability accidents.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Placement {
+    pub replica: usize,
+    pub want: Option<ReplicaArm>,
+}
+
+pub trait PlacementPolicy {
+    /// Stable metrics/CLI name.
+    fn name(&self) -> &'static str;
+    /// Choose a replica for one query; `None` = no healthy replica exists.
+    fn place(
+        &mut self,
+        domain: &str,
+        text: &str,
+        replicas: &[ReplicaView],
+    ) -> Result<Option<Placement>>;
+}
+
+/// FNV-1a — the repo-idiomatic dependency-free stable hash. Placement only
+/// needs determinism and spread, not collision resistance.
+pub fn fnv1a(bytes: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for b in bytes {
+        h ^= *b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+/// Vnode-ring consistent hash over the query text. The ring is built once
+/// from the replica *count* (not the healthy set): quarantine skips dead
+/// owners by walking clockwise, readmission restores original ownership.
+pub struct ConsistentHash {
+    /// (vnode hash, replica index), sorted by hash.
+    ring: Vec<(u64, usize)>,
+}
+
+impl ConsistentHash {
+    pub fn new(n_replicas: usize, vnodes: usize) -> Self {
+        let mut ring = Vec::with_capacity(n_replicas * vnodes);
+        for r in 0..n_replicas {
+            for v in 0..vnodes {
+                ring.push((fnv1a(format!("replica-{r}-vnode-{v}").as_bytes()), r));
+            }
+        }
+        ring.sort_unstable();
+        ConsistentHash { ring }
+    }
+
+    /// First healthy replica at or clockwise of the key's ring position.
+    fn owner(&self, key: u64, replicas: &[ReplicaView]) -> Option<usize> {
+        if self.ring.is_empty() {
+            return None;
+        }
+        let start = self.ring.partition_point(|(h, _)| *h < key);
+        for i in 0..self.ring.len() {
+            let (_, r) = self.ring[(start + i) % self.ring.len()];
+            if replicas.get(r).is_some_and(|v| v.healthy) {
+                return Some(r);
+            }
+        }
+        None
+    }
+}
+
+impl PlacementPolicy for ConsistentHash {
+    fn name(&self) -> &'static str {
+        "consistent-hash"
+    }
+
+    fn place(
+        &mut self,
+        _domain: &str,
+        text: &str,
+        replicas: &[ReplicaView],
+    ) -> Result<Option<Placement>> {
+        Ok(self
+            .owner(fnv1a(text.as_bytes()), replicas)
+            .map(|replica| Placement { replica, want: None }))
+    }
+}
+
+/// Smallest reported load wins: fleet-local in-flight plus the replica's
+/// own queue depth, tie-broken by queue-wait p95, then index (total order —
+/// two fleets seeing identical views place identically).
+pub struct LeastLoaded;
+
+impl PlacementPolicy for LeastLoaded {
+    fn name(&self) -> &'static str {
+        "least-loaded"
+    }
+
+    fn place(
+        &mut self,
+        _domain: &str,
+        _text: &str,
+        replicas: &[ReplicaView],
+    ) -> Result<Option<Placement>> {
+        let best = replicas
+            .iter()
+            .enumerate()
+            .filter(|(_, v)| v.healthy)
+            .min_by(|(i, a), (j, b)| {
+                let ka = (a.queue_depth + a.inflight, a.queue_wait_p95_us, *i);
+                let kb = (b.queue_depth + b.inflight, b.queue_wait_p95_us, *j);
+                ka.partial_cmp(&kb).unwrap_or(std::cmp::Ordering::Equal)
+            })
+            .map(|(i, _)| i);
+        Ok(best.map(|replica| Placement { replica, want: None }))
+    }
+}
+
+/// λ̂-threshold placement: the paper's weak/strong routing decision (§3.3),
+/// made *before* the process boundary. The strong-preference probe scores
+/// the query, the per-domain [`ThresholdRouter`] (calibrated exactly like
+/// the in-process router: same held-out workload, same quantile) picks an
+/// arm, and the query lands on a replica serving that arm — rendezvous-
+/// hashed within the arm subset so placement stays deterministic and stable
+/// under membership changes.
+pub struct DifficultyAware {
+    engine: Engine,
+    route: RouteConfig,
+    routers: BTreeMap<String, ThresholdRouter>,
+}
+
+impl DifficultyAware {
+    pub fn new(engine: Engine, route: RouteConfig) -> Self {
+        DifficultyAware { engine, route, routers: BTreeMap::new() }
+    }
+
+    fn router(&mut self, domain: &str) -> Result<&ThresholdRouter> {
+        if !self.routers.contains_key(domain) {
+            let r = calibrate_router(&self.engine, &self.route, domain)?;
+            self.routers.insert(domain.to_string(), r);
+        }
+        Ok(&self.routers[domain])
+    }
+}
+
+/// Deterministic pick within a candidate set: highest rendezvous hash of
+/// (text, replica index) wins. Unlike `index % len`, membership changes
+/// only move the keys whose winner left.
+fn rendezvous(text: &str, candidates: &[usize]) -> Option<usize> {
+    candidates
+        .iter()
+        .max_by_key(|r| fnv1a(format!("{text}\u{1}{r}").as_bytes()))
+        .copied()
+}
+
+impl PlacementPolicy for DifficultyAware {
+    fn name(&self) -> &'static str {
+        "difficulty-aware"
+    }
+
+    fn place(
+        &mut self,
+        domain: &str,
+        text: &str,
+        replicas: &[ReplicaView],
+    ) -> Result<Option<Placement>> {
+        let pref = strong_preference(&self.engine, &self.route, domain, &[text])?[0];
+        let want = if self.router(domain)?.use_strong(pref) {
+            ReplicaArm::Strong
+        } else {
+            ReplicaArm::Weak
+        };
+        // preference order: the wanted arm, then generalists (`both`), then
+        // any healthy replica — availability beats placement fidelity
+        let healthy_with = |accept: fn(ReplicaArm, ReplicaArm) -> bool| -> Vec<usize> {
+            replicas
+                .iter()
+                .enumerate()
+                .filter(|(_, v)| v.healthy && accept(v.arm, want))
+                .map(|(i, _)| i)
+                .collect()
+        };
+        let tiers: [fn(ReplicaArm, ReplicaArm) -> bool; 3] = [
+            |arm, want| arm == want,
+            |arm, _| arm == ReplicaArm::Both,
+            |_, _| true,
+        ];
+        for accept in tiers {
+            if let Some(replica) = rendezvous(text, &healthy_with(accept)) {
+                return Ok(Some(Placement { replica, want: Some(want) }));
+            }
+        }
+        Ok(None)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn views(n: usize) -> Vec<ReplicaView> {
+        (0..n)
+            .map(|_| ReplicaView {
+                healthy: true,
+                arm: ReplicaArm::Both,
+                queue_depth: 0,
+                queue_wait_p95_us: 0.0,
+                inflight: 0,
+            })
+            .collect()
+    }
+
+    fn keys(n: usize) -> Vec<String> {
+        (0..n).map(|i| format!("ADD {i} {}", i * 7 % 100)).collect()
+    }
+
+    #[test]
+    fn consistent_hash_spreads_and_is_deterministic() {
+        let mut ring = ConsistentHash::new(3, 64);
+        let vs = views(3);
+        let mut per_replica = [0usize; 3];
+        for k in keys(300) {
+            let a = ring.place("code", &k, &vs).unwrap().unwrap();
+            let b = ring.place("code", &k, &vs).unwrap().unwrap();
+            assert_eq!(a, b, "same key must place identically");
+            per_replica[a.replica] += 1;
+        }
+        for (i, n) in per_replica.iter().enumerate() {
+            assert!(
+                (30..=170).contains(n),
+                "replica {i} got {n}/300 keys — ring badly unbalanced: \
+                 {per_replica:?}"
+            );
+        }
+    }
+
+    #[test]
+    fn consistent_hash_is_stable_under_quarantine_and_readmission() {
+        let mut ring = ConsistentHash::new(3, 64);
+        let healthy = views(3);
+        let mut degraded = views(3);
+        degraded[1].healthy = false;
+
+        let ks = keys(200);
+        let before: Vec<usize> = ks
+            .iter()
+            .map(|k| ring.place("code", k, &healthy).unwrap().unwrap().replica)
+            .collect();
+        // quarantine replica 1: its keys move, everyone else's stay put
+        for (k, owner) in ks.iter().zip(&before) {
+            let now = ring.place("code", k, &degraded).unwrap().unwrap().replica;
+            assert_ne!(now, 1, "placed {k} on the quarantined replica");
+            if *owner != 1 {
+                assert_eq!(now, *owner, "unaffected key {k} moved on quarantine");
+            }
+        }
+        // readmission restores the original mapping bit-for-bit
+        for (k, owner) in ks.iter().zip(&before) {
+            let back = ring.place("code", k, &healthy).unwrap().unwrap().replica;
+            assert_eq!(back, *owner, "readmission failed to restore {k}");
+        }
+    }
+
+    #[test]
+    fn consistent_hash_empty_or_all_dead_places_nowhere() {
+        let mut ring = ConsistentHash::new(3, 8);
+        let mut vs = views(3);
+        for v in &mut vs {
+            v.healthy = false;
+        }
+        assert_eq!(ring.place("code", "x", &vs).unwrap(), None);
+        let mut none = ConsistentHash::new(0, 8);
+        assert_eq!(none.place("code", "x", &views(0)).unwrap(), None);
+    }
+
+    #[test]
+    fn least_loaded_prefers_light_replicas() {
+        let mut policy = LeastLoaded;
+        let mut vs = views(3);
+        vs[0].queue_depth = 5;
+        vs[1].queue_depth = 1;
+        vs[2].queue_depth = 1;
+        vs[2].queue_wait_p95_us = 900.0;
+        let p = policy.place("code", "x", &vs).unwrap().unwrap();
+        assert_eq!(p.replica, 1, "equal depth breaks on queue-wait p95");
+        vs[1].inflight = 7;
+        let p = policy.place("code", "x", &vs).unwrap().unwrap();
+        assert_eq!(p.replica, 2, "fleet-local inflight counts as load");
+        vs.iter_mut().for_each(|v| v.healthy = false);
+        assert_eq!(policy.place("code", "x", &vs).unwrap(), None);
+    }
+
+    #[test]
+    fn rendezvous_is_stable_under_membership_change() {
+        let all = [0usize, 1, 2];
+        let without_1 = [0usize, 2];
+        for k in keys(100) {
+            let full = rendezvous(&k, &all).unwrap();
+            let less = rendezvous(&k, &without_1).unwrap();
+            if full != 1 {
+                assert_eq!(less, full, "key {k} moved though its winner stayed");
+            }
+        }
+    }
+
+    #[test]
+    fn difficulty_aware_routes_hard_to_strong_and_easy_to_weak() {
+        let cfg = crate::config::Config::default();
+        let engine = Engine::load_all(&cfg.runtime).unwrap();
+        let mut policy = DifficultyAware::new(engine, cfg.route.clone());
+        let mut vs = views(4);
+        vs[0].arm = ReplicaArm::Weak;
+        vs[1].arm = ReplicaArm::Weak;
+        vs[2].arm = ReplicaArm::Strong;
+        vs[3].arm = ReplicaArm::Strong;
+
+        let queries = crate::workload::gen_dataset("code", 64, 0xD1FF);
+        let mut strong = 0usize;
+        for q in &queries {
+            let p = policy.place("code", &q.text, &vs).unwrap().unwrap();
+            let want = p.want.expect("difficulty-aware always records its arm");
+            match want {
+                ReplicaArm::Strong => {
+                    strong += 1;
+                    assert!(p.replica >= 2, "strong decision landed on a weak replica");
+                }
+                ReplicaArm::Weak => {
+                    assert!(p.replica < 2, "weak decision landed on a strong replica");
+                }
+                ReplicaArm::Both => unreachable!(),
+            }
+        }
+        // the calibrated threshold targets strong_fraction = 0.5 in
+        // distribution; a 64-query sample should land in a broad band
+        assert!(
+            (10..=54).contains(&strong),
+            "strong decisions badly off target: {strong}/64"
+        );
+        // desired arm entirely dead ⇒ graceful fallback, decision recorded
+        vs[2].healthy = false;
+        vs[3].healthy = false;
+        for q in &queries {
+            let p = policy.place("code", &q.text, &vs).unwrap().unwrap();
+            assert!(p.replica < 2, "fallback must pick a surviving replica");
+            assert!(p.want.is_some(), "fallback must still record the decision");
+        }
+    }
+}

@@ -1,0 +1,151 @@
+//! Replica lifecycle: how the fleet obtains and tears down its N backends.
+//!
+//! A replica is either *attached* (a pre-started `thinkalloc serve` at an
+//! address from `fleet.addrs`) or *spawned* (a child process the fleet
+//! starts itself, pinned to an arm and a split budget via serve flags).
+//! Either way the fleet only ever talks to it over the wire — there is no
+//! shared memory, which is what makes kill-one-replica recovery a pure
+//! protocol problem.
+
+use std::io::{BufRead, BufReader, Read};
+use std::process::{Child, Command, Stdio};
+
+use anyhow::{Context, Result};
+
+use crate::config::ReplicaArm;
+
+/// One backend the fleet routes to. Owns the child process when spawned;
+/// dropping the fleet kills spawned children (see [`ReplicaSpec::shutdown`]).
+pub struct ReplicaSpec {
+    pub addr: String,
+    pub arm: ReplicaArm,
+    /// Per-replica budget from [`crate::allocator::controller::split_budget`].
+    pub budget: f64,
+    pub child: Option<Child>,
+}
+
+impl ReplicaSpec {
+    /// Wrap a pre-started server; the fleet never manages its process.
+    pub fn attached(addr: &str, arm: ReplicaArm, budget: f64) -> ReplicaSpec {
+        ReplicaSpec { addr: addr.to_string(), arm, budget, child: None }
+    }
+
+    /// Best-effort teardown for spawned children. Protocol-level shutdown
+    /// happens first (the fleet sends `{"cmd":"shutdown"}`); this is the
+    /// backstop for replicas that never answered.
+    pub fn shutdown(&mut self) {
+        if let Some(child) = &mut self.child {
+            let _ = child.kill();
+            let _ = child.wait();
+        }
+    }
+}
+
+/// Spawn one replica as a child `thinkalloc serve` process and wait for it
+/// to announce its address.
+///
+/// The child binds port 0 (the kernel picks a free port) and prints
+/// `listening on <addr>` on stdout once ready — the same banner line the
+/// interactive CLI prints, reused as a readiness protocol. `--budget` and
+/// `--replica-arm` are passed explicitly so they win over anything in
+/// `spawn_config` (serve flags apply after config load).
+pub fn spawn_replica(
+    binary: &str,
+    spawn_config: &str,
+    arm: ReplicaArm,
+    budget: f64,
+) -> Result<ReplicaSpec> {
+    let bin = if binary.is_empty() {
+        std::env::current_exe()
+            .context("fleet.spawn_binary empty and current_exe() unavailable")?
+            .to_string_lossy()
+            .into_owned()
+    } else {
+        binary.to_string()
+    };
+    let mut cmd = Command::new(&bin);
+    cmd.arg("serve")
+        .arg("--addr=127.0.0.1:0")
+        .arg(format!("--replica-arm={}", arm.name()))
+        .arg(format!("--budget={budget}"))
+        .stdin(Stdio::null())
+        .stdout(Stdio::piped())
+        .stderr(Stdio::inherit());
+    if !spawn_config.is_empty() {
+        cmd.arg(format!("--config={spawn_config}"));
+    }
+    let mut child = cmd
+        .spawn()
+        .with_context(|| format!("spawning replica `{bin} serve`"))?;
+
+    let stdout = child.stdout.take().expect("stdout was piped");
+    let addr = match wait_for_banner(stdout) {
+        Ok(addr) => addr,
+        Err(e) => {
+            let _ = child.kill();
+            let _ = child.wait();
+            return Err(e);
+        }
+    };
+    Ok(ReplicaSpec { addr, arm, budget, child: Some(child) })
+}
+
+/// Read child stdout until the `listening on <addr>` readiness line, then
+/// hand the pipe to a drain thread (an ignored pipe would eventually block
+/// the child on a full buffer).
+fn wait_for_banner(stdout: impl Read + Send + 'static) -> Result<String> {
+    const BANNER: &str = "listening on ";
+    const MAX_PREAMBLE_LINES: usize = 64;
+    let mut reader = BufReader::new(stdout);
+    let mut line = String::new();
+    for _ in 0..MAX_PREAMBLE_LINES {
+        line.clear();
+        if reader
+            .read_line(&mut line)
+            .context("reading replica stdout")?
+            == 0
+        {
+            anyhow::bail!("replica exited before announcing its address");
+        }
+        if let Some(rest) = line.trim_end().strip_prefix(BANNER) {
+            let addr = rest.trim().to_string();
+            std::thread::spawn(move || {
+                let mut sink = String::new();
+                loop {
+                    sink.clear();
+                    match reader.read_line(&mut sink) {
+                        Ok(0) | Err(_) => break,
+                        Ok(_) => {}
+                    }
+                }
+            });
+            anyhow::ensure!(!addr.is_empty(), "replica announced an empty address");
+            return Ok(addr);
+        }
+    }
+    anyhow::bail!("replica never announced its address in {MAX_PREAMBLE_LINES} stdout lines")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn banner_parsing_finds_the_address_amid_preamble() {
+        let fed = "thinkalloc serve\nbudget 8\nlistening on 127.0.0.1:4711\ntrailing\n";
+        let addr = wait_for_banner(std::io::Cursor::new(fed.as_bytes().to_vec())).unwrap();
+        assert_eq!(addr, "127.0.0.1:4711");
+    }
+
+    #[test]
+    fn banner_parsing_rejects_silent_or_empty_children() {
+        let err = wait_for_banner(std::io::Cursor::new(Vec::new())).unwrap_err();
+        assert!(err.to_string().contains("exited"), "{err}");
+        let err =
+            wait_for_banner(std::io::Cursor::new(b"listening on \n".to_vec())).unwrap_err();
+        assert!(err.to_string().contains("empty address"), "{err}");
+        let noise = "noise\n".repeat(100);
+        let err = wait_for_banner(std::io::Cursor::new(noise.into_bytes())).unwrap_err();
+        assert!(err.to_string().contains("never announced"), "{err}");
+    }
+}

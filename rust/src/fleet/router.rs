@@ -1,0 +1,887 @@
+//! The fleet front door: accepts PROTOCOL.md clients, places each query on
+//! a replica, and owns the replica lifecycle (heartbeats, quarantine,
+//! readmission, retries, re-placement on death).
+//!
+//! Threading model — one dispatch thread owns ALL mutable routing state:
+//!
+//! - the *dispatch loop* runs on the caller's thread ([`FleetServer::run`]).
+//!   It owns the placement policy (difficulty-aware holds a `!Send` Engine),
+//!   the in-flight table, the retry queue, and every replica's connection.
+//!   Everything reaches it as an [`Event`] over one mpsc channel, so there
+//!   is no lock ordering to get wrong;
+//! - an *acceptor* thread takes client connections and spawns one reader
+//!   thread per client (writer halves live in a shared map the dispatch
+//!   thread writes responses through);
+//! - one *reader* thread per replica query connection, tagged with a
+//!   generation counter — a reconnect bumps the generation, so events from
+//!   a replaced connection are recognizably stale and dropped;
+//! - a *heartbeat* thread polls each replica's `stats` verb on its own
+//!   connections every `fleet.heartbeat_ms` and reports
+//!   [`Event::Heartbeat`]s.
+//!
+//! Failure handling: `fleet.quarantine_after` consecutive heartbeat misses
+//! (or a dead query connection) quarantine a replica — its in-flight
+//! queries are immediately re-placed on survivors (`fleet.replaced`).
+//! `fleet.readmit_after` consecutive healthy heartbeats readmit it.
+//! Replica-side `overloaded` / `server shutting down` errors and per-attempt
+//! timeouts retry with exponential backoff up to `fleet.retry_max` attempts;
+//! every attempt uses a fresh fleet-internal id, so a straggler response
+//! from an abandoned attempt can never reach a client twice.
+
+use std::collections::BTreeMap;
+use std::io::{BufRead, BufReader, ErrorKind, Write};
+use std::net::{Shutdown, SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc::{self, Receiver, RecvTimeoutError, Sender};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use anyhow::Result;
+
+use crate::allocator::controller::split_budget;
+use crate::config::{Config, PlacementKind, ProcedureKind, ReplicaArm};
+use crate::jsonio::{self, Json};
+use crate::metrics::Registry;
+use crate::runtime::Engine;
+
+use super::placement::{
+    ConsistentHash, DifficultyAware, LeastLoaded, PlacementPolicy, ReplicaView,
+};
+use super::replica::{spawn_replica, ReplicaSpec};
+use super::stats::ReplicaStats;
+
+/// Everything the dispatch thread reacts to.
+enum Event {
+    ClientLine { conn: u64, line: String },
+    ClientGone { conn: u64 },
+    ReplicaLine { replica: usize, gen: u64, line: String },
+    ReplicaDown { replica: usize, gen: u64 },
+    Heartbeat { replica: usize, stats: Option<ReplicaStats> },
+}
+
+/// One query the fleet has accepted and not yet answered.
+struct Pending {
+    conn: u64,
+    client_id: u64,
+    text: String,
+    domain: String,
+    procedure: Option<ProcedureKind>,
+    session: Option<u64>,
+    /// 1-based; attempt k+1 only happens while k < `fleet.retry_max`.
+    attempts: u32,
+    /// Replica of the *current* attempt (for re-placement on death).
+    replica: usize,
+    deadline: Instant,
+}
+
+/// Dispatch-thread-owned state for one replica.
+struct ReplicaState {
+    spec: ReplicaSpec,
+    /// Write half of the query connection (`None` while quarantined).
+    conn: Option<TcpStream>,
+    /// Bumped on every (re)connect and quarantine; events carrying an older
+    /// generation are stale and ignored.
+    gen: u64,
+    healthy: bool,
+    misses: u32,
+    recoveries: u32,
+    /// Load snapshot from the last good heartbeat.
+    queue_depth: usize,
+    queue_wait_p95_us: f64,
+    /// Queries this fleet currently has in flight on the replica.
+    inflight_n: usize,
+}
+
+pub struct FleetServer {
+    cfg: Config,
+    metrics: Arc<Registry>,
+    specs: Vec<ReplicaSpec>,
+}
+
+impl FleetServer {
+    /// Build the replica set: attach to `fleet.addrs` when given, otherwise
+    /// spawn `fleet.replicas` children of this binary. Per-replica budgets
+    /// come from the weight-proportional, mean-preserving
+    /// [`split_budget`] of `fleet.budget_per_query`.
+    pub fn new(cfg: Config, metrics: Arc<Registry>) -> Result<FleetServer> {
+        let f = &cfg.fleet;
+        let n = f.n_replicas();
+        let weights: Vec<f64> = (0..n).map(|i| f.weight(i)).collect();
+        let budgets = split_budget(f.budget_per_query, &weights);
+        let mut specs = Vec::with_capacity(n);
+        if f.addrs.is_empty() {
+            for (i, b) in budgets.iter().enumerate() {
+                specs.push(spawn_replica(&f.spawn_binary, &f.spawn_config, f.arm(i), *b)?);
+            }
+        } else {
+            for (i, addr) in f.addrs.iter().enumerate() {
+                // attached replicas own their budget; ours is bookkeeping
+                specs.push(ReplicaSpec::attached(addr, f.arm(i), budgets[i]));
+            }
+        }
+        Ok(FleetServer { cfg, metrics, specs })
+    }
+
+    /// Run until a shutdown command arrives. Returns the bound address
+    /// through `on_ready` (port 0 supported for tests). Consumes the fleet:
+    /// teardown kills any replicas it spawned.
+    pub fn run(self, on_ready: impl FnOnce(String)) -> Result<()> {
+        let listener = TcpListener::bind(&self.cfg.fleet.addr)?;
+        let local = listener.local_addr()?.to_string();
+
+        let policy = make_policy(&self.cfg, self.specs.len())?;
+        let (tx, rx) = mpsc::channel();
+        let stop = Arc::new(AtomicBool::new(false));
+        let writers: Arc<Mutex<BTreeMap<u64, TcpStream>>> =
+            Arc::new(Mutex::new(BTreeMap::new()));
+
+        let mut d = Dispatch {
+            metrics: self.metrics.clone(),
+            policy,
+            replicas: self
+                .specs
+                .into_iter()
+                .map(|spec| ReplicaState {
+                    spec,
+                    conn: None,
+                    gen: 0,
+                    healthy: false,
+                    misses: 0,
+                    recoveries: 0,
+                    queue_depth: 0,
+                    queue_wait_p95_us: 0.0,
+                    inflight_n: 0,
+                })
+                .collect(),
+            writers: writers.clone(),
+            inflight: BTreeMap::new(),
+            retry_queue: Vec::new(),
+            next_id: 1,
+            tx: tx.clone(),
+            stop: stop.clone(),
+            reader_handles: Vec::new(),
+            stopping: false,
+            cfg: self.cfg.clone(),
+        };
+        for i in 0..d.replicas.len() {
+            let up = d.connect_replica(i);
+            d.replicas[i].healthy = up;
+            d.gauge_healthy(i, up);
+            d.metrics
+                .gauge(&format!("fleet.replica.{i}.budget"))
+                .set(d.replicas[i].spec.budget);
+        }
+
+        let client_handles: Arc<Mutex<Vec<JoinHandle<()>>>> =
+            Arc::new(Mutex::new(Vec::new()));
+        let acceptor = {
+            let (tx, stop, writers, handles) =
+                (tx.clone(), stop.clone(), writers.clone(), client_handles.clone());
+            let stall = Duration::from_millis(self.cfg.server.writer_stall_ms);
+            std::thread::spawn(move || acceptor(listener, tx, stop, writers, handles, stall))
+        };
+        let heartbeat = {
+            let addrs: Vec<String> =
+                d.replicas.iter().map(|r| r.spec.addr.clone()).collect();
+            let (tx, stop) = (tx.clone(), stop.clone());
+            let period = Duration::from_millis(self.cfg.fleet.heartbeat_ms);
+            std::thread::spawn(move || heartbeat(addrs, tx, stop, period))
+        };
+
+        on_ready(local.clone());
+        d.run_loop(rx);
+
+        // teardown: stop flag first, then unblock every parked thread —
+        // self-connect rouses the acceptor, socket shutdown rouses client
+        // readers, replica readers poll the flag — and join them all
+        stop.store(true, Ordering::Release);
+        let _ = TcpStream::connect(&local);
+        for s in writers.lock().unwrap().values() {
+            let _ = s.shutdown(Shutdown::Both);
+        }
+        let _ = acceptor.join();
+        let _ = heartbeat.join();
+        for h in d.reader_handles.drain(..) {
+            let _ = h.join();
+        }
+        let handles: Vec<JoinHandle<()>> =
+            client_handles.lock().unwrap().drain(..).collect();
+        for h in handles {
+            let _ = h.join();
+        }
+        // protocol shutdown was already broadcast; this is the backstop
+        // that reaps children which never answered it
+        for r in &mut d.replicas {
+            r.spec.shutdown();
+        }
+        Ok(())
+    }
+}
+
+fn make_policy(cfg: &Config, n: usize) -> Result<Box<dyn PlacementPolicy>> {
+    Ok(match cfg.fleet.placement {
+        PlacementKind::ConsistentHash => Box::new(ConsistentHash::new(n, cfg.fleet.vnodes)),
+        PlacementKind::LeastLoaded => Box::new(LeastLoaded),
+        PlacementKind::DifficultyAware => {
+            let engine = Engine::load_all(&cfg.runtime)?;
+            Box::new(DifficultyAware::new(engine, cfg.route.clone()))
+        }
+    })
+}
+
+/// All mutable fleet state, owned by the dispatch loop's thread.
+struct Dispatch {
+    cfg: Config,
+    metrics: Arc<Registry>,
+    policy: Box<dyn PlacementPolicy>,
+    replicas: Vec<ReplicaState>,
+    writers: Arc<Mutex<BTreeMap<u64, TcpStream>>>,
+    /// fleet-internal id → pending query; ids are per-attempt, so an entry
+    /// here is always the *live* attempt.
+    inflight: BTreeMap<u64, Pending>,
+    /// (due, query) — backoff parking lot, swept every loop tick.
+    retry_queue: Vec<(Instant, Pending)>,
+    next_id: u64,
+    tx: Sender<Event>,
+    stop: Arc<AtomicBool>,
+    reader_handles: Vec<JoinHandle<()>>,
+    stopping: bool,
+}
+
+impl Dispatch {
+    fn run_loop(&mut self, rx: Receiver<Event>) {
+        while !self.stopping {
+            match rx.recv_timeout(Duration::from_millis(10)) {
+                Ok(ev) => self.handle_event(ev),
+                Err(RecvTimeoutError::Timeout) => {}
+                Err(RecvTimeoutError::Disconnected) => break,
+            }
+            self.sweep(Instant::now());
+        }
+    }
+
+    fn handle_event(&mut self, ev: Event) {
+        match ev {
+            Event::ClientLine { conn, line } => self.on_client_line(conn, &line),
+            Event::ClientGone { conn } => self.on_client_gone(conn),
+            Event::ReplicaLine { replica, gen, line } => {
+                self.on_replica_line(replica, gen, &line)
+            }
+            Event::ReplicaDown { replica, gen } => {
+                if self.replicas[replica].gen == gen {
+                    self.quarantine(replica, "query connection died");
+                }
+            }
+            Event::Heartbeat { replica, stats } => self.on_heartbeat(replica, stats),
+        }
+    }
+
+    /// Time-driven work: due retries and per-attempt deadlines.
+    fn sweep(&mut self, now: Instant) {
+        let mut due = Vec::new();
+        let mut i = 0;
+        while i < self.retry_queue.len() {
+            if self.retry_queue[i].0 <= now {
+                due.push(self.retry_queue.swap_remove(i).1);
+            } else {
+                i += 1;
+            }
+        }
+        for p in due {
+            self.place(p);
+        }
+        let expired: Vec<u64> = self
+            .inflight
+            .iter()
+            .filter(|(_, p)| p.deadline <= now)
+            .map(|(id, _)| *id)
+            .collect();
+        for id in expired {
+            let p = self.unhook(id);
+            self.retry(p, "attempt timed out", true);
+        }
+    }
+
+    // ---- client side ---------------------------------------------------
+
+    fn on_client_line(&mut self, conn: u64, line: &str) {
+        if line.is_empty() {
+            return;
+        }
+        let v = match jsonio::parse(line) {
+            Ok(v) => v,
+            Err(e) => return self.write_error(conn, &e.to_string()),
+        };
+        if let Some(cmd) = v.get("cmd").and_then(Json::as_str) {
+            return self.handle_cmd(conn, cmd);
+        }
+        // identical exact-integer id discipline to the single server:
+        // never a lossy f64, negatives rejected
+        let client_id = match v.get("id") {
+            None => {
+                // echo something unique, like the single server does
+                let id = self.next_id;
+                self.next_id += 1;
+                id
+            }
+            Some(j) => match j.as_i64() {
+                Some(i) if i >= 0 => i as u64,
+                _ => {
+                    return self.write_error(
+                        conn,
+                        "invalid id: must be a non-negative integer < 2^63",
+                    )
+                }
+            },
+        };
+        let session = match v.get("session") {
+            None => None,
+            Some(j) => match j.as_i64() {
+                Some(i) if i >= 0 => Some(i as u64),
+                _ => {
+                    return self.write_error(
+                        conn,
+                        "invalid session: must be a non-negative integer < 2^63",
+                    )
+                }
+            },
+        };
+        let procedure = match v.get("procedure").and_then(Json::as_str) {
+            None => None,
+            Some(s) => match s.parse::<ProcedureKind>() {
+                Ok(k) => Some(k),
+                Err(e) => return self.write_error_id(conn, client_id, &e.to_string()),
+            },
+        };
+        self.metrics.counter("fleet.requests").inc();
+        self.place(Pending {
+            conn,
+            client_id,
+            text: v.get("text").and_then(Json::as_str).unwrap_or("").to_string(),
+            domain: v
+                .get("domain")
+                .and_then(Json::as_str)
+                .unwrap_or("code")
+                .to_string(),
+            procedure,
+            session,
+            attempts: 1,
+            replica: 0,
+            deadline: Instant::now(),
+        });
+    }
+
+    fn handle_cmd(&mut self, conn: u64, cmd: &str) {
+        match cmd {
+            "metrics" => self.write_line(conn, &self.metrics.to_json().to_string()),
+            "stats" => {
+                // the fleet answers the replica verb too (wire parity):
+                // an aggregate view of the whole pool
+                let healthy = self.replicas.iter().filter(|r| r.healthy).count();
+                let s = ReplicaStats {
+                    arm: ReplicaArm::Both,
+                    workers: healthy,
+                    queue_depth: self.replicas.iter().map(|r| r.queue_depth).sum(),
+                    inflight: self.inflight.len(),
+                    queue_wait_p95_us: self
+                        .replicas
+                        .iter()
+                        .map(|r| r.queue_wait_p95_us)
+                        .fold(0.0, f64::max),
+                    budget: self.cfg.fleet.budget_per_query,
+                    saturated: healthy == 0,
+                    queries: self.metrics.counter("fleet.requests").get(),
+                };
+                self.write_line(conn, &s.to_json().to_string());
+            }
+            "shutdown" => self.shutdown_cmd(conn),
+            other => self.write_error(conn, &format!("unknown cmd {other}")),
+        }
+    }
+
+    fn on_client_gone(&mut self, conn: u64) {
+        self.writers.lock().unwrap().remove(&conn);
+        let ids: Vec<u64> = self
+            .inflight
+            .iter()
+            .filter(|(_, p)| p.conn == conn)
+            .map(|(id, _)| *id)
+            .collect();
+        for id in ids {
+            self.unhook(id); // response has nowhere to go
+        }
+        self.retry_queue.retain(|(_, p)| p.conn != conn);
+    }
+
+    fn shutdown_cmd(&mut self, conn: u64) {
+        self.write_line(conn, "{\"ok\":true}");
+        // protocol-level shutdown for every replica still reachable
+        let line = Json::obj(vec![("cmd", Json::Str("shutdown".into()))]).to_string();
+        for st in &self.replicas {
+            if let Some(s) = &st.conn {
+                let mut w = s;
+                let _ = writeln!(w, "{line}").and_then(|_| w.flush());
+            }
+        }
+        // fail whatever is still pending instead of stranding clients
+        let ids: Vec<u64> = self.inflight.keys().copied().collect();
+        let mut stranded = Vec::with_capacity(ids.len());
+        for id in ids {
+            let p = self.unhook(id);
+            stranded.push((p.conn, p.client_id));
+        }
+        for (pconn, cid) in stranded {
+            self.write_error_id(pconn, cid, "server shutting down");
+        }
+        let parked: Vec<Pending> =
+            self.retry_queue.drain(..).map(|(_, p)| p).collect();
+        for p in parked {
+            self.write_error_id(p.conn, p.client_id, "server shutting down");
+        }
+        self.stopping = true;
+        self.stop.store(true, Ordering::Release);
+    }
+
+    // ---- placement & retries -------------------------------------------
+
+    /// Place one query and send it to the chosen replica. A dead write
+    /// quarantines the replica and loops — the quarantined replica is out
+    /// of the healthy set, so this terminates in ≤ n iterations, ending in
+    /// an `overloaded` line if nobody is left.
+    fn place(&mut self, mut p: Pending) {
+        loop {
+            let views: Vec<ReplicaView> = self
+                .replicas
+                .iter()
+                .map(|r| ReplicaView {
+                    healthy: r.healthy,
+                    arm: r.spec.arm,
+                    queue_depth: r.queue_depth,
+                    queue_wait_p95_us: r.queue_wait_p95_us,
+                    inflight: r.inflight_n,
+                })
+                .collect();
+            let t0 = Instant::now();
+            let placed = self.policy.place(&p.domain, &p.text, &views);
+            self.metrics.histogram("fleet.placement_us").record_since(t0);
+            let placement = match placed {
+                Ok(Some(pl)) => pl,
+                Ok(None) => return self.write_overloaded(p.conn, p.client_id),
+                Err(e) => {
+                    return self.write_error_id(
+                        p.conn,
+                        p.client_id,
+                        &format!("placement failed: {e}"),
+                    )
+                }
+            };
+            if let Some(want) = placement.want {
+                let name = if want == ReplicaArm::Strong { "strong" } else { "weak" };
+                self.metrics.counter(&format!("fleet.placed.{name}")).inc();
+            }
+            let r = placement.replica;
+            let id = self.next_id;
+            self.next_id += 1;
+            let line = request_line(id, &p);
+            if self.write_replica(r, &line) {
+                self.metrics.counter(&format!("fleet.replica.{r}.placed")).inc();
+                p.replica = r;
+                p.deadline = Instant::now()
+                    + Duration::from_millis(self.cfg.fleet.request_timeout_ms);
+                self.replicas[r].inflight_n += 1;
+                self.inflight.insert(id, p);
+                return;
+            }
+            self.quarantine(r, "query write failed");
+        }
+    }
+
+    /// Give a failed attempt another chance, or fail it to the client once
+    /// `fleet.retry_max` attempts are spent. Backoff doubles per retry
+    /// (capped at 64×); death re-placement passes `backoff = false` so
+    /// survivors pick the query up on the next sweep tick.
+    fn retry(&mut self, mut p: Pending, reason: &str, backoff: bool) {
+        if p.attempts >= self.cfg.fleet.retry_max {
+            self.metrics.counter("fleet.failed").inc();
+            let msg = format!("failed after {} attempts: {reason}", p.attempts);
+            return self.write_error_id(p.conn, p.client_id, &msg);
+        }
+        p.attempts += 1;
+        self.metrics.counter("fleet.retries").inc();
+        let delay = if backoff {
+            let shift = (p.attempts - 2).min(6);
+            Duration::from_millis(self.cfg.fleet.retry_backoff_ms << shift)
+        } else {
+            Duration::ZERO
+        };
+        self.retry_queue.push((Instant::now() + delay, p));
+    }
+
+    /// Remove an in-flight entry and release its replica slot.
+    fn unhook(&mut self, id: u64) -> Pending {
+        let p = self.inflight.remove(&id).expect("unhook of unknown id");
+        let n = &mut self.replicas[p.replica].inflight_n;
+        *n = n.saturating_sub(1);
+        p
+    }
+
+    // ---- replica side --------------------------------------------------
+
+    fn on_replica_line(&mut self, replica: usize, gen: u64, line: &str) {
+        if self.replicas[replica].gen != gen {
+            return; // from a connection we already replaced
+        }
+        let Ok(v) = jsonio::parse(line) else { return };
+        let id = match v.get("id").and_then(Json::as_i64) {
+            Some(i) if i >= 0 => i as u64,
+            // id-less lines (e.g. an accept-time refusal) route nowhere;
+            // the per-attempt deadline recovers any query stuck behind one
+            _ => return,
+        };
+        if !self.inflight.contains_key(&id) {
+            return; // straggler from an abandoned attempt
+        }
+        let p = self.unhook(id);
+        if let Some(err) = v.get("error").and_then(Json::as_str) {
+            // transient replica states retry; real errors pass through
+            if err == "overloaded" || err == "server shutting down" {
+                return self.retry(p, &format!("replica {replica}: {err}"), true);
+            }
+        }
+        // forward verbatim, restoring the client's id
+        let mut obj = match v.as_obj() {
+            Some(m) => m.clone(),
+            None => return,
+        };
+        obj.insert("id".to_string(), Json::Int(p.client_id as i64));
+        self.metrics.counter("fleet.responses").inc();
+        self.write_line(p.conn, &Json::Obj(obj).to_string());
+    }
+
+    fn on_heartbeat(&mut self, replica: usize, stats: Option<ReplicaStats>) {
+        match stats {
+            Some(s) => {
+                {
+                    let st = &mut self.replicas[replica];
+                    st.queue_depth = s.queue_depth;
+                    st.queue_wait_p95_us = s.queue_wait_p95_us;
+                }
+                self.metrics
+                    .gauge(&format!("fleet.replica.{replica}.queue_depth"))
+                    .set(s.queue_depth as f64);
+                let st = &mut self.replicas[replica];
+                if st.healthy {
+                    st.misses = 0;
+                } else {
+                    st.recoveries += 1;
+                    if st.recoveries >= self.cfg.fleet.readmit_after {
+                        self.readmit(replica);
+                    }
+                }
+            }
+            None => {
+                let st = &mut self.replicas[replica];
+                st.recoveries = 0;
+                if st.healthy {
+                    st.misses += 1;
+                    if st.misses >= self.cfg.fleet.quarantine_after {
+                        self.quarantine(replica, "heartbeat missed");
+                    }
+                }
+            }
+        }
+    }
+
+    /// Take a replica out of rotation and immediately re-place everything
+    /// it was running (the zero-lost-requests contract: a replica death is
+    /// a latency event, not a loss event).
+    fn quarantine(&mut self, replica: usize, why: &str) {
+        if !self.replicas[replica].healthy {
+            return;
+        }
+        {
+            let st = &mut self.replicas[replica];
+            st.healthy = false;
+            st.gen += 1; // orphan the old reader's events
+            st.misses = 0;
+            st.recoveries = 0;
+            if let Some(c) = st.conn.take() {
+                let _ = c.shutdown(Shutdown::Both);
+            }
+        }
+        self.metrics.counter("fleet.quarantine").inc();
+        self.gauge_healthy(replica, false);
+        eprintln!("fleet: replica {replica} quarantined ({why})");
+        let stranded: Vec<u64> = self
+            .inflight
+            .iter()
+            .filter(|(_, p)| p.replica == replica)
+            .map(|(id, _)| *id)
+            .collect();
+        for id in stranded {
+            let p = self.unhook(id);
+            self.metrics.counter("fleet.replaced").inc();
+            self.retry(p, "replica died", false);
+        }
+    }
+
+    /// A quarantined replica answered `readmit_after` heartbeats in a row:
+    /// re-establish the query connection and put it back in rotation.
+    fn readmit(&mut self, replica: usize) {
+        if !self.connect_replica(replica) {
+            self.replicas[replica].recoveries = 0; // stats up, port not — wait
+            return;
+        }
+        let st = &mut self.replicas[replica];
+        st.healthy = true;
+        st.misses = 0;
+        st.recoveries = 0;
+        self.metrics.counter("fleet.readmit").inc();
+        self.gauge_healthy(replica, true);
+        eprintln!("fleet: replica {replica} readmitted");
+    }
+
+    /// (Re)connect the query connection for one replica and spawn its
+    /// generation-tagged reader thread. Leaves health untouched.
+    fn connect_replica(&mut self, replica: usize) -> bool {
+        let Ok(sock) = self.replicas[replica].spec.addr.parse::<SocketAddr>() else {
+            return false;
+        };
+        let timeout = Duration::from_millis(self.cfg.fleet.heartbeat_ms.max(100));
+        let Ok(s) = TcpStream::connect_timeout(&sock, timeout) else {
+            return false;
+        };
+        let _ = s.set_nodelay(true);
+        let _ = s.set_write_timeout(Some(Duration::from_millis(
+            self.cfg.fleet.request_timeout_ms,
+        )));
+        let Ok(read_half) = s.try_clone() else { return false };
+        let st = &mut self.replicas[replica];
+        st.gen += 1;
+        st.conn = Some(s);
+        let (gen, tx, stop) = (st.gen, self.tx.clone(), self.stop.clone());
+        self.reader_handles
+            .push(std::thread::spawn(move || replica_reader(read_half, replica, gen, tx, stop)));
+        true
+    }
+
+    // ---- wire helpers --------------------------------------------------
+
+    fn write_replica(&mut self, replica: usize, line: &str) -> bool {
+        match &self.replicas[replica].conn {
+            Some(s) => {
+                let mut w = s;
+                writeln!(w, "{line}").and_then(|_| w.flush()).is_ok()
+            }
+            None => false,
+        }
+    }
+
+    /// Deliver one line to a client connection; a failed write kills the
+    /// connection (its reader will report [`Event::ClientGone`]).
+    fn write_line(&self, conn: u64, line: &str) {
+        let mut m = self.writers.lock().unwrap();
+        if let Some(s) = m.get(&conn) {
+            let mut w = s;
+            if writeln!(w, "{line}").and_then(|_| w.flush()).is_err() {
+                let _ = s.shutdown(Shutdown::Both);
+                m.remove(&conn);
+            }
+        }
+    }
+
+    fn write_error(&self, conn: u64, msg: &str) {
+        let j = Json::obj(vec![("error", Json::Str(msg.to_string()))]);
+        self.write_line(conn, &j.to_string());
+    }
+
+    fn write_error_id(&self, conn: u64, client_id: u64, msg: &str) {
+        let j = Json::obj(vec![
+            ("id", Json::Int(client_id as i64)),
+            ("error", Json::Str(msg.to_string())),
+        ]);
+        self.write_line(conn, &j.to_string());
+    }
+
+    /// No healthy replica: shed with a retry hint of one heartbeat period
+    /// (the soonest the picture can change).
+    fn write_overloaded(&self, conn: u64, client_id: u64) {
+        self.metrics.counter("fleet.rejected").inc();
+        let j = Json::obj(vec![
+            ("error", Json::Str("overloaded".into())),
+            ("retry_after_ms", Json::Int(self.cfg.fleet.heartbeat_ms as i64)),
+            ("id", Json::Int(client_id as i64)),
+        ]);
+        self.write_line(conn, &j.to_string());
+    }
+
+    fn gauge_healthy(&self, replica: usize, up: bool) {
+        self.metrics
+            .gauge(&format!("fleet.replica.{replica}.healthy"))
+            .set(if up { 1.0 } else { 0.0 });
+    }
+}
+
+/// The wire line for one attempt: the fleet-internal id is the routing key;
+/// the client's own id never crosses to a replica.
+fn request_line(id: u64, p: &Pending) -> String {
+    let mut pairs = vec![
+        ("id", Json::Int(id as i64)),
+        ("text", Json::Str(p.text.clone())),
+        ("domain", Json::Str(p.domain.clone())),
+    ];
+    if let Some(k) = p.procedure {
+        pairs.push(("procedure", Json::Str(k.name().to_string())));
+    }
+    if let Some(s) = p.session {
+        pairs.push(("session", Json::Int(s as i64)));
+    }
+    Json::obj(pairs).to_string()
+}
+
+// ---- helper threads ----------------------------------------------------
+
+fn acceptor(
+    listener: TcpListener,
+    tx: Sender<Event>,
+    stop: Arc<AtomicBool>,
+    writers: Arc<Mutex<BTreeMap<u64, TcpStream>>>,
+    handles: Arc<Mutex<Vec<JoinHandle<()>>>>,
+    writer_stall: Duration,
+) {
+    let mut next_conn: u64 = 1;
+    loop {
+        let stream = match listener.accept() {
+            Ok((s, _)) => s,
+            Err(_) => {
+                if stop.load(Ordering::Acquire) {
+                    return;
+                }
+                continue;
+            }
+        };
+        if stop.load(Ordering::Acquire) {
+            return; // the teardown self-connect
+        }
+        let conn = next_conn;
+        next_conn += 1;
+        let Ok(writer) = stream.try_clone() else { continue };
+        let _ = writer.set_write_timeout(Some(writer_stall));
+        writers.lock().unwrap().insert(conn, writer);
+        let tx = tx.clone();
+        handles
+            .lock()
+            .unwrap()
+            .push(std::thread::spawn(move || client_reader(stream, conn, tx)));
+    }
+}
+
+fn client_reader(stream: TcpStream, conn: u64, tx: Sender<Event>) {
+    let mut reader = BufReader::new(stream);
+    let mut line = String::new();
+    loop {
+        line.clear();
+        match reader.read_line(&mut line) {
+            Ok(0) | Err(_) => break,
+            Ok(_) => {
+                let ev = Event::ClientLine { conn, line: line.trim().to_string() };
+                if tx.send(ev).is_err() {
+                    return;
+                }
+            }
+        }
+    }
+    let _ = tx.send(Event::ClientGone { conn });
+}
+
+/// Reads responses off one replica query connection. Uses a short read
+/// timeout purely as a stop-flag poll; EOF or a hard error reports
+/// [`Event::ReplicaDown`] for this generation.
+fn replica_reader(
+    stream: TcpStream,
+    replica: usize,
+    gen: u64,
+    tx: Sender<Event>,
+    stop: Arc<AtomicBool>,
+) {
+    let _ = stream.set_read_timeout(Some(Duration::from_millis(100)));
+    let mut reader = BufReader::new(stream);
+    let mut line = String::new();
+    loop {
+        if stop.load(Ordering::Acquire) {
+            return;
+        }
+        line.clear();
+        match reader.read_line(&mut line) {
+            Ok(0) => break,
+            Ok(_) => {
+                let t = line.trim();
+                if !t.is_empty() {
+                    let ev = Event::ReplicaLine { replica, gen, line: t.to_string() };
+                    if tx.send(ev).is_err() {
+                        return;
+                    }
+                }
+            }
+            Err(e)
+                if e.kind() == ErrorKind::WouldBlock || e.kind() == ErrorKind::TimedOut =>
+            {
+                continue
+            }
+            Err(_) => break,
+        }
+    }
+    let _ = tx.send(Event::ReplicaDown { replica, gen });
+}
+
+/// Polls every replica's `stats` verb once per period over its own
+/// connections (never the query connection — a heartbeat must not sit in
+/// line behind a big response).
+fn heartbeat(addrs: Vec<String>, tx: Sender<Event>, stop: Arc<AtomicBool>, period: Duration) {
+    let mut conns: Vec<Option<(BufReader<TcpStream>, TcpStream)>> =
+        addrs.iter().map(|_| None).collect();
+    while !stop.load(Ordering::Acquire) {
+        for (i, addr) in addrs.iter().enumerate() {
+            if stop.load(Ordering::Acquire) {
+                return;
+            }
+            let stats = poll_stats(&mut conns[i], addr, period);
+            if tx.send(Event::Heartbeat { replica: i, stats }).is_err() {
+                return;
+            }
+        }
+        std::thread::sleep(period);
+    }
+}
+
+fn poll_stats(
+    slot: &mut Option<(BufReader<TcpStream>, TcpStream)>,
+    addr: &str,
+    timeout: Duration,
+) -> Option<ReplicaStats> {
+    if slot.is_none() {
+        let sock: SocketAddr = addr.parse().ok()?;
+        let s = TcpStream::connect_timeout(&sock, timeout).ok()?;
+        s.set_read_timeout(Some(timeout)).ok()?;
+        s.set_write_timeout(Some(timeout)).ok()?;
+        let write_half = s.try_clone().ok()?;
+        *slot = Some((BufReader::new(s), write_half));
+    }
+    let (reader, writer) = slot.as_mut().expect("just filled");
+    let attempt = (|| -> Result<ReplicaStats> {
+        let cmd = Json::obj(vec![("cmd", Json::Str("stats".into()))]);
+        writeln!(writer, "{cmd}")?;
+        writer.flush()?;
+        let mut line = String::new();
+        anyhow::ensure!(reader.read_line(&mut line)? > 0, "replica closed stats conn");
+        ReplicaStats::from_json(&jsonio::parse(line.trim())?)
+    })();
+    match attempt {
+        Ok(s) => Some(s),
+        Err(_) => {
+            *slot = None; // reconnect next tick
+            None
+        }
+    }
+}

@@ -1,0 +1,160 @@
+//! The `stats` protocol verb's payload: a replica's self-reported load and
+//! identity, polled by the fleet heartbeat and fed into placement.
+//!
+//! This is an untrusted-byte surface between processes — the fleet must
+//! survive a replica (or an impostor on its port) answering with garbage.
+//! [`ReplicaStats::from_json`] is therefore strict and total: every field
+//! must be present with the right type and range, and any violation is a
+//! structured `Err`, never a panic (property-tested in
+//! `tests/adversarial_bytes.rs`).
+
+use anyhow::Result;
+
+use crate::config::ReplicaArm;
+use crate::jsonio::Json;
+
+/// One replica's `stats` response. All fields are point-in-time snapshots;
+/// the fleet treats them as hints (placement inputs), never as invariants.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ReplicaStats {
+    /// Which decode arms this replica serves (`server.replica_arm`).
+    pub arm: ReplicaArm,
+    /// Scheduler worker pool size.
+    pub workers: usize,
+    /// Queries queued in the batcher right now.
+    pub queue_depth: usize,
+    /// Queries admitted but not yet answered (routing-table size).
+    pub inflight: usize,
+    /// p95 of `serving.queue_wait_us` over the process lifetime.
+    pub queue_wait_p95_us: f64,
+    /// The budget controller's current effective per-query budget.
+    pub budget: f64,
+    /// Controller saturation: pinned at its min clamp while over target.
+    pub saturated: bool,
+    /// Total queries admitted (`serving.queries`).
+    pub queries: u64,
+}
+
+impl ReplicaStats {
+    /// Serialize for the wire (one line, same shape `from_json` accepts).
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("arm", Json::Str(self.arm.name().to_string())),
+            ("workers", Json::Int(self.workers as i64)),
+            ("queue_depth", Json::Int(self.queue_depth as i64)),
+            ("inflight", Json::Int(self.inflight as i64)),
+            ("queue_wait_p95_us", Json::Num(self.queue_wait_p95_us)),
+            ("budget", Json::Num(self.budget)),
+            ("saturated", Json::Bool(self.saturated)),
+            ("queries", Json::Int(self.queries as i64)),
+        ])
+    }
+
+    /// Strict parse of a `stats` response. Every field is required; types
+    /// are exact (integers through the exact-integer path, never a lossy
+    /// f64 for counts); numeric fields must be finite and non-negative.
+    pub fn from_json(v: &Json) -> Result<ReplicaStats> {
+        let field = |name: &str| {
+            v.get(name)
+                .ok_or_else(|| anyhow::anyhow!("stats missing field `{name}`"))
+        };
+        let count = |name: &str| -> Result<u64> {
+            match field(name)?.as_i64() {
+                Some(i) if i >= 0 => Ok(i as u64),
+                _ => anyhow::bail!("stats field `{name}` must be a non-negative integer"),
+            }
+        };
+        let finite = |name: &str| -> Result<f64> {
+            match field(name)?.as_f64() {
+                Some(x) if x.is_finite() && x >= 0.0 => Ok(x),
+                _ => anyhow::bail!("stats field `{name}` must be a finite non-negative number"),
+            }
+        };
+        let arm = field("arm")?
+            .as_str()
+            .ok_or_else(|| anyhow::anyhow!("stats field `arm` must be a string"))?
+            .parse::<ReplicaArm>()?;
+        let saturated = match field("saturated")? {
+            Json::Bool(b) => *b,
+            _ => anyhow::bail!("stats field `saturated` must be a bool"),
+        };
+        Ok(ReplicaStats {
+            arm,
+            workers: count("workers")? as usize,
+            queue_depth: count("queue_depth")? as usize,
+            inflight: count("inflight")? as usize,
+            queue_wait_p95_us: finite("queue_wait_p95_us")?,
+            budget: finite("budget")?,
+            saturated,
+            queries: count("queries")?,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::jsonio;
+
+    fn sample() -> ReplicaStats {
+        ReplicaStats {
+            arm: ReplicaArm::Strong,
+            workers: 2,
+            queue_depth: 5,
+            inflight: 7,
+            queue_wait_p95_us: 1234.5,
+            budget: 6.0,
+            saturated: false,
+            queries: 99,
+        }
+    }
+
+    #[test]
+    fn roundtrips_through_the_wire() {
+        let s = sample();
+        let wire = s.to_json().to_string();
+        let back = ReplicaStats::from_json(&jsonio::parse(&wire).unwrap()).unwrap();
+        assert_eq!(back, s);
+    }
+
+    #[test]
+    fn missing_and_mistyped_fields_are_structural_errors() {
+        // drop each field in turn: every one is required
+        let full = sample().to_json();
+        let pairs: Vec<(String, Json)> = full
+            .as_obj()
+            .unwrap()
+            .iter()
+            .map(|(k, v)| (k.clone(), v.clone()))
+            .collect();
+        for (skip, _) in pairs.iter().enumerate() {
+            let partial = Json::Obj(
+                pairs
+                    .iter()
+                    .enumerate()
+                    .filter(|(i, _)| *i != skip)
+                    .map(|(_, (k, v))| (k.clone(), v.clone()))
+                    .collect(),
+            );
+            let err = ReplicaStats::from_json(&partial).unwrap_err();
+            assert!(
+                err.to_string().contains(&pairs[skip].0),
+                "dropping `{}` must name the field: {err}",
+                pairs[skip].0
+            );
+        }
+        // wrong types and ranges
+        for bad in [
+            "{\"arm\":7}",
+            "{\"arm\":\"medium\"}",
+            "{\"arm\":\"both\",\"workers\":-1}",
+            "{\"arm\":\"both\",\"workers\":1.5}",
+        ] {
+            assert!(ReplicaStats::from_json(&jsonio::parse(bad).unwrap()).is_err());
+        }
+        // non-objects never panic
+        for v in [Json::Null, Json::Int(3), Json::Arr(vec![])] {
+            assert!(ReplicaStats::from_json(&v).is_err());
+        }
+    }
+}

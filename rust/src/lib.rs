@@ -24,6 +24,7 @@ pub mod baselines;
 pub mod cli;
 pub mod config;
 pub mod experiments;
+pub mod fleet;
 pub mod jsonio;
 pub mod metrics;
 pub mod pool;

@@ -81,6 +81,13 @@ fn cli() -> Cli {
             default: Some(""),
         },
         FlagSpec {
+            name: "replica-arm",
+            help: "fleet replica decode-arm pin: both|weak|strong; empty = \
+                   value from --config (default both — bit-for-bit the \
+                   standalone server)",
+            default: Some(""),
+        },
+        FlagSpec {
             name: "admission",
             help: "enable staged admission control (degrade → shed; \
                    [admission] section)",
@@ -123,11 +130,87 @@ fn cli() -> Cli {
             default: Some(""),
         },
     ]);
+    let fleet_flags = {
+        let mut fs = runtime_flags.clone();
+        fs.extend([
+            FlagSpec { name: "config", help: "TOML config file", default: Some("") },
+            FlagSpec {
+                name: "addr",
+                help: "fleet listen address; empty = value from --config \
+                       (default 127.0.0.1:7081)",
+                default: Some(""),
+            },
+            FlagSpec {
+                name: "replicas",
+                help: "replicas to spawn as children of this binary; empty \
+                       = value from --config (default 3); ignored when \
+                       --addrs is given",
+                default: Some(""),
+            },
+            FlagSpec {
+                name: "addrs",
+                help: "comma-separated pre-started replica addresses \
+                       (attach instead of spawning)",
+                default: Some(""),
+            },
+            FlagSpec {
+                name: "placement",
+                help: "placement policy: consistent-hash|least-loaded|\
+                       difficulty-aware; empty = value from --config",
+                default: Some(""),
+            },
+            FlagSpec {
+                name: "arms",
+                help: "comma-separated per-replica decode arms \
+                       (both|weak|strong); empty = all `both`",
+                default: Some(""),
+            },
+            FlagSpec {
+                name: "weights",
+                help: "comma-separated per-replica budget weights; empty = \
+                       equal",
+                default: Some(""),
+            },
+            FlagSpec {
+                name: "budget",
+                help: "fleet-mean samples per query, split across replicas \
+                       by weight; empty = value from --config (default 8)",
+                default: Some(""),
+            },
+            FlagSpec {
+                name: "heartbeat-ms",
+                help: "stats-poll period; empty = value from --config \
+                       (default 200)",
+                default: Some(""),
+            },
+            FlagSpec {
+                name: "retry-max",
+                help: "attempts per query before failing it to the client; \
+                       empty = value from --config (default 3)",
+                default: Some(""),
+            },
+            FlagSpec {
+                name: "spawn-binary",
+                help: "binary to spawn replicas from; empty = this binary",
+                default: Some(""),
+            },
+        ]);
+        fs
+    };
     Cli {
         binary: "thinkalloc",
         about: "input-adaptive allocation of LM computation (ICLR'25) — serving framework",
         commands: vec![
-            CommandSpec { name: "serve", help: "run the TCP serving front-end", flags: serve_flags },
+            CommandSpec {
+                name: "serve",
+                help: "run the TCP serving front-end",
+                flags: serve_flags,
+            },
+            CommandSpec {
+                name: "fleet",
+                help: "run the replicated-pool front door (`fleet serve`)",
+                flags: fleet_flags,
+            },
             CommandSpec {
                 name: "experiment",
                 help: "regenerate a paper table/figure (fig3-code fig3-math fig4 \
@@ -150,7 +233,11 @@ fn cli() -> Cli {
                 flags: vec![
                     FlagSpec { name: "n", help: "number of requests", default: Some("1000") },
                     FlagSpec { name: "rate", help: "arrivals per second", default: Some("50") },
-                    FlagSpec { name: "mix", help: "code,math,chat weights", default: Some("0.5,0.3,0.2") },
+                    FlagSpec {
+                        name: "mix",
+                        help: "code,math,chat weights",
+                        default: Some("0.5,0.3,0.2"),
+                    },
                     FlagSpec { name: "seed", help: "prng seed", default: Some("0") },
                     FlagSpec { name: "out", help: "output path", default: Some("trace.json") },
                 ],
@@ -192,6 +279,7 @@ fn main() -> Result<()> {
             Ok(())
         }
         "serve" => cmd_serve(&args),
+        "fleet" => cmd_fleet(&args),
         "experiment" => cmd_experiment(&args),
         "check" => cmd_check(&args),
         "info" => cmd_info(&args),
@@ -297,6 +385,12 @@ fn cmd_serve(args: &Args) -> Result<()> {
             .parse()
             .map_err(|e| anyhow::anyhow!("--controller-gain: {e}"))?;
     }
+    // empty = keep whatever --config says; the fleet passes this explicitly
+    // when spawning replica children
+    let arm_flag = args.str_flag("replica-arm")?;
+    if !arm_flag.is_empty() {
+        cfg.server.replica_arm = arm_flag.parse()?;
+    }
     cfg.validate()?;
 
     let metrics = Arc::new(Registry::default());
@@ -355,6 +449,99 @@ fn cmd_serve(args: &Args) -> Result<()> {
     );
     let server = Server::new(cfg, metrics);
     server.run(|addr| println!("listening on {addr}"))
+}
+
+fn cmd_fleet(args: &Args) -> Result<()> {
+    anyhow::ensure!(
+        args.positionals.first().map(String::as_str) == Some("serve"),
+        "usage: thinkalloc fleet serve [flags]"
+    );
+    let mut cfg = {
+        let path = args.str_flag("config")?;
+        if path.is_empty() {
+            Config::default()
+        } else {
+            Config::from_file(Path::new(&path))?
+        }
+    };
+    cfg.runtime.artifacts_dir = PathBuf::from(args.str_flag("artifacts")?);
+    let backend_flag = args.str_flag("backend")?;
+    if !backend_flag.is_empty() {
+        cfg.runtime.backend = backend_flag.parse()?;
+    }
+    // every flag follows the serve discipline: empty keeps the --config
+    // (or default) value rather than clobbering it
+    let addr = args.str_flag("addr")?;
+    if !addr.is_empty() {
+        cfg.fleet.addr = addr;
+    }
+    let replicas = args.str_flag("replicas")?;
+    if !replicas.is_empty() {
+        cfg.fleet.replicas = replicas
+            .parse()
+            .map_err(|e| anyhow::anyhow!("--replicas: {e}"))?;
+    }
+    let addrs = args.str_flag("addrs")?;
+    if !addrs.is_empty() {
+        cfg.fleet.addrs = addrs.split(',').map(|a| a.trim().to_string()).collect();
+    }
+    let placement = args.str_flag("placement")?;
+    if !placement.is_empty() {
+        cfg.fleet.placement = placement.parse()?;
+    }
+    let arms = args.str_flag("arms")?;
+    if !arms.is_empty() {
+        cfg.fleet.arms = arms
+            .split(',')
+            .map(|a| a.trim().parse())
+            .collect::<Result<_>>()?;
+    }
+    let weights = args.str_flag("weights")?;
+    if !weights.is_empty() {
+        cfg.fleet.weights = weights
+            .split(',')
+            .map(|w| w.trim().parse::<f64>())
+            .collect::<Result<_, _>>()
+            .map_err(|e| anyhow::anyhow!("--weights: {e}"))?;
+    }
+    let budget = args.str_flag("budget")?;
+    if !budget.is_empty() {
+        cfg.fleet.budget_per_query = budget
+            .parse()
+            .map_err(|e| anyhow::anyhow!("--budget: {e}"))?;
+    }
+    let heartbeat = args.str_flag("heartbeat-ms")?;
+    if !heartbeat.is_empty() {
+        cfg.fleet.heartbeat_ms = heartbeat
+            .parse()
+            .map_err(|e| anyhow::anyhow!("--heartbeat-ms: {e}"))?;
+    }
+    let retry_max = args.str_flag("retry-max")?;
+    if !retry_max.is_empty() {
+        cfg.fleet.retry_max = retry_max
+            .parse()
+            .map_err(|e| anyhow::anyhow!("--retry-max: {e}"))?;
+    }
+    cfg.fleet.spawn_binary = args.str_flag("spawn-binary")?;
+    cfg.validate()?;
+
+    let n = cfg.fleet.n_replicas();
+    println!(
+        "thinkalloc fleet on {} ({} {} replicas, placement {}, B={}, \
+         heartbeat {}ms, quarantine after {}, readmit after {}, retry {}x)",
+        cfg.fleet.addr,
+        n,
+        if cfg.fleet.addrs.is_empty() { "spawned" } else { "attached" },
+        cfg.fleet.placement.name(),
+        cfg.fleet.budget_per_query,
+        cfg.fleet.heartbeat_ms,
+        cfg.fleet.quarantine_after,
+        cfg.fleet.readmit_after,
+        cfg.fleet.retry_max,
+    );
+    let metrics = Arc::new(Registry::default());
+    let fleet = thinkalloc::fleet::FleetServer::new(cfg, metrics)?;
+    fleet.run(|addr| println!("listening on {addr}"))
 }
 
 fn cmd_experiment(args: &Args) -> Result<()> {
@@ -446,7 +633,11 @@ pub fn run_experiments(engine: &Engine, which: &str, out: &Path) -> Result<()> {
             );
         }
     }
-    println!("experiments `{which}` done in {:.1}s → {}", t0.elapsed().as_secs_f64(), out.display());
+    println!(
+        "experiments `{which}` done in {:.1}s → {}",
+        t0.elapsed().as_secs_f64(),
+        out.display()
+    );
     Ok(())
 }
 

@@ -8,7 +8,8 @@
 //!   ← {"id": 1, "response": "3", "ok": true, "budget": 4,
 //!      "predicted": 0.91, "reward": 1.0, "latency_us": 1234,
 //!      "procedure": "adaptive"}
-//! Special requests: {"cmd": "metrics"} → metrics dump; {"cmd": "shutdown"}.
+//! Special requests: {"cmd": "metrics"} → metrics dump; {"cmd": "stats"} →
+//! one-line load snapshot (the fleet heartbeat's food); {"cmd": "shutdown"}.
 //! Overload rejections are `{"error": "overloaded", "retry_after_ms": N}`
 //! lines (see docs/PROTOCOL.md for the full error-line inventory).
 //!
@@ -67,7 +68,8 @@ use std::time::Duration;
 
 use anyhow::Result;
 
-use crate::config::{Config, IoMode, ProcedureKind};
+use crate::config::{Config, IoMode, ProcedureKind, ReplicaArm};
+use crate::fleet::ReplicaStats;
 use crate::jsonio::{self, Json};
 use crate::metrics::Registry;
 use crate::serving::batcher::{Batcher, Submit};
@@ -373,6 +375,15 @@ impl Server {
                 return;
             }
         };
+        // replica-arm pin: a fleet replica serves exactly one decode arm, so
+        // the fleet's difficulty-aware placement — not this process — is the
+        // weak/strong decision point. `both` (the default) touches nothing:
+        // a standalone server stays bit-for-bit identical.
+        let (degraded, procedure) = match self.cfg.server.replica_arm {
+            ReplicaArm::Both => (degraded, procedure),
+            ReplicaArm::Weak => (true, Some(ProcedureKind::WeakStrongRoute)),
+            ReplicaArm::Strong => (degraded, Some(ProcedureKind::AdaptiveBestOfK)),
+        };
         self.routing.lock().unwrap().insert(id, conn);
         let submitted = self.batcher.try_submit(Request {
             id,
@@ -427,6 +438,24 @@ impl Server {
             "metrics" => {
                 let dump = self.metrics.to_json().to_string();
                 self.write_line(conn, &dump);
+            }
+            "stats" => {
+                // the fleet heartbeat's poll: a point-in-time load snapshot,
+                // cheap enough to answer every heartbeat_ms from N fleets
+                let stats = ReplicaStats {
+                    arm: self.cfg.server.replica_arm,
+                    workers: self.cfg.server.workers,
+                    queue_depth: self.batcher.depth(),
+                    inflight: self.routing.lock().unwrap().len(),
+                    queue_wait_p95_us: self
+                        .metrics
+                        .histogram("serving.queue_wait_us")
+                        .percentile_us(0.95),
+                    budget: self.shared.effective_budget(),
+                    saturated: self.shared.controller.saturated(),
+                    queries: self.metrics.counter("serving.queries").get(),
+                };
+                self.write_line(conn, &stats.to_json().to_string());
             }
             "shutdown" => {
                 self.write_line(conn, "{\"ok\":true}");

@@ -53,7 +53,7 @@ use crate::allocator::offline::OfflinePolicy;
 use crate::allocator::online::{OnlineAllocator, Predictions};
 use crate::allocator::DeltaMatrix;
 use crate::baselines::uniform_best_of_k;
-use crate::config::{AllocPolicy, Config, ProcedureKind};
+use crate::config::{AllocPolicy, Config, ProcedureKind, RouteConfig};
 use crate::metrics::Registry;
 use crate::prng::Pcg64;
 use crate::router::ThresholdRouter;
@@ -655,25 +655,7 @@ impl Scheduler {
     /// learned p̂(S≻W) preference head (eq. 8); binary domains reuse the
     /// difficulty probe — harder queries (lower λ̂) prefer the strong decode.
     pub fn strong_preference(&self, domain: &str, texts: &[&str]) -> Result<Vec<f64>> {
-        let predictor = Predictor::new(&self.engine);
-        match domain {
-            "chat" => {
-                let kind = if self.shared.cfg.route.use_vas_probe {
-                    ProbeKind::VasPreference
-                } else {
-                    ProbeKind::RoutePreference
-                };
-                predictor.predict_scalar(kind, texts)
-            }
-            "route" | "vas" => {
-                predictor.predict_scalar(ProbeKind::for_domain(domain)?, texts)
-            }
-            _ => Ok(predictor
-                .predict_scalar(ProbeKind::for_domain(domain)?, texts)?
-                .into_iter()
-                .map(|l| 1.0 - l)
-                .collect()),
-        }
+        strong_preference(&self.engine, &self.shared.cfg.route, domain, texts)
     }
 
     /// The calibrated per-domain threshold router (fitted on first use on a
@@ -690,10 +672,7 @@ impl Scheduler {
             return Ok(Arc::clone(r));
         }
         let rc = &self.shared.cfg.route;
-        let held = workload::gen_dataset(domain, rc.heldout_n, rc.heldout_seed);
-        let texts: Vec<&str> = held.iter().map(|q| q.text.as_str()).collect();
-        let prefs = self.strong_preference(domain, &texts)?;
-        let router = Arc::new(ThresholdRouter::fit(&prefs, rc.strong_fraction));
+        let router = Arc::new(calibrate_router(&self.engine, rc, domain)?);
         self.shared
             .metrics
             .gauge(&format!("serving.route.threshold.{domain}"))
@@ -729,6 +708,53 @@ impl Scheduler {
         let p = cache.entry(domain.to_string()).or_insert(policy);
         Ok(Arc::clone(p))
     }
+}
+
+/// Predicted preference for the strong decode, per query — the free-function
+/// form of [`Scheduler::strong_preference`], shared with the fleet tier's
+/// difficulty-aware placement so the process-level routing decision uses the
+/// *same* probes as the in-process router (PR-1 calibration, lifted).
+pub fn strong_preference(
+    engine: &Engine,
+    route: &RouteConfig,
+    domain: &str,
+    texts: &[&str],
+) -> Result<Vec<f64>> {
+    let predictor = Predictor::new(engine);
+    match domain {
+        "chat" => {
+            let kind = if route.use_vas_probe {
+                ProbeKind::VasPreference
+            } else {
+                ProbeKind::RoutePreference
+            };
+            predictor.predict_scalar(kind, texts)
+        }
+        "route" | "vas" => {
+            predictor.predict_scalar(ProbeKind::for_domain(domain)?, texts)
+        }
+        _ => Ok(predictor
+            .predict_scalar(ProbeKind::for_domain(domain)?, texts)?
+            .into_iter()
+            .map(|l| 1.0 - l)
+            .collect()),
+    }
+}
+
+/// Fit a per-domain [`ThresholdRouter`] on a generated held-out workload:
+/// score `heldout_n` seeded queries with the strong-preference probe and set
+/// the threshold at the (1−`strong_fraction`) quantile. Deterministic
+/// (seeded workload, pure probes): every caller — each scheduler worker,
+/// the fleet router — fits the identical router.
+pub fn calibrate_router(
+    engine: &Engine,
+    route: &RouteConfig,
+    domain: &str,
+) -> Result<ThresholdRouter> {
+    let held = workload::gen_dataset(domain, route.heldout_n, route.heldout_seed);
+    let texts: Vec<&str> = held.iter().map(|q| q.text.as_str()).collect();
+    let prefs = strong_preference(engine, route, domain, &texts)?;
+    Ok(ThresholdRouter::fit(&prefs, route.strong_fraction))
 }
 
 /// Recompute the ground-truth answer for ADD/REV queries (the synthetic

@@ -7,7 +7,13 @@
 //! The line-splitting half of this suite (capped readers on adversarial
 //! streams) lives with the splitters in `src/server/conn.rs` — they are
 //! crate-private, so their properties run as unit tests.
+//!
+//! The tail of the file gives the `stats` verb (the fleet heartbeat's
+//! payload, an untrusted inter-process surface) the same treatment:
+//! round-trip exactness, mutated lines, and arbitrary JSON shapes.
 
+use thinkalloc::config::ReplicaArm;
+use thinkalloc::fleet::ReplicaStats;
 use thinkalloc::jsonio::{self, Json};
 use thinkalloc::prng::Pcg64;
 use thinkalloc::proputil::{close, prop_check, PropConfig};
@@ -112,6 +118,103 @@ fn prop_arbitrary_bytes_never_panic_the_parser() {
             if let Err(e) = jsonio::parse(&s) {
                 if e.to_string().is_empty() {
                     return Err("parser error with empty message".into());
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+/// A structurally valid stats payload with adversarially-shaped numbers.
+fn gen_stats(rng: &mut Pcg64) -> ReplicaStats {
+    let arm = match rng.range_usize(0, 3) {
+        0 => ReplicaArm::Both,
+        1 => ReplicaArm::Weak,
+        _ => ReplicaArm::Strong,
+    };
+    ReplicaStats {
+        arm,
+        workers: rng.range_usize(0, 64),
+        queue_depth: rng.range_usize(0, 100_000),
+        inflight: rng.range_usize(0, 100_000),
+        queue_wait_p95_us: rng.f64() * 1e7,
+        budget: rng.f64() * 64.0,
+        saturated: rng.range_u64(0, 2) == 1,
+        queries: rng.next_u64() % (1 << 62),
+    }
+}
+
+#[test]
+fn prop_stats_roundtrip_through_the_wire() {
+    prop_check(
+        "stats-roundtrip",
+        PropConfig { cases: 128, max_size: 4 },
+        |rng, _| {
+            let s = gen_stats(rng);
+            let wire = s.to_json().to_string();
+            let parsed = jsonio::parse(&wire).map_err(|e| format!("{wire}: {e}"))?;
+            let back = ReplicaStats::from_json(&parsed)
+                .map_err(|e| format!("printed stats failed to parse: {e} ({wire})"))?;
+            if back.arm != s.arm
+                || back.workers != s.workers
+                || back.queue_depth != s.queue_depth
+                || back.inflight != s.inflight
+                || back.saturated != s.saturated
+                || back.queries != s.queries
+            {
+                return Err(format!("exact fields drifted: {s:?} -> {back:?}"));
+            }
+            close(s.queue_wait_p95_us, back.queue_wait_p95_us, 1e-9, "queue_wait_p95_us")?;
+            close(s.budget, back.budget, 1e-9, "budget")
+        },
+    );
+}
+
+#[test]
+fn prop_mutated_stats_lines_fail_structurally_never_panic() {
+    prop_check(
+        "stats-mutation",
+        PropConfig { cases: 192, max_size: 4 },
+        |rng, _| {
+            let wire = gen_stats(rng).to_json().to_string();
+            let mut bytes = wire.into_bytes();
+            for _ in 0..rng.range_usize(1, 5) {
+                let i = rng.range_usize(0, bytes.len());
+                bytes[i] = rng.next_u64() as u8;
+            }
+            let s = String::from_utf8_lossy(&bytes);
+            // the fleet heartbeat does exactly this: parse, then interpret.
+            // both layers must yield structured errors on garbage
+            match jsonio::parse(&s) {
+                Err(e) => {
+                    if e.to_string().is_empty() {
+                        return Err("parser error with empty message".into());
+                    }
+                }
+                Ok(v) => {
+                    if let Err(e) = ReplicaStats::from_json(&v) {
+                        if e.to_string().is_empty() {
+                            return Err("stats error with empty message".into());
+                        }
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_arbitrary_json_shapes_never_panic_stats_parsing() {
+    prop_check(
+        "stats-garbage-shape",
+        PropConfig { cases: 128, max_size: 4 },
+        |rng, size| {
+            // an impostor replica answering with *valid* JSON of any shape
+            let v = gen_exact(rng, size.min(3));
+            if let Err(e) = ReplicaStats::from_json(&v) {
+                if e.to_string().is_empty() {
+                    return Err("stats error with empty message".into());
                 }
             }
             Ok(())

@@ -1,0 +1,383 @@
+//! Fleet-tier end-to-end contracts (DESIGN.md fleet section), all on the
+//! default native backend:
+//!
+//! - an all-healthy consistent-hash fleet is *bit-for-bit* the single
+//!   server: per-request response/ok/budget/predicted/reward/procedure
+//!   match a single-process replay of the same trace under the
+//!   deterministic serving settings (uniform allocation, integral budget,
+//!   temperature 0, one worker);
+//! - SIGKILLing a replica mid-replay loses zero requests: every query is
+//!   answered (re-placed onto survivors), the dead replica ends — and
+//!   stays — quarantined;
+//! - difficulty-aware placement reproduces the single-process λ̂-threshold
+//!   router's strong fraction across a weak/strong replica split;
+//! - the `stats` verb reports live, parseable load from a serving process,
+//!   and the replica-arm pin forces the decode procedure.
+
+use std::collections::BTreeMap;
+use std::io::BufRead;
+use std::process::Stdio;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use thinkalloc::config::{AllocPolicy, Config, PlacementKind, ReplicaArm};
+use thinkalloc::fleet::{FleetServer, ReplicaStats};
+use thinkalloc::jsonio::Json;
+use thinkalloc::metrics::Registry;
+use thinkalloc::router::ThresholdRouter;
+use thinkalloc::server::{Client, Server};
+use thinkalloc::workload::trace::Trace;
+
+/// The deterministic serving settings: per-request outputs become a pure
+/// function of (domain, text), independent of epoch composition — which is
+/// what makes fleet-vs-single bit comparison meaningful.
+fn det_cfg() -> Config {
+    let mut cfg = Config::default();
+    cfg.allocator.policy = AllocPolicy::Uniform;
+    cfg.allocator.budget_per_query = 2.0;
+    cfg.allocator.b_max = 4;
+    cfg.server.addr = "127.0.0.1:0".into();
+    cfg.server.batch_queries = 8;
+    cfg.server.max_wait_ms = 5;
+    cfg.server.workers = 1;
+    cfg.server.temperature = 0.0;
+    cfg
+}
+
+fn start_server(cfg: Config) -> (String, std::thread::JoinHandle<anyhow::Result<()>>) {
+    let server = Server::new(cfg, Arc::new(Registry::default()));
+    let (tx, rx) = std::sync::mpsc::channel();
+    let handle = std::thread::spawn(move || server.run(|a| tx.send(a).unwrap()));
+    (rx.recv().unwrap(), handle)
+}
+
+fn start_fleet(cfg: Config) -> (String, std::thread::JoinHandle<anyhow::Result<()>>) {
+    let fleet = FleetServer::new(cfg, Arc::new(Registry::default())).unwrap();
+    let (tx, rx) = std::sync::mpsc::channel();
+    let handle = std::thread::spawn(move || fleet.run(|a| tx.send(a).unwrap()));
+    (rx.recv().unwrap(), handle)
+}
+
+/// Everything in a response that must be deterministic (latency is not).
+#[derive(Debug, PartialEq)]
+struct RespKey {
+    response: String,
+    ok: bool,
+    budget: f64,
+    predicted: f64,
+    reward: f64,
+    procedure: String,
+}
+
+fn resp_key(resp: &Json) -> RespKey {
+    let num = |k: &str| resp.get(k).and_then(Json::as_f64).unwrap_or(f64::NAN);
+    RespKey {
+        response: resp.get("response").and_then(Json::as_str).unwrap_or("").to_string(),
+        ok: matches!(resp.get("ok"), Some(Json::Bool(true))),
+        budget: num("budget"),
+        predicted: num("predicted"),
+        reward: num("reward"),
+        procedure: resp
+            .get("procedure")
+            .and_then(Json::as_str)
+            .unwrap_or("")
+            .to_string(),
+    }
+}
+
+/// Replay `trace` with arrival pacing over one connection; responses keyed
+/// by id (fleets answer out of submission order across replicas).
+fn replay(addr: &str, trace: &Trace) -> BTreeMap<u64, RespKey> {
+    let mut client = Client::connect(addr).unwrap();
+    client
+        .set_read_timeout(Some(Duration::from_secs(120)))
+        .unwrap();
+    let t0 = Instant::now();
+    for (i, e) in trace.entries.iter().enumerate() {
+        let due = Duration::from_micros(e.at_us);
+        let elapsed = t0.elapsed();
+        if due > elapsed {
+            std::thread::sleep(due - elapsed);
+        }
+        client.request(i as u64, &e.text, &e.domain).unwrap();
+    }
+    let mut out = BTreeMap::new();
+    for _ in 0..trace.entries.len() {
+        let resp = client.read_response().expect("response");
+        assert!(
+            resp.get("error").is_none(),
+            "unexpected error line: {resp}"
+        );
+        let id = resp.get("id").and_then(Json::as_i64).expect("integer id") as u64;
+        assert!(
+            out.insert(id, resp_key(&resp)).is_none(),
+            "duplicate response for id {id}"
+        );
+    }
+    out
+}
+
+fn shutdown(addr: &str) {
+    let mut c = Client::connect(addr).unwrap();
+    c.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+    let _ = c.command("shutdown");
+}
+
+#[test]
+fn all_healthy_fleet_bit_matches_the_single_server() {
+    let trace = Trace::poisson(24, 400.0, (0.6, 0.4, 0.0), 0xF1EE7);
+
+    // reference: one ordinary server
+    let (single_addr, single_h) = start_server(det_cfg());
+    let single = replay(&single_addr, &trace);
+    shutdown(&single_addr);
+    single_h.join().unwrap().unwrap();
+
+    // three identical in-process replicas behind a consistent-hash fleet
+    let mut replica_handles = Vec::new();
+    let mut addrs = Vec::new();
+    for _ in 0..3 {
+        let (a, h) = start_server(det_cfg());
+        addrs.push(a);
+        replica_handles.push(h);
+    }
+    let mut cfg = det_cfg();
+    cfg.fleet.addr = "127.0.0.1:0".into();
+    cfg.fleet.addrs = addrs;
+    cfg.fleet.placement = PlacementKind::ConsistentHash;
+    cfg.fleet.budget_per_query = 2.0;
+    cfg.validate().unwrap();
+    let (fleet_addr, fleet_h) = start_fleet(cfg);
+
+    let fleet = replay(&fleet_addr, &trace);
+
+    // wire parity: the fleet answers the replica's stats verb too, with an
+    // aggregate view of the pool
+    let mut c = Client::connect(&fleet_addr).unwrap();
+    c.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+    let agg = ReplicaStats::from_json(&c.command("stats").unwrap()).unwrap();
+    assert_eq!(agg.workers, 3, "all three replicas should be healthy");
+    assert_eq!(agg.queries, 24);
+
+    // fleet shutdown broadcasts to the replicas: everything joins cleanly
+    let _ = c.command("shutdown");
+    fleet_h.join().unwrap().unwrap();
+    for h in replica_handles {
+        h.join().unwrap().unwrap();
+    }
+
+    assert_eq!(fleet.len(), 24, "fleet lost or duplicated responses");
+    for (id, want) in &single {
+        let got = fleet.get(id).expect("fleet answered every id");
+        assert_eq!(got, want, "request {id} diverged from the single server");
+    }
+}
+
+#[test]
+fn killing_a_replica_mid_replay_loses_zero_requests() {
+    // real child processes — replica death must be a process death
+    let mut children = Vec::new();
+    let mut addrs = Vec::new();
+    for _ in 0..3 {
+        let (c, a) = spawn_replica_process();
+        children.push(c);
+        addrs.push(a);
+    }
+    let mut cfg = Config::default();
+    cfg.fleet.addr = "127.0.0.1:0".into();
+    cfg.fleet.addrs = addrs;
+    cfg.fleet.placement = PlacementKind::ConsistentHash;
+    cfg.fleet.heartbeat_ms = 50;
+    cfg.fleet.quarantine_after = 2;
+    cfg.fleet.readmit_after = 2;
+    cfg.fleet.retry_max = 4;
+    cfg.fleet.request_timeout_ms = 10_000;
+    cfg.validate().unwrap();
+    let (fleet_addr, fleet_h) = start_fleet(cfg);
+
+    let n = 60usize;
+    let trace = Trace::poisson(n, 150.0, (0.6, 0.4, 0.0), 0xDEAD);
+    let mut client = Client::connect(&fleet_addr).unwrap();
+    client
+        .set_read_timeout(Some(Duration::from_secs(120)))
+        .unwrap();
+    let t0 = Instant::now();
+    for (i, e) in trace.entries.iter().enumerate() {
+        let due = Duration::from_micros(e.at_us);
+        let elapsed = t0.elapsed();
+        if due > elapsed {
+            std::thread::sleep(due - elapsed);
+        }
+        client.request(i as u64, &e.text, &e.domain).unwrap();
+        if i == n / 3 {
+            children[1].kill().unwrap(); // SIGKILL, mid-replay
+        }
+    }
+    let mut seen = std::collections::BTreeSet::new();
+    for _ in 0..n {
+        let resp = client.read_response().expect("fleet lost a request");
+        assert!(
+            resp.get("error").is_none(),
+            "request failed instead of being re-placed: {resp}"
+        );
+        let id = resp.get("id").and_then(Json::as_i64).unwrap() as u64;
+        assert!(seen.insert(id), "duplicate response for id {id}");
+    }
+    assert_eq!(seen.len(), n, "zero-lost-requests contract broken");
+
+    let metrics = client.command("metrics").unwrap();
+    let counter = |k: &str| {
+        metrics
+            .get(&format!("counter.{k}"))
+            .and_then(Json::as_f64)
+            .unwrap_or(0.0)
+    };
+    assert!(
+        counter("fleet.quarantine") >= 1.0,
+        "the killed replica was never quarantined"
+    );
+    assert_eq!(
+        metrics
+            .get("gauge.fleet.replica.1.healthy")
+            .and_then(Json::as_f64),
+        Some(0.0),
+        "a SIGKILLed replica must end quarantined, not readmitted"
+    );
+    assert_eq!(counter("fleet.responses"), n as f64);
+
+    let _ = client.command("shutdown");
+    fleet_h.join().unwrap().unwrap();
+    for mut c in children {
+        let _ = c.kill();
+        let _ = c.wait();
+    }
+}
+
+#[test]
+fn difficulty_aware_strong_fraction_matches_the_single_process_router() {
+    // heterogeneous pool: two weak-arm and two strong-arm replicas
+    let arms = [ReplicaArm::Weak, ReplicaArm::Weak, ReplicaArm::Strong, ReplicaArm::Strong];
+    let mut replica_handles = Vec::new();
+    let mut addrs = Vec::new();
+    for arm in arms {
+        let mut c = det_cfg();
+        c.server.replica_arm = arm;
+        let (a, h) = start_server(c);
+        addrs.push(a);
+        replica_handles.push(h);
+    }
+    let mut cfg = det_cfg();
+    cfg.fleet.addr = "127.0.0.1:0".into();
+    cfg.fleet.addrs = addrs;
+    cfg.fleet.arms = arms.to_vec();
+    cfg.fleet.placement = PlacementKind::DifficultyAware;
+    cfg.validate().unwrap();
+
+    // the single-process reference: the same calibration the fleet reuses
+    let engine = thinkalloc::runtime::Engine::load_all(&cfg.runtime).unwrap();
+    let queries = thinkalloc::workload::gen_dataset("code", 80, 0x51D);
+    let texts: Vec<&str> = queries.iter().map(|q| q.text.as_str()).collect();
+    let prefs =
+        thinkalloc::serving::scheduler::strong_preference(&engine, &cfg.route, "code", &texts)
+            .unwrap();
+    let router: ThresholdRouter =
+        thinkalloc::serving::scheduler::calibrate_router(&engine, &cfg.route, "code").unwrap();
+    let expected =
+        prefs.iter().filter(|p| router.use_strong(**p)).count() as f64 / texts.len() as f64;
+
+    let (fleet_addr, fleet_h) = start_fleet(cfg);
+    let mut client = Client::connect(&fleet_addr).unwrap();
+    client
+        .set_read_timeout(Some(Duration::from_secs(120)))
+        .unwrap();
+    for (i, q) in queries.iter().enumerate() {
+        client.request(i as u64, &q.text, "code").unwrap();
+        let resp = client.read_response().unwrap();
+        assert!(resp.get("error").is_none(), "query failed: {resp}");
+    }
+    let metrics = client.command("metrics").unwrap();
+    let counter = |k: &str| {
+        metrics
+            .get(&format!("counter.{k}"))
+            .and_then(Json::as_f64)
+            .unwrap_or(0.0)
+    };
+    let strong = counter("fleet.placed.strong");
+    let weak = counter("fleet.placed.weak");
+    assert_eq!(strong + weak, texts.len() as f64, "every query gets an arm decision");
+    let got = strong / texts.len() as f64;
+    assert!(
+        (got - expected).abs() <= 0.05,
+        "fleet strong fraction {got:.3} vs single-process {expected:.3}"
+    );
+
+    let _ = client.command("shutdown");
+    fleet_h.join().unwrap().unwrap();
+    for h in replica_handles {
+        h.join().unwrap().unwrap();
+    }
+}
+
+#[test]
+fn stats_verb_reports_live_load_and_replica_arm_pins_the_procedure() {
+    let mut cfg = det_cfg();
+    cfg.server.replica_arm = ReplicaArm::Weak;
+    let (addr, h) = start_server(cfg);
+    let mut client = Client::connect(&addr).unwrap();
+    client.set_read_timeout(Some(Duration::from_secs(30))).unwrap();
+    for i in 0..3 {
+        client.request(i, "ADD 1 2", "code").unwrap();
+        let resp = client.read_response().unwrap();
+        // the weak pin forces the weak/strong routing procedure
+        assert_eq!(
+            resp.get("procedure").and_then(Json::as_str),
+            Some("route"),
+            "weak-arm replica must decode via the routing procedure: {resp}"
+        );
+    }
+    let s = ReplicaStats::from_json(&client.command("stats").unwrap()).unwrap();
+    assert_eq!(s.arm, ReplicaArm::Weak);
+    assert_eq!(s.workers, 1);
+    assert_eq!(s.queries, 3, "stats must report admitted queries");
+    assert!(s.budget > 0.0, "effective budget must be positive");
+    assert!(!s.saturated, "an idle server is not saturated");
+    let _ = client.command("shutdown");
+    h.join().unwrap().unwrap();
+}
+
+/// Spawn one `thinkalloc serve` child on port 0 and parse the readiness
+/// banner off its stdout (the same protocol the fleet's spawn path uses).
+fn spawn_replica_process() -> (std::process::Child, String) {
+    let mut child = std::process::Command::new(env!("CARGO_BIN_EXE_thinkalloc"))
+        .args(["serve", "--addr=127.0.0.1:0", "--workers=1"])
+        .stdin(Stdio::null())
+        .stdout(Stdio::piped())
+        .stderr(Stdio::inherit())
+        .spawn()
+        .expect("spawn replica");
+    let stdout = child.stdout.take().unwrap();
+    let mut reader = std::io::BufReader::new(stdout);
+    let mut line = String::new();
+    let addr = loop {
+        line.clear();
+        assert!(
+            reader.read_line(&mut line).unwrap() > 0,
+            "replica exited before announcing its address"
+        );
+        if let Some(rest) = line.trim_end().strip_prefix("listening on ") {
+            break rest.trim().to_string();
+        }
+    };
+    // keep draining stdout so the child never blocks on a full pipe
+    std::thread::spawn(move || {
+        let mut sink = String::new();
+        loop {
+            sink.clear();
+            match reader.read_line(&mut sink) {
+                Ok(0) | Err(_) => break,
+                Ok(_) => {}
+            }
+        }
+    });
+    (child, addr)
+}

@@ -4,8 +4,11 @@
 Usage: perf_compare.py BASELINE.json CANDIDATE.json [--tolerance 0.15]
 
 Gated metrics (the serving hot path's load-bearing numbers):
-  higher is better: decode steps/s, epoch & pool & front-door queries/s
-  lower is better:  p95 queue wait (controller on, and under saturation)
+  higher is better: decode steps/s, epoch & pool & front-door & fleet
+                    queries/s
+  lower is better:  p95 queue wait (controller on, and under saturation),
+                    fleet replica-loss recovery p95, fleet per-request
+                    placement overhead
 
 A candidate worse than baseline by more than the tolerance on any present
 metric exits nonzero and says which. Metrics missing from either file are
@@ -13,9 +16,10 @@ skipped with a note — bench sections come and go, and a perf gate must not
 turn into a schema gate. Values <= 0 are skipped for the same reason
 (smoke runs can legitimately produce empty histograms).
 
-With --hard-metrics, only the HARD subset (decode steps/s and the two p95
-queue waits — the numbers the serving claims actually rest on) can fail
-the run; everything else is compared and printed as advisory. That is the
+With --hard-metrics, only the HARD subset (decode steps/s, the two p95
+queue waits, and the fleet tier's recovery p95 and placement overhead —
+the numbers the serving claims actually rest on) can fail the run;
+everything else is compared and printed as advisory. That is the
 CI mode: noisy shared runners make the throughput-style metrics flap, but
 a real decode or queue-wait regression should block the merge.
 """
@@ -31,9 +35,12 @@ METRICS = [
     ("pool.workers_4", "queries_per_s", "higher"),
     ("many_conn.event", "queries_per_s", "higher"),
     ("many_socket.event", "queries_per_s", "higher"),
+    ("fleet.replay", "queries_per_s", "higher"),
     ("sessions.warm", "warm_turn_slot_steps", "lower"),
     ("controller.on", "queue_wait_p95_us", "lower"),
     ("saturation", "queue_wait_p95_us", "lower"),
+    ("fleet.recovery", "recovery_p95_ms", "lower"),
+    ("fleet.placement", "overhead_us_per_req", "lower"),
 ]
 
 # the metrics that hard-gate CI under --hard-metrics (see module docstring)
@@ -41,6 +48,8 @@ HARD = {
     "decode.continuous.steps_per_s",
     "controller.on.queue_wait_p95_us",
     "saturation.queue_wait_p95_us",
+    "fleet.recovery.recovery_p95_ms",
+    "fleet.placement.overhead_us_per_req",
 }
 
 
