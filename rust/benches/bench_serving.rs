@@ -27,6 +27,14 @@
 //! *processes* SIGKILLed with a burst in flight, sample = kill → last
 //! response, zero requests lost.
 //!
+//! Deadline/hedging sections (PR 10): the fleet's deadline-overshoot bound
+//! — 5 ms deadlines against replicas that deliberately hold work for a
+//! 300 ms epoch, so the dispatch sweep (not the replica) must catch every
+//! expiry; overshoot p95 is the sweep granularity plus write latency, a
+//! scale-robust number hard-gated in CI — and a hedged-dispatch replay
+//! (duplicates past the observed latency quantile, first answer wins,
+//! loser cancelled on its replica).
+//!
 //! Runs on whatever backend the default config selects (native unless
 //! overridden), so it works on artifact-less hosts and doubles as the CI
 //! smoke bench: `--smoke` shrinks every section to a tiny trace, and
@@ -1180,6 +1188,157 @@ fn main() {
             ("recovery_p95_ms", Json::Num(recovery_p95)),
             ("lost", Json::Num(0.0)),
             ("runs", Json::Num(recovery_iters as f64)),
+        ]),
+    ));
+
+    // --- fleet deadlines: sweep-granularity overshoot, hard-gated -----------
+    // Every request carries a 5 ms deadline into replicas tuned to *hold*
+    // work (one worker, wide batch, 300 ms epoch cut), so each deadline
+    // expires while its attempt is in flight and the fleet's dispatch
+    // sweep — not the replica — must catch it. Overshoot (terminal-line
+    // timestamp minus deadline) is therefore the sweep granularity plus
+    // write latency: a scale-robust bound the CI compare hard-gates.
+    let dl_n = if smoke { 8u64 } else { 32 };
+    section(&format!(
+        "fleet deadlines: {dl_n} queries with 5 ms deadlines against \
+         replicas holding a 300 ms epoch"
+    ));
+    let mut dl_replicas = Vec::new();
+    let mut dl_addrs = Vec::new();
+    for _ in 0..2 {
+        let mut cfg = pool_config();
+        cfg.server.addr = "127.0.0.1:0".into();
+        cfg.server.workers = 1;
+        cfg.server.batch_queries = 64;
+        cfg.server.max_wait_ms = 300;
+        cfg.validate().expect("deadline replica config");
+        let (a, h) = start_replica(cfg);
+        dl_addrs.push(a);
+        dl_replicas.push(h);
+    }
+    let mut dcfg = Config::default();
+    dcfg.fleet.addr = "127.0.0.1:0".into();
+    dcfg.fleet.addrs = dl_addrs;
+    dcfg.fleet.placement = PlacementKind::ConsistentHash;
+    dcfg.validate().expect("deadline fleet config");
+    let dl_metrics = Arc::new(Registry::default());
+    let fleet = FleetServer::new(dcfg, dl_metrics.clone()).expect("fleet");
+    let (dtx, drx) = std::sync::mpsc::channel();
+    let dl_h = std::thread::spawn(move || fleet.run(move |a| dtx.send(a).unwrap()));
+    let dl_addr: String = drx.recv().unwrap();
+
+    let dl_reqs = workload::gen_mixed_dataset(&["code", "math"], dl_n as usize, 0xDEA);
+    let mut client = Client::connect(&dl_addr).expect("deadline fleet connect");
+    client.set_read_timeout(Some(Duration::from_secs(120))).unwrap();
+    for (i, q) in dl_reqs.iter().enumerate() {
+        client
+            .request_with_deadline(i as u64, &q.text, &q.domain, 5)
+            .expect("deadline request");
+    }
+    for _ in 0..dl_n {
+        let resp = client.read_response().expect("deadline line lost");
+        assert_eq!(
+            resp.get("error").and_then(Json::as_str),
+            Some("deadline_exceeded"),
+            "a 5 ms deadline outran a 300 ms epoch: {resp}"
+        );
+    }
+    let overshoot_p95_ms =
+        dl_metrics.histogram("fleet.deadline.overshoot_us").percentile_us(0.95) / 1e3;
+    let dl_exceeded = dl_metrics.counter("fleet.deadline.exceeded").get();
+    println!(
+        "  {dl_exceeded} deadline_exceeded lines, overshoot p95 \
+         {overshoot_p95_ms:.2} ms (dispatch-sweep granularity)"
+    );
+    {
+        let mut c = Client::connect(&dl_addr).expect("deadline shutdown client");
+        c.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+        let _ = c.command("shutdown");
+    }
+    dl_h.join().expect("fleet thread").expect("fleet run");
+    for h in dl_replicas {
+        h.join().expect("replica thread").expect("replica run");
+    }
+    summary.push((
+        "fleet.deadline".into(),
+        Json::obj(vec![
+            ("overshoot_p95_ms", Json::Num(overshoot_p95_ms)),
+            ("exceeded", Json::Num(dl_exceeded as f64)),
+        ]),
+    ));
+
+    // --- hedged dispatch: duplicate slow attempts, first answer wins --------
+    // hedge_min_ms=1 with serving latency well above a millisecond means the
+    // first hedge sweep already finds candidates; as real response latency
+    // accumulates in `fleet.response_us` the trigger threshold climbs to the
+    // configured quantile. Wins count attempts where the *duplicate* beat
+    // the primary; the loser is cancelled on its replica either way.
+    let hedge_n = if smoke { 24u64 } else { 96 };
+    section(&format!(
+        "fleet hedging: {hedge_n} queries, duplicates past the p50 \
+         response latency (floor 1 ms), 2 replicas"
+    ));
+    let mut h_replicas = Vec::new();
+    let mut h_addrs = Vec::new();
+    for _ in 0..2 {
+        let mut cfg = pool_config();
+        cfg.server.addr = "127.0.0.1:0".into();
+        cfg.server.workers = 1;
+        cfg.validate().expect("hedge replica config");
+        let (a, h) = start_replica(cfg);
+        h_addrs.push(a);
+        h_replicas.push(h);
+    }
+    let mut hcfg = pool_config();
+    hcfg.fleet.addr = "127.0.0.1:0".into();
+    hcfg.fleet.addrs = h_addrs;
+    hcfg.fleet.placement = PlacementKind::ConsistentHash;
+    hcfg.fleet.budget_per_query = 2.0;
+    hcfg.fleet.hedge_quantile = 0.5;
+    hcfg.fleet.hedge_min_ms = 1;
+    hcfg.validate().expect("hedge fleet config");
+    let h_metrics = Arc::new(Registry::default());
+    let fleet = FleetServer::new(hcfg, h_metrics.clone()).expect("fleet");
+    let (htx, hrx) = std::sync::mpsc::channel();
+    let h_handle = std::thread::spawn(move || fleet.run(move |a| htx.send(a).unwrap()));
+    let h_addr: String = hrx.recv().unwrap();
+
+    let h_reqs = workload::gen_mixed_dataset(&["code", "math", "chat"], hedge_n as usize, 0x4ED6);
+    let mut client = Client::connect(&h_addr).expect("hedge fleet connect");
+    client.set_read_timeout(Some(Duration::from_secs(300))).unwrap();
+    let t0 = Instant::now();
+    for (i, q) in h_reqs.iter().enumerate() {
+        client.request(i as u64, &q.text, &q.domain).expect("hedge request");
+    }
+    for _ in 0..hedge_n {
+        let resp = client.read_response().expect("hedge response lost");
+        assert!(resp.get("error").is_none(), "hedged fleet errored: {resp}");
+    }
+    let h_dt = t0.elapsed();
+    let hedged = h_metrics.counter("fleet.hedged").get();
+    let hedge_wins = h_metrics.counter("fleet.hedge_wins").get();
+    assert!(hedged >= 1, "the 1 ms hedge floor never triggered a duplicate");
+    let h_qps = hedge_n as f64 / h_dt.as_secs_f64();
+    println!(
+        "  {hedge_n} queries in {:>8.1} ms ({h_qps:>7.1} queries/s) | \
+         {hedged} hedged, {hedge_wins} won by the duplicate",
+        h_dt.as_secs_f64() * 1e3
+    );
+    {
+        let mut c = Client::connect(&h_addr).expect("hedge shutdown client");
+        c.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+        let _ = c.command("shutdown");
+    }
+    h_handle.join().expect("fleet thread").expect("fleet run");
+    for h in h_replicas {
+        h.join().expect("replica thread").expect("replica run");
+    }
+    summary.push((
+        "fleet.hedge".into(),
+        Json::obj(vec![
+            ("dispatched", Json::Num(hedged as f64)),
+            ("wins", Json::Num(hedge_wins as f64)),
+            ("queries_per_s", Json::Num(h_qps)),
         ]),
     ));
 

@@ -1,0 +1,190 @@
+//! Deterministic fault injection for the serving stack (`[chaos]` section).
+//!
+//! A [`Chaos`] handle is a seeded [`Pcg64`] behind a mutex plus the fault
+//! probabilities from [`ChaosConfig`]. The I/O layers consult it at two
+//! seams:
+//!
+//! * the **socket boundary** (event-loop reads/flushes, the threads-driver
+//!   writer): writes may be capped to a small prefix and completed on the
+//!   next round, reads may be shortened, flushes may be delayed. These
+//!   faults are *lossless* — bytes are fragmented and delayed, never
+//!   dropped or altered — so a correct server must still deliver every
+//!   response exactly once. Client-visible bytes are sacred even under
+//!   chaos.
+//! * the **replica-stream boundary** (fleet router ↔ replica): writes may
+//!   stall long enough to trip per-attempt timeouts, and response lines
+//!   may be garbled before parsing. These faults are *lossy by design* —
+//!   they exercise retry, quarantine and hedging, which must still get
+//!   every client an answer.
+//!
+//! Determinism: one seed drives one fault stream. The stream is consumed
+//! in I/O-event order, so a single-connection, single-replica replay is
+//! bit-reproducible; concurrent connections interleave their draws in
+//! wall-clock order (the soak test asserts *invariants* — no lost or
+//! duplicated responses — not byte-for-byte fault placement).
+//!
+//! Disabled chaos is structurally inert: [`Chaos::from_config`] returns
+//! `None` and every call site skips the seam entirely — the served byte
+//! stream is bit-for-bit the fault-free build, not a probability-zero
+//! sampler.
+
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+use crate::config::ChaosConfig;
+use crate::prng::Pcg64;
+
+/// Shared fault source. Cheap to clone the `Arc`; all draws serialize on
+/// one internal mutex (chaos is a test harness, not a hot path).
+#[derive(Debug)]
+pub struct Chaos {
+    cfg: ChaosConfig,
+    rng: Mutex<Pcg64>,
+}
+
+impl Chaos {
+    /// Build a handle from config; `None` when disabled, so call sites can
+    /// keep the fault-free path byte-identical (`if let Some(ch) = …`).
+    pub fn from_config(cfg: &ChaosConfig) -> Option<Arc<Chaos>> {
+        if !cfg.enabled {
+            return None;
+        }
+        Some(Arc::new(Chaos {
+            cfg: cfg.clone(),
+            rng: Mutex::new(Pcg64::new(cfg.seed)),
+        }))
+    }
+
+    fn roll(&self, p: f64) -> bool {
+        p > 0.0 && self.rng.lock().unwrap().bernoulli(p)
+    }
+
+    /// Cap for the next socket write: `Some(n)` caps the write to the
+    /// first `n ≥ 1` bytes of `len` (the remainder goes out on the next
+    /// readiness round), `None` writes normally. Lossless.
+    pub fn write_cap(&self, len: usize) -> Option<usize> {
+        if len > 1 && self.roll(self.cfg.partial_write_p) {
+            Some(self.rng.lock().unwrap().range_usize(1, len))
+        } else {
+            None
+        }
+    }
+
+    /// Cap for the next socket read: `Some(n)` shrinks the read buffer to
+    /// `n ≥ 1` bytes, `None` reads normally. Lossless — unread bytes stay
+    /// in the kernel buffer.
+    pub fn read_cap(&self, len: usize) -> Option<usize> {
+        if len > 1 && self.roll(self.cfg.short_read_p) {
+            Some(self.rng.lock().unwrap().range_usize(1, len))
+        } else {
+            None
+        }
+    }
+
+    /// Delay to apply before flushing a written line (`None` = no delay).
+    pub fn flush_delay(&self) -> Option<Duration> {
+        if self.cfg.delay_ms > 0 && self.roll(self.cfg.delay_p) {
+            Some(Duration::from_millis(self.cfg.delay_ms))
+        } else {
+            None
+        }
+    }
+
+    /// Stall to apply to a replica-bound fleet write (`None` = no stall).
+    /// Long enough (`stall_ms`) to trip per-attempt timeouts.
+    pub fn reply_stall(&self) -> Option<Duration> {
+        if self.cfg.stall_ms > 0 && self.roll(self.cfg.stall_p) {
+            Some(Duration::from_millis(self.cfg.stall_ms))
+        } else {
+            None
+        }
+    }
+
+    /// Maybe garble a replica response line before the router parses it:
+    /// flips one ASCII byte to `'#'`, which breaks JSON without breaking
+    /// UTF-8 (multi-byte sequences are left alone — a garbled line must
+    /// still be a *line*, not a decode error that kills the reader).
+    /// Returns `None` when the line passes through untouched.
+    pub fn garble_line(&self, line: &str) -> Option<String> {
+        if line.is_empty() || !self.roll(self.cfg.garble_p) {
+            return None;
+        }
+        let mut bytes = line.as_bytes().to_vec();
+        let ascii: Vec<usize> = (0..bytes.len())
+            .filter(|&i| bytes[i].is_ascii() && bytes[i] != b'#')
+            .collect();
+        if ascii.is_empty() {
+            return None;
+        }
+        let k = self.rng.lock().unwrap().range_usize(0, ascii.len());
+        bytes[ascii[k]] = b'#';
+        // only an ASCII byte was overwritten: still valid UTF-8
+        Some(String::from_utf8(bytes).expect("ASCII-over-ASCII patch"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn all_on(seed: u64) -> ChaosConfig {
+        ChaosConfig {
+            enabled: true,
+            seed,
+            partial_write_p: 1.0,
+            short_read_p: 1.0,
+            delay_p: 1.0,
+            delay_ms: 3,
+            stall_p: 1.0,
+            stall_ms: 7,
+            garble_p: 1.0,
+        }
+    }
+
+    #[test]
+    fn disabled_chaos_is_structurally_absent() {
+        assert!(Chaos::from_config(&ChaosConfig::default()).is_none());
+    }
+
+    #[test]
+    fn caps_are_lossless_bounds() {
+        let ch = Chaos::from_config(&all_on(1)).unwrap();
+        for len in [2usize, 3, 64, 4096] {
+            for _ in 0..64 {
+                let c = ch.write_cap(len).expect("p = 1 always caps");
+                assert!((1..len).contains(&c), "cap {c} outside [1,{len})");
+                let c = ch.read_cap(len).expect("p = 1 always caps");
+                assert!((1..len).contains(&c));
+            }
+        }
+        // a 1-byte write can't be usefully split: never capped
+        assert_eq!(ch.write_cap(1), None);
+        assert_eq!(ch.read_cap(0), None);
+    }
+
+    #[test]
+    fn same_seed_same_fault_stream() {
+        let a = Chaos::from_config(&all_on(42)).unwrap();
+        let b = Chaos::from_config(&all_on(42)).unwrap();
+        for len in [5usize, 100, 7, 4096, 2] {
+            assert_eq!(a.write_cap(len), b.write_cap(len));
+            assert_eq!(a.read_cap(len), b.read_cap(len));
+            assert_eq!(a.garble_line("{\"id\":1}"), b.garble_line("{\"id\":1}"));
+        }
+        assert_eq!(a.flush_delay(), Some(Duration::from_millis(3)));
+        assert_eq!(b.flush_delay(), Some(Duration::from_millis(3)));
+        assert_eq!(a.reply_stall(), Some(Duration::from_millis(7)));
+    }
+
+    #[test]
+    fn garble_keeps_length_and_utf8() {
+        let ch = Chaos::from_config(&all_on(9)).unwrap();
+        let line = "{\"id\":3,\"response\":\"αβ\"}";
+        for _ in 0..32 {
+            let g = ch.garble_line(line).expect("p = 1 always garbles");
+            assert_eq!(g.len(), line.len());
+            assert_ne!(g, line);
+        }
+        assert_eq!(ch.garble_line(""), None);
+    }
+}

@@ -705,6 +705,21 @@ pub struct FleetConfig {
     /// Per-attempt deadline: an unanswered placement is retried (or failed)
     /// after this long.
     pub request_timeout_ms: u64,
+    /// Floor for sliced per-attempt deadlines: when a client `deadline_ms`
+    /// is divided across remaining retry attempts, no attempt gets less
+    /// than this (a sub-floor slice would time out before any replica
+    /// could answer, burning the attempt for nothing).
+    pub deadline_floor_ms: u64,
+    /// Hedged dispatch: when the first placement of a request has been
+    /// outstanding longer than this latency quantile of recently observed
+    /// replica response times, duplicate it to a second replica; first
+    /// answer wins, the loser is cancelled. `0.0` disables hedging (the
+    /// bit-for-bit historical path).
+    pub hedge_quantile: f64,
+    /// Hedging never fires before this many milliseconds, regardless of
+    /// how fast the observed quantile is (guards against hedging storms on
+    /// an all-fast fleet where the quantile is microseconds).
+    pub hedge_min_ms: u64,
     /// Virtual nodes per replica on the consistent-hash ring.
     pub vnodes: usize,
     /// Binary to spawn replicas from; empty = the current executable.
@@ -729,6 +744,9 @@ impl Default for FleetConfig {
             retry_max: 3,
             retry_backoff_ms: 50,
             request_timeout_ms: 10_000,
+            deadline_floor_ms: 10,
+            hedge_quantile: 0.0,
+            hedge_min_ms: 20,
             vnodes: 64,
             spawn_binary: String::new(),
             spawn_config: String::new(),
@@ -832,6 +850,52 @@ impl Default for SessionConfig {
     }
 }
 
+/// Deterministic fault injection (`[chaos]` section): seeded faults at the
+/// socket-I/O and replica-stream boundaries (see [`crate::chaos`]).
+/// Disabled by default — the I/O paths are then bit-for-bit the fault-free
+/// code (the chaos handle is `None`, not a probability-zero sampler).
+#[derive(Clone, Debug)]
+pub struct ChaosConfig {
+    pub enabled: bool,
+    /// Seed of the fault stream: same seed + same event order ⇒ same
+    /// faults (the soak test's replay contract).
+    pub seed: u64,
+    /// P(cap a socket write to a small prefix); the rest is written on the
+    /// next readiness round — lossless, just fragmented.
+    pub partial_write_p: f64,
+    /// P(cap a socket read to a few bytes) — lossless, just fragmented.
+    pub short_read_p: f64,
+    /// P(sleep `delay_ms` before flushing a written line) — reordering
+    /// pressure across connections, never within one.
+    pub delay_p: f64,
+    pub delay_ms: u64,
+    /// P(stall a replica-bound fleet write by `stall_ms`) — long enough to
+    /// trip per-attempt timeouts and exercise retry/hedging.
+    pub stall_p: f64,
+    pub stall_ms: u64,
+    /// P(garble a replica response line before the fleet parses it) —
+    /// exercises the router's malformed-line handling. Applied only at the
+    /// fleet's replica-stream boundary, never between server and client
+    /// (client-visible bytes are sacred even under chaos).
+    pub garble_p: f64,
+}
+
+impl Default for ChaosConfig {
+    fn default() -> Self {
+        Self {
+            enabled: false,
+            seed: 0xC4A5,
+            partial_write_p: 0.25,
+            short_read_p: 0.25,
+            delay_p: 0.05,
+            delay_ms: 2,
+            stall_p: 0.02,
+            stall_ms: 50,
+            garble_p: 0.02,
+        }
+    }
+}
+
 #[derive(Clone, Debug)]
 pub struct WorkloadConfig {
     pub domain: String,
@@ -859,6 +923,7 @@ pub struct Config {
     pub prefix_cache: PrefixCacheConfig,
     pub session: SessionConfig,
     pub fleet: FleetConfig,
+    pub chaos: ChaosConfig,
 }
 
 impl Config {
@@ -1047,9 +1112,28 @@ impl Config {
             "fleet.request_timeout_ms" => {
                 self.fleet.request_timeout_ms = f64_of!() as u64
             }
+            "fleet.deadline_floor_ms" => {
+                self.fleet.deadline_floor_ms = f64_of!() as u64
+            }
+            "fleet.hedge_quantile" => self.fleet.hedge_quantile = f64_of!(),
+            "fleet.hedge_min_ms" => self.fleet.hedge_min_ms = f64_of!() as u64,
             "fleet.vnodes" => self.fleet.vnodes = usize_of!(),
             "fleet.spawn_binary" => self.fleet.spawn_binary = str_of!(),
             "fleet.spawn_config" => self.fleet.spawn_config = str_of!(),
+            "chaos.enabled" => {
+                self.chaos.enabled = match val {
+                    TomlValue::Bool(b) => *b,
+                    _ => return Err(invalid()),
+                }
+            }
+            "chaos.seed" => self.chaos.seed = f64_of!() as u64,
+            "chaos.partial_write_p" => self.chaos.partial_write_p = f64_of!(),
+            "chaos.short_read_p" => self.chaos.short_read_p = f64_of!(),
+            "chaos.delay_p" => self.chaos.delay_p = f64_of!(),
+            "chaos.delay_ms" => self.chaos.delay_ms = f64_of!() as u64,
+            "chaos.stall_p" => self.chaos.stall_p = f64_of!(),
+            "chaos.stall_ms" => self.chaos.stall_ms = f64_of!() as u64,
+            "chaos.garble_p" => self.chaos.garble_p = f64_of!(),
             _ => return Ok(false),
         }
         Ok(true)
@@ -1224,6 +1308,28 @@ impl Config {
             "fleet.request_timeout_ms must be ≥ 1"
         );
         anyhow::ensure!(f.vnodes >= 1, "fleet.vnodes must be ≥ 1");
+        anyhow::ensure!(
+            f.deadline_floor_ms >= 1,
+            "fleet.deadline_floor_ms must be ≥ 1"
+        );
+        anyhow::ensure!(
+            (0.0..1.0).contains(&f.hedge_quantile),
+            "fleet.hedge_quantile must be in [0, 1) (0 disables hedging)"
+        );
+        anyhow::ensure!(f.hedge_min_ms >= 1, "fleet.hedge_min_ms must be ≥ 1");
+        let ch = &self.chaos;
+        for (name, p) in [
+            ("chaos.partial_write_p", ch.partial_write_p),
+            ("chaos.short_read_p", ch.short_read_p),
+            ("chaos.delay_p", ch.delay_p),
+            ("chaos.stall_p", ch.stall_p),
+            ("chaos.garble_p", ch.garble_p),
+        ] {
+            anyhow::ensure!(
+                (0.0..=1.0).contains(&p),
+                "{name} must be a probability in [0, 1] (got {p})"
+            );
+        }
         Ok(())
     }
 }

@@ -24,9 +24,30 @@
 //! queries are immediately re-placed on survivors (`fleet.replaced`).
 //! `fleet.readmit_after` consecutive healthy heartbeats readmit it.
 //! Replica-side `overloaded` / `server shutting down` errors and per-attempt
-//! timeouts retry with exponential backoff up to `fleet.retry_max` attempts;
-//! every attempt uses a fresh fleet-internal id, so a straggler response
-//! from an abandoned attempt can never reach a client twice.
+//! timeouts retry with exponential backoff (shift-doubled, plus a
+//! deterministic per-request jitter so synchronized failures don't retry in
+//! lockstep) up to `fleet.retry_max` attempts; every attempt uses a fresh
+//! fleet-internal id, so a straggler response from an abandoned attempt can
+//! never reach a client twice.
+//!
+//! Deadlines: a client `deadline_ms` becomes an absolute instant at the
+//! fleet front door. Each attempt gets a slice of what remains
+//! (`remaining / attempts-left`, floored at `fleet.deadline_floor_ms` and
+//! capped by `fleet.request_timeout_ms`), and the *remaining* budget is
+//! forwarded to the replica as its own `deadline_ms`, so replica-side
+//! queues drop work the fleet has already given up on. A query whose
+//! client deadline passes anywhere (in flight, parked for retry) gets one
+//! structured `deadline_exceeded` line; overshoot is recorded in
+//! `fleet.deadline.overshoot_us`. Client `{"cmd":"cancel","id":N}` verbs
+//! unhook every matching attempt and forward the cancel to the owning
+//! replica so mid-decode rows are reclaimed, not just orphaned.
+//!
+//! Hedged dispatch (`fleet.hedge_quantile` > 0): when a first attempt has
+//! been outstanding longer than that latency quantile of recent replica
+//! responses (never less than `fleet.hedge_min_ms`), the query is
+//! duplicated to a second replica. First answer wins; the loser is
+//! unhooked and cancelled on its replica. Off by default — the historical
+//! single-dispatch path, bit for bit.
 
 use std::collections::BTreeMap;
 use std::io::{BufRead, BufReader, ErrorKind, Write};
@@ -40,9 +61,11 @@ use std::time::{Duration, Instant};
 use anyhow::Result;
 
 use crate::allocator::controller::split_budget;
+use crate::chaos::Chaos;
 use crate::config::{Config, PlacementKind, ProcedureKind, ReplicaArm};
 use crate::jsonio::{self, Json};
 use crate::metrics::Registry;
+use crate::prng::SplitMix64;
 use crate::runtime::Engine;
 
 use super::placement::{
@@ -61,6 +84,7 @@ enum Event {
 }
 
 /// One query the fleet has accepted and not yet answered.
+#[derive(Clone)]
 struct Pending {
     conn: u64,
     client_id: u64,
@@ -72,7 +96,20 @@ struct Pending {
     attempts: u32,
     /// Replica of the *current* attempt (for re-placement on death).
     replica: usize,
+    /// Per-attempt deadline: unanswered past it ⇒ retry or fail.
     deadline: Instant,
+    /// Client `deadline_ms` as an absolute instant; past it the query is
+    /// terminally failed with `deadline_exceeded` wherever it is.
+    client_deadline: Option<Instant>,
+    /// When the current attempt's wire line went out (feeds the hedging
+    /// latency histogram).
+    sent_at: Instant,
+    /// Fleet-internal id of the other half of a hedged pair (first answer
+    /// wins; the partner is unhooked and cancelled on its replica).
+    hedge_partner: Option<u64>,
+    /// This entry *is* the duplicate of a hedged pair (wins count toward
+    /// `fleet.hedge_wins`; it never retries while its primary lives).
+    is_hedge: bool,
 }
 
 /// Dispatch-thread-owned state for one replica.
@@ -162,6 +199,7 @@ impl FleetServer {
             stop: stop.clone(),
             reader_handles: Vec::new(),
             stopping: false,
+            chaos: Chaos::from_config(&self.cfg.chaos),
             cfg: self.cfg.clone(),
         };
         for i in 0..d.replicas.len() {
@@ -247,6 +285,9 @@ struct Dispatch {
     stop: Arc<AtomicBool>,
     reader_handles: Vec<JoinHandle<()>>,
     stopping: bool,
+    /// Seeded fault injection at the replica-stream boundary (`[chaos]`);
+    /// `None` (the default) keeps that path bit-for-bit fault-free.
+    chaos: Option<Arc<Chaos>>,
 }
 
 impl Dispatch {
@@ -277,8 +318,44 @@ impl Dispatch {
         }
     }
 
-    /// Time-driven work: due retries and per-attempt deadlines.
+    /// Time-driven work: client deadlines (terminal), due retries,
+    /// per-attempt deadlines (retry), and hedge dispatch.
     fn sweep(&mut self, now: Instant) {
+        // client deadlines first — a query past its budget is terminally
+        // failed wherever it sits, never retried or hedged
+        let dead: Vec<u64> = self
+            .inflight
+            .iter()
+            .filter(|(_, p)| p.client_deadline.is_some_and(|d| d <= now))
+            .map(|(id, _)| *id)
+            .collect();
+        for id in dead {
+            if !self.inflight.contains_key(&id) {
+                continue; // the hedge partner of an already-failed entry
+            }
+            let p = self.unhook(id);
+            if let Some(other) = p.hedge_partner {
+                if self.inflight.contains_key(&other) {
+                    let o = self.unhook(other);
+                    self.cancel_on_replica(&o, other);
+                }
+            }
+            self.cancel_on_replica(&p, id);
+            self.fail_deadline(&p, now);
+        }
+        let mut parked_dead = Vec::new();
+        self.retry_queue.retain(|(_, p)| {
+            if p.client_deadline.is_some_and(|d| d <= now) {
+                parked_dead.push(p.clone());
+                false
+            } else {
+                true
+            }
+        });
+        for p in parked_dead {
+            self.fail_deadline(&p, now);
+        }
+
         let mut due = Vec::new();
         let mut i = 0;
         while i < self.retry_queue.len() {
@@ -298,9 +375,84 @@ impl Dispatch {
             .map(|(id, _)| *id)
             .collect();
         for id in expired {
+            if !self.inflight.contains_key(&id) {
+                continue;
+            }
             let p = self.unhook(id);
+            // half of a hedged pair timing out while the other still races
+            // is not a failure — the survivor covers the query
+            if p.hedge_partner.is_some_and(|o| self.inflight.contains_key(&o)) {
+                continue;
+            }
             self.retry(p, "attempt timed out", true);
         }
+        self.hedge_sweep(now);
+    }
+
+    /// Duplicate slow first attempts onto a second replica
+    /// (`fleet.hedge_quantile` > 0): outstanding longer than the observed
+    /// response-latency quantile (never less than `fleet.hedge_min_ms`)
+    /// and not already part of a pair ⇒ hedge.
+    fn hedge_sweep(&mut self, now: Instant) {
+        let q = self.cfg.fleet.hedge_quantile;
+        if q <= 0.0 {
+            return;
+        }
+        let thr_us = self
+            .metrics
+            .histogram("fleet.response_us")
+            .percentile_us(q)
+            .max(self.cfg.fleet.hedge_min_ms as f64 * 1000.0);
+        let slow: Vec<u64> = self
+            .inflight
+            .iter()
+            .filter(|(_, p)| {
+                p.hedge_partner.is_none()
+                    && !p.is_hedge
+                    && now.duration_since(p.sent_at).as_micros() as f64 >= thr_us
+            })
+            .map(|(id, _)| *id)
+            .collect();
+        for id in slow {
+            self.hedge(id, now);
+        }
+    }
+
+    /// Send a duplicate of in-flight attempt `primary_id` to the least
+    /// loaded healthy replica other than its current one. First answer
+    /// wins; see `on_replica_line` for the win/cancel bookkeeping.
+    fn hedge(&mut self, primary_id: u64, now: Instant) {
+        let Some(primary) = self.inflight.get(&primary_id) else { return };
+        let avoid = primary.replica;
+        let Some(r) = self
+            .replicas
+            .iter()
+            .enumerate()
+            .filter(|(i, st)| st.healthy && st.conn.is_some() && *i != avoid)
+            .min_by_key(|(_, st)| st.inflight_n)
+            .map(|(i, _)| i)
+        else {
+            return; // nobody to hedge onto
+        };
+        let mut p = primary.clone();
+        p.replica = r;
+        p.sent_at = now;
+        p.hedge_partner = Some(primary_id);
+        p.is_hedge = true;
+        let id = self.next_id;
+        self.next_id += 1;
+        let line = request_line(id, &p);
+        if !self.write_replica(r, &line) {
+            self.quarantine(r, "query write failed");
+            return;
+        }
+        p.deadline = now + self.attempt_budget(&p, now);
+        self.replicas[r].inflight_n += 1;
+        self.metrics.counter("fleet.hedged").inc();
+        if let Some(pr) = self.inflight.get_mut(&primary_id) {
+            pr.hedge_partner = Some(id);
+        }
+        self.inflight.insert(id, p);
     }
 
     // ---- client side ---------------------------------------------------
@@ -314,7 +466,7 @@ impl Dispatch {
             Err(e) => return self.write_error(conn, &e.to_string()),
         };
         if let Some(cmd) = v.get("cmd").and_then(Json::as_str) {
-            return self.handle_cmd(conn, cmd);
+            return self.handle_cmd(conn, cmd, &v);
         }
         // identical exact-integer id discipline to the single server:
         // never a lossy f64, negatives rejected
@@ -354,7 +506,22 @@ impl Dispatch {
                 Err(e) => return self.write_error_id(conn, client_id, &e.to_string()),
             },
         };
+        // same exact-integer discipline as the single server: floats,
+        // strings, negatives and nulls are protocol errors
+        let deadline_ms = match v.get("deadline_ms") {
+            None => None,
+            Some(j) => match j.as_i64() {
+                Some(i) if i >= 0 => Some(i as u64),
+                _ => {
+                    return self.write_error(
+                        conn,
+                        "invalid deadline_ms: must be a non-negative integer < 2^63",
+                    )
+                }
+            },
+        };
         self.metrics.counter("fleet.requests").inc();
+        let now = Instant::now();
         self.place(Pending {
             conn,
             client_id,
@@ -368,12 +535,62 @@ impl Dispatch {
             session,
             attempts: 1,
             replica: 0,
-            deadline: Instant::now(),
+            deadline: now,
+            // checked_add: an unrepresentable deadline (u64::MAX ms) is no
+            // deadline, not a dispatch-thread panic
+            client_deadline: deadline_ms
+                .and_then(|ms| now.checked_add(Duration::from_millis(ms))),
+            sent_at: now,
+            hedge_partner: None,
+            is_hedge: false,
         });
     }
 
-    fn handle_cmd(&mut self, conn: u64, cmd: &str) {
+    fn handle_cmd(&mut self, conn: u64, cmd: &str, v: &Json) {
         match cmd {
+            "cancel" => {
+                // {"cmd":"cancel","id":N}: N is this connection's client
+                // id. Every matching attempt (both halves of a hedged
+                // pair, parked retries) is unhooked, and in-flight ones are
+                // cancelled on their replica so mid-decode rows unwind.
+                let id = match v.get("id").and_then(Json::as_i64) {
+                    Some(i) if i >= 0 => i as u64,
+                    _ => {
+                        return self.write_error(
+                            conn,
+                            "cancel needs id: a non-negative integer < 2^63",
+                        )
+                    }
+                };
+                let victims: Vec<u64> = self
+                    .inflight
+                    .iter()
+                    .filter(|(_, p)| p.conn == conn && p.client_id == id)
+                    .map(|(fid, _)| *fid)
+                    .collect();
+                let mut n = 0usize;
+                for fid in victims {
+                    if !self.inflight.contains_key(&fid) {
+                        continue;
+                    }
+                    let p = self.unhook(fid);
+                    self.cancel_on_replica(&p, fid);
+                    n += 1;
+                }
+                let before = self.retry_queue.len();
+                self.retry_queue
+                    .retain(|(_, p)| !(p.conn == conn && p.client_id == id));
+                n += before - self.retry_queue.len();
+                if n > 0 {
+                    self.metrics.counter("fleet.cancelled").add(n as u64);
+                }
+                let ack = Json::obj(vec![
+                    ("ok", Json::Bool(true)),
+                    ("id", Json::Int(id as i64)),
+                    ("cancelled", Json::Int(n as i64)),
+                ]);
+                self.write_line(conn, &ack.to_string());
+            }
             "metrics" => self.write_line(conn, &self.metrics.to_json().to_string()),
             "stats" => {
                 // the fleet answers the replica verb too (wire parity):
@@ -409,7 +626,10 @@ impl Dispatch {
             .map(|(id, _)| *id)
             .collect();
         for id in ids {
-            self.unhook(id); // response has nowhere to go
+            // the response has nowhere to go — and the replica should stop
+            // computing it, not discover that at delivery time
+            let p = self.unhook(id);
+            self.cancel_on_replica(&p, id);
         }
         self.retry_queue.retain(|(_, p)| p.conn != conn);
     }
@@ -424,13 +644,16 @@ impl Dispatch {
                 let _ = writeln!(w, "{line}").and_then(|_| w.flush());
             }
         }
-        // fail whatever is still pending instead of stranding clients
+        // fail whatever is still pending instead of stranding clients —
+        // once per query, not per attempt (a hedged pair is one query)
         let ids: Vec<u64> = self.inflight.keys().copied().collect();
         let mut stranded = Vec::with_capacity(ids.len());
         for id in ids {
             let p = self.unhook(id);
             stranded.push((p.conn, p.client_id));
         }
+        stranded.sort_unstable();
+        stranded.dedup();
         for (pconn, cid) in stranded {
             self.write_error_id(pconn, cid, "server shutting down");
         }
@@ -450,6 +673,12 @@ impl Dispatch {
     /// of the healthy set, so this terminates in ≤ n iterations, ending in
     /// an `overloaded` line if nobody is left.
     fn place(&mut self, mut p: Pending) {
+        // a query that outlived its client deadline while parked is failed
+        // here, not burned on a replica
+        let now = Instant::now();
+        if p.client_deadline.is_some_and(|d| d <= now) {
+            return self.fail_deadline(&p, now);
+        }
         loop {
             let views: Vec<ReplicaView> = self
                 .replicas
@@ -487,8 +716,9 @@ impl Dispatch {
             if self.write_replica(r, &line) {
                 self.metrics.counter(&format!("fleet.replica.{r}.placed")).inc();
                 p.replica = r;
-                p.deadline = Instant::now()
-                    + Duration::from_millis(self.cfg.fleet.request_timeout_ms);
+                let now = Instant::now();
+                p.sent_at = now;
+                p.deadline = now + self.attempt_budget(&p, now);
                 self.replicas[r].inflight_n += 1;
                 self.inflight.insert(id, p);
                 return;
@@ -499,23 +729,76 @@ impl Dispatch {
 
     /// Give a failed attempt another chance, or fail it to the client once
     /// `fleet.retry_max` attempts are spent. Backoff doubles per retry
-    /// (capped at 64×); death re-placement passes `backoff = false` so
-    /// survivors pick the query up on the next sweep tick.
+    /// (capped at 64×) plus a deterministic per-request jitter; death
+    /// re-placement passes `backoff = false` so survivors pick the query up
+    /// on the next sweep tick.
     fn retry(&mut self, mut p: Pending, reason: &str, backoff: bool) {
+        let now = Instant::now();
+        if p.client_deadline.is_some_and(|d| d <= now) {
+            return self.fail_deadline(&p, now);
+        }
         if p.attempts >= self.cfg.fleet.retry_max {
             self.metrics.counter("fleet.failed").inc();
             let msg = format!("failed after {} attempts: {reason}", p.attempts);
             return self.write_error_id(p.conn, p.client_id, &msg);
         }
         p.attempts += 1;
+        // a fresh attempt starts unpaired: a stale hedge link must not
+        // suppress this attempt's own retries or block future hedging
+        p.hedge_partner = None;
+        p.is_hedge = false;
         self.metrics.counter("fleet.retries").inc();
         let delay = if backoff {
-            let shift = (p.attempts - 2).min(6);
-            Duration::from_millis(self.cfg.fleet.retry_backoff_ms << shift)
+            Duration::from_millis(retry_delay_ms(
+                self.cfg.fleet.retry_backoff_ms,
+                p.attempts,
+                p.client_id ^ p.conn.rotate_left(32),
+            ))
         } else {
             Duration::ZERO
         };
-        self.retry_queue.push((Instant::now() + delay, p));
+        self.retry_queue.push((now + delay, p));
+    }
+
+    /// Per-attempt time budget: `fleet.request_timeout_ms`, shrunk to an
+    /// even slice of the remaining client deadline over the attempts still
+    /// available (so the last attempt is not squeezed to nothing by the
+    /// first one burning the whole budget), floored at
+    /// `fleet.deadline_floor_ms` (a sub-floor slice would time out before
+    /// any replica could answer).
+    fn attempt_budget(&self, p: &Pending, now: Instant) -> Duration {
+        let mut ms = self.cfg.fleet.request_timeout_ms;
+        if let Some(d) = p.client_deadline {
+            let remaining = d.saturating_duration_since(now).as_millis() as u64;
+            let left =
+                u64::from(self.cfg.fleet.retry_max.saturating_sub(p.attempts)) + 1;
+            ms = ms.min((remaining / left).max(self.cfg.fleet.deadline_floor_ms));
+        }
+        Duration::from_millis(ms)
+    }
+
+    /// Terminal deadline failure: one structured line, overshoot recorded.
+    fn fail_deadline(&mut self, p: &Pending, now: Instant) {
+        self.metrics.counter("fleet.deadline.exceeded").inc();
+        if let Some(d) = p.client_deadline {
+            self.metrics
+                .histogram("fleet.deadline.overshoot_us")
+                .record_ns(now.saturating_duration_since(d).as_nanos() as u64);
+        }
+        self.write_error_id(p.conn, p.client_id, "deadline_exceeded");
+    }
+
+    /// Forward a cancel for attempt `id` to the replica serving it, so the
+    /// replica reclaims queued or mid-decode work instead of finishing an
+    /// answer nobody will read. Best-effort: a failed write is already a
+    /// quarantine-worthy condition other paths will notice.
+    fn cancel_on_replica(&mut self, p: &Pending, id: u64) {
+        let line = Json::obj(vec![
+            ("cmd", Json::Str("cancel".into())),
+            ("id", Json::Int(id as i64)),
+        ])
+        .to_string();
+        let _ = self.write_replica(p.replica, &line);
     }
 
     /// Remove an in-flight entry and release its replica slot.
@@ -543,10 +826,31 @@ impl Dispatch {
             return; // straggler from an abandoned attempt
         }
         let p = self.unhook(id);
+        // the latency distribution hedging triggers on — only kept when
+        // hedging is configured, so a hedge-free fleet is metrics-identical
+        if self.cfg.fleet.hedge_quantile > 0.0 {
+            self.metrics.histogram("fleet.response_us").record_since(p.sent_at);
+        }
         if let Some(err) = v.get("error").and_then(Json::as_str) {
             // transient replica states retry; real errors pass through
             if err == "overloaded" || err == "server shutting down" {
+                if p.hedge_partner.is_some_and(|o| self.inflight.contains_key(&o)) {
+                    // the partner attempt is still racing: fold silently
+                    // rather than spawning a third copy of the work
+                    return;
+                }
                 return self.retry(p, &format!("replica {replica}: {err}"), true);
+            }
+        }
+        // first answer of a hedged pair wins: tear the loser down and
+        // reclaim its compute on the other replica
+        if let Some(other) = p.hedge_partner {
+            if self.inflight.contains_key(&other) {
+                let loser = self.unhook(other);
+                self.cancel_on_replica(&loser, other);
+            }
+            if p.is_hedge {
+                self.metrics.counter("fleet.hedge_wins").inc();
             }
         }
         // forward verbatim, restoring the client's id
@@ -620,7 +924,15 @@ impl Dispatch {
             .map(|(id, _)| *id)
             .collect();
         for id in stranded {
+            if !self.inflight.contains_key(&id) {
+                continue; // already unhooked as some earlier victim's partner
+            }
             let p = self.unhook(id);
+            if p.hedge_partner.is_some_and(|o| self.inflight.contains_key(&o)) {
+                // its hedge twin is still racing on a healthy replica:
+                // dropping this half silently keeps exactly one survivor
+                continue;
+            }
             self.metrics.counter("fleet.replaced").inc();
             self.retry(p, "replica died", false);
         }
@@ -661,8 +973,10 @@ impl Dispatch {
         st.gen += 1;
         st.conn = Some(s);
         let (gen, tx, stop) = (st.gen, self.tx.clone(), self.stop.clone());
-        self.reader_handles
-            .push(std::thread::spawn(move || replica_reader(read_half, replica, gen, tx, stop)));
+        let chaos = self.chaos.clone();
+        self.reader_handles.push(std::thread::spawn(move || {
+            replica_reader(read_half, replica, gen, tx, stop, chaos)
+        }));
         true
     }
 
@@ -737,7 +1051,25 @@ fn request_line(id: u64, p: &Pending) -> String {
     if let Some(s) = p.session {
         pairs.push(("session", Json::Int(s as i64)));
     }
+    if let Some(d) = p.client_deadline {
+        // propagate what is left of the client's budget, not its original
+        // value: the replica drops the work itself once this expires
+        let remaining = d.saturating_duration_since(Instant::now()).as_millis() as i64;
+        pairs.push(("deadline_ms", Json::Int(remaining.max(1))));
+    }
     Json::obj(pairs).to_string()
+}
+
+/// Backoff delay for retry attempt `attempts` (2nd try and up): base
+/// doubles per extra attempt (capped at 64×) plus a *deterministic*
+/// per-request jitter in `[0, backoff/2]` keyed by the request identity —
+/// so a burst of simultaneous failures fans back in spread out, yet every
+/// replay of the same trace produces the same schedule.
+fn retry_delay_ms(base_ms: u64, attempts: u32, key: u64) -> u64 {
+    let shift = attempts.saturating_sub(2).min(6);
+    let backoff = base_ms << shift;
+    let mut sm = SplitMix64::new(key ^ (u64::from(attempts) << 48) ^ 0x9E37_79B9);
+    backoff + sm.next_u64() % (backoff / 2 + 1)
 }
 
 // ---- helper threads ----------------------------------------------------
@@ -804,6 +1136,7 @@ fn replica_reader(
     gen: u64,
     tx: Sender<Event>,
     stop: Arc<AtomicBool>,
+    chaos: Option<Arc<Chaos>>,
 ) {
     let _ = stream.set_read_timeout(Some(Duration::from_millis(100)));
     let mut reader = BufReader::new(stream);
@@ -818,7 +1151,19 @@ fn replica_reader(
             Ok(_) => {
                 let t = line.trim();
                 if !t.is_empty() {
-                    let ev = Event::ReplicaLine { replica, gen, line: t.to_string() };
+                    let mut out = t.to_string();
+                    // lossy-by-design replica faults: a stalled or garbled
+                    // response trips the per-attempt deadline and the retry
+                    // (or hedge twin) recovers — never the client's bytes
+                    if let Some(ch) = &chaos {
+                        if let Some(d) = ch.reply_stall() {
+                            std::thread::sleep(d);
+                        }
+                        if let Some(g) = ch.garble_line(&out) {
+                            out = g;
+                        }
+                    }
+                    let ev = Event::ReplicaLine { replica, gen, line: out };
                     if tx.send(ev).is_err() {
                         return;
                     }
@@ -883,5 +1228,39 @@ fn poll_stats(
             *slot = None; // reconnect next tick
             None
         }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::retry_delay_ms;
+
+    /// Satellite contract: jittered backoff is bounded and deterministic.
+    #[test]
+    fn retry_jitter_bounds_and_determinism() {
+        for attempts in 1u32..=10 {
+            let shift = attempts.saturating_sub(2).min(6);
+            let backoff = 25u64 << shift;
+            for key in [0u64, 1, 7, 0xDEAD_BEEF, u64::MAX] {
+                let d = retry_delay_ms(25, attempts, key);
+                assert!(
+                    (backoff..=backoff + backoff / 2).contains(&d),
+                    "attempt {attempts} key {key}: delay {d} outside \
+                     [{backoff}, {}]",
+                    backoff + backoff / 2
+                );
+                // same (base, attempt, key) → same delay, every time
+                assert_eq!(d, retry_delay_ms(25, attempts, key));
+            }
+            // the jitter actually jitters: distinct keys should not all
+            // collapse onto one delay (backoff/2 + 1 ≥ 13 possible values)
+            let spread: std::collections::BTreeSet<u64> = (0..32)
+                .map(|k| retry_delay_ms(25, attempts, k * 0x9E37_79B9))
+                .collect();
+            assert!(spread.len() > 1, "attempt {attempts}: no jitter spread");
+        }
+        // exponential growth caps at 64× the base
+        let d_hi = retry_delay_ms(10, 100, 3);
+        assert!((640..=960).contains(&d_hi), "cap breached: {d_hi}");
     }
 }

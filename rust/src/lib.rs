@@ -21,6 +21,7 @@
 
 pub mod allocator;
 pub mod baselines;
+pub mod chaos;
 pub mod cli;
 pub mod config;
 pub mod experiments;

@@ -129,6 +129,17 @@ fn cli() -> Cli {
                    empty = value from --config (default 0.25)",
             default: Some(""),
         },
+        FlagSpec {
+            name: "chaos",
+            help: "enable seeded fault injection on the I/O drivers \
+                   ([chaos] section; off = bit-for-bit fault-free)",
+            default: None,
+        },
+        FlagSpec {
+            name: "chaos-seed",
+            help: "fault-stream seed; empty = value from --config",
+            default: Some(""),
+        },
     ]);
     let fleet_flags = {
         let mut fs = runtime_flags.clone();
@@ -192,6 +203,36 @@ fn cli() -> Cli {
             FlagSpec {
                 name: "spawn-binary",
                 help: "binary to spawn replicas from; empty = this binary",
+                default: Some(""),
+            },
+            FlagSpec {
+                name: "deadline-floor-ms",
+                help: "smallest per-attempt slice of a client deadline; \
+                       empty = value from --config (default 10)",
+                default: Some(""),
+            },
+            FlagSpec {
+                name: "hedge-quantile",
+                help: "hedged dispatch: duplicate attempts outstanding past \
+                       this response-latency quantile (0 disables); empty = \
+                       value from --config (default 0)",
+                default: Some(""),
+            },
+            FlagSpec {
+                name: "hedge-min-ms",
+                help: "hedged dispatch: never hedge before this many ms; \
+                       empty = value from --config (default 20)",
+                default: Some(""),
+            },
+            FlagSpec {
+                name: "chaos",
+                help: "enable seeded fault injection on the replica streams \
+                       ([chaos] section; off = bit-for-bit fault-free)",
+                default: None,
+            },
+            FlagSpec {
+                name: "chaos-seed",
+                help: "fault-stream seed; empty = value from --config",
                 default: Some(""),
             },
         ]);
@@ -391,6 +432,16 @@ fn cmd_serve(args: &Args) -> Result<()> {
     if !arm_flag.is_empty() {
         cfg.server.replica_arm = arm_flag.parse()?;
     }
+    // chaos follows the enable-only switch discipline too
+    if args.switch("chaos") {
+        cfg.chaos.enabled = true;
+    }
+    let chaos_seed = args.str_flag("chaos-seed")?;
+    if !chaos_seed.is_empty() {
+        cfg.chaos.seed = chaos_seed
+            .parse()
+            .map_err(|e| anyhow::anyhow!("--chaos-seed: {e}"))?;
+    }
     cfg.validate()?;
 
     let metrics = Arc::new(Registry::default());
@@ -523,12 +574,40 @@ fn cmd_fleet(args: &Args) -> Result<()> {
             .map_err(|e| anyhow::anyhow!("--retry-max: {e}"))?;
     }
     cfg.fleet.spawn_binary = args.str_flag("spawn-binary")?;
+    let floor = args.str_flag("deadline-floor-ms")?;
+    if !floor.is_empty() {
+        cfg.fleet.deadline_floor_ms = floor
+            .parse()
+            .map_err(|e| anyhow::anyhow!("--deadline-floor-ms: {e}"))?;
+    }
+    let hedge_q = args.str_flag("hedge-quantile")?;
+    if !hedge_q.is_empty() {
+        cfg.fleet.hedge_quantile = hedge_q
+            .parse()
+            .map_err(|e| anyhow::anyhow!("--hedge-quantile: {e}"))?;
+    }
+    let hedge_min = args.str_flag("hedge-min-ms")?;
+    if !hedge_min.is_empty() {
+        cfg.fleet.hedge_min_ms = hedge_min
+            .parse()
+            .map_err(|e| anyhow::anyhow!("--hedge-min-ms: {e}"))?;
+    }
+    if args.switch("chaos") {
+        cfg.chaos.enabled = true;
+    }
+    let chaos_seed = args.str_flag("chaos-seed")?;
+    if !chaos_seed.is_empty() {
+        cfg.chaos.seed = chaos_seed
+            .parse()
+            .map_err(|e| anyhow::anyhow!("--chaos-seed: {e}"))?;
+    }
     cfg.validate()?;
 
     let n = cfg.fleet.n_replicas();
     println!(
         "thinkalloc fleet on {} ({} {} replicas, placement {}, B={}, \
-         heartbeat {}ms, quarantine after {}, readmit after {}, retry {}x)",
+         heartbeat {}ms, quarantine after {}, readmit after {}, retry {}x, \
+         hedge {}, chaos {})",
         cfg.fleet.addr,
         n,
         if cfg.fleet.addrs.is_empty() { "spawned" } else { "attached" },
@@ -538,6 +617,16 @@ fn cmd_fleet(args: &Args) -> Result<()> {
         cfg.fleet.quarantine_after,
         cfg.fleet.readmit_after,
         cfg.fleet.retry_max,
+        if cfg.fleet.hedge_quantile > 0.0 {
+            format!("p{:.0}/{}ms", cfg.fleet.hedge_quantile * 100.0, cfg.fleet.hedge_min_ms)
+        } else {
+            "off".to_string()
+        },
+        if cfg.chaos.enabled {
+            format!("seed {}", cfg.chaos.seed)
+        } else {
+            "off".to_string()
+        },
     );
     let metrics = Arc::new(Registry::default());
     let fleet = thinkalloc::fleet::FleetServer::new(cfg, metrics)?;

@@ -46,6 +46,7 @@ use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
+use crate::chaos::Chaos;
 use crate::metrics::{Counter, Gauge};
 
 use super::conn::{ConnectionDriver, LineAccumulator, LineEvent, StallTracker};
@@ -204,6 +205,9 @@ pub(crate) struct EventDriver {
     stopping: AtomicBool,
     threads: Mutex<Vec<JoinHandle<()>>>,
     writer_stall: Duration,
+    /// Seeded fault injection at the socket boundary (`[chaos]`); `None`
+    /// (the default) keeps every I/O path bit-for-bit fault-free.
+    chaos: Option<Arc<Chaos>>,
     live: Arc<Gauge>,
     wakeups: Arc<Counter>,
     read_events: Arc<Counter>,
@@ -218,8 +222,10 @@ impl EventDriver {
             shards.push(ShardState { wake: WakePipe::new()?, inbox: Mutex::new(Vec::new()) });
         }
         let writer_stall = server.writer_stall;
+        let chaos = Chaos::from_config(&server.cfg.chaos);
         let m = &server.metrics;
         Ok(Self {
+            chaos,
             live: m.gauge("serving.conn.live"),
             wakeups: m.counter("serving.io.wakeups"),
             read_events: m.counter("serving.io.read_events"),
@@ -287,7 +293,7 @@ impl EventDriver {
                 .collect();
             for id in flushable {
                 if let Some(c) = conns.get_mut(&id) {
-                    if flush_conn(c) {
+                    if flush_conn(c, self.chaos.as_deref()) {
                         self.close_conn(&mut conns, id);
                     }
                 }
@@ -421,7 +427,7 @@ impl EventDriver {
                     self.write_events.inc();
                     let done = {
                         let c = conns.get_mut(id).unwrap();
-                        flush_conn(c)
+                        flush_conn(c, self.chaos.as_deref())
                     };
                     if done {
                         let id = *id;
@@ -521,7 +527,14 @@ impl EventDriver {
     fn read_burst(&self, c: &mut EConn) {
         let mut buf = [0u8; 4096];
         for _ in 0..8 {
-            match (&c.stream).read(&mut buf) {
+            // chaos short read: shrink the buffer, never the data — unread
+            // bytes stay in the kernel and arrive on the next burst/poll
+            let cap = self
+                .chaos
+                .as_ref()
+                .and_then(|ch| ch.read_cap(buf.len()))
+                .unwrap_or(buf.len());
+            match (&c.stream).read(&mut buf[..cap]) {
                 Ok(0) => {
                     // EOF: an unterminated tail still counts as a line
                     if let Some(LineEvent::Line(l)) = c.acc.finish() {
@@ -600,8 +613,10 @@ impl EventDriver {
 
 /// Drain pending output to the socket without blocking. Returns true when
 /// the connection is fully drained *and* its outbox is closed — i.e. it
-/// should be closed now.
-fn flush_conn(c: &mut EConn) -> bool {
+/// should be closed now. `chaos` (when enabled) may cap a write to a
+/// prefix — the remainder stays in `wbuf` for the next readiness round —
+/// or delay a freshly dequeued line; both faults are lossless.
+fn flush_conn(c: &mut EConn, chaos: Option<&Chaos>) -> bool {
     loop {
         if c.wpos == c.wbuf.len() {
             c.wbuf.clear();
@@ -629,12 +644,23 @@ fn flush_conn(c: &mut EConn) -> bool {
                     }
                 },
             }
+            if let Some(d) = chaos.and_then(Chaos::flush_delay) {
+                std::thread::sleep(d);
+            }
         }
-        match (&c.stream).write(&c.wbuf[c.wpos..]) {
+        let avail = c.wbuf.len() - c.wpos;
+        let capped = chaos.and_then(|ch| ch.write_cap(avail));
+        let end = c.wpos + capped.unwrap_or(avail);
+        match (&c.stream).write(&c.wbuf[c.wpos..end]) {
             Ok(0) => return true,
             Ok(n) => {
                 c.wpos += n;
                 c.stall.progress();
+                // a chaos-capped write defers the tail to the next round:
+                // real fragmentation pressure, not just a split syscall
+                if capped.is_some() {
+                    return false;
+                }
             }
             Err(ref e) if e.kind() == std::io::ErrorKind::WouldBlock => {
                 c.stall.blocked_at(Instant::now());

@@ -18,6 +18,8 @@ use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
 use std::time::Duration;
 
+use crate::chaos::Chaos;
+
 use super::conn::{read_line_capped, ConnectionDriver, LineRead};
 use super::outbox::{Outbox, PushError};
 use super::Server;
@@ -43,15 +45,20 @@ pub(crate) struct ThreadsDriver {
     conns: Mutex<BTreeMap<u64, Arc<ThreadConn>>>,
     threads: Mutex<Vec<ConnThreads>>,
     acceptor: Mutex<Option<JoinHandle<()>>>,
+    /// Seeded fault injection on the writer threads (`[chaos]`); `None`
+    /// (the default) keeps the write path bit-for-bit fault-free.
+    chaos: Option<Arc<Chaos>>,
 }
 
 impl ThreadsDriver {
     pub(crate) fn new(server: Arc<Server>) -> Self {
+        let chaos = Chaos::from_config(&server.cfg.chaos);
         Self {
             server,
             conns: Mutex::new(BTreeMap::new()),
             threads: Mutex::new(Vec::new()),
             acceptor: Mutex::new(None),
+            chaos,
         }
     }
 
@@ -134,10 +141,12 @@ impl ThreadsDriver {
 
         // writer: the only thread that blocks on this socket
         let wconn = conn.clone();
+        let wchaos = self.chaos.clone();
         let writer = std::thread::spawn(move || {
             while let Some(line) = wconn.outbox.pop() {
-                let mut s = &wconn.stream;
-                if writeln!(s, "{line}").and_then(|()| s.flush()).is_err() {
+                if Self::write_line_chaotic(&wconn.stream, &line, wchaos.as_deref())
+                    .is_err()
+                {
                     // unwritable client: drop queued lines so producers
                     // fail fast instead of stalling out one by one
                     wconn.outbox.close_discard();
@@ -161,6 +170,35 @@ impl ThreadsDriver {
             driver.server.metrics.gauge("serving.conn.live").add(-1.0);
         });
         self.threads.lock().unwrap().push(ConnThreads { reader, writer });
+    }
+
+    /// Write one wire line, optionally under chaos: a delayed flush and/or
+    /// the line split into capped write calls. Lossless — every byte goes
+    /// out in order; with `chaos` disabled this is byte-for-byte
+    /// `writeln!` + `flush` (the historical writer body).
+    fn write_line_chaotic(
+        mut s: &TcpStream,
+        line: &str,
+        chaos: Option<&Chaos>,
+    ) -> std::io::Result<()> {
+        let Some(ch) = chaos else {
+            writeln!(s, "{line}")?;
+            return s.flush();
+        };
+        if let Some(d) = ch.flush_delay() {
+            std::thread::sleep(d);
+        }
+        let mut bytes = line.as_bytes().to_vec();
+        bytes.push(b'\n');
+        let mut pos = 0;
+        while pos < bytes.len() {
+            let avail = bytes.len() - pos;
+            let end = pos + ch.write_cap(avail).unwrap_or(avail);
+            s.write_all(&bytes[pos..end])?;
+            s.flush()?;
+            pos = end;
+        }
+        Ok(())
     }
 
     fn reader_loop(&self, conn: &Arc<ThreadConn>, stream: TcpStream) {

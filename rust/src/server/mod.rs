@@ -9,9 +9,14 @@
 //!      "predicted": 0.91, "reward": 1.0, "latency_us": 1234,
 //!      "procedure": "adaptive"}
 //! Special requests: {"cmd": "metrics"} → metrics dump; {"cmd": "stats"} →
-//! one-line load snapshot (the fleet heartbeat's food); {"cmd": "shutdown"}.
-//! Overload rejections are `{"error": "overloaded", "retry_after_ms": N}`
-//! lines (see docs/PROTOCOL.md for the full error-line inventory).
+//! one-line load snapshot (the fleet heartbeat's food); {"cmd": "cancel",
+//! "id": N} → abort the in-flight request(s) with that client id on this
+//! connection; {"cmd": "shutdown"}. Requests may carry `"deadline_ms": N`
+//! — a latency budget measured from admission; past it the request is
+//! dropped anywhere in the pipeline (queued or mid-decode) and the client
+//! gets `{"id": N, "error": "deadline_exceeded"}`. Overload rejections are
+//! `{"error": "overloaded", "retry_after_ms": N}` lines (see
+//! docs/PROTOCOL.md for the full error-line inventory).
 //!
 //! This module is the *protocol* layer: request parsing and dispatch,
 //! admission, response routing, the wire format. Moving bytes is delegated
@@ -75,9 +80,18 @@ use crate::metrics::Registry;
 use crate::serving::batcher::{Batcher, Submit};
 use crate::serving::scheduler::SchedulerShared;
 use crate::serving::shard::{EpochSink, ShardPool};
-use crate::serving::{Request, Response};
+use crate::serving::{CancelReason, Request, Response};
 
 use conn::ConnectionDriver;
+
+/// Where a response goes: the originating connection, plus the client id
+/// to echo on error lines synthesized after the [`Request`] is gone (a
+/// deadline-exceeded drop only has the internal id in hand).
+#[derive(Clone, Copy, Debug)]
+struct Route {
+    conn: u64,
+    client_id: u64,
+}
 
 pub struct Server {
     pub addr: String,
@@ -88,9 +102,9 @@ pub struct Server {
     /// can consult the budget controller's saturation signal.
     shared: Arc<SchedulerShared>,
     admission: AdmissionController,
-    /// Map internal request id → connection id (the client id travels
-    /// inside [`Response`] itself).
-    routing: Mutex<BTreeMap<u64, u64>>,
+    /// Map internal request id → delivery route (connection id + the
+    /// client id to echo).
+    routing: Mutex<BTreeMap<u64, Route>>,
     /// The active I/O driver; populated for the duration of [`Server::run`]
     /// (and cleared after, breaking the Arc cycle driver ↔ server).
     driver: Mutex<Option<Arc<dyn ConnectionDriver>>>,
@@ -113,6 +127,12 @@ struct ServerSink {
 impl EpochSink for ServerSink {
     fn on_response(&self, resp: Response) {
         self.server.send_response(resp);
+    }
+
+    fn on_dropped(&self, req: &Request) {
+        // pre-epoch deadline sweep: no compute was spent, but the client is
+        // still owed a terminal line for the id
+        self.server.fail_deadline(req.id);
     }
 
     fn on_epoch_error(
@@ -288,9 +308,23 @@ impl Server {
 
     /// A connection is gone: purge routing entries for its in-flight
     /// requests — their responses have nowhere to go (they used to leak
-    /// until a response happened to arrive). Idempotent.
+    /// until a response happened to arrive) — and mark each one cancelled
+    /// so queued work is dropped by the pre-epoch sweep and mid-decode rows
+    /// are evicted instead of decoding to completion for nobody. Idempotent.
     fn conn_gone(&self, conn: u64) {
-        self.routing.lock().unwrap().retain(|_, c| *c != conn);
+        let mut routing = self.routing.lock().unwrap();
+        let orphans: Vec<u64> = routing
+            .iter()
+            .filter(|(_, r)| r.conn == conn)
+            .map(|(&id, _)| id)
+            .collect();
+        for id in &orphans {
+            routing.remove(id);
+        }
+        drop(routing);
+        for id in orphans {
+            self.shared.cancels.cancel(id, CancelReason::Client);
+        }
     }
 
     /// The `{"error":"overloaded","retry_after_ms":N}` line used when a
@@ -308,7 +342,7 @@ impl Server {
 
     fn handle_request(self: &Arc<Self>, conn: u64, v: &Json) {
         if let Some(cmd) = v.get("cmd").and_then(Json::as_str) {
-            self.handle_cmd(conn, cmd);
+            self.handle_cmd(conn, cmd, v);
             return;
         }
         // the internal id is the routing key: unique even when clients
@@ -340,6 +374,22 @@ impl Server {
                     self.write_error(
                         conn,
                         "invalid session: must be a non-negative integer < 2^63",
+                    );
+                    return;
+                }
+            },
+        };
+        // optional per-request latency budget, milliseconds from admission.
+        // Same exact-integer discipline as ids: floats, strings, negatives
+        // and nulls are protocol errors, not silent no-deadlines.
+        let deadline_ms = match v.get("deadline_ms") {
+            None => None,
+            Some(j) => match j.as_i64() {
+                Some(i) if i >= 0 => Some(i as u64),
+                _ => {
+                    self.write_error(
+                        conn,
+                        "invalid deadline_ms: must be a non-negative integer < 2^63",
                     );
                     return;
                 }
@@ -384,7 +434,7 @@ impl Server {
             ReplicaArm::Weak => (true, Some(ProcedureKind::WeakStrongRoute)),
             ReplicaArm::Strong => (degraded, Some(ProcedureKind::AdaptiveBestOfK)),
         };
-        self.routing.lock().unwrap().insert(id, conn);
+        self.routing.lock().unwrap().insert(id, Route { conn, client_id });
         let submitted = self.batcher.try_submit(Request {
             id,
             client_id,
@@ -399,6 +449,10 @@ impl Server {
             procedure,
             degraded,
             session,
+            deadline_ms,
+            // stamped by Batcher::try_submit (the deadline clock starts at
+            // admission, not parse)
+            deadline_at: None,
         });
         match submitted {
             Submit::Accepted => {
@@ -433,8 +487,50 @@ impl Server {
         }
     }
 
-    fn handle_cmd(&self, conn: u64, cmd: &str) {
+    fn handle_cmd(&self, conn: u64, cmd: &str, v: &Json) {
         match cmd {
+            "cancel" => {
+                // {"cmd":"cancel","id":N}: N is the *client* id, scoped to
+                // this connection (another connection's requests are not
+                // cancellable — client ids are only unique per connection).
+                let id = match v.get("id").and_then(Json::as_i64) {
+                    Some(i) if i >= 0 => i as u64,
+                    _ => {
+                        self.write_error(
+                            conn,
+                            "cancel needs id: a non-negative integer < 2^63",
+                        );
+                        return;
+                    }
+                };
+                // removing the routing entry first makes post-cancel
+                // delivery structurally impossible: even a response already
+                // computed finds no route and is suppressed
+                let mut routing = self.routing.lock().unwrap();
+                let victims: Vec<u64> = routing
+                    .iter()
+                    .filter(|(_, r)| r.conn == conn && r.client_id == id)
+                    .map(|(&rid, _)| rid)
+                    .collect();
+                for rid in &victims {
+                    routing.remove(rid);
+                }
+                drop(routing);
+                for rid in &victims {
+                    self.shared.cancels.cancel(*rid, CancelReason::Client);
+                }
+                if !victims.is_empty() {
+                    self.metrics
+                        .counter("serving.cancelled.requested")
+                        .add(victims.len() as u64);
+                }
+                let ack = Json::obj(vec![
+                    ("ok", Json::Bool(true)),
+                    ("id", Json::Int(id as i64)),
+                    ("cancelled", Json::Int(victims.len() as i64)),
+                ]);
+                self.write_line(conn, &ack.to_string());
+            }
             "metrics" => {
                 let dump = self.metrics.to_json().to_string();
                 self.write_line(conn, &dump);
@@ -469,9 +565,28 @@ impl Server {
     }
 
     fn send_response(&self, resp: Response) {
+        // Consume any cancellation verdict BEFORE the routing early-return:
+        // a Deadline entry must be drained here even if the cancel verb (or
+        // conn_gone) already removed the route, or the table would leak.
+        let reason = self.shared.cancels.take(resp.id);
         // route by the internal id; echo the client's id on the wire
-        let conn = self.routing.lock().unwrap().remove(&resp.id);
-        let Some(conn) = conn else { return };
+        let route = self.routing.lock().unwrap().remove(&resp.id);
+        match reason {
+            // client cancel / disconnect: reclaim silently — the route (if
+            // any survived a race) must not receive a late answer
+            Some(CancelReason::Client) => return,
+            // mid-decode deadline expiry: the row was evicted, the sample
+            // is empty — the client gets the structured terminal line
+            Some(CancelReason::Deadline) => {
+                if let Some(r) = route {
+                    self.write_deadline_exceeded(r);
+                }
+                return;
+            }
+            None => {}
+        }
+        let Some(route) = route else { return };
+        let conn = route.conn;
         let json = Json::obj(vec![
             // exact echo — client ids are integers, never f64-rounded
             ("id", Json::Int(resp.client_id as i64)),
@@ -484,6 +599,30 @@ impl Server {
             ("procedure", Json::Str(resp.procedure.name().to_string())),
         ]);
         self.write_line(conn, &json.to_string());
+    }
+
+    /// Terminal path for a request whose deadline passed before any compute
+    /// was spent (pre-epoch sweep): consume a stale cancel entry if one
+    /// raced in, then tell the client — unless the client is already gone.
+    fn fail_deadline(&self, id: u64) {
+        let reason = self.shared.cancels.take(id);
+        let route = self.routing.lock().unwrap().remove(&id);
+        if matches!(reason, Some(CancelReason::Client)) {
+            return;
+        }
+        if let Some(r) = route {
+            self.write_deadline_exceeded(r);
+        }
+    }
+
+    /// The structured `{"id":N,"error":"deadline_exceeded"}` terminal line.
+    fn write_deadline_exceeded(&self, route: Route) {
+        self.metrics.counter("serving.deadline.exceeded").inc();
+        let j = Json::obj(vec![
+            ("id", Json::Int(route.client_id as i64)),
+            ("error", Json::Str("deadline_exceeded".into())),
+        ]);
+        self.write_line(route.conn, &j.to_string());
     }
 
     /// Emit a protocol error line with proper JSON string escaping (error
@@ -582,6 +721,40 @@ impl Client {
             ("text", Json::Str(text.to_string())),
             ("domain", Json::Str(domain.to_string())),
             ("session", Json::Int(session as i64)),
+        ]);
+        writeln!(self.writer, "{j}")?;
+        self.writer.flush()?;
+        Ok(())
+    }
+
+    /// Like [`Client::request`] but attaching a latency budget in
+    /// milliseconds; past it the server answers
+    /// `{"id":N,"error":"deadline_exceeded"}` instead of a response.
+    pub fn request_with_deadline(
+        &mut self,
+        id: u64,
+        text: &str,
+        domain: &str,
+        deadline_ms: u64,
+    ) -> Result<()> {
+        let j = Json::obj(vec![
+            ("id", Json::Int(id as i64)),
+            ("text", Json::Str(text.to_string())),
+            ("domain", Json::Str(domain.to_string())),
+            ("deadline_ms", Json::Int(deadline_ms as i64)),
+        ]);
+        writeln!(self.writer, "{j}")?;
+        self.writer.flush()?;
+        Ok(())
+    }
+
+    /// Cancel an in-flight request by its client id (scoped to this
+    /// connection). Fire-and-forget: the ack
+    /// `{"ok":true,"id":N,"cancelled":K}` arrives on the shared read side.
+    pub fn cancel(&mut self, id: u64) -> Result<()> {
+        let j = Json::obj(vec![
+            ("cmd", Json::Str("cancel".to_string())),
+            ("id", Json::Int(id as i64)),
         ]);
         writeln!(self.writer, "{j}")?;
         self.writer.flush()?;

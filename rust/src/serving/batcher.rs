@@ -136,6 +136,13 @@ impl Batcher {
     pub fn try_submit(&self, mut req: Request) -> Submit {
         let now = Instant::now();
         req.arrived_us = now.duration_since(self.start).as_micros() as u64;
+        // the deadline clock starts at admission: a request that waited in
+        // a client-side or fleet queue still gets its full budget here.
+        // checked_add: a deadline too far out to represent (u64::MAX ms) is
+        // no deadline, not a panic in the driver thread
+        req.deadline_at = req
+            .deadline_ms
+            .and_then(|ms| now.checked_add(Duration::from_millis(ms)));
         let mut q = self.queue.lock().unwrap();
         if q.closed {
             return Submit::Closed;
@@ -288,6 +295,20 @@ mod tests {
         let epoch = b.next_epoch().unwrap();
         let waited = b.now_us().saturating_sub(epoch[0].arrived_us);
         assert!(waited >= 3_000, "queue wait {waited}µs not observable");
+    }
+
+    #[test]
+    fn submit_stamps_deadline_at_admission() {
+        let b = Batcher::new(4, Duration::from_secs(10));
+        let mut r1 = req(1);
+        r1.deadline_ms = Some(50);
+        assert!(b.submit(r1));
+        assert!(b.submit(req(2)));
+        b.close();
+        let epoch = b.next_epoch().unwrap();
+        let d = epoch[0].deadline_at.expect("deadline_ms must be stamped");
+        assert!(d <= Instant::now() + Duration::from_millis(50));
+        assert!(epoch[1].deadline_at.is_none(), "no deadline_ms → no deadline");
     }
 
     #[test]

@@ -34,10 +34,12 @@
 //! the scheduler as `serving.decode.{steps,wasted_steps,occupancy}`.
 
 use std::sync::Mutex;
+use std::time::Instant;
 
 use anyhow::Result;
 
 use super::prefix_cache::{PrefixCache, PrefixStats};
+use super::{CancelReason, CancelTable};
 use crate::config::DecodeMode;
 use crate::prng::Pcg64;
 use crate::runtime::{Artifact, Engine};
@@ -87,6 +89,10 @@ pub struct DecodeStats {
     pub wasted_steps: u64,
     /// Decode-step backend calls issued.
     pub backend_calls: u64,
+    /// Slot-steps a cancelled/expired row would still have been entitled
+    /// to when it was evicted mid-flight (or skipped at admission) — the
+    /// compute the cancellation reclaimed for other rows.
+    pub cancelled_steps_saved: u64,
 }
 
 impl DecodeStats {
@@ -98,6 +104,45 @@ impl DecodeStats {
             return 0.0;
         }
         self.steps as f64 / (self.backend_calls * decode_batch as u64) as f64
+    }
+}
+
+/// One query's cancellation identity inside a [`CancelCtx`]: the internal
+/// request id the cancel table is keyed by, plus the absolute deadline the
+/// batcher stamped at admission (None ⇒ no deadline).
+#[derive(Clone, Copy, Debug)]
+pub struct QueryCancel {
+    pub id: u64,
+    pub deadline_at: Option<Instant>,
+}
+
+/// Per-epoch cancellation context for the continuous engine: maps each
+/// job's query index to its request identity so a decode row can be
+/// evicted mid-flight — through the ordinary `decode_evict_row` slot
+/// teardown, freeing the slot for refill — when its request is cancelled
+/// or its deadline passes. `None` everywhere keeps the engine bit-for-bit
+/// on the historical path (no clock reads, no table lookups).
+pub struct CancelCtx<'a> {
+    /// Indexed by query index (the same index [`Job::query`] carries).
+    pub queries: Vec<QueryCancel>,
+    /// Pool-shared cancel table (client cancels, reader disconnects).
+    pub table: &'a CancelTable,
+}
+
+impl CancelCtx<'_> {
+    /// Is query `q` dead at `now`? A freshly-expired deadline is recorded
+    /// in the table as [`CancelReason::Deadline`] so the delivery path
+    /// maps the unwound response to a `deadline_exceeded` error line.
+    fn is_dead(&self, q: usize, now: Instant) -> bool {
+        let qc = &self.queries[q];
+        if self.table.check(qc.id).is_some() {
+            return true;
+        }
+        if qc.deadline_at.is_some_and(|d| d <= now) {
+            self.table.cancel(qc.id, CancelReason::Deadline);
+            return true;
+        }
+        false
     }
 }
 
@@ -189,11 +234,33 @@ pub fn generate_with_cache(
     mode: DecodeMode,
     cache: Option<&Mutex<PrefixCache>>,
 ) -> Result<(Vec<Sample>, DecodeStats, PrefixStats)> {
+    generate_with_cancel(engine, jobs, cfg, rng, mode, cache, None)
+}
+
+/// [`generate_with_cache`] plus an optional [`CancelCtx`]: under the
+/// continuous engine a row whose request is cancelled or past its deadline
+/// is evicted mid-flight (admission skips already-dead jobs entirely) and
+/// its slot refilled; the reclaimed entitlement is accounted in
+/// [`DecodeStats::cancelled_steps_saved`]. Cancelled jobs still yield an
+/// (empty) sample so job→sample accounting is total. Wave mode cannot
+/// evict mid-wave and ignores the context — the pre-epoch sweep is the
+/// only reclaim point there. With `cancel = None` this is byte-for-byte
+/// [`generate_with_cache`].
+#[allow(clippy::too_many_arguments)]
+pub fn generate_with_cancel(
+    engine: &Engine,
+    jobs: &[Job],
+    cfg: &GenConfig,
+    rng: &mut Pcg64,
+    mode: DecodeMode,
+    cache: Option<&Mutex<PrefixCache>>,
+    cancel: Option<&CancelCtx>,
+) -> Result<(Vec<Sample>, DecodeStats, PrefixStats)> {
     match mode {
         DecodeMode::Wave => generate_wave(engine, jobs, cfg, rng)
             .map(|(samples, stats)| (samples, stats, PrefixStats::default())),
         DecodeMode::Continuous => {
-            generate_continuous(engine, jobs, cfg, rng, cache)
+            generate_continuous(engine, jobs, cfg, rng, cache, cancel)
         }
     }
 }
@@ -299,8 +366,9 @@ fn generate_continuous(
     cfg: &GenConfig,
     rng: &mut Pcg64,
     cache: Option<&Mutex<PrefixCache>>,
+    cancel: Option<&CancelCtx>,
 ) -> Result<(Vec<Sample>, DecodeStats, PrefixStats)> {
-    let result = continuous_pool(engine, jobs, cfg, rng, cache);
+    let result = continuous_pool(engine, jobs, cfg, rng, cache, cancel);
     if result.is_err() {
         // The engine (and its backend slot state) outlives this epoch, so a
         // mid-flight error must not strand occupied slots: the worker keeps
@@ -323,6 +391,7 @@ fn continuous_pool(
     cfg: &GenConfig,
     rng: &mut Pcg64,
     cache: Option<&Mutex<PrefixCache>>,
+    cancel: Option<&CancelCtx>,
 ) -> Result<(Vec<Sample>, DecodeStats, PrefixStats)> {
     let seq = engine.max_seq();
     let db = engine.decode_batch();
@@ -354,13 +423,49 @@ fn continuous_pool(
     let mut live = 0usize;
 
     loop {
+        // mid-decode cancellation: evict rows whose request died since the
+        // last step *before* admission, so a freed slot is refilled in the
+        // same iteration. With `cancel = None` this block vanishes — no
+        // clock read, no table lookup, bit-for-bit the historical loop.
+        if let Some(ctx) = cancel {
+            let now = Instant::now();
+            for s in 0..db {
+                let dead = slots[s]
+                    .as_ref()
+                    .is_some_and(|slot| ctx.is_dead(jobs[slot.job].query, now));
+                if dead {
+                    let slot = slots[s].take().expect("checked above");
+                    stats.cancelled_steps_saved +=
+                        cfg.max_new_tokens.saturating_sub(slot.emitted) as u64;
+                    out[slot.job] = Some(Sample {
+                        query: jobs[slot.job].query,
+                        text: String::new(),
+                    });
+                    engine.decode_evict_row(s)?;
+                    live -= 1;
+                }
+            }
+        }
         // admission: refill every vacant slot before the next step, so a
         // row finishing in step t never leaves its slot idle in step t+1
-        for (s, slot) in slots.iter_mut().enumerate() {
+        'admit: for (s, slot) in slots.iter_mut().enumerate() {
             if slot.is_some() {
                 continue;
             }
-            let Some(j) = pending.next() else { break };
+            let j = loop {
+                let Some(j) = pending.next() else { break 'admit };
+                // already-dead jobs never enter a slot: their entire step
+                // entitlement is reclaimed before any prefill is spent
+                if let Some(ctx) = cancel {
+                    if ctx.is_dead(jobs[j].query, Instant::now()) {
+                        stats.cancelled_steps_saved += cfg.max_new_tokens as u64;
+                        out[j] =
+                            Some(Sample { query: jobs[j].query, text: String::new() });
+                        continue;
+                    }
+                }
+                break j;
+            };
             let ids = tokenizer::encode(&jobs[j].prompt, seq);
             let cursor = tokenizer::last_index(&ids) as usize;
             // prompt prefix = BOS + prompt bytes = ids[..cursor]; the cache
@@ -652,6 +757,70 @@ mod tests {
     }
 
     #[test]
+    fn cancelled_jobs_are_reclaimed_and_accounted() {
+        use std::time::Duration;
+        let engine = Engine::load_all(&RuntimeConfig::default()).unwrap();
+        let table = CancelTable::default();
+        // query 0: long deterministic rows (greedy REV emits the reversed
+        // answer char by char, so each job is entitled to all 12 steps);
+        // query 1: already past its deadline — reclaimed at admission
+        let jobs = jobs_for_allocation(
+            &["REV abcdefghijklmnopqrstuvwxyz", "ADD 1 2"],
+            &[30, 2],
+        );
+        let cfg = GenConfig { max_new_tokens: 12, temperature: 0.0 };
+        let ctx = CancelCtx {
+            queries: vec![
+                QueryCancel { id: 7, deadline_at: None },
+                QueryCancel {
+                    id: 8,
+                    deadline_at: Some(Instant::now() - Duration::from_millis(5)),
+                },
+            ],
+            table: &table,
+        };
+        let (samples, stats, _) = std::thread::scope(|scope| {
+            scope.spawn(|| {
+                // the admission pass marking query 1 expired is the signal
+                // the pool is live; then cancel query 0 mid-decode so its
+                // rows are evicted and their remaining steps reclaimed
+                while table.check(8).is_none() {
+                    std::thread::yield_now();
+                }
+                table.cancel(7, CancelReason::Client);
+            });
+            generate_with_cancel(
+                &engine,
+                &jobs,
+                &cfg,
+                &mut Pcg64::new(3),
+                DecodeMode::Continuous,
+                None,
+                Some(&ctx),
+            )
+            .unwrap()
+        });
+        assert_eq!(samples.len(), 32, "cancelled jobs still yield samples");
+        for s in &samples {
+            if s.query == 1 {
+                assert!(s.text.is_empty(), "expired job produced output");
+            }
+        }
+        // at least the two admission-reclaimed jobs' full entitlement; any
+        // mid-decode evictions of query 0 add their remaining steps on top
+        assert!(
+            stats.cancelled_steps_saved >= 2 * 12,
+            "reclaimed only {} steps",
+            stats.cancelled_steps_saved
+        );
+        assert_eq!(
+            table.check(8),
+            Some(CancelReason::Deadline),
+            "deadline expiry must be recorded for the delivery path"
+        );
+    }
+
+    #[test]
     fn cache_on_is_bit_identical_and_saves_prefill() {
         // two turns of a session: turn 2's prompt extends turn 1's
         // transcript, so its admission should hit the cached prefix — with
@@ -690,7 +859,12 @@ mod tests {
 
     #[test]
     fn occupancy_reflects_live_fraction() {
-        let s = DecodeStats { steps: 48, wasted_steps: 16, backend_calls: 2 };
+        let s = DecodeStats {
+            steps: 48,
+            wasted_steps: 16,
+            backend_calls: 2,
+            cancelled_steps_saved: 0,
+        };
         assert!((s.occupancy(32) - 0.75).abs() < 1e-12);
         assert_eq!(DecodeStats::default().occupancy(32), 0.0);
     }

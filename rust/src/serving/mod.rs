@@ -14,7 +14,64 @@ pub mod procedure;
 pub mod scheduler;
 pub mod shard;
 
+use std::collections::BTreeMap;
+use std::sync::Mutex;
+use std::time::Instant;
+
 use crate::config::ProcedureKind;
+
+/// Why a request was cancelled — decides what (if anything) the client is
+/// told when the cancelled request's slot in the pipeline unwinds.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum CancelReason {
+    /// The client asked (`{"cmd":"cancel"}`) or disconnected: nobody is
+    /// listening, so the request is reclaimed silently.
+    Client,
+    /// The request's `deadline_ms` budget ran out: the client gets a
+    /// structured `{"error":"deadline_exceeded"}` line.
+    Deadline,
+}
+
+/// Pool-shared cancellation table, keyed by *internal* request id.
+///
+/// Writers are the protocol layer (client cancels, reader disconnects) and
+/// the decode engine (mid-flight deadline expiry); readers are the
+/// pre-epoch sweep, the continuous engine's per-step check, and response
+/// delivery — each terminal consumer `take`s the entry, so the table only
+/// ever holds ids of requests still somewhere in the pipeline. Empty (and
+/// contention-free) whenever no deadline/cancel traffic exists.
+#[derive(Debug, Default)]
+pub struct CancelTable {
+    map: Mutex<BTreeMap<u64, CancelReason>>,
+}
+
+impl CancelTable {
+    /// Mark `id` cancelled. The first reason wins: an explicit client
+    /// cancel is never downgraded to a deadline expiry (or vice versa) by
+    /// a later racing writer.
+    pub fn cancel(&self, id: u64, reason: CancelReason) {
+        self.map.lock().unwrap().entry(id).or_insert(reason);
+    }
+
+    /// Peek without consuming (the decode engine checks live rows every
+    /// step; delivery owns the removal).
+    pub fn check(&self, id: u64) -> Option<CancelReason> {
+        self.map.lock().unwrap().get(&id).copied()
+    }
+
+    /// Consume the entry at a terminal point (sweep drop or delivery).
+    pub fn take(&self, id: u64) -> Option<CancelReason> {
+        self.map.lock().unwrap().remove(&id)
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.map.lock().unwrap().is_empty()
+    }
+
+    pub fn len(&self) -> usize {
+        self.map.lock().unwrap().len()
+    }
+}
 
 /// A query admitted to the system.
 #[derive(Clone, Debug)]
@@ -41,6 +98,15 @@ pub struct Request {
     /// correlation/telemetry metadata: prefix reuse is content-addressed
     /// (see [`prefix_cache`]), never keyed by this id.
     pub session: Option<u64>,
+    /// Client-requested latency budget in milliseconds, measured from
+    /// admission. None ⇒ no deadline (the historical behaviour).
+    pub deadline_ms: Option<u64>,
+    /// Absolute deadline on the monotonic clock, stamped by
+    /// `Batcher::try_submit` from `deadline_ms` at admission time. Past
+    /// this instant the request is droppable anywhere in the pipeline
+    /// (pre-epoch sweep, mid-decode eviction) with a structured
+    /// `deadline_exceeded` error instead of an answer.
+    pub deadline_at: Option<Instant>,
 }
 
 impl Request {
@@ -54,6 +120,8 @@ impl Request {
             procedure: None,
             degraded: false,
             session: None,
+            deadline_ms: None,
+            deadline_at: None,
         }
     }
 }

@@ -95,7 +95,7 @@ impl AdaptiveBestOfK {
         // scalar view borrows for λ̂ batches — no per-epoch vector copy
         let scalar_preds = preds.scalars();
         let budgets = sched.allocate(&domain, &preds, &scalar_preds, budget_per_query)?;
-        let samples = sched.generate(&texts, &budgets, rng)?;
+        let samples = sched.generate_for(reqs, &texts, &budgets, rng)?;
         sched.select(&domain, reqs, &texts, &budgets, &samples, &scalar_preds, t0, kind)
     }
 }
@@ -235,7 +235,7 @@ impl DecodeProcedure for WeakStrongRoute {
                 .metrics()
                 .counter("serving.units_allocated")
                 .add(budgets.iter().sum::<usize>() as u64);
-            let samples = sched.generate(&wtexts, &budgets, rng)?;
+            let samples = sched.generate_for(&wreqs, &wtexts, &budgets, rng)?;
             let responses = sched.select(
                 &domain,
                 &wreqs,

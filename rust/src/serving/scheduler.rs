@@ -47,7 +47,7 @@ use super::cache::LruCache;
 use super::generator::{self, GenConfig};
 use super::prefix_cache::PrefixCache;
 use super::procedure::{AdaptiveBestOfK, DecodeProcedure, WeakStrongRoute};
-use super::{Request, Response};
+use super::{CancelTable, Request, Response};
 use crate::allocator::controller::{BudgetController, EpochObservation};
 use crate::allocator::offline::OfflinePolicy;
 use crate::allocator::online::{OnlineAllocator, Predictions};
@@ -100,6 +100,11 @@ pub struct SchedulerShared {
     /// pre-cache code path and exports no `serving.prefix.*` metrics).
     /// Locked only around slot admission, never across a decode step.
     pub prefix_cache: Option<std::sync::Mutex<PrefixCache>>,
+    /// Pool-shared cancellation table (client cancels, reader
+    /// disconnects, mid-decode deadline expiries) keyed by internal
+    /// request id. Empty whenever no cancel/deadline traffic exists —
+    /// the sweep and step checks then cost one empty-map lookup.
+    pub cancels: CancelTable,
 }
 
 impl SchedulerShared {
@@ -132,6 +137,7 @@ impl SchedulerShared {
             routers: Default::default(),
             predict_cache: std::sync::Mutex::new(LruCache::new(cache_cap)),
             prefix_cache,
+            cancels: CancelTable::default(),
         })
     }
 
@@ -469,23 +475,71 @@ impl Scheduler {
         budgets: &[usize],
         rng: &mut Pcg64,
     ) -> Result<Vec<generator::Sample>> {
+        self.generate_inner(texts, budgets, rng, None)
+    }
+
+    /// Cancellation-aware [`Scheduler::generate`]: threads each query's
+    /// request identity (internal id + admission-stamped deadline) into the
+    /// continuous decode engine so a row whose request is cancelled or past
+    /// its deadline is evicted mid-flight and its slot refilled. The
+    /// context is only built when some request carries a deadline or the
+    /// pool's cancel table is non-empty — otherwise this is byte-for-byte
+    /// [`Scheduler::generate`], and `serving.decode.cancelled_steps_saved`
+    /// is only created once a cancellation actually reclaims steps.
+    pub fn generate_for(
+        &self,
+        reqs: &[&Request],
+        texts: &[&str],
+        budgets: &[usize],
+        rng: &mut Pcg64,
+    ) -> Result<Vec<generator::Sample>> {
+        debug_assert_eq!(reqs.len(), texts.len());
+        let want = reqs.iter().any(|r| r.deadline_at.is_some())
+            || !self.shared.cancels.is_empty();
+        let ctx = want.then(|| generator::CancelCtx {
+            queries: reqs
+                .iter()
+                .map(|r| generator::QueryCancel {
+                    id: r.id,
+                    deadline_at: r.deadline_at,
+                })
+                .collect(),
+            table: &self.shared.cancels,
+        });
+        self.generate_inner(texts, budgets, rng, ctx.as_ref())
+    }
+
+    fn generate_inner(
+        &self,
+        texts: &[&str],
+        budgets: &[usize],
+        rng: &mut Pcg64,
+        cancel: Option<&generator::CancelCtx>,
+    ) -> Result<Vec<generator::Sample>> {
         let t_gen = Instant::now();
         let jobs = generator::jobs_for_allocation(texts, budgets);
         let gen_cfg = GenConfig {
             max_new_tokens: self.shared.cfg.server.max_new_tokens,
             temperature: self.shared.cfg.server.temperature,
         };
-        let (samples, stats, pstats) = generator::generate_with_cache(
+        let (samples, stats, pstats) = generator::generate_with_cancel(
             &self.engine,
             &jobs,
             &gen_cfg,
             rng,
             self.shared.cfg.runtime.decode_mode,
             self.shared.prefix_cache.as_ref(),
+            cancel,
         )?;
         let m = &self.shared.metrics;
         m.counter("serving.decode.steps").add(stats.steps);
         m.counter("serving.decode.wasted_steps").add(stats.wasted_steps);
+        if stats.cancelled_steps_saved > 0 {
+            // lazily created: an inert (no deadline/cancel) server must
+            // export exactly the historical metric set
+            m.counter("serving.decode.cancelled_steps_saved")
+                .add(stats.cancelled_steps_saved);
+        }
         if self.shared.prefix_cache.is_some() {
             // gated on the cache: disabled serving must export exactly the
             // pre-cache metric set (the cache-off parity contract)

@@ -50,6 +50,11 @@ pub trait EpochSink: Send + Sync + 'static {
     fn on_worker_ready(&self, _worker: usize) {}
 
     fn on_response(&self, resp: Response);
+    /// A request was dropped by the pre-epoch sweep because its deadline
+    /// had already passed — no compute was spent on it. The server maps
+    /// this to a structured `deadline_exceeded` error line; cancelled
+    /// requests are reclaimed silently and never reach this hook.
+    fn on_dropped(&self, _req: &Request) {}
     /// A whole epoch failed; `elapsed` is the real time spent serving it
     /// (stamp it on error responses — never report `latency_us: 0`).
     fn on_epoch_error(
@@ -131,7 +136,31 @@ fn worker_loop(
     let epochs = metrics.worker(worker).counter("serving.epochs");
     let busy = metrics.worker(worker).histogram("serving.busy_us");
     let queue_wait = metrics.histogram("serving.queue_wait_us");
-    while let Some(epoch) = batcher.next_epoch() {
+    while let Some(mut epoch) = batcher.next_epoch() {
+        // Pre-epoch sweep: requests that are already dead — cancelled
+        // while queued, or past their deadline — are dropped before any
+        // prefill/decode step is spent on them. With no deadlines and no
+        // cancellations the retain keeps everything and serving is
+        // bit-for-bit the historical path (the drop counters are created
+        // lazily, so an inert server exports no new metrics).
+        let now = Instant::now();
+        epoch.retain(|r| {
+            if scheduler.shared().cancels.take(r.id).is_some() {
+                // cancelled while queued: the client asked for (or can no
+                // longer receive) no answer — reclaim silently
+                metrics.counter("serving.cancelled.queued").inc();
+                return false;
+            }
+            if r.deadline_at.is_some_and(|d| d <= now) {
+                metrics.counter("serving.deadline.expired_queued").inc();
+                sink.on_dropped(r);
+                return false;
+            }
+            true
+        });
+        if epoch.is_empty() {
+            continue;
+        }
         let now_us = batcher.now_us();
         let mut max_wait_us = 0u64;
         for r in &epoch {

@@ -10,13 +10,21 @@
 //!
 //! The tail of the file gives the `stats` verb (the fleet heartbeat's
 //! payload, an untrusted inter-process surface) the same treatment:
-//! round-trip exactness, mutated lines, and arbitrary JSON shapes.
+//! round-trip exactness, mutated lines, and arbitrary JSON shapes — and
+//! then drives a *live* server with adversarial `deadline_ms` / `cancel`
+//! payloads, pinning the exact-integer discipline end to end: every line
+//! draws exactly one structured reply, never a panic, never a hang.
 
-use thinkalloc::config::ReplicaArm;
+use std::sync::{mpsc, Arc};
+use std::time::Duration;
+
+use thinkalloc::config::{Config, ReplicaArm};
 use thinkalloc::fleet::ReplicaStats;
 use thinkalloc::jsonio::{self, Json};
+use thinkalloc::metrics::Registry;
 use thinkalloc::prng::Pcg64;
 use thinkalloc::proputil::{close, prop_check, PropConfig};
+use thinkalloc::server::{Client, Server};
 
 /// Random JSON value with exact (float-free) leaves: roundtrip must be
 /// equality, not approximation. Depth-bounded so shrinking stays readable.
@@ -220,6 +228,183 @@ fn prop_arbitrary_json_shapes_never_panic_stats_parsing() {
             Ok(())
         },
     );
+}
+
+/// Spin up a small deterministic server for the live-protocol properties.
+fn live_server() -> (Client, std::thread::JoinHandle<anyhow::Result<()>>) {
+    let mut cfg = Config::default();
+    cfg.allocator.budget_per_query = 2.0;
+    cfg.allocator.b_max = 8;
+    cfg.server.addr = "127.0.0.1:0".into();
+    cfg.server.workers = 1;
+    cfg.server.batch_queries = 1;
+    cfg.server.max_wait_ms = 5;
+    if let Ok(m) = std::env::var("THINKALLOC_IO_MODE") {
+        if !m.is_empty() {
+            cfg.server.io_mode = m.parse().expect("THINKALLOC_IO_MODE: event|threads");
+        }
+    }
+    cfg.validate().unwrap();
+    let server = Server::new(cfg, Arc::new(Registry::default()));
+    let (tx, rx) = mpsc::channel();
+    let srv = server.clone();
+    let handle = std::thread::spawn(move || srv.run(|a| tx.send(a).unwrap()));
+    let client = Client::connect(&rx.recv().unwrap()).unwrap();
+    client.set_read_timeout(Some(Duration::from_secs(120))).unwrap();
+    (client, handle)
+}
+
+/// An adversarially-shaped JSON value for an integer-typed protocol field:
+/// exact ints (the only legal shape), plus every way clients get it wrong.
+fn gen_int_shape(rng: &mut Pcg64) -> Json {
+    match rng.range_usize(0, 8) {
+        0 => Json::Int(rng.next_u64() as i64), // covers negatives + extremes
+        1 => Json::Int(rng.range_u64(0, 1_000) as i64),
+        2 => Json::Int(i64::MAX), // overflow bait for Instant arithmetic
+        3 => Json::Num(rng.f64() * 1e3), // floats: exact-integer discipline
+        4 => Json::Num(-1.5),
+        5 => Json::Str(gen_string(rng)),
+        6 => Json::Null,
+        _ => Json::Arr(vec![Json::Int(3)]),
+    }
+}
+
+/// The `deadline_ms` contract, end to end on a live server: an exact
+/// non-negative integer is accepted (response or `deadline_exceeded`,
+/// never silence); every other shape draws the structured invalid-field
+/// error. One line in, exactly one line out, for every case.
+#[test]
+fn prop_deadline_ms_shapes_draw_exactly_one_structured_reply() {
+    let (client, handle) = live_server();
+    let cell = std::cell::RefCell::new(client);
+    prop_check(
+        "deadline-ms-shapes",
+        PropConfig { cases: 64, max_size: 4 },
+        |rng, _| {
+            let mut c = cell.borrow_mut();
+            let shape = gen_int_shape(rng);
+            let legal = matches!(shape, Json::Int(i) if i >= 0);
+            let id = rng.range_u64(0, 1 << 32);
+            let line = Json::obj(vec![
+                ("id", Json::Int(id as i64)),
+                ("text", Json::Str("ADD 1 2".into())),
+                ("domain", Json::Str("code".into())),
+                ("deadline_ms", shape.clone()),
+            ])
+            .to_string();
+            c.write_raw(&line).map_err(|e| e.to_string())?;
+            let resp = c
+                .read_response()
+                .map_err(|e| format!("no reply for deadline_ms {shape}: {e}"))?;
+            let err = resp.get("error").and_then(Json::as_str);
+            if legal {
+                // tiny deadlines may legitimately expire; anything else is
+                // a served response carrying the echoed id
+                let ok = resp.get("id").and_then(Json::as_i64) == Some(id as i64)
+                    && (err.is_none() || err == Some("deadline_exceeded"));
+                if !ok {
+                    return Err(format!("legal deadline_ms {shape} drew {resp:?}"));
+                }
+            } else if err != Some("invalid deadline_ms: must be a non-negative integer < 2^63") {
+                return Err(format!("illegal deadline_ms {shape} drew {resp:?}"));
+            }
+            Ok(())
+        },
+    );
+    cell.borrow_mut().command("shutdown").unwrap();
+    let _ = handle.join();
+}
+
+/// The `cancel` verb under the same treatment: a well-shaped id draws the
+/// `{"ok":true,"id":N,"cancelled":K}` ack (K = 0 here — nothing in
+/// flight); every other shape draws the structured error. Never a panic,
+/// never a dropped line.
+#[test]
+fn prop_cancel_shapes_draw_exactly_one_structured_reply() {
+    let (client, handle) = live_server();
+    let cell = std::cell::RefCell::new(client);
+    prop_check(
+        "cancel-shapes",
+        PropConfig { cases: 64, max_size: 4 },
+        |rng, _| {
+            let mut c = cell.borrow_mut();
+            let shape = gen_int_shape(rng);
+            let legal = matches!(shape, Json::Int(i) if i >= 0);
+            let line = Json::obj(vec![
+                ("cmd", Json::Str("cancel".into())),
+                ("id", shape.clone()),
+            ])
+            .to_string();
+            c.write_raw(&line).map_err(|e| e.to_string())?;
+            let resp = c
+                .read_response()
+                .map_err(|e| format!("no reply for cancel id {shape}: {e}"))?;
+            if legal {
+                let ok = resp.get("ok").and_then(Json::as_bool) == Some(true)
+                    && resp.get("cancelled").and_then(Json::as_i64) == Some(0);
+                if !ok {
+                    return Err(format!("legal cancel {shape} drew {resp:?}"));
+                }
+            } else if resp.get("error").and_then(Json::as_str)
+                != Some("cancel needs id: a non-negative integer < 2^63")
+            {
+                return Err(format!("illegal cancel {shape} drew {resp:?}"));
+            }
+            Ok(())
+        },
+    );
+    cell.borrow_mut().command("shutdown").unwrap();
+    let _ = handle.join();
+}
+
+/// Byte-mutated deadline/cancel lines against the live server: every
+/// mutation (that stays one line) draws exactly one reply — a parse error,
+/// a field error, an ack, or a served response — and the connection
+/// survives to serve the next case. Newline bytes are patched out of the
+/// mutations: injecting one would *legitimately* split the line in two,
+/// which is a different (and already covered) protocol path.
+#[test]
+fn prop_mutated_deadline_cancel_lines_never_desync_the_stream() {
+    let (client, handle) = live_server();
+    let cell = std::cell::RefCell::new(client);
+    prop_check(
+        "deadline-cancel-mutation",
+        PropConfig { cases: 64, max_size: 4 },
+        |rng, _| {
+            let mut c = cell.borrow_mut();
+            let base = if rng.range_u64(0, 2) == 0 {
+                format!(
+                    r#"{{"id": {}, "text": "ADD 1 2", "domain": "code", "deadline_ms": {}}}"#,
+                    rng.range_u64(0, 1000),
+                    rng.range_u64(0, 100_000),
+                )
+            } else {
+                format!(r#"{{"cmd": "cancel", "id": {}}}"#, rng.range_u64(0, 1000))
+            };
+            let mut bytes = base.into_bytes();
+            for _ in 0..rng.range_usize(1, 4) {
+                let i = rng.range_usize(0, bytes.len());
+                let mut b = rng.next_u64() as u8;
+                if b == b'\n' || b == b'\r' {
+                    b = b'#';
+                }
+                bytes[i] = b;
+            }
+            let s = String::from_utf8_lossy(&bytes).into_owned();
+            c.write_raw(&s).map_err(|e| e.to_string())?;
+            // one reply per line, whatever the mutation produced — a hang
+            // here (caught by the read timeout) means a line was dropped
+            let resp = c
+                .read_response()
+                .map_err(|e| format!("no reply for mutated line {s:?}: {e}"))?;
+            if resp.as_obj().is_none() {
+                return Err(format!("non-object reply {resp} for {s:?}"));
+            }
+            Ok(())
+        },
+    );
+    cell.borrow_mut().command("shutdown").unwrap();
+    let _ = handle.join();
 }
 
 #[test]

@@ -1,0 +1,300 @@
+//! Chaos soak: the serving front door under seeded fault injection
+//! (`[chaos]`), plus the deadline / cancellation delivery invariants.
+//!
+//! Socket-boundary chaos is *lossless* by contract — writes fragmented,
+//! reads shortened, flushes delayed, bytes never dropped or altered — so a
+//! correct server must deliver every response exactly once, bit-identical
+//! to a fault-free run. The soak drives a ≥200-request Poisson trace
+//! through both and diffs every field.
+//!
+//! With cancellation and deadlines in the mix the invariants become:
+//! every request gets exactly one terminal line (response, or a structured
+//! `deadline_exceeded`) — unless it was successfully cancelled, in which
+//! case it gets *zero* lines ever (no post-cancel delivery).
+//!
+//! Like `tests/overload.rs`, the suite runs on the default native backend
+//! and under both I/O drivers via the `THINKALLOC_IO_MODE` CI matrix.
+
+use std::collections::{BTreeMap, BTreeSet};
+use std::sync::mpsc;
+use std::sync::Arc;
+use std::time::Duration;
+
+use thinkalloc::config::{AllocPolicy, Config};
+use thinkalloc::jsonio::Json;
+use thinkalloc::metrics::Registry;
+use thinkalloc::server::{Client, Server};
+use thinkalloc::workload::trace::Trace;
+
+/// Base config: native backend, online policy, small budgets — fast on CI.
+/// `THINKALLOC_IO_MODE` (the CI matrix axis) overrides the I/O driver.
+fn base_cfg() -> Config {
+    let mut cfg = Config::default();
+    cfg.allocator.policy = AllocPolicy::Online;
+    cfg.allocator.budget_per_query = 2.0;
+    cfg.allocator.b_max = 8;
+    cfg.server.addr = "127.0.0.1:0".into();
+    if let Ok(m) = std::env::var("THINKALLOC_IO_MODE") {
+        if !m.is_empty() {
+            cfg.server.io_mode = m.parse().expect("THINKALLOC_IO_MODE: event|threads");
+        }
+    }
+    cfg
+}
+
+fn start(cfg: Config) -> (String, std::thread::JoinHandle<anyhow::Result<()>>) {
+    let server = Server::new(cfg, Arc::new(Registry::default()));
+    let (tx, rx) = mpsc::channel();
+    let srv = server.clone();
+    let handle = std::thread::spawn(move || srv.run(|a| tx.send(a).unwrap()));
+    (rx.recv().unwrap(), handle)
+}
+
+/// Aggressive socket-boundary faults (write splits, short reads, delayed
+/// flushes). Stall/garble are replica-stream faults — irrelevant here.
+fn chaotic(cfg: &mut Config, seed: u64) {
+    cfg.chaos.enabled = true;
+    cfg.chaos.seed = seed;
+    cfg.chaos.partial_write_p = 0.35;
+    cfg.chaos.short_read_p = 0.35;
+    cfg.chaos.delay_p = 0.05;
+    cfg.chaos.delay_ms = 1;
+    cfg.chaos.stall_p = 0.0;
+    cfg.chaos.garble_p = 0.0;
+}
+
+/// The soak + parity contract in one: a 220-request Poisson trace served
+/// closed-loop (single seeded worker, one-query epochs ⇒ a deterministic
+/// reward stream), once fault-free and once under heavy socket chaos.
+/// Every response must arrive exactly once, and every field must be
+/// bit-identical — chaos may fragment and delay bytes, never change them.
+#[test]
+fn chaos_soak_matches_fault_free_run_bit_for_bit() {
+    let trace = Trace::poisson(220, 200.0, (0.5, 0.3, 0.2), 7);
+    assert!(trace.entries.len() >= 200, "soak needs a ≥200-request trace");
+
+    let run = |chaos: bool| -> Vec<Json> {
+        let mut cfg = base_cfg();
+        cfg.server.workers = 1; // single seeded worker ⇒ deterministic run
+        cfg.server.batch_queries = 1;
+        cfg.server.max_wait_ms = 5;
+        if chaos {
+            chaotic(&mut cfg, 0xC4A5);
+        }
+        cfg.validate().unwrap();
+        let (addr, handle) = start(cfg);
+        let mut c = Client::connect(&addr).unwrap();
+        c.set_read_timeout(Some(Duration::from_secs(120))).unwrap();
+        let mut out = Vec::new();
+        for (i, e) in trace.entries.iter().enumerate() {
+            c.request(i as u64, &e.text, &e.domain).unwrap();
+            let resp = c.read_response().expect("lost response under chaos");
+            assert_eq!(
+                resp.get("id").and_then(Json::as_i64),
+                Some(i as i64),
+                "response routed to the wrong request"
+            );
+            out.push(resp);
+        }
+        c.command("shutdown").unwrap();
+        let _ = handle.join();
+        out
+    };
+
+    let clean = run(false);
+    let noisy = run(true);
+    assert_eq!(clean.len(), noisy.len());
+    for (i, (a, b)) in clean.iter().zip(&noisy).enumerate() {
+        // everything but wall-clock latency must match bit for bit —
+        // including the temp-0 reward of every completed request
+        for field in ["id", "response", "ok", "budget", "predicted", "reward", "procedure"] {
+            assert_eq!(
+                a.get(field),
+                b.get(field),
+                "request {i} field {field} diverged under chaos"
+            );
+        }
+    }
+}
+
+/// Deadlines and cancels under chaos: a 200-request pipelined burst where
+/// every 5th request carries an already-expired deadline and every 9th is
+/// cancelled right behind the burst. Invariants: every id resolves to
+/// exactly one terminal line (response or `deadline_exceeded`) — or zero
+/// lines if its cancel landed first — and no id ever gets both.
+#[test]
+fn chaos_burst_with_cancels_and_deadlines_delivers_each_id_once() {
+    const N: u64 = 200;
+    let mut cfg = base_cfg();
+    cfg.server.workers = 1;
+    cfg.server.batch_queries = 8;
+    cfg.server.max_wait_ms = 20;
+    chaotic(&mut cfg, 0xFA57);
+    cfg.validate().unwrap();
+    let (addr, handle) = start(cfg);
+
+    let mut c = Client::connect(&addr).unwrap();
+    c.set_read_timeout(Some(Duration::from_secs(120))).unwrap();
+
+    // one payload, processed in line order: 200 requests, then the cancels
+    // (most of their targets are still queued at that point)
+    let mut lines: Vec<String> = Vec::new();
+    for i in 0..N {
+        let mut req = format!(r#"{{"id": {i}, "text": "ADD {i} 2", "domain": "code""#);
+        if i % 5 == 0 {
+            // expired on arrival: must draw the structured terminal line
+            req.push_str(r#", "deadline_ms": 0"#);
+        } else if i % 7 == 3 {
+            // generous budget: must serve normally
+            req.push_str(r#", "deadline_ms": 60000"#);
+        }
+        req.push('}');
+        lines.push(req);
+    }
+    let cancel_ids: Vec<u64> = (0..N).filter(|i| i % 9 == 1).collect();
+    for id in &cancel_ids {
+        lines.push(format!(r#"{{"cmd": "cancel", "id": {id}}}"#));
+    }
+    c.write_raw(&lines.join("\n")).unwrap();
+
+    let mut terminals: BTreeMap<i64, Json> = BTreeMap::new();
+    let mut deadline_exceeded = 0u64;
+    let mut acks = 0usize;
+    let mut cancelled: BTreeSet<i64> = BTreeSet::new();
+    while terminals.len() < (N as usize - cancelled.len()) || acks < cancel_ids.len() {
+        let resp = c.read_response().expect("burst starved: a line was lost");
+        let id = resp.get("id").and_then(Json::as_i64).expect("line without id");
+        if let Some(k) = resp.get("cancelled").and_then(Json::as_i64) {
+            acks += 1;
+            if k > 0 {
+                assert!(cancelled.insert(id), "two effective cancels for id {id}");
+            }
+            continue;
+        }
+        if resp.get("error").and_then(Json::as_str) == Some("deadline_exceeded") {
+            deadline_exceeded += 1;
+        } else {
+            assert!(
+                resp.get("response").is_some(),
+                "unexpected non-terminal line: {resp:?}"
+            );
+        }
+        assert!(
+            terminals.insert(id, resp).is_none(),
+            "id {id} answered twice"
+        );
+    }
+    // no post-cancel delivery, ever: an effectively-cancelled id has no
+    // terminal line, and everything else has exactly one
+    for id in &cancelled {
+        assert!(
+            !terminals.contains_key(id),
+            "id {id} was both cancelled and answered"
+        );
+    }
+    assert_eq!(terminals.len() + cancelled.len(), N as usize);
+    assert!(deadline_exceeded >= 1, "expired deadlines never surfaced");
+    assert!(!cancelled.is_empty(), "no cancel landed before serving");
+    // ids with an expired deadline that were not cancelled first must have
+    // drawn the structured error, not a response
+    for i in (0..N as i64).filter(|i| i % 5 == 0) {
+        if let Some(t) = terminals.get(&i) {
+            assert_eq!(
+                t.get("error").and_then(Json::as_str),
+                Some("deadline_exceeded"),
+                "id {i} outran an already-expired deadline"
+            );
+        }
+    }
+    // generous deadlines serve normally
+    for i in (0..N as i64).filter(|i| i % 7 == 3 && i % 5 != 0) {
+        if let Some(t) = terminals.get(&i) {
+            assert!(t.get("response").is_some(), "id {i} failed its 60 s budget");
+        }
+    }
+
+    // the reclaim counters agree that compute was saved
+    let metrics = c.command("metrics").unwrap();
+    let n = |k: &str| metrics.get(k).and_then(Json::as_f64).unwrap_or(0.0);
+    assert!(
+        n("counter.serving.cancelled.requested") >= cancelled.len() as f64,
+        "cancel verb accounting missing"
+    );
+    assert!(
+        n("counter.serving.cancelled.queued") + n("counter.serving.deadline.expired_queued")
+            >= 1.0,
+        "the pre-epoch sweep never reclaimed anything"
+    );
+
+    c.command("shutdown").unwrap();
+    let _ = handle.join();
+}
+
+/// The inertness contract on the metric surface: with chaos disabled and
+/// no deadlines or cancels on the wire, none of the new counters may even
+/// exist — disabled features export nothing (same discipline admission
+/// established).
+#[test]
+fn disabled_features_export_no_new_metrics() {
+    let mut cfg = base_cfg();
+    cfg.server.workers = 1;
+    cfg.server.batch_queries = 1;
+    cfg.server.max_wait_ms = 5;
+    cfg.validate().unwrap();
+    assert!(!cfg.chaos.enabled, "chaos must default off");
+    let (addr, handle) = start(cfg);
+
+    let mut c = Client::connect(&addr).unwrap();
+    c.set_read_timeout(Some(Duration::from_secs(120))).unwrap();
+    for i in 0..10 {
+        c.request(i, "ADD 1 2", "code").unwrap();
+        let resp = c.read_response().unwrap();
+        assert_eq!(resp.get("ok").and_then(Json::as_bool), Some(true));
+    }
+    let metrics = c.command("metrics").unwrap();
+    for k in [
+        "counter.serving.deadline.exceeded",
+        "counter.serving.deadline.expired_queued",
+        "counter.serving.cancelled.queued",
+        "counter.serving.cancelled.requested",
+        "counter.serving.decode.cancelled_steps_saved",
+    ] {
+        assert!(
+            metrics.get(k).is_none(),
+            "{k} must not exist on an idle feature"
+        );
+    }
+    c.command("shutdown").unwrap();
+    let _ = handle.join();
+}
+
+/// A deadline that is never threatened changes nothing: the request serves
+/// normally and only the (lazily created) exceeded counter stays absent.
+#[test]
+fn generous_deadline_serves_normally() {
+    let mut cfg = base_cfg();
+    cfg.server.workers = 1;
+    cfg.server.batch_queries = 1;
+    cfg.server.max_wait_ms = 5;
+    cfg.validate().unwrap();
+    let (addr, handle) = start(cfg);
+
+    let mut c = Client::connect(&addr).unwrap();
+    c.set_read_timeout(Some(Duration::from_secs(120))).unwrap();
+    c.request_with_deadline(3, "ADD 2 3", "math", 60_000).unwrap();
+    let resp = c.read_response().unwrap();
+    assert_eq!(resp.get("id").and_then(Json::as_i64), Some(3));
+    assert_eq!(resp.get("ok").and_then(Json::as_bool), Some(true));
+    assert!(resp.get("error").is_none());
+
+    // cancel after completion: the ack reports nothing left to cancel
+    c.cancel(3).unwrap();
+    let ack = c.read_response().unwrap();
+    assert_eq!(ack.get("cancelled").and_then(Json::as_i64), Some(0));
+
+    let metrics = c.command("metrics").unwrap();
+    assert!(metrics.get("counter.serving.deadline.exceeded").is_none());
+
+    c.command("shutdown").unwrap();
+    let _ = handle.join();
+}

@@ -404,6 +404,83 @@ fn event_loop_holds_many_idle_connections() {
     }
 }
 
+/// A reader that disconnects with requests still queued must have its
+/// routing entries purged *eagerly* — before any response comes back — and
+/// its queued work reclaimed by the pre-epoch sweep instead of being
+/// decoded for nobody. Pre-fix, the routing map grew one orphan per
+/// abandoned request until a response happened to arrive.
+#[test]
+fn reader_disconnect_purges_routing_and_reclaims_queued_work() {
+    let mut cfg = base_cfg();
+    cfg.server.workers = 1;
+    // a 64-query epoch that won't cut for 500 ms: the ghost's requests are
+    // still *queued* (not served) for the whole observation window
+    cfg.server.batch_queries = 64;
+    cfg.server.max_wait_ms = 500;
+    cfg.validate().unwrap();
+    let (addr, handle) = start(cfg);
+
+    let mut observer = Client::connect(&addr).unwrap();
+    observer.set_read_timeout(Some(Duration::from_secs(120))).unwrap();
+
+    let mut ghost = Client::connect(&addr).unwrap();
+    let burst: String = (0..8)
+        .map(|i| format!(r#"{{"id": {i}, "text": "ADD 1 2", "domain": "code"}}"#))
+        .collect::<Vec<_>>()
+        .join("\n");
+    ghost.write_raw(&burst).unwrap();
+
+    // the stats verb reports the routing-map size as `inflight`
+    let inflight = |c: &mut Client| -> f64 {
+        c.command("stats")
+            .unwrap()
+            .get("inflight")
+            .and_then(Json::as_f64)
+            .expect("stats carries inflight")
+    };
+    let deadline = std::time::Instant::now() + Duration::from_secs(30);
+    while inflight(&mut observer) < 8.0 {
+        assert!(
+            std::time::Instant::now() < deadline,
+            "ghost requests never became in-flight"
+        );
+        std::thread::sleep(Duration::from_millis(2));
+    }
+
+    // reader exit must purge the 8 entries NOW — the epoch (and therefore
+    // any response-time cleanup) is still hundreds of ms away
+    drop(ghost);
+    while inflight(&mut observer) > 0.0 {
+        assert!(
+            std::time::Instant::now() < deadline,
+            "routing entries for the dead connection were not purged"
+        );
+        std::thread::sleep(Duration::from_millis(2));
+    }
+
+    // …and once the epoch cuts, the sweep drops the orphaned work without
+    // spending a decode step on it
+    loop {
+        let metrics = observer.command("metrics").unwrap();
+        let reclaimed = metrics
+            .get("counter.serving.cancelled.queued")
+            .and_then(Json::as_f64)
+            .unwrap_or(0.0);
+        if reclaimed >= 8.0 {
+            break;
+        }
+        assert!(
+            std::time::Instant::now() < deadline,
+            "queued orphans were not reclaimed by the pre-epoch sweep \
+             (got {reclaimed})"
+        );
+        std::thread::sleep(Duration::from_millis(10));
+    }
+
+    observer.command("shutdown").unwrap();
+    let _ = handle.join();
+}
+
 /// With admission disabled, the bounded queue is still a hard backstop:
 /// requests past `max_queue_depth` draw `overloaded` lines instead of
 /// growing the queue without bound (the pre-fix failure mode).

@@ -8,7 +8,9 @@ Gated metrics (the serving hot path's load-bearing numbers):
                     queries/s
   lower is better:  p95 queue wait (controller on, and under saturation),
                     fleet replica-loss recovery p95, fleet per-request
-                    placement overhead
+                    placement overhead, fleet deadline-overshoot p95 (how
+                    far past a client deadline the structured failure line
+                    lands — the dispatch-sweep granularity bound)
 
 A candidate worse than baseline by more than the tolerance on any present
 metric exits nonzero and says which. Metrics missing from either file are
@@ -17,8 +19,9 @@ turn into a schema gate. Values <= 0 are skipped for the same reason
 (smoke runs can legitimately produce empty histograms).
 
 With --hard-metrics, only the HARD subset (decode steps/s, the two p95
-queue waits, and the fleet tier's recovery p95 and placement overhead —
-the numbers the serving claims actually rest on) can fail the run;
+queue waits, and the fleet tier's recovery p95, placement overhead, and
+deadline-overshoot p95 — the numbers the serving claims actually rest on)
+can fail the run;
 everything else is compared and printed as advisory. That is the
 CI mode: noisy shared runners make the throughput-style metrics flap, but
 a real decode or queue-wait regression should block the merge.
@@ -41,6 +44,7 @@ METRICS = [
     ("saturation", "queue_wait_p95_us", "lower"),
     ("fleet.recovery", "recovery_p95_ms", "lower"),
     ("fleet.placement", "overhead_us_per_req", "lower"),
+    ("fleet.deadline", "overshoot_p95_ms", "lower"),
 ]
 
 # the metrics that hard-gate CI under --hard-metrics (see module docstring)
@@ -50,6 +54,7 @@ HARD = {
     "saturation.queue_wait_p95_us",
     "fleet.recovery.recovery_p95_ms",
     "fleet.placement.overhead_us_per_req",
+    "fleet.deadline.overshoot_p95_ms",
 }
 
 
